@@ -1,0 +1,73 @@
+//! Genetics workload — the paper's other motivating domain ("medicine,
+//! genetic engineering … the arising applied problems are often
+//! confidential", which is why this is synthetic).
+//!
+//! Clusters 80k samples of expression-like positive data (log-normal
+//! around cluster-specific fold-change profiles). Expression data is
+//! clustered in log space — a domain-knowledge preprocessing step the
+//! pipeline supports naturally — and compares the paper init vs random
+//! init quality on the same data.
+//!
+//! ```bash
+//! cargo run --release --example genetics_expression
+//! ```
+
+use parclust::benchkit::Table;
+use parclust::data::synthetic::expression;
+use parclust::data::Dataset;
+use parclust::exec::regime::Regime;
+use parclust::kmeans::{fit, InitMethod, KMeansConfig};
+
+fn main() {
+    let n = 80_000;
+    let genes = 20;
+    let groups = 6;
+    println!("generating expression matrix: {n} samples × {genes} genes…");
+    let g = expression(n, genes, groups, 7);
+
+    // log2 transform (standard for expression data).
+    let mut log_values = g.dataset.values().to_vec();
+    for v in log_values.iter_mut() {
+        *v = v.max(1e-6).log2();
+    }
+    let ds = Dataset::from_vec(n, genes, log_values).unwrap();
+
+    let mut table = Table::new(
+        "init-method comparison on expression data",
+        &["init", "iterations", "converged", "inertia", "ground-truth agreement"],
+    );
+    for init in [InitMethod::PaperDiameter, InitMethod::Random, InitMethod::KMeansPlusPlus] {
+        let cfg = KMeansConfig::new(groups)
+            .seed(7)
+            .regime(Regime::Multi)
+            .init_method(init)
+            .max_iters(300);
+        let result = fit(&ds, &cfg).expect("clustering failed");
+
+        // pair-counting agreement vs the generator's labels
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for i in (0..n).step_by(173) {
+            for j in (0..i).step_by(389) {
+                let same_true = g.labels[i] == g.labels[j];
+                let same_pred = result.labels[i] == result.labels[j];
+                agree += usize::from(same_true == same_pred);
+                total += 1;
+            }
+        }
+        table.row(vec![
+            init.name().into(),
+            result.iterations.to_string(),
+            result.converged.to_string(),
+            format!("{:.4e}", result.inertia),
+            format!("{:.1}%", 100.0 * agree as f64 / total as f64),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "The paper's diameter-seeded init starts from the extreme points of \
+         the data, which on well-separated expression groups converges in \
+         fewer iterations than random seeding (T3/ablation bench quantifies \
+         this across seeds)."
+    );
+}

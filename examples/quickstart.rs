@@ -1,0 +1,58 @@
+//! Quickstart: cluster a synthetic dataset with the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use parclust::data::synthetic::{generate, GmmSpec};
+use parclust::exec::regime::Regime;
+use parclust::kmeans::{fit, KMeansConfig};
+
+fn main() {
+    // 50k samples, 25 features, 8 latent clusters — paper-shaped data.
+    let data = generate(&GmmSpec::new(50_000, 25, 8).seed(42).spread(0.5));
+
+    // The paper's §4 policy: at this size the user may choose single or
+    // multi; `Regime::Auto` picks multi. Exact-congruence convergence
+    // (paper step 8) is the default.
+    let cfg = KMeansConfig::new(8).seed(42).regime(Regime::Auto);
+    let result = fit(&data.dataset, &cfg).expect("clustering failed");
+
+    println!(
+        "converged={} after {} iterations (regime={})",
+        result.converged, result.iterations, result.metrics.regime
+    );
+    println!("inertia = {:.4e}", result.inertia);
+    if let Some(d) = result.diameter {
+        println!(
+            "diameter of the sample set: {:.3} (rows {} and {})",
+            (d.d2 as f64).sqrt(),
+            d.i,
+            d.j
+        );
+    }
+
+    // Cluster sizes.
+    let mut sizes = vec![0usize; 8];
+    for &l in &result.labels {
+        sizes[l as usize] += 1;
+    }
+    println!("cluster sizes: {sizes:?}");
+
+    // Accuracy vs ground truth (pair-counting agreement on a sample).
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for i in (0..data.labels.len()).step_by(97) {
+        for j in (0..i).step_by(211) {
+            let same_true = data.labels[i] == data.labels[j];
+            let same_pred = result.labels[i] == result.labels[j];
+            agree += usize::from(same_true == same_pred);
+            total += 1;
+        }
+    }
+    println!(
+        "pairwise agreement with ground truth: {:.1}%",
+        100.0 * agree as f64 / total as f64
+    );
+    println!("\nstage timings:\n{}", result.metrics.render());
+}

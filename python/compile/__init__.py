@@ -1,0 +1,8 @@
+"""Build-time compile path for parclust (never imported at runtime).
+
+Layer 2 (:mod:`compile.model`) defines the JAX stage functions of the
+paper's K-means pipeline; Layer 1 (:mod:`compile.kernels`) provides the
+Pallas hot-spot kernels they call. :mod:`compile.aot` lowers each stage
+function ONCE to HLO text under ``artifacts/`` together with a
+``manifest.json`` that the rust runtime reads.
+"""

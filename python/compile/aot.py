@@ -1,0 +1,212 @@
+"""AOT compile path: lower every stage function to HLO text + manifest.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowering goes through stablehlo ->
+XlaComputation with ``return_tuple=True``; the rust loader unwraps the
+tuple (see rust/src/runtime/).
+
+Every emitted artifact is described in ``manifest.json`` (shape/dtype of
+each input and output, stage kind, tile sizes) -- the single source of
+truth the rust artifact registry loads at startup.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+MANIFEST_VERSION = 2
+
+# (n, m, k) variants for the sharded assignment stage. m/k are padded
+# CEILINGS: the rust side zero-pads features to m and PAD_CENTROID-pads the
+# centroid table to k, so one artifact serves every logical size below it.
+ASSIGN_VARIANTS = [
+    (1024, 32, 16),
+    (4096, 32, 16),
+    (16384, 32, 16),
+    (65536, 32, 16),
+    (65536, 32, 32),   # wide-k variant (T3 bench sweeps k up to 20)
+    (4096, 8, 8),
+]
+
+# Whole-dataset fused Lloyd step (single-device path).
+STEP_VARIANTS = [
+    (16384, 32, 16),
+    (65536, 32, 16),
+]
+
+# Coordinate-sum stage (paper Algorithm 4 step 2).
+SUM_VARIANTS = [
+    (16384, 32),
+    (65536, 32),
+]
+
+# Diameter rectangles: (an, bn, m).
+DIAMETER_VARIANTS = [
+    (2048, 2048, 32),
+    (512, 512, 32),
+]
+
+# Pairwise-distance-matrix blocks for the hierarchical methods: (an, bn, m).
+PDIST_VARIANTS = [
+    (1024, 1024, 32),
+]
+
+QUICK_SUFFIXES = {  # --quick keeps only the smallest variant per kind
+    "assign": [(1024, 32, 16)],
+    "step": [(16384, 32, 16)],
+    "sum": [(16384, 32)],
+    "diameter": [(512, 512, 32)],
+    "pdist": [(512, 512, 32)],
+}
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _io(name, dtype, shape):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+def build_assign(n, m, k):
+    lowered = jax.jit(model.assign_partial).lower(
+        spec((n, m)), spec((n,)), spec((k, m)))
+    return lowered, {
+        "kind": "assign", "n": n, "m": m, "k": k,
+        "inputs": [_io("points", "f32", (n, m)), _io("mask", "f32", (n,)),
+                   _io("centroids", "f32", (k, m))],
+        "outputs": [_io("labels", "i32", (n,)), _io("sums", "f32", (k, m)),
+                    _io("counts", "f32", (k,)), _io("inertia", "f32", (1,))],
+    }
+
+
+def build_step(n, m, k):
+    lowered = jax.jit(model.kmeans_step).lower(
+        spec((n, m)), spec((n,)), spec((k, m)))
+    return lowered, {
+        "kind": "step", "n": n, "m": m, "k": k,
+        "inputs": [_io("points", "f32", (n, m)), _io("mask", "f32", (n,)),
+                   _io("centroids", "f32", (k, m))],
+        "outputs": [_io("labels", "i32", (n,)),
+                    _io("new_centroids", "f32", (k, m)),
+                    _io("counts", "f32", (k,)), _io("shift", "f32", (1,)),
+                    _io("inertia", "f32", (1,))],
+    }
+
+
+def build_sum(n, m):
+    lowered = jax.jit(model.sum_partial).lower(spec((n, m)), spec((n,)))
+    return lowered, {
+        "kind": "sum", "n": n, "m": m,
+        "inputs": [_io("points", "f32", (n, m)), _io("mask", "f32", (n,))],
+        "outputs": [_io("sums", "f32", (m,)), _io("count", "f32", (1,))],
+    }
+
+
+def build_pdist(an, bn, m):
+    lowered = jax.jit(model.pdist_block).lower(spec((an, m)), spec((bn, m)))
+    return lowered, {
+        "kind": "pdist", "an": an, "bn": bn, "m": m,
+        "inputs": [_io("block_a", "f32", (an, m)), _io("block_b", "f32", (bn, m))],
+        "outputs": [_io("d2", "f32", (an, bn))],
+    }
+
+
+def build_diameter(an, bn, m):
+    lowered = jax.jit(model.diameter_partial).lower(
+        spec((an, m)), spec((bn, m)), spec((an,)), spec((bn,)))
+    return lowered, {
+        "kind": "diameter", "an": an, "bn": bn, "m": m,
+        "inputs": [_io("block_a", "f32", (an, m)), _io("block_b", "f32", (bn, m)),
+                   _io("mask_a", "f32", (an,)), _io("mask_b", "f32", (bn,))],
+        "outputs": [_io("max_d2", "f32", (1,)), _io("arg_i", "i32", (1,)),
+                    _io("arg_j", "i32", (1,))],
+    }
+
+
+def variant_name(meta) -> str:
+    kind = meta["kind"]
+    if kind in ("diameter", "pdist"):
+        return f"{kind}_a{meta['an']}_b{meta['bn']}_m{meta['m']}"
+    if kind == "sum":
+        return f"sum_n{meta['n']}_m{meta['m']}"
+    return f"{kind}_n{meta['n']}_m{meta['m']}_k{meta['k']}"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="emit only the smallest variant per kind (CI)")
+    ap.add_argument("--only", choices=["assign", "step", "sum", "diameter", "pdist"],
+                    help="restrict to one stage kind")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    plan = {
+        "assign": [(build_assign, v) for v in
+                   (QUICK_SUFFIXES["assign"] if args.quick else ASSIGN_VARIANTS)],
+        "step": [(build_step, v) for v in
+                 (QUICK_SUFFIXES["step"] if args.quick else STEP_VARIANTS)],
+        "sum": [(build_sum, v) for v in
+                (QUICK_SUFFIXES["sum"] if args.quick else SUM_VARIANTS)],
+        "diameter": [(build_diameter, v) for v in
+                     (QUICK_SUFFIXES["diameter"] if args.quick else DIAMETER_VARIANTS)],
+        "pdist": [(build_pdist, v) for v in
+                  (QUICK_SUFFIXES["pdist"] if args.quick else PDIST_VARIANTS)],
+    }
+    if args.only:
+        plan = {args.only: plan[args.only]}
+
+    manifest = {"version": MANIFEST_VERSION, "artifacts": []}
+    t0 = time.time()
+    for kind, builds in plan.items():
+        for build_fn, variant in builds:
+            lowered, meta = build_fn(*variant)
+            name = variant_name(meta)
+            text = to_hlo_text(lowered)
+            path = f"{name}.hlo.txt"
+            with open(os.path.join(out_dir, path), "w") as f:
+                f.write(text)
+            meta.update(name=name, path=path)
+            manifest["artifacts"].append(meta)
+            print(f"  [{time.time()-t0:6.1f}s] {name}: {len(text)} chars",
+                  file=sys.stderr)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json "
+          f"to {out_dir}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels for parclust.
+
+Every kernel here is the compute hot-spot of one stage of the paper's
+K-means pipeline (Litvinenko 2014, Algorithms 2-4):
+
+- :mod:`assign`   -- fused assignment + partial centroid update (steps 4-7)
+- :mod:`update`   -- standalone centroid accumulation (ablation path)
+- :mod:`diameter` -- tiled pairwise max-distance (step 1, the O(n^2) stage)
+- :mod:`pdist`    -- tiled pairwise distance matrix (hierarchical methods)
+- :mod:`ref`      -- pure-jnp oracles used by pytest/hypothesis
+
+All kernels are lowered with ``interpret=True`` so the resulting HLO runs on
+any PJRT backend (the rust coordinator uses the CPU client). See
+DESIGN.md section `Hardware-Adaptation` for the CUDA->Pallas mapping.
+"""
+
+from . import assign, diameter, pdist, ref, update  # noqa: F401

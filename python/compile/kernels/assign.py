@@ -1,0 +1,131 @@
+"""Fused assignment + partial-update Pallas kernel.
+
+This is the hot spot of the paper's K-means iteration (Algorithm 4 steps
+4-7): for every sample find the nearest centroid, and accumulate the
+per-cluster coordinate sums / counts needed for the next centroid-of-gravity
+step -- in ONE pass over the data.
+
+CUDA -> Pallas re-think (DESIGN.md section Hardware-Adaptation): the paper's
+GTX 660 kernel gives one CUDA thread one sample and loops over K centroids in
+global memory. On a TPU-shaped machine we instead:
+
+- tile the sample matrix into ``(TILE_N, m)`` VMEM blocks via ``BlockSpec``;
+- keep the WHOLE centroid table ``(k, m)`` resident in VMEM (k*m is tiny --
+  at the paper's max, 25 features x tens of clusters ~ a few KiB);
+- compute the full ``(TILE_N, k)`` squared-distance matrix on the MXU as
+  ``|x|^2 - 2 x C^T + |c|^2`` (matmul, not a scalar FMA loop);
+- reduce the partial centroid sums INSIDE the kernel as a one-hot matmul
+  ``onehot(labels)^T @ x`` -- the Pallas analogue of the paper's planned
+  shared-memory reduction (their "future work", our default);
+- accumulate partials across grid steps in the output refs (sequential grid
+  in interpret mode), so the host receives just ``k*m + k + 1`` floats per
+  shard instead of per-sample traffic.
+
+Masking contract (rust pads shards to the compiled shape):
+- ``mask[i] == 0``   -> row i contributes nothing to sums/counts/inertia;
+  its label is still computed but the coordinator ignores it;
+- padded feature columns are zero in points AND centroids -> distances
+  unchanged;
+- padded centroid rows are set to ``PAD_CENTROID`` (+1e30) by the
+  coordinator -> never the argmin.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Value the coordinator writes into padded centroid rows. Kept here so the
+# oracle, the tests and the rust side (runtime/literal.rs) agree on it.
+PAD_CENTROID = 1.0e30
+
+# Default n-tile. Must divide the compiled n; aot.py clamps it.
+DEFAULT_TILE_N = 8192
+
+
+def _assign_kernel(x_ref, mask_ref, c_ref, labels_ref, sums_ref, counts_ref,
+                   inertia_ref, *, k: int):
+    """One grid step: one (TILE_N, m) tile of samples vs all k centroids."""
+    x = x_ref[...]                      # (tile_n, m)
+    mask = mask_ref[...]                # (tile_n,)
+    c = c_ref[...]                      # (k, m)
+
+    # Squared-distance matrix on the MXU: |x|^2 - 2 x C^T + |c|^2.
+    xx = jnp.sum(x * x, axis=1, keepdims=True)           # (tile_n, 1)
+    cc = jnp.sum(c * c, axis=1, keepdims=True).T         # (1, k)
+    d2 = xx - 2.0 * jnp.dot(x, c.T) + cc                 # (tile_n, k)
+    d2 = jnp.maximum(d2, 0.0)                            # numeric floor
+
+    labels = jnp.argmin(d2, axis=1)                      # (tile_n,) int32
+    labels_ref[...] = labels.astype(jnp.int32)
+
+    # One-hot reduction of the partial sums on the MXU. Padded rows are
+    # zeroed by the mask before they can contribute.
+    onehot = (labels[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)
+    onehot = onehot * mask[:, None]                      # (tile_n, k)
+    part_sums = jnp.dot(onehot.T, x)                     # (k, m)
+    part_counts = jnp.sum(onehot, axis=0)                # (k,)
+    min_d2 = jnp.min(d2, axis=1)                         # (tile_n,)
+    part_inertia = jnp.sum(min_d2 * mask)                # ()
+
+    # Cross-step accumulation: all grid steps map to the same output block.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        inertia_ref[...] = jnp.zeros_like(inertia_ref)
+
+    sums_ref[...] += part_sums
+    counts_ref[...] += part_counts
+    inertia_ref[...] += part_inertia[None]
+
+
+def assign_partial(points, mask, centroids, *, tile_n: int | None = None):
+    """Assignment + partial centroid update for one shard.
+
+    Args:
+      points:    f32[n, m] shard of samples (rows may be padding).
+      mask:      f32[n] validity mask (1.0 = real sample, 0.0 = padding).
+      centroids: f32[k, m] current centroid table (rows may be PAD_CENTROID).
+      tile_n:    n-tile size; must divide n.
+
+    Returns:
+      labels  i32[n]   -- index of the nearest centroid per row;
+      sums    f32[k,m] -- sum of masked rows per cluster;
+      counts  f32[k]   -- number of masked rows per cluster;
+      inertia f32[1]   -- sum of min squared distances over masked rows.
+    """
+    n, m = points.shape
+    k, m2 = centroids.shape
+    assert m == m2, f"feature mismatch: points m={m}, centroids m={m2}"
+    assert mask.shape == (n,), f"mask shape {mask.shape} != ({n},)"
+    tile_n = tile_n or min(DEFAULT_TILE_N, n)
+    assert n % tile_n == 0, f"tile_n={tile_n} must divide n={n}"
+    grid = (n // tile_n,)
+
+    kernel = functools.partial(_assign_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, m), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n,), lambda i: (i,)),
+            pl.BlockSpec((k, m), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_n,), lambda i: (i,)),
+            pl.BlockSpec((k, m), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((k, m), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, mask, centroids)

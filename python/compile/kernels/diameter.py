@@ -1,0 +1,112 @@
+"""Tiled pairwise-diameter Pallas kernel (step 1 of Algorithms 2-4).
+
+The paper's initialization computes the diameter D of the sample set -- the
+pair of samples with the largest distance (Eq. 3). This is the only O(n^2)
+stage of the pipeline and the one where the paper's GPU offload genuinely
+pays off; the coordinator shards the n x n pair space into (block_a,
+block_b) rectangles and ships each rectangle here.
+
+Kernel layout: grid over TILE_A-row slices of ``block_a``; the whole
+``block_b`` stays VMEM-resident across steps. Each step computes the
+(TILE_A, b) squared-distance matrix on the MXU, masks out padded rows, and
+folds the running (max, argmax-pair) into 1-element output refs.
+
+Sentinel contract: invalid pairs get distance -1 and the running max starts
+at -2 (NO_PAIR_SENTINEL), so a result **< 0** means "no valid pair in this
+rectangle" (the coordinator skips it; the exact negative value depends on
+whether the rectangle was empty of valid pairs before or after the first
+grid step). Real squared distances are always >= 0.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_A = 512
+
+# Returned max when the rectangle contains no valid (mask_a, mask_b) pair.
+NO_PAIR_SENTINEL = -2.0
+
+
+def _diameter_kernel(a_ref, b_ref, mask_a_ref, mask_b_ref,
+                     max_ref, argi_ref, argj_ref):
+    a = a_ref[...]                       # (tile_a, m)
+    b = b_ref[...]                       # (bn, m)
+    mask_a = mask_a_ref[...]             # (tile_a,)
+    mask_b = mask_b_ref[...]             # (bn,)
+
+    aa = jnp.sum(a * a, axis=1, keepdims=True)           # (tile_a, 1)
+    bb = jnp.sum(b * b, axis=1, keepdims=True).T         # (1, bn)
+    d2 = aa - 2.0 * jnp.dot(a, b.T) + bb                 # (tile_a, bn)
+    d2 = jnp.maximum(d2, 0.0)
+
+    valid = mask_a[:, None] * mask_b[None, :]
+    d2 = jnp.where(valid > 0.0, d2, -1.0)
+
+    bn = d2.shape[1]
+    flat = jnp.argmax(d2)
+    tile_max = jnp.max(d2)
+    li = (flat // bn).astype(jnp.int32)
+    lj = (flat % bn).astype(jnp.int32)
+    gi = (pl.program_id(0) * d2.shape[0] + li).astype(jnp.int32)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        max_ref[...] = jnp.full_like(max_ref, NO_PAIR_SENTINEL)
+        argi_ref[...] = jnp.full_like(argi_ref, -1)
+        argj_ref[...] = jnp.full_like(argj_ref, -1)
+
+    @pl.when(tile_max > max_ref[0])
+    def _fold():
+        max_ref[0] = tile_max
+        argi_ref[0] = gi
+        argj_ref[0] = lj
+
+
+def diameter_partial(block_a, block_b, mask_a, mask_b,
+                     *, tile_a: int | None = None):
+    """Max squared distance between any valid pair (i in a, j in b).
+
+    Args:
+      block_a: f32[an, m] row block.
+      block_b: f32[bn, m] column block (fully VMEM-resident).
+      mask_a:  f32[an] validity mask for block_a rows.
+      mask_b:  f32[bn] validity mask for block_b rows.
+
+    Returns:
+      max_d2 f32[1] -- largest masked squared distance
+                       (negative if the rectangle has no valid pair);
+      arg_i  i32[1] -- row index in block_a of the winning pair;
+      arg_j  i32[1] -- row index in block_b of the winning pair.
+    """
+    an, m = block_a.shape
+    bn, m2 = block_b.shape
+    assert m == m2
+    assert mask_a.shape == (an,) and mask_b.shape == (bn,)
+    tile_a = tile_a or min(DEFAULT_TILE_A, an)
+    assert an % tile_a == 0, f"tile_a={tile_a} must divide an={an}"
+    grid = (an // tile_a,)
+
+    return pl.pallas_call(
+        _diameter_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_a, m), lambda i: (i, 0)),
+            pl.BlockSpec((bn, m), lambda i: (0, 0)),
+            pl.BlockSpec((tile_a,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=True,
+    )(block_a, block_b, mask_a, mask_b)

@@ -1,0 +1,61 @@
+"""Tiled pairwise-distance-matrix Pallas kernel.
+
+Substrate for the paper's future-work clustering methods (section 7: "single
+linkage method, average linkage method, pair-group method using the centroid
+average"): agglomerative methods start from the full n x n distance matrix,
+and this kernel produces it block by block on the accelerator -- the same
+rectangle decomposition as the diameter kernel, but materialising the block
+instead of reducing it.
+
+Masking: padded rows/columns produce distance 0 in the output block; the
+coordinator slices them away (it knows the logical extent). Squared
+distances are returned; the host takes sqrt when the linkage needs raw
+Euclidean (centroid linkage consumes squared distances directly).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_A = 512
+
+
+def _pdist_kernel(a_ref, b_ref, out_ref):
+    a = a_ref[...]                        # (tile_a, m)
+    b = b_ref[...]                        # (bn, m)
+    aa = jnp.sum(a * a, axis=1, keepdims=True)
+    bb = jnp.sum(b * b, axis=1, keepdims=True).T
+    d2 = aa - 2.0 * jnp.dot(a, b.T) + bb
+    out_ref[...] = jnp.maximum(d2, 0.0)
+
+
+def pdist_block(block_a, block_b, *, tile_a: int | None = None):
+    """Squared-distance matrix between two row blocks.
+
+    Args:
+      block_a: f32[an, m].
+      block_b: f32[bn, m] (fully VMEM-resident).
+
+    Returns:
+      d2 f32[an, bn].
+    """
+    an, m = block_a.shape
+    bn, m2 = block_b.shape
+    assert m == m2
+    tile_a = tile_a or min(DEFAULT_TILE_A, an)
+    assert an % tile_a == 0, f"tile_a={tile_a} must divide an={an}"
+    grid = (an // tile_a,)
+
+    return pl.pallas_call(
+        _pdist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_a, m), lambda i: (i, 0)),
+            pl.BlockSpec((bn, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_a, bn), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((an, bn), jnp.float32),
+        interpret=True,
+    )(block_a, block_b)

@@ -1,0 +1,79 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the CORE correctness signal of the python layer: every kernel in
+this package must match its oracle to float tolerance across the shape /
+mask / dtype sweeps in python/tests. Keep these dumb and obviously right --
+no tiling, no fusion, no tricks.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists(x, c):
+    """f32[n,k] squared Euclidean distances, the paper's Eq. 2 (squared)."""
+    diff = x[:, None, :] - c[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def assign_partial_ref(points, mask, centroids):
+    """Oracle for kernels.assign.assign_partial."""
+    d2 = pairwise_sq_dists(points, centroids)
+    labels = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    k = centroids.shape[0]
+    onehot = (labels[:, None] == jnp.arange(k)[None, :]).astype(points.dtype)
+    onehot = onehot * mask[:, None]
+    sums = onehot.T @ points
+    counts = onehot.sum(axis=0)
+    inertia = jnp.sum(jnp.min(d2, axis=1) * mask)[None]
+    return labels, sums, counts, inertia
+
+
+def update_partial_ref(points, mask, labels, k):
+    """Oracle for kernels.update.update_partial."""
+    onehot = (labels[:, None] == jnp.arange(k)[None, :]).astype(points.dtype)
+    onehot = onehot * mask[:, None]
+    return onehot.T @ points, onehot.sum(axis=0)
+
+
+def diameter_partial_ref(block_a, block_b, mask_a, mask_b):
+    """Oracle for kernels.diameter.diameter_partial.
+
+    Returns (max_d2, arg_i, arg_j); max_d2 < 0 means "no valid pair"
+    (same contract as the kernel).
+    """
+    diff = block_a[:, None, :] - block_b[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    valid = mask_a[:, None] * mask_b[None, :]
+    d2 = jnp.where(valid > 0.0, d2, -1.0)
+    if not bool(jnp.any(valid > 0.0)):
+        return (jnp.array([-1.0], jnp.float32),
+                jnp.array([-1], jnp.int32), jnp.array([-1], jnp.int32))
+    flat = int(jnp.argmax(d2))
+    bn = d2.shape[1]
+    return (jnp.max(d2)[None].astype(jnp.float32),
+            jnp.array([flat // bn], jnp.int32),
+            jnp.array([flat % bn], jnp.int32))
+
+
+def sum_partial_ref(points, mask):
+    """Oracle for model.sum_partial (masked coordinate sums + count)."""
+    sums = (points * mask[:, None]).sum(axis=0)
+    count = mask.sum()[None]
+    return sums, count
+
+
+def kmeans_step_ref(points, mask, centroids):
+    """Oracle for model.kmeans_step: one full Lloyd iteration."""
+    labels, sums, counts, inertia = assign_partial_ref(points, mask, centroids)
+    safe = jnp.maximum(counts, 1.0)
+    new_c = jnp.where(counts[:, None] > 0.0, sums / safe[:, None], centroids)
+    shift = jnp.max(jnp.sum((new_c - centroids) ** 2, axis=1))[None]
+    return labels, new_c, counts, shift, inertia
+
+
+def pdist_block_ref(block_a, block_b):
+    """Oracle for kernels.pdist.pdist_block."""
+    diff = block_a[:, None, :] - block_b[None, :, :]
+    return jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0)

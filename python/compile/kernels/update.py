@@ -1,0 +1,81 @@
+"""Standalone centroid-update Pallas kernel (steps 5/7 of Algorithms 2-4).
+
+The production path uses the FUSED kernel in :mod:`assign` (one pass over the
+data per iteration). This standalone kernel exists for:
+
+- the step-decomposed executor path (paper Algorithm 2 runs assignment and
+  update as separate stages -- we mirror that for the ablation bench), and
+- a direct correctness cross-check of the one-hot-matmul reduction.
+
+Given precomputed labels it accumulates per-cluster coordinate sums and
+counts with the same one-hot MXU matmul as the fused kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_N = 8192
+
+
+def _update_kernel(x_ref, mask_ref, labels_ref, sums_ref, counts_ref, *, k: int):
+    x = x_ref[...]                       # (tile_n, m)
+    mask = mask_ref[...]                 # (tile_n,)
+    labels = labels_ref[...]             # (tile_n,) int32
+
+    onehot = (labels[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)
+    onehot = onehot * mask[:, None]
+    part_sums = jnp.dot(onehot.T, x)     # (k, m)
+    part_counts = jnp.sum(onehot, axis=0)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    sums_ref[...] += part_sums
+    counts_ref[...] += part_counts
+
+
+def update_partial(points, mask, labels, k: int, *, tile_n: int | None = None):
+    """Per-cluster sums/counts for one shard given assignment labels.
+
+    Args:
+      points: f32[n, m] shard of samples.
+      mask:   f32[n] validity mask (1.0 real, 0.0 padding).
+      labels: i32[n] cluster index per row.
+      k:      number of clusters (static).
+
+    Returns:
+      sums   f32[k, m];
+      counts f32[k].
+    """
+    n, m = points.shape
+    assert mask.shape == (n,) and labels.shape == (n,)
+    tile_n = tile_n or min(DEFAULT_TILE_N, n)
+    assert n % tile_n == 0, f"tile_n={tile_n} must divide n={n}"
+    grid = (n // tile_n,)
+
+    kernel = functools.partial(_update_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, m), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n,), lambda i: (i,)),
+            pl.BlockSpec((tile_n,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, m), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, m), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, mask, labels)

@@ -1,0 +1,86 @@
+"""Layer-2 JAX stage functions for the paper's K-means pipeline.
+
+Each function here is one *stage* of Litvinenko's Algorithms 2-4, written
+over the Layer-1 Pallas kernels, with static shapes and validity masks so a
+single AOT-compiled artifact serves many logical sizes (the rust coordinator
+pads shards up to the compiled shape).
+
+These functions are jit-lowered ONCE by :mod:`compile.aot` into
+``artifacts/*.hlo.txt``; python never runs on the rust request path.
+
+Stage map (paper -> function):
+  Algorithm step 1  (diameter D of the sample set)  -> :func:`diameter_partial`
+  Algorithm step 2  (center of gravity of the set)  -> :func:`sum_partial`
+  Algorithm steps 4-7 (assign + centroid update)    -> :func:`assign_partial`
+                                                       / :func:`kmeans_step`
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import assign as assign_kernel
+from .kernels import diameter as diameter_kernel
+from .kernels import pdist as pdist_kernel
+from .kernels import update as update_kernel
+
+
+def assign_partial(points, mask, centroids):
+    """Shard-level assignment + partial centroid statistics.
+
+    The multi-shard path (Algorithms 3/4): every worker ships its shard
+    here, gets back ``(labels, sums, counts, inertia)``, and the leader
+    combines the tiny ``(k,m)+(k,)`` partials on the host.
+    """
+    return tuple(assign_kernel.assign_partial(points, mask, centroids))
+
+
+def update_partial(points, mask, labels, k: int):
+    """Standalone centroid statistics for precomputed labels (ablation)."""
+    return tuple(update_kernel.update_partial(points, mask, labels, k))
+
+
+def diameter_partial(block_a, block_b, mask_a, mask_b):
+    """Max-distance pair between two sample blocks (paper step 1)."""
+    return tuple(diameter_kernel.diameter_partial(
+        block_a, block_b, mask_a, mask_b))
+
+
+def sum_partial(points, mask):
+    """Masked coordinate sums + count for one shard (paper step 2).
+
+    The compute volume is O(n*m) with no reuse -- memory-bound, no MXU win
+    -- so this stage is plain jnp rather than a Pallas kernel. It is still
+    AOT-compiled and offloaded as a unit, matching the paper's Algorithm 4
+    step 2 ("each thread prepares the task for the GPU ... receives the sum
+    of coordinates"). The paper's intermediate conclusion -- GPU offload of
+    thin stages may cost more than it wins -- is reproduced by exactly this
+    artifact.
+    """
+    sums = (points * mask[:, None]).sum(axis=0)
+    count = mask.sum()[None]
+    return sums, count
+
+
+def kmeans_step(points, mask, centroids):
+    """One full Lloyd iteration for a single-device dataset.
+
+    Fuses assignment, centroid-of-gravity update, and the convergence
+    measurement (max squared centroid shift, paper step 8's congruence
+    test) into one artifact so the whole-dataset path does one device
+    round-trip per iteration.
+
+    Empty clusters keep their previous centroid (counts == 0 guard), the
+    same policy as the rust scalar engine.
+    """
+    labels, sums, counts, inertia = assign_kernel.assign_partial(
+        points, mask, centroids)
+    safe = jnp.maximum(counts, 1.0)
+    new_c = jnp.where(counts[:, None] > 0.0, sums / safe[:, None], centroids)
+    shift = jnp.max(jnp.sum((new_c - centroids) ** 2, axis=1))[None]
+    return labels, new_c, counts, shift, inertia
+
+
+def pdist_block(block_a, block_b):
+    """Pairwise squared-distance block (future-work linkage methods)."""
+    return (pdist_kernel.pdist_block(block_a, block_b),)

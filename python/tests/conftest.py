@@ -1,0 +1,22 @@
+"""Shared fixtures + deterministic data helpers for the parclust python tests."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture()
+def rng():
+    # Function-scoped so every test sees the same stream regardless of
+    # execution order (a session-scoped generator makes failures depend
+    # on which tests ran before).
+    return np.random.default_rng(0xC1)
+
+
+def make_blobs(rng, n, m, k, spread=0.3, scale=10.0):
+    """Gaussian mixture with well-separated centers and ground-truth labels."""
+    centers = rng.normal(size=(k, m)).astype(np.float32) * scale
+    labels = rng.integers(0, k, size=n)
+    pts = centers[labels] + rng.normal(size=(n, m)).astype(np.float32) * spread
+    return pts.astype(np.float32), labels.astype(np.int32), centers

@@ -1,0 +1,67 @@
+"""AOT path tests: lowering emits parseable HLO text and a coherent manifest."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.mark.parametrize("builder,variant", [
+    (aot.build_assign, (64, 8, 4)),
+    (aot.build_step, (64, 8, 4)),
+    (aot.build_sum, (64, 8)),
+    (aot.build_diameter, (32, 32, 8)),
+])
+def test_lowering_emits_hlo_text(builder, variant):
+    lowered, meta = builder(*variant)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    # return_tuple=True => root of entry computation is a tuple
+    assert "tuple(" in text or "tuple " in text
+
+
+def test_meta_describes_io():
+    _, meta = aot.build_assign(128, 16, 8)
+    assert meta["kind"] == "assign"
+    assert [i["name"] for i in meta["inputs"]] == ["points", "mask", "centroids"]
+    assert meta["inputs"][0]["shape"] == [128, 16]
+    assert [o["name"] for o in meta["outputs"]] == [
+        "labels", "sums", "counts", "inertia"]
+    assert meta["outputs"][0]["dtype"] == "i32"
+
+
+def test_variant_names_unique():
+    metas = []
+    for v in aot.ASSIGN_VARIANTS:
+        metas.append(("assign",) + v)
+    names = set()
+    for kind, *v in metas:
+        _, meta = aot.build_assign(*v)
+        name = aot.variant_name(meta)
+        assert name not in names
+        names.add(name)
+
+
+def test_end_to_end_quick_emit(tmp_path, monkeypatch):
+    """--quick emits every kind + manifest that indexes exactly those files."""
+    import sys
+    monkeypatch.setattr(sys, "argv",
+                        ["aot", "--out-dir", str(tmp_path), "--quick"])
+    assert aot.main() == 0
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["version"] == aot.MANIFEST_VERSION
+    kinds = {a["kind"] for a in manifest["artifacts"]}
+    assert kinds == {"assign", "step", "sum", "diameter", "pdist"}
+    for art in manifest["artifacts"]:
+        p = tmp_path / art["path"]
+        assert p.exists(), art["path"]
+        assert p.read_text().startswith("HloModule")
+        # i/o specs present and well-formed
+        for io in art["inputs"] + art["outputs"]:
+            assert io["dtype"] in ("f32", "i32")
+            assert all(isinstance(d, int) and d > 0 for d in io["shape"])

@@ -1,0 +1,144 @@
+"""Pallas assignment kernel vs pure-jnp oracle.
+
+This is the core correctness signal for L1: the fused distance + argmin +
+one-hot-reduction kernel must match ref.assign_partial_ref across shapes,
+tile sizes, mask patterns and degenerate inputs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import assign, ref
+
+from .conftest import make_blobs
+
+
+def run_both(pts, mask, cent, tile_n):
+    out = assign.assign_partial(jnp.asarray(pts), jnp.asarray(mask),
+                                jnp.asarray(cent), tile_n=tile_n)
+    exp = ref.assign_partial_ref(jnp.asarray(pts), jnp.asarray(mask),
+                                 jnp.asarray(cent))
+    return [np.asarray(o) for o in out], [np.asarray(e) for e in exp]
+
+
+def assert_matches(out, exp):
+    labels, sums, counts, inertia = out
+    e_labels, e_sums, e_counts, e_inertia = exp
+    np.testing.assert_array_equal(labels, e_labels)
+    np.testing.assert_allclose(sums, e_sums, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(counts, e_counts, rtol=0, atol=0)
+    np.testing.assert_allclose(inertia, e_inertia, rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,m,k,tile_n", [
+    (64, 4, 2, 32),
+    (128, 8, 4, 64),
+    (256, 25, 10, 64),     # the paper's max feature count
+    (256, 32, 16, 128),    # the compiled artifact geometry
+    (1024, 32, 16, 1024),  # single-tile grid
+])
+def test_matches_oracle_shapes(rng, n, m, k, tile_n):
+    pts, _, _ = make_blobs(rng, n, m, k)
+    cent = pts[:k].copy()
+    mask = np.ones(n, np.float32)
+    out, exp = run_both(pts, mask, cent, tile_n)
+    assert_matches(out, exp)
+
+
+def test_masked_rows_do_not_contribute(rng):
+    n, m, k = 128, 8, 4
+    pts, _, _ = make_blobs(rng, n, m, k)
+    cent = pts[:k].copy()
+    mask = np.zeros(n, np.float32)
+    mask[: n // 2] = 1.0
+    out, exp = run_both(pts, mask, cent, 32)
+    assert_matches(out, exp)
+    # counts must equal the number of valid rows
+    assert out[2].sum() == n // 2
+    # sums must equal the masked manual reduction
+    labels = out[0]
+    manual = np.zeros((k, m), np.float32)
+    for i in range(n // 2):
+        manual[labels[i]] += pts[i]
+    np.testing.assert_allclose(out[1], manual, rtol=1e-5, atol=1e-4)
+
+
+def test_padded_centroids_never_selected(rng):
+    n, m = 128, 8
+    k_real, k_pad = 3, 8
+    pts, _, _ = make_blobs(rng, n, m, k_real)
+    cent = np.full((k_pad, m), assign.PAD_CENTROID, np.float32)
+    cent[:k_real] = pts[:k_real]
+    mask = np.ones(n, np.float32)
+    out, exp = run_both(pts, mask, cent, 32)
+    assert_matches(out, exp)
+    assert out[0].max() < k_real, "padded centroid was selected"
+    assert np.all(out[2][k_real:] == 0.0)
+
+
+def test_padded_features_are_inert(rng):
+    """Zero-padding feature columns must not change labels or inertia."""
+    n, m, k = 128, 5, 4
+    pts, _, _ = make_blobs(rng, n, m, k)
+    cent = pts[:k].copy()
+    mask = np.ones(n, np.float32)
+    out_small, _ = run_both(pts, mask, cent, 32)
+
+    m_pad = 8
+    pts_p = np.zeros((n, m_pad), np.float32)
+    pts_p[:, :m] = pts
+    cent_p = np.zeros((k, m_pad), np.float32)
+    cent_p[:, :m] = cent
+    out_pad, _ = run_both(pts_p, mask, cent_p, 32)
+
+    np.testing.assert_array_equal(out_small[0], out_pad[0])
+    np.testing.assert_allclose(out_small[3], out_pad[3], rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(out_small[1], out_pad[1][:, :m],
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_all_masked_shard(rng):
+    """A fully padded shard must return zero sums/counts/inertia."""
+    n, m, k = 64, 4, 2
+    pts, _, _ = make_blobs(rng, n, m, k)
+    cent = pts[:k].copy()
+    mask = np.zeros(n, np.float32)
+    out, _ = run_both(pts, mask, cent, 32)
+    assert np.all(out[1] == 0) and np.all(out[2] == 0) and out[3][0] == 0
+
+
+def test_identical_points_single_cluster(rng):
+    """Degenerate data: every sample identical -> all land in one cluster."""
+    n, m, k = 64, 4, 3
+    pts = np.ones((n, m), np.float32) * 7.0
+    cent = np.stack([np.full(m, 7.0), np.full(m, 100.0), np.full(m, -50.0)]
+                    ).astype(np.float32)
+    mask = np.ones(n, np.float32)
+    out, exp = run_both(pts, mask, cent, 32)
+    assert_matches(out, exp)
+    assert np.all(out[0] == 0)
+    assert out[2][0] == n
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tiles=st.integers(1, 4),
+    tile_n=st.sampled_from([16, 32, 64]),
+    m=st.integers(1, 25),
+    k=st.integers(1, 16),
+    mask_p=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(n_tiles, tile_n, m, k, mask_p, seed):
+    """Property: kernel == oracle for arbitrary shard geometry and masks."""
+    r = np.random.default_rng(seed)
+    n = n_tiles * tile_n
+    pts = r.normal(size=(n, m)).astype(np.float32) * 5.0
+    cent = r.normal(size=(k, m)).astype(np.float32) * 5.0
+    mask = (r.random(n) < mask_p).astype(np.float32)
+    out, exp = run_both(pts, mask, cent, tile_n)
+    assert_matches(out, exp)

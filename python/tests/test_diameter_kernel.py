@@ -1,0 +1,127 @@
+"""Tiled diameter kernel vs oracle and vs brute force."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import diameter, ref
+
+from .conftest import make_blobs
+
+
+def run_kernel(a, b, ma, mb, tile_a):
+    out = diameter.diameter_partial(jnp.asarray(a), jnp.asarray(b),
+                                    jnp.asarray(ma), jnp.asarray(mb),
+                                    tile_a=tile_a)
+    return [np.asarray(o) for o in out]
+
+
+def brute(a, b, ma, mb):
+    best, bi, bj = -2.0, -1, -1
+    for i in range(a.shape[0]):
+        if ma[i] == 0:
+            continue
+        for j in range(b.shape[0]):
+            if mb[j] == 0:
+                continue
+            d = float(((a[i] - b[j]) ** 2).sum())
+            if d > best:
+                best, bi, bj = d, i, j
+    return best, bi, bj
+
+
+@pytest.mark.parametrize("an,bn,m,tile_a", [
+    (32, 32, 4, 16),
+    (64, 48, 25, 32),
+    (128, 128, 32, 64),
+])
+def test_matches_brute_force(rng, an, bn, m, tile_a):
+    a = rng.normal(size=(an, m)).astype(np.float32) * 3
+    b = rng.normal(size=(bn, m)).astype(np.float32) * 3
+    ma = np.ones(an, np.float32)
+    mb = np.ones(bn, np.float32)
+    max_d2, ai, aj = run_kernel(a, b, ma, mb, tile_a)
+    eb, ei, ej = brute(a, b, ma, mb)
+    np.testing.assert_allclose(max_d2[0], eb, rtol=1e-4, atol=1e-3)
+    # the winning distance at the returned indices must equal the max
+    d_at = float(((a[ai[0]] - b[aj[0]]) ** 2).sum())
+    np.testing.assert_allclose(d_at, eb, rtol=1e-4, atol=1e-3)
+
+
+def test_masked_pairs_excluded(rng):
+    an, bn, m = 64, 64, 8
+    a = rng.normal(size=(an, m)).astype(np.float32)
+    b = rng.normal(size=(bn, m)).astype(np.float32)
+    # plant a huge outlier pair, then mask it out
+    a[3] = 1e3
+    b[7] = -1e3
+    ma = np.ones(an, np.float32)
+    mb = np.ones(bn, np.float32)
+    ma[3] = 0.0
+    max_d2, ai, aj = run_kernel(a, b, ma, mb, 32)
+    eb, _, _ = brute(a, b, ma, mb)
+    np.testing.assert_allclose(max_d2[0], eb, rtol=1e-4, atol=1e-3)
+    assert ai[0] != 3
+
+
+def test_no_valid_pair_sentinel(rng):
+    an, bn, m = 32, 32, 4
+    a = rng.normal(size=(an, m)).astype(np.float32)
+    b = rng.normal(size=(bn, m)).astype(np.float32)
+    max_d2, ai, aj = run_kernel(a, b, np.zeros(an, np.float32),
+                                np.ones(bn, np.float32), 16)
+    # contract: any negative max means "no valid pair in this rectangle"
+    assert max_d2[0] < 0.0
+    assert diameter.NO_PAIR_SENTINEL < 0.0
+
+
+def test_oracle_agrees_with_kernel(rng):
+    an, bn, m = 96, 64, 12
+    a = rng.normal(size=(an, m)).astype(np.float32)
+    b = rng.normal(size=(bn, m)).astype(np.float32)
+    ma = (rng.random(an) > 0.4).astype(np.float32)
+    mb = (rng.random(bn) > 0.4).astype(np.float32)
+    out = run_kernel(a, b, ma, mb, 32)
+    exp = [np.asarray(e) for e in ref.diameter_partial_ref(
+        jnp.asarray(a), jnp.asarray(b), jnp.asarray(ma), jnp.asarray(mb))]
+    np.testing.assert_allclose(out[0], exp[0], rtol=1e-4, atol=1e-3)
+
+
+def test_symmetric_self_block(rng):
+    """diameter(X, X) finds the true diameter of the set (paper Eq. 3)."""
+    n, m = 64, 6
+    pts, _, _ = make_blobs(rng, n, m, 3)
+    mask = np.ones(n, np.float32)
+    max_d2, ai, aj = run_kernel(pts, pts, mask, mask, 32)
+    eb, _, _ = brute(pts, pts, mask, mask)
+    np.testing.assert_allclose(max_d2[0], eb, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    a_tiles=st.integers(1, 3),
+    tile_a=st.sampled_from([8, 16]),
+    bn=st.integers(1, 40),
+    m=st.integers(1, 25),
+    pa=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(a_tiles, tile_a, bn, m, pa, seed):
+    r = np.random.default_rng(seed)
+    an = a_tiles * tile_a
+    a = r.normal(size=(an, m)).astype(np.float32)
+    b = r.normal(size=(bn, m)).astype(np.float32)
+    ma = (r.random(an) < pa).astype(np.float32)
+    mb = (r.random(bn) < 0.9).astype(np.float32)
+    max_d2, ai, aj = run_kernel(a, b, ma, mb, tile_a)
+    eb, _, _ = brute(a, b, ma, mb)
+    if eb < 0:
+        assert max_d2[0] < 0.0, "kernel found a pair where none is valid"
+    else:
+        np.testing.assert_allclose(max_d2[0], eb, rtol=1e-4, atol=1e-3)
+        d_at = float(((a[ai[0]] - b[aj[0]]) ** 2).sum())
+        np.testing.assert_allclose(d_at, eb, rtol=1e-4, atol=1e-3)
+        assert ma[ai[0]] == 1.0 and mb[aj[0]] == 1.0

@@ -1,0 +1,60 @@
+"""Pairwise-distance-matrix kernel vs oracle."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pdist, ref
+
+
+def run_both(a, b, tile_a):
+    out = pdist.pdist_block(jnp.asarray(a), jnp.asarray(b), tile_a=tile_a)
+    exp = ref.pdist_block_ref(jnp.asarray(a), jnp.asarray(b))
+    return np.asarray(out), np.asarray(exp)
+
+
+@pytest.mark.parametrize("an,bn,m,tile_a", [
+    (32, 32, 4, 16),
+    (64, 48, 25, 32),
+    (128, 128, 32, 64),
+])
+def test_matches_oracle(rng, an, bn, m, tile_a):
+    a = rng.normal(size=(an, m)).astype(np.float32) * 3
+    b = rng.normal(size=(bn, m)).astype(np.float32) * 3
+    out, exp = run_both(a, b, tile_a)
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-3)
+
+
+def test_self_block_diagonal_zero(rng):
+    a = rng.normal(size=(64, 8)).astype(np.float32)
+    out, _ = run_both(a, a, 32)
+    np.testing.assert_allclose(np.diag(out), 0.0, atol=1e-3)
+    # symmetry
+    np.testing.assert_allclose(out, out.T, rtol=1e-4, atol=1e-3)
+
+
+def test_all_nonnegative(rng):
+    a = rng.normal(size=(32, 4)).astype(np.float32) * 100
+    b = rng.normal(size=(16, 4)).astype(np.float32) * 100
+    out, _ = run_both(a, b, 16)
+    assert (out >= 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    a_tiles=st.integers(1, 3),
+    tile_a=st.sampled_from([8, 32]),
+    bn=st.integers(1, 40),
+    m=st.integers(1, 25),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(a_tiles, tile_a, bn, m, seed):
+    r = np.random.default_rng(seed)
+    an = a_tiles * tile_a
+    a = r.normal(size=(an, m)).astype(np.float32)
+    b = r.normal(size=(bn, m)).astype(np.float32)
+    out, exp = run_both(a, b, tile_a)
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,79 @@
+"""Standalone centroid-update kernel vs oracle + cross-check vs fused kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import assign, ref, update
+
+from .conftest import make_blobs
+
+
+@pytest.mark.parametrize("n,m,k,tile_n", [
+    (64, 4, 2, 32),
+    (256, 25, 10, 64),
+    (512, 32, 16, 128),
+])
+def test_matches_oracle(rng, n, m, k, tile_n):
+    pts, labels, _ = make_blobs(rng, n, m, k)
+    mask = (rng.random(n) > 0.3).astype(np.float32)
+    out = update.update_partial(jnp.asarray(pts), jnp.asarray(mask),
+                                jnp.asarray(labels), k, tile_n=tile_n)
+    exp = ref.update_partial_ref(jnp.asarray(pts), jnp.asarray(mask),
+                                 jnp.asarray(labels), k)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(exp[0]),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(exp[1]))
+
+
+def test_agrees_with_fused_kernel(rng):
+    """update(labels-from-assign) must equal the fused kernel's sums/counts."""
+    n, m, k = 256, 8, 4
+    pts, _, _ = make_blobs(rng, n, m, k)
+    cent = pts[:k].copy()
+    mask = np.ones(n, np.float32)
+    labels, sums, counts, _ = assign.assign_partial(
+        jnp.asarray(pts), jnp.asarray(mask), jnp.asarray(cent), tile_n=64)
+    s2, c2 = update.update_partial(jnp.asarray(pts), jnp.asarray(mask),
+                                   labels, k, tile_n=64)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(s2),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(c2))
+
+
+def test_empty_cluster_gets_zero(rng):
+    n, m, k = 64, 4, 5
+    pts, _, _ = make_blobs(rng, n, m, 2)
+    labels = np.zeros(n, np.int32)  # everything in cluster 0
+    mask = np.ones(n, np.float32)
+    sums, counts = update.update_partial(jnp.asarray(pts), jnp.asarray(mask),
+                                         jnp.asarray(labels), k, tile_n=32)
+    counts = np.asarray(counts)
+    assert counts[0] == n and np.all(counts[1:] == 0)
+    assert np.all(np.asarray(sums)[1:] == 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_tiles=st.integers(1, 3),
+    tile_n=st.sampled_from([16, 64]),
+    m=st.integers(1, 25),
+    k=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(n_tiles, tile_n, m, k, seed):
+    r = np.random.default_rng(seed)
+    n = n_tiles * tile_n
+    pts = r.normal(size=(n, m)).astype(np.float32)
+    labels = r.integers(0, k, size=n).astype(np.int32)
+    mask = (r.random(n) < 0.8).astype(np.float32)
+    out = update.update_partial(jnp.asarray(pts), jnp.asarray(mask),
+                                jnp.asarray(labels), k, tile_n=tile_n)
+    exp = ref.update_partial_ref(jnp.asarray(pts), jnp.asarray(mask),
+                                 jnp.asarray(labels), k)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(exp[0]),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(exp[1]))

@@ -1,0 +1,106 @@
+//! A1 — ablation / future-work bench: the paper's §7 plan ("single
+//! linkage method, average linkage method, pair-group method using the
+//! centroid average") and the §8 claim that K-means "does not require so
+//! many computations as, for example, complete-linkage clustering".
+//!
+//! Measures: (a) K-means vs every linkage at equal n (the §8 comparison),
+//! (b) the distance-matrix build — the O(n²·m) stage — across the three
+//! regimes, including the GPU path through the `pdist` artifact.
+
+mod common;
+
+use parclust::benchkit::{fmt_duration, Bencher, Table};
+use parclust::exec::single::SingleExecutor;
+use parclust::hier::{agglomerate, matrix::Builder, Linkage};
+use parclust::kmeans::{fit_with, DiameterMode, KMeansConfig};
+use parclust::quality::adjusted_rand_index;
+
+fn main() {
+    common::banner(
+        "A1",
+        "k-means needs far fewer computations than complete linkage (§8)",
+    );
+    let (n, m, k) = (2_000usize, 10usize, 5usize);
+    let g = common::workload(n, m, k, 6);
+    let bencher = Bencher::quick().from_env();
+
+    // ---- (a) k-means vs the four linkages ----------------------------------
+    let mut table = Table::new(
+        &format!("A1 method comparison (n={n}, m={m}, k={k})"),
+        &["method", "wall", "ARI vs truth"],
+    );
+    let cfg = KMeansConfig::new(k)
+        .seed(6)
+        .diameter_mode(DiameterMode::Sampled(512));
+    let km = bencher.bench(|| {
+        let _ = fit_with(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+    });
+    let km_res = fit_with(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+    table.row(vec![
+        "k-means (paper)".into(),
+        fmt_duration(km.mean),
+        format!("{:.3}", adjusted_rand_index(&km_res.labels, &g.labels)),
+    ]);
+
+    let kmeans_wall = km.mean.as_secs_f64();
+    let mut complete_wall = 0.0f64;
+    for linkage in [
+        Linkage::Single,
+        Linkage::Complete,
+        Linkage::Average,
+        Linkage::Centroid,
+    ] {
+        let builder = Builder::multi(8);
+        let squared = linkage == Linkage::Centroid;
+        let st = bencher.bench(|| {
+            let dm = builder.build(&g.dataset, squared).unwrap();
+            let _ = agglomerate(dm, linkage);
+        });
+        let dm = builder.build(&g.dataset, squared).unwrap();
+        let labels = agglomerate(dm, linkage).cut(k);
+        if linkage == Linkage::Complete {
+            complete_wall = st.mean.as_secs_f64();
+        }
+        table.row(vec![
+            format!("{} linkage", linkage.name()),
+            fmt_duration(st.mean),
+            format!("{:.3}", adjusted_rand_index(&labels, &g.labels)),
+        ]);
+    }
+    println!("{}", table.render());
+    let factor = complete_wall / kmeans_wall.max(1e-9);
+    println!(
+        "complete linkage costs {factor:.0}x k-means at n={n} — the §8 claim \
+         (k-means 'does not require so many computations') holds ✓"
+    );
+    assert!(factor > 2.0, "complete linkage should cost well over k-means");
+
+    // ---- (b) distance-matrix build across regimes ---------------------------
+    let mut table = Table::new(
+        "A1b distance-matrix build (the O(n²·m) stage)",
+        &["n", "single", "multi(8)", "gpu (pdist artifact)"],
+    );
+    let device = common::try_device();
+    for nn in [500usize, 1_000, 2_000] {
+        let gg = common::workload(nn, m, k, 7);
+        let s = bencher.bench(|| {
+            let _ = Builder::single().build(&gg.dataset, false).unwrap();
+        });
+        let mt = bencher.bench(|| {
+            let _ = Builder::multi(8).build(&gg.dataset, false).unwrap();
+        });
+        let gp = device.as_ref().map(|dev| {
+            let b = Builder::gpu(dev.clone(), 2);
+            bencher.bench(|| {
+                let _ = b.build(&gg.dataset, false).unwrap();
+            })
+        });
+        table.row(vec![
+            nn.to_string(),
+            fmt_duration(s.mean),
+            fmt_duration(mt.mean),
+            gp.map(|g| fmt_duration(g.mean)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    println!("{}", table.render());
+}

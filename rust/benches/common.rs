@@ -1,0 +1,43 @@
+//! Shared helpers for the bench binaries (harness = false).
+//!
+//! Every bench prints two kinds of rows:
+//! * **real** — wall-clock measured on this host via `benchkit` (the
+//!   correctness-bearing execution paths, at sizes this host can run);
+//! * **model** — the calibrated 2014-testbed predictions at the paper's
+//!   scales, which carry the paper's evaluation claims (this host has a
+//!   single core; see DESIGN.md §3 Substitutions).
+
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+
+use parclust::data::synthetic::{generate, Generated, GmmSpec};
+use parclust::runtime::Device;
+
+pub fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Open the PJRT device if artifacts are built.
+pub fn try_device() -> Option<Device> {
+    match Device::open(&artifact_dir()) {
+        Ok(d) => Some(d),
+        Err(e) => {
+            eprintln!("note: gpu rows skipped ({e})");
+            None
+        }
+    }
+}
+
+/// Paper-shaped mixture.
+pub fn workload(n: usize, m: usize, k: usize, seed: u64) -> Generated {
+    generate(&GmmSpec::new(n, m, k).seed(seed).spread(0.5))
+}
+
+/// Standard bench header naming the experiment id from DESIGN.md §5.
+pub fn banner(id: &str, claim: &str) {
+    println!("\n================================================================");
+    println!("{id} — paper claim: {claim}");
+    println!("(see DESIGN.md section 5 experiment index; EXPERIMENTS.md records results)");
+    println!("================================================================");
+}

@@ -1,0 +1,129 @@
+//! F2 — per-stage decomposition of Algorithms 2-4. The paper's stages
+//! have very different arithmetic intensity: the diameter (step 1) is
+//! O(n²) and loves the GPU; the coordinate sums (step 2) are O(n·m) and
+//! bandwidth-bound; assignment (steps 4-7) is O(n·k·m). This bench
+//! times each stage separately in every regime — the evidence behind the
+//! paper's per-stage offload decisions (Algorithm 4 keeps step 4 partly
+//! on the CPU).
+
+mod common;
+
+use parclust::benchkit::{fmt_duration, Bencher, Table};
+use parclust::exec::gpu::GpuExecutor;
+use parclust::exec::multi::MultiExecutor;
+use parclust::exec::single::SingleExecutor;
+use parclust::exec::Executor;
+use parclust::metric::Metric;
+use parclust::simulate::{predict, Testbed, WorkloadSpec};
+
+fn main() {
+    common::banner("F2", "stage-level costs explain the offload decisions");
+    let n = 40_000usize;
+    let (m, k) = (25usize, 10usize);
+    let g = common::workload(n, m, k, 5);
+    let ds = &g.dataset;
+    let cent = ds.gather(&(0..k).collect::<Vec<_>>());
+    let candidates: Vec<usize> = (0..2_048).map(|i| i * ds.n() / 2_048).collect();
+    let bencher = Bencher::quick().from_env();
+
+    let single = SingleExecutor::new();
+    let multi = MultiExecutor::new(8);
+    let device = common::try_device();
+
+    let mut table = Table::new(
+        &format!("F2 real stage timings (n={n}, m={m}, k={k}, diameter over 2048 candidates)"),
+        &["stage", "single", "multi(8)", "gpu (pjrt)"],
+    );
+
+    // diameter
+    let s = bencher.bench(|| {
+        let _ = single.diameter(ds, &candidates).unwrap();
+    });
+    let mt = bencher.bench(|| {
+        let _ = multi.diameter(ds, &candidates).unwrap();
+    });
+    let gp = device.as_ref().map(|dev| {
+        let gpu = GpuExecutor::new(dev.clone(), 1);
+        bencher.bench(|| {
+            let _ = gpu.diameter(ds, &candidates).unwrap();
+        })
+    });
+    table.row(vec![
+        "diameter (step 1)".into(),
+        fmt_duration(s.mean),
+        fmt_duration(mt.mean),
+        gp.map(|g| fmt_duration(g.mean)).unwrap_or_else(|| "-".into()),
+    ]);
+
+    // center of gravity
+    let s = bencher.bench(|| {
+        let _ = single.center_of_gravity(ds).unwrap();
+    });
+    let mt = bencher.bench(|| {
+        let _ = multi.center_of_gravity(ds).unwrap();
+    });
+    let gp = device.as_ref().map(|dev| {
+        let gpu = GpuExecutor::new(dev.clone(), 1);
+        bencher.bench(|| {
+            let _ = gpu.center_of_gravity(ds).unwrap();
+        })
+    });
+    table.row(vec![
+        "center of gravity (step 2)".into(),
+        fmt_duration(s.mean),
+        fmt_duration(mt.mean),
+        gp.map(|g| fmt_duration(g.mean)).unwrap_or_else(|| "-".into()),
+    ]);
+
+    // assignment + update
+    let s = bencher.bench(|| {
+        let _ = single.assign_update(ds, &cent, k, Metric::Euclidean).unwrap();
+    });
+    let mt = bencher.bench(|| {
+        let _ = multi.assign_update(ds, &cent, k, Metric::Euclidean).unwrap();
+    });
+    let gp = device.as_ref().map(|dev| {
+        let gpu = GpuExecutor::new(dev.clone(), 1);
+        let _ = gpu.warmup(n, m, k);
+        bencher.bench(|| {
+            let _ = gpu.assign_update(ds, &cent, k, Metric::Euclidean).unwrap();
+        })
+    });
+    table.row(vec![
+        "assign+update (steps 4-7)".into(),
+        fmt_duration(s.mean),
+        fmt_duration(mt.mean),
+        gp.map(|g| fmt_duration(g.mean)).unwrap_or_else(|| "-".into()),
+    ]);
+    println!("{}", table.render());
+
+    // ---- modelled stage split at the paper's headline size -----------------
+    let bed = Testbed::paper2014();
+    let spec = WorkloadSpec::paper_headline();
+    let mut table = Table::new(
+        "F2 modelled stage split at n=2e6 (2014 testbed, 20 iterations)",
+        &["regime", "init.diameter", "init.cog", "iterate", "total"],
+    );
+    for regime in [
+        parclust::exec::regime::Regime::Single,
+        parclust::exec::regime::Regime::Multi,
+        parclust::exec::regime::Regime::Gpu,
+    ] {
+        let p = predict(&spec, &bed, regime);
+        let find = |prefix: &str| {
+            p.stages
+                .iter()
+                .filter(|s| s.name.starts_with(prefix))
+                .map(|s| s.seconds)
+                .sum::<f64>()
+        };
+        table.row(vec![
+            regime.name().into(),
+            format!("{:.3} s", find("init.diameter")),
+            format!("{:.3} s", find("init.cog")),
+            format!("{:.3} s", find("iterate")),
+            format!("{:.3} s", p.total),
+        ]);
+    }
+    println!("{}", table.render());
+}

@@ -1,0 +1,99 @@
+//! F3 — the §4 regime-selection policy: "a single-threaded regime should
+//! be used for problems with less than 10000 samples. In problems with up
+//! to 100000 samples, the user should have a choice … In complexer
+//! problems the user should be able to use all three regimes."
+//!
+//! Verifies (a) the policy's decisions across the n axis, and (b) that
+//! the policy is *justified* on the modelled testbed — the regime Auto
+//! picks is never much slower than the best one, and the thresholds sit
+//! near the modelled break-even points.
+
+mod common;
+
+use parclust::benchkit::Table;
+use parclust::exec::regime::{allowed_for, resolve, Regime};
+use parclust::simulate::{predict, Testbed, WorkloadSpec};
+
+fn main() {
+    common::banner("F3", "size thresholds 1e4 / 1e5 gate multi and gpu");
+    let bed = Testbed::paper2014();
+    let (m, k) = (25usize, 10usize);
+
+    let mut table = Table::new(
+        "F3 policy decisions vs modelled best regime (m=25, k=10, 20 iters)",
+        &[
+            "n", "allowed", "auto picks", "modelled best", "auto/best slowdown",
+        ],
+    );
+    let mut worst_slowdown = 1.0f64; // for n >= 1e4 (where time matters)
+    let mut worst_abs_penalty = 0.0f64; // absolute seconds lost below 1e4
+    for n in [
+        1_000usize, 5_000, 9_999, 10_000, 50_000, 99_999, 100_000, 500_000,
+        2_000_000,
+    ] {
+        let a = allowed_for(n);
+        let allowed = match (a.multi, a.gpu) {
+            (false, _) => "single",
+            (true, false) => "single|multi",
+            (true, true) => "single|multi|gpu",
+        };
+        let auto = resolve(Regime::Auto, n);
+        let spec = WorkloadSpec {
+            n,
+            m,
+            k,
+            iterations: 20,
+            diameter_candidates: n.min(4096),
+            threads: 8,
+        };
+        let times = [
+            (Regime::Single, predict(&spec, &bed, Regime::Single).total),
+            (Regime::Multi, predict(&spec, &bed, Regime::Multi).total),
+            (Regime::Gpu, predict(&spec, &bed, Regime::Gpu).total),
+        ];
+        let (best_regime, best_t) = times
+            .iter()
+            .cloned()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let auto_t = times.iter().find(|(r, _)| *r == auto).unwrap().1;
+        let slowdown = auto_t / best_t;
+        if n >= parclust::SINGLE_THREAD_MAX {
+            worst_slowdown = worst_slowdown.max(slowdown);
+        } else {
+            // below 1e4 the paper deliberately stays single-threaded:
+            // "the parallelization requires certain computational
+            // expenses" — the relevant cost is the absolute penalty.
+            worst_abs_penalty = worst_abs_penalty.max(auto_t - best_t);
+        }
+        table.row(vec![
+            n.to_string(),
+            allowed.into(),
+            auto.name().into(),
+            best_regime.name().into(),
+            format!("{slowdown:.2}x"),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // Above 1e4 the policy must track the modelled best regime closely;
+    // below 1e4 its conservatism must cost a negligible absolute amount.
+    assert!(
+        worst_slowdown < 2.5,
+        "auto policy {worst_slowdown}x off the best regime above 1e4 — thresholds wrong"
+    );
+    assert!(
+        worst_abs_penalty < 0.5,
+        "single-threaded conservatism below 1e4 costs {worst_abs_penalty}s — too much"
+    );
+    println!(
+        "auto ≤ {worst_slowdown:.2}x of modelled best above 1e4; \
+         ≤ {worst_abs_penalty:.3}s absolute penalty below 1e4 ✓"
+    );
+
+    // Threshold sanity: exactly at the paper's boundaries the allowed set
+    // widens.
+    assert!(!allowed_for(9_999).multi && allowed_for(10_000).multi);
+    assert!(!allowed_for(99_999).gpu && allowed_for(100_000).gpu);
+    println!("thresholds match paper §4 (1e4, 1e5) ✓");
+}

@@ -1,0 +1,96 @@
+//! T1 — the abstract's headline: "handle up to 2 million records with
+//! number of features up to 25. The gain in the computing time is in
+//! factor 5."
+//!
+//! Sweeps n at m=25, k=10 across the three regimes. Real measurements on
+//! this host up to 100k; the 2014-testbed model carries the 2e6 headline
+//! row (this host is single-core — DESIGN.md §3).
+
+mod common;
+
+use parclust::benchkit::{fmt_duration, Bencher, Table};
+use parclust::exec::gpu::GpuExecutor;
+use parclust::exec::multi::MultiExecutor;
+use parclust::exec::regime::Regime;
+use parclust::exec::single::SingleExecutor;
+use parclust::kmeans::{fit_with, DiameterMode, KMeansConfig};
+use parclust::simulate::{predict, Testbed, WorkloadSpec};
+
+fn main() {
+    common::banner("T1", "gain factor ~5 for gpu at n=2e6, m=25");
+    let (m, k) = (25usize, 10usize);
+    let bencher = Bencher::quick().from_env();
+    let device = common::try_device();
+    let bed = Testbed::paper2014();
+
+    let mut table = Table::new(
+        "T1 regime scaling (m=25, k=10, 10 Lloyd iterations)",
+        &[
+            "n", "single real", "multi real", "gpu real",
+            "single model", "multi model", "gpu model", "model gain (gpu)",
+        ],
+    );
+
+    for n in [10_000usize, 50_000, 100_000, 500_000, 1_000_000, 2_000_000] {
+        let real = n <= 100_000;
+        let (mut sr, mut mr, mut gr) =
+            ("-".to_string(), "-".to_string(), "-".to_string());
+        if real {
+            let g = common::workload(n, m, k, 1);
+            // fixed 10 iterations (tol -1 never converges): pure throughput
+            let cfg = KMeansConfig::new(k)
+                .seed(1)
+                .max_iters(10)
+                .tol(-1.0)
+                .diameter_mode(DiameterMode::Sampled(512));
+            let s = bencher.bench(|| {
+                let _ = fit_with(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+            });
+            sr = fmt_duration(s.mean);
+            let st = bencher.bench(|| {
+                let _ = fit_with(&g.dataset, &cfg, &MultiExecutor::new(8)).unwrap();
+            });
+            mr = fmt_duration(st.mean);
+            if let Some(dev) = &device {
+                let exec = GpuExecutor::new(dev.clone(), 2);
+                let _ = exec.warmup(n, m, k);
+                let gt = bencher.bench(|| {
+                    let _ = fit_with(&g.dataset, &cfg, &exec).unwrap();
+                });
+                gr = fmt_duration(gt.mean);
+            }
+        }
+        let spec = WorkloadSpec {
+            n,
+            m,
+            k,
+            iterations: 10,
+            diameter_candidates: n.min(4096),
+            threads: 8,
+        };
+        let ps = predict(&spec, &bed, Regime::Single).total;
+        let pm = predict(&spec, &bed, Regime::Multi).total;
+        let pg = predict(&spec, &bed, Regime::Gpu).total;
+        table.row(vec![
+            n.to_string(),
+            sr,
+            mr,
+            gr,
+            format!("{ps:.3} s"),
+            format!("{pm:.3} s"),
+            format!("{pg:.3} s"),
+            format!("{:.2}x", ps / pg),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // headline assertion: the shape must hold or the bench fails loudly
+    let spec = WorkloadSpec::paper_headline();
+    let gain = predict(&spec, &bed, Regime::Single).total
+        / predict(&spec, &bed, Regime::Gpu).total;
+    assert!(
+        gain > 3.5 && gain < 10.0,
+        "headline gain {gain} left the paper band"
+    );
+    println!("headline (2e6 × 25): modelled gpu gain = {gain:.2}x (paper: ~5x) ✓");
+}

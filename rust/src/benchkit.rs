@@ -1,0 +1,273 @@
+//! Micro-benchmark harness (substrate; no `criterion` offline).
+//!
+//! Provides warmup, adaptive iteration-count selection targeting a wall
+//! budget, robust statistics (mean/std/median/p95/min), and markdown table
+//! rendering. Every `cargo bench` target in `rust/benches/` is a
+//! `harness = false` binary built on this module; they print the rows the
+//! paper's evaluation reports (see DESIGN.md §5 experiment index).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a set of per-iteration timings.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub std: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty(), "no samples");
+        samples.sort_unstable();
+        let n = samples.len();
+        let sum: Duration = samples.iter().sum();
+        let mean = sum / n as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = samples
+            .iter()
+            .map(|d| {
+                let x = d.as_secs_f64() - mean_s;
+                x * x
+            })
+            .sum::<f64>()
+            / n as f64;
+        Stats {
+            iters: n,
+            mean,
+            std: Duration::from_secs_f64(var.sqrt()),
+            median: samples[n / 2],
+            p95: samples[(n * 95 / 100).min(n - 1)],
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+
+    /// Speedup of `self` relative to `other` (other.mean / self.mean).
+    pub fn speedup_vs(&self, other: &Stats) -> f64 {
+        other.mean.as_secs_f64() / self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bencher {
+    /// Wall-clock budget per benchmark (adaptive iteration count).
+    pub budget: Duration,
+    /// Minimum measured iterations regardless of budget.
+    pub min_iters: usize,
+    /// Maximum measured iterations regardless of budget.
+    pub max_iters: usize,
+    /// Warmup iterations (not measured).
+    pub warmup_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            budget: Duration::from_secs(3),
+            min_iters: 3,
+            max_iters: 200,
+            warmup_iters: 1,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Self {
+            budget: Duration::from_secs(1),
+            min_iters: 2,
+            max_iters: 20,
+            warmup_iters: 1,
+        }
+    }
+
+    /// Honour `PARCLUST_BENCH_BUDGET_MS` if set (CI knob).
+    pub fn from_env(mut self) -> Self {
+        if let Ok(ms) = std::env::var("PARCLUST_BENCH_BUDGET_MS") {
+            if let Ok(ms) = ms.parse::<u64>() {
+                self.budget = Duration::from_millis(ms);
+            }
+        }
+        self
+    }
+
+    /// Measure `f`, returning stats. `f` is a full operation; use closures
+    /// capturing pre-built inputs to exclude setup.
+    pub fn bench<F: FnMut()>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        // pilot measurement to size the iteration count
+        let t = Instant::now();
+        f();
+        let pilot = t.elapsed().max(Duration::from_nanos(100));
+        let budget_iters =
+            (self.budget.as_secs_f64() / pilot.as_secs_f64()) as usize;
+        let iters = budget_iters.clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters + 1);
+        samples.push(pilot);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        Stats::from_samples(samples)
+    }
+}
+
+/// Pretty duration: picks a readable unit.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 100.0 {
+        format!("{s:.0} s")
+    } else if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// A markdown table builder for bench reports.
+#[derive(Default, Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as github-flavoured markdown with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = String::new();
+        if !self.title.is_empty() {
+            s.push_str(&format!("\n### {}\n\n", self.title));
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                line.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        s.push_str(&fmt_row(&self.header));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        sep.push('\n');
+        s.push_str(&sep);
+        for row in &self.rows {
+            s.push_str(&fmt_row(row));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let samples = vec![
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            Duration::from_millis(30),
+        ];
+        let s = Stats::from_samples(samples);
+        assert_eq!(s.iters, 3);
+        assert_eq!(s.mean, Duration::from_millis(20));
+        assert_eq!(s.median, Duration::from_millis(20));
+        assert_eq!(s.min, Duration::from_millis(10));
+        assert_eq!(s.max, Duration::from_millis(30));
+    }
+
+    #[test]
+    fn speedup_direction() {
+        let fast = Stats::from_samples(vec![Duration::from_millis(10)]);
+        let slow = Stats::from_samples(vec![Duration::from_millis(50)]);
+        assert!((fast.speedup_vs(&slow) - 5.0).abs() < 1e-9);
+        assert!(slow.speedup_vs(&fast) < 1.0);
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let b = Bencher {
+            budget: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 10,
+            warmup_iters: 1,
+        };
+        let mut count = 0u64;
+        let s = b.bench(|| {
+            count += 1;
+            std::hint::black_box((0..1000u64).sum::<u64>());
+        });
+        // warmup(1) + pilot(1) + iters(>=3)
+        assert!(count >= 5, "count={count}");
+        assert!(s.iters >= 4);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(Duration::from_nanos(120)), "120 ns");
+        assert_eq!(fmt_duration(Duration::from_micros(42)), "42.00 µs");
+        assert_eq!(fmt_duration(Duration::from_millis(5)), "5.00 ms");
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00 s");
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("T1", &["n", "single", "gpu"]);
+        t.row(vec!["1000".into(), "1.0 ms".into(), "5.0 ms".into()]);
+        t.row(vec!["1000000".into(), "1.0 s".into(), "0.2 s".into()]);
+        let md = t.render();
+        assert!(md.contains("### T1"));
+        assert!(md.lines().filter(|l| l.starts_with('|')).count() == 4);
+        // aligned: every data line same length
+        let lens: Vec<_> = md.lines().filter(|l| l.starts_with('|'))
+            .map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{md}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,410 @@
+//! Declarative command-line parsing (substrate; no `clap` offline).
+//!
+//! Supports subcommands, long/short flags, options with values
+//! (`--n 1000`, `--n=1000`, `-n 1000`), repeated options, positional
+//! arguments, `--help` generation, and typed accessors with validation
+//! errors that name the offending flag.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Specification of one option/flag.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub short: Option<char>,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Specification of a (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>, // (name, help)
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            ..Default::default()
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, short: Option<char>,
+                help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, short, takes_value: false,
+                                 default: None, help });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, short: Option<char>,
+               default: Option<&'static str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, short, takes_value: true,
+                                 default, help });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    fn find(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    fn find_short(&self, c: char) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.short == Some(c))
+    }
+
+    /// Render `--help` text.
+    pub fn help_text(&self, program: &str) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} {}",
+                            self.name, self.about, program, self.name);
+        if !self.opts.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        if !self.positionals.is_empty() {
+            s.push_str("\n\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\n\nOPTIONS:\n");
+            for o in &self.opts {
+                let short = o.short.map(|c| format!("-{c}, ")).unwrap_or_default();
+                let val = if o.takes_value { " <VALUE>" } else { "" };
+                let def = o.default.map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                s.push_str(&format!("  {short}--{}{val}  {}{def}\n", o.name, o.help));
+            }
+        }
+        s
+    }
+}
+
+/// Parsed arguments for one command.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    pub command: String,
+    values: BTreeMap<String, Vec<String>>,
+    flags: BTreeMap<String, usize>,
+    pub positionals: Vec<String>,
+}
+
+/// Argument error: which flag, what went wrong.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgError(pub String);
+
+impl fmt::Display for ArgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "argument error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+impl Parsed {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(0) > 0
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.values
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str, ArgError> {
+        self.get(name)
+            .ok_or_else(|| ArgError(format!("--{name} is required")))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, ArgError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => parse_human_int(s)
+                .map(Some)
+                .map_err(|e| ArgError(format!("--{name}: {e}"))),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, ArgError> {
+        Ok(self.get_usize(name)?.unwrap_or(default))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, ArgError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| ArgError(format!("--{name}: '{s}' is not a number"))),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, ArgError> {
+        Ok(self.get_f64(name)?.unwrap_or(default))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, ArgError> {
+        Ok(self.get_usize(name)?.map(|v| v as u64))
+    }
+}
+
+/// Parse integers with human-friendly suffixes: `2m` / `2M` = 2·10⁶,
+/// `500k` = 5·10⁵, `1_000_000`, plain digits.
+pub fn parse_human_int(s: &str) -> Result<usize, String> {
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    let (digits, mult) = match cleaned.chars().last() {
+        Some('k') | Some('K') => (&cleaned[..cleaned.len() - 1], 1_000),
+        Some('m') | Some('M') => (&cleaned[..cleaned.len() - 1], 1_000_000),
+        _ => (cleaned.as_str(), 1),
+    };
+    digits
+        .parse::<usize>()
+        .map(|v| v * mult)
+        .map_err(|_| format!("'{s}' is not an integer"))
+}
+
+/// Top-level application spec: a set of subcommands.
+pub struct AppSpec {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl AppSpec {
+    /// Parse argv (without the program name). Returns the parsed command
+    /// or an error string that should be printed to stderr (help requests
+    /// return `Err` with the help text and `is_help = true`).
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed, (String, bool)> {
+        if argv.is_empty()
+            || argv[0] == "--help"
+            || argv[0] == "-h"
+            || argv[0] == "help"
+        {
+            return Err((self.help_text(), true));
+        }
+        let cmd_name = &argv[0];
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name.as_str())
+            .ok_or_else(|| {
+                (format!("unknown command '{cmd_name}'\n\n{}", self.help_text()),
+                 false)
+            })?;
+
+        let mut parsed = Parsed {
+            command: spec.name.to_string(),
+            ..Default::default()
+        };
+        // seed defaults
+        for o in &spec.opts {
+            if let Some(d) = o.default {
+                parsed
+                    .values
+                    .entry(o.name.to_string())
+                    .or_default()
+                    .push(d.to_string());
+            }
+        }
+
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err((spec.help_text(self.program), true));
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let o = spec.find(name).ok_or_else(|| {
+                    (format!("unknown option '--{name}' for '{}'", spec.name), false)
+                })?;
+                if o.takes_value {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| {
+                                    (format!("--{name} expects a value"), false)
+                                })?
+                        }
+                    };
+                    parsed.values.entry(o.name.to_string()).or_default().push(val);
+                } else {
+                    if inline.is_some() {
+                        return Err((format!("--{name} takes no value"), false));
+                    }
+                    *parsed.flags.entry(o.name.to_string()).or_default() += 1;
+                }
+            } else if let Some(rest) = a.strip_prefix('-') {
+                if rest.is_empty() {
+                    parsed.positionals.push(a.clone());
+                } else {
+                    let c = rest.chars().next().unwrap();
+                    let o = spec.find_short(c).ok_or_else(|| {
+                        (format!("unknown option '-{c}' for '{}'", spec.name), false)
+                    })?;
+                    if o.takes_value {
+                        let val = if rest.len() > 1 {
+                            rest[c.len_utf8()..].to_string()
+                        } else {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| {
+                                    (format!("-{c} expects a value"), false)
+                                })?
+                        };
+                        parsed.values.entry(o.name.to_string()).or_default().push(val);
+                    } else {
+                        *parsed.flags.entry(o.name.to_string()).or_default() += 1;
+                    }
+                }
+            } else {
+                parsed.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+
+        if parsed.positionals.len() > spec.positionals.len() {
+            return Err((
+                format!(
+                    "too many positional arguments for '{}' (expected {})",
+                    spec.name,
+                    spec.positionals.len()
+                ),
+                false,
+            ));
+        }
+        Ok(parsed)
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n",
+                            self.program, self.about, self.program);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<12} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun '");
+        s.push_str(self.program);
+        s.push_str(" <COMMAND> --help' for command options.\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> AppSpec {
+        AppSpec {
+            program: "parclust",
+            about: "test",
+            commands: vec![
+                CommandSpec::new("run", "run clustering")
+                    .opt("n", Some('n'), Some("1000"), "samples")
+                    .opt("regime", Some('r'), Some("auto"), "regime")
+                    .opt("seed", None, None, "seed")
+                    .flag("verbose", Some('v'), "verbosity")
+                    .positional("input", "input file"),
+                CommandSpec::new("info", "print info"),
+            ],
+        }
+    }
+
+    fn parse(args: &[&str]) -> Result<Parsed, (String, bool)> {
+        app().parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let p = parse(&["run"]).unwrap();
+        assert_eq!(p.get("n"), Some("1000"));
+        assert_eq!(p.get("regime"), Some("auto"));
+        assert_eq!(p.get("seed"), None);
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn long_and_short_and_inline() {
+        let p = parse(&["run", "--n", "5000", "-v", "--regime=gpu"]).unwrap();
+        assert_eq!(p.usize_or("n", 0).unwrap(), 5000);
+        assert_eq!(p.get("regime"), Some("gpu"));
+        assert!(p.flag("verbose"));
+        let p = parse(&["run", "-n2000"]).unwrap();
+        assert_eq!(p.usize_or("n", 0).unwrap(), 2000);
+    }
+
+    #[test]
+    fn human_int_suffixes() {
+        assert_eq!(parse_human_int("2m").unwrap(), 2_000_000);
+        assert_eq!(parse_human_int("500K").unwrap(), 500_000);
+        assert_eq!(parse_human_int("1_000_000").unwrap(), 1_000_000);
+        assert_eq!(parse_human_int("42").unwrap(), 42);
+        assert!(parse_human_int("x").is_err());
+    }
+
+    #[test]
+    fn positionals_and_overflow() {
+        let p = parse(&["run", "data.csv"]).unwrap();
+        assert_eq!(p.positionals, vec!["data.csv"]);
+        assert!(parse(&["run", "a", "b"]).is_err());
+    }
+
+    #[test]
+    fn unknown_command_and_option() {
+        assert!(parse(&["wat"]).is_err());
+        assert!(parse(&["run", "--bogus"]).is_err());
+        assert!(parse(&["info", "-z"]).is_err());
+    }
+
+    #[test]
+    fn help_paths() {
+        let (txt, is_help) = parse(&["--help"]).unwrap_err();
+        assert!(is_help && txt.contains("COMMANDS"));
+        let (txt, is_help) = parse(&["run", "--help"]).unwrap_err();
+        assert!(is_help && txt.contains("--regime"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&["run", "--n"]).is_err());
+    }
+
+    #[test]
+    fn repeated_option_last_wins_and_all_available() {
+        let p = parse(&["run", "--n", "1", "--n", "2"]).unwrap();
+        assert_eq!(p.get("n"), Some("2"));
+        assert_eq!(p.get_all("n"), vec!["1000", "1", "2"]); // default + both
+    }
+
+    #[test]
+    fn typed_errors_name_the_flag() {
+        let p = parse(&["run", "--n", "abc"]).unwrap();
+        let err = p.get_usize("n").unwrap_err();
+        assert!(err.0.contains("--n"), "{err}");
+    }
+}

@@ -1,0 +1,282 @@
+//! Run configuration: JSON config files merged with CLI overrides.
+//!
+//! A production launcher needs reproducible run specs; `parclust run
+//! --config run.json` loads one of these, CLI flags override fields, and
+//! the effective config is echoed into the run report. Fields mirror
+//! [`crate::kmeans::KMeansConfig`] plus dataset selection.
+
+use std::path::{Path, PathBuf};
+
+use crate::exec::regime::Regime;
+use crate::json::Json;
+use crate::kmeans::{DiameterMode, InitMethod, KMeansConfig};
+use crate::metric::Metric;
+
+/// Where the samples come from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataSource {
+    Csv(PathBuf),
+    /// Synthetic Gaussian mixture: (n, m, k_true).
+    Synthetic { n: usize, m: usize, k: usize },
+}
+
+/// Full run specification (dataset + algorithm + output).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub source: DataSource,
+    pub kmeans: KMeansConfig,
+    /// Optional feature scaling: "none" | "minmax" | "zscore".
+    pub scaling: String,
+    pub report_path: Option<PathBuf>,
+    pub labels_path: Option<PathBuf>,
+}
+
+impl RunConfig {
+    pub fn default_synthetic() -> RunConfig {
+        RunConfig {
+            source: DataSource::Synthetic {
+                n: 100_000,
+                m: 25,
+                k: 10,
+            },
+            kmeans: KMeansConfig::new(10),
+            scaling: "none".into(),
+            report_path: None,
+            labels_path: None,
+        }
+    }
+
+    /// Load from a JSON file. Unknown keys are rejected (typo safety).
+    pub fn from_file(path: &Path) -> Result<RunConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read config {}: {e}", path.display()))?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<RunConfig, String> {
+        let root = Json::parse(text).map_err(|e| format!("config: {e}"))?;
+        let known = [
+            "csv", "synthetic", "k", "max_iters", "tol", "metric", "init",
+            "seed", "threads", "regime", "diameter", "scaling", "report",
+            "labels", "artifact_dir",
+        ];
+        if let Json::Obj(pairs) = &root {
+            for (key, _) in pairs {
+                if !known.contains(&key.as_str()) {
+                    return Err(format!(
+                        "config: unknown key '{key}' (known: {})",
+                        known.join(", ")
+                    ));
+                }
+            }
+        } else {
+            return Err("config: root must be an object".into());
+        }
+
+        let mut cfg = RunConfig::default_synthetic();
+        if let Some(csv) = root.get("csv") {
+            let p = csv
+                .as_str()
+                .ok_or_else(|| "config: 'csv' must be a string".to_string())?;
+            cfg.source = DataSource::Csv(PathBuf::from(p));
+        }
+        if let Some(s) = root.get("synthetic") {
+            cfg.source = DataSource::Synthetic {
+                n: s.req_usize("n").map_err(|e| format!("config: {e}"))?,
+                m: s.req_usize("m").map_err(|e| format!("config: {e}"))?,
+                k: s.req_usize("k").map_err(|e| format!("config: {e}"))?,
+            };
+        }
+        if let Some(k) = root.get("k") {
+            cfg.kmeans.k = k
+                .as_usize()
+                .ok_or_else(|| "config: 'k' must be an integer".to_string())?;
+        }
+        if let Some(v) = root.get("max_iters") {
+            cfg.kmeans.max_iters = v
+                .as_usize()
+                .ok_or_else(|| "config: 'max_iters' must be an integer".to_string())?;
+        }
+        if let Some(v) = root.get("tol") {
+            cfg.kmeans.tol = v
+                .as_f64()
+                .ok_or_else(|| "config: 'tol' must be a number".to_string())?
+                as f32;
+        }
+        if let Some(v) = root.get("seed") {
+            cfg.kmeans.seed = v
+                .as_usize()
+                .ok_or_else(|| "config: 'seed' must be an integer".to_string())?
+                as u64;
+        }
+        if let Some(v) = root.get("threads") {
+            cfg.kmeans.threads = v
+                .as_usize()
+                .ok_or_else(|| "config: 'threads' must be an integer".to_string())?
+                .max(1);
+        }
+        if let Some(v) = root.get("metric") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| "config: 'metric' must be a string".to_string())?;
+            cfg.kmeans.metric = Metric::from_str(s)
+                .ok_or_else(|| format!("config: unknown metric '{s}'"))?;
+        }
+        if let Some(v) = root.get("init") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| "config: 'init' must be a string".to_string())?;
+            cfg.kmeans.init = InitMethod::from_str(s)
+                .ok_or_else(|| format!("config: unknown init '{s}'"))?;
+        }
+        if let Some(v) = root.get("regime") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| "config: 'regime' must be a string".to_string())?;
+            cfg.kmeans.regime = Regime::from_str(s)
+                .ok_or_else(|| format!("config: unknown regime '{s}'"))?;
+        }
+        if let Some(v) = root.get("diameter") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| "config: 'diameter' must be a string".to_string())?;
+            cfg.kmeans.diameter = parse_diameter_mode(s)?;
+        }
+        if let Some(v) = root.get("scaling") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| "config: 'scaling' must be a string".to_string())?;
+            if !["none", "minmax", "zscore"].contains(&s) {
+                return Err(format!("config: unknown scaling '{s}'"));
+            }
+            cfg.scaling = s.to_string();
+        }
+        if let Some(v) = root.get("report") {
+            cfg.report_path = Some(PathBuf::from(
+                v.as_str()
+                    .ok_or_else(|| "config: 'report' must be a string".to_string())?,
+            ));
+        }
+        if let Some(v) = root.get("labels") {
+            cfg.labels_path = Some(PathBuf::from(
+                v.as_str()
+                    .ok_or_else(|| "config: 'labels' must be a string".to_string())?,
+            ));
+        }
+        if let Some(v) = root.get("artifact_dir") {
+            cfg.kmeans.artifact_dir = Some(PathBuf::from(
+                v.as_str()
+                    .ok_or_else(|| "config: 'artifact_dir' must be a string".to_string())?,
+            ));
+        }
+        Ok(cfg)
+    }
+
+    /// Echo the effective config as JSON (for the run report).
+    pub fn to_json(&self) -> Json {
+        let source = match &self.source {
+            DataSource::Csv(p) => Json::obj(vec![(
+                "csv",
+                Json::str(p.display().to_string()),
+            )]),
+            DataSource::Synthetic { n, m, k } => Json::obj(vec![(
+                "synthetic",
+                Json::obj(vec![
+                    ("n", Json::num(*n as f64)),
+                    ("m", Json::num(*m as f64)),
+                    ("k", Json::num(*k as f64)),
+                ]),
+            )]),
+        };
+        Json::obj(vec![
+            ("source", source),
+            ("k", Json::num(self.kmeans.k as f64)),
+            ("max_iters", Json::num(self.kmeans.max_iters as f64)),
+            ("tol", Json::num(self.kmeans.tol as f64)),
+            ("metric", Json::str(self.kmeans.metric.name())),
+            ("init", Json::str(self.kmeans.init.name())),
+            ("seed", Json::num(self.kmeans.seed as f64)),
+            ("threads", Json::num(self.kmeans.threads as f64)),
+            ("regime", Json::str(self.kmeans.regime.name())),
+            ("scaling", Json::str(self.scaling.clone())),
+        ])
+    }
+}
+
+/// Parse "exact" | "auto" | "sampled:<N>".
+pub fn parse_diameter_mode(s: &str) -> Result<DiameterMode, String> {
+    match s {
+        "exact" => Ok(DiameterMode::Exact),
+        "auto" => Ok(DiameterMode::Auto),
+        other => {
+            if let Some(n) = other.strip_prefix("sampled:") {
+                let n = crate::cliargs::parse_human_int(n)
+                    .map_err(|e| format!("diameter sample size: {e}"))?;
+                Ok(DiameterMode::Sampled(n.max(2)))
+            } else {
+                Err(format!(
+                    "unknown diameter mode '{other}' (exact | auto | sampled:<N>)"
+                ))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = RunConfig::from_json_text(
+            r#"{
+              "synthetic": {"n": 5000, "m": 10, "k": 4},
+              "k": 4, "max_iters": 50, "tol": 0.001,
+              "metric": "manhattan", "init": "random", "seed": 9,
+              "threads": 4, "regime": "multi", "diameter": "sampled:1k",
+              "scaling": "zscore", "report": "out.json"
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.source,
+            DataSource::Synthetic { n: 5000, m: 10, k: 4 }
+        );
+        assert_eq!(cfg.kmeans.k, 4);
+        assert_eq!(cfg.kmeans.metric, Metric::Manhattan);
+        assert_eq!(cfg.kmeans.init, InitMethod::Random);
+        assert_eq!(cfg.kmeans.regime, Regime::Multi);
+        assert_eq!(cfg.kmeans.diameter, DiameterMode::Sampled(1000));
+        assert_eq!(cfg.scaling, "zscore");
+        assert_eq!(cfg.report_path, Some(PathBuf::from("out.json")));
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_values() {
+        assert!(RunConfig::from_json_text(r#"{"bogus": 1}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"metric": "wat"}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"regime": 7}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"[1,2]"#).is_err());
+    }
+
+    #[test]
+    fn diameter_mode_parsing() {
+        assert_eq!(parse_diameter_mode("exact").unwrap(), DiameterMode::Exact);
+        assert_eq!(parse_diameter_mode("auto").unwrap(), DiameterMode::Auto);
+        assert_eq!(
+            parse_diameter_mode("sampled:2m").unwrap(),
+            DiameterMode::Sampled(2_000_000)
+        );
+        assert!(parse_diameter_mode("sampled:x").is_err());
+        assert!(parse_diameter_mode("never").is_err());
+    }
+
+    #[test]
+    fn json_echo_roundtrips() {
+        let cfg = RunConfig::default_synthetic();
+        let j = cfg.to_json().to_pretty();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.req_usize("k").unwrap(), 10);
+        assert_eq!(parsed.req_str("regime").unwrap(), "auto");
+    }
+}

@@ -1,0 +1,226 @@
+//! Binary dataset format (`.pcb` — parclust binary).
+//!
+//! CSV parsing of the paper's 2·10⁶ × 25 envelope costs tens of seconds;
+//! the binary format memory-maps-free loads in one read. Layout (all
+//! little-endian):
+//!
+//! ```text
+//! magic   [8]  b"PARCLUST"
+//! version u32  (= 1)
+//! n       u64  rows
+//! m       u32  features
+//! names   u32  byte length L, then L bytes of '\n'-joined feature names
+//! data    n*m  f32 row-major
+//! crc     u32  CRC-32 of the data section (corruption check)
+//! ```
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::data::{DataError, Dataset};
+
+const MAGIC: &[u8; 8] = b"PARCLUST";
+const VERSION: u32 = 1;
+
+/// Write a dataset to the binary format.
+pub fn write_path(ds: &Dataset, path: &Path) -> Result<(), DataError> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(ds.n() as u64).to_le_bytes())?;
+    w.write_all(&(ds.m() as u32).to_le_bytes())?;
+    let names = ds.feature_names.join("\n");
+    w.write_all(&(names.len() as u32).to_le_bytes())?;
+    w.write_all(names.as_bytes())?;
+    let mut crc = Crc32::new();
+    for &v in ds.values() {
+        let bytes = v.to_le_bytes();
+        crc.update(&bytes);
+        w.write_all(&bytes)?;
+    }
+    w.write_all(&crc.finish().to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a dataset from the binary format, verifying the checksum.
+pub fn read_path(path: &Path) -> Result<Dataset, DataError> {
+    let file = std::fs::File::open(path)?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(DataError::Parse {
+            line: 0,
+            msg: "not a parclust binary dataset (bad magic)".into(),
+        });
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        return Err(DataError::Parse {
+            line: 0,
+            msg: format!("unsupported binary version {version}"),
+        });
+    }
+    let n = read_u64(&mut r)? as usize;
+    let m = read_u32(&mut r)? as usize;
+    if m == 0 || n.checked_mul(m).is_none() {
+        return Err(DataError::Parse {
+            line: 0,
+            msg: format!("implausible shape {n}×{m}"),
+        });
+    }
+    let names_len = read_u32(&mut r)? as usize;
+    let mut names_buf = vec![0u8; names_len];
+    r.read_exact(&mut names_buf)?;
+    let names: Vec<String> = if names_len == 0 {
+        (0..m).map(|i| format!("f{i}")).collect()
+    } else {
+        String::from_utf8(names_buf)
+            .map_err(|_| DataError::Parse {
+                line: 0,
+                msg: "feature names are not utf-8".into(),
+            })?
+            .split('\n')
+            .map(String::from)
+            .collect()
+    };
+    if names.len() != m {
+        return Err(DataError::Parse {
+            line: 0,
+            msg: format!("{} names for {m} features", names.len()),
+        });
+    }
+
+    let mut data = vec![0f32; n * m];
+    let mut crc = Crc32::new();
+    let mut buf = vec![0u8; 1 << 16];
+    let mut filled = 0usize;
+    let total_bytes = n * m * 4;
+    while filled < total_bytes {
+        let take = buf.len().min(total_bytes - filled);
+        r.read_exact(&mut buf[..take])?;
+        crc.update(&buf[..take]);
+        for (i, chunk) in buf[..take].chunks_exact(4).enumerate() {
+            data[(filled / 4) + i] =
+                f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        filled += take;
+    }
+    let stored_crc = read_u32(&mut r)?;
+    if stored_crc != crc.finish() {
+        return Err(DataError::Parse {
+            line: 0,
+            msg: "checksum mismatch — file corrupt".into(),
+        });
+    }
+    Dataset::from_vec(n, m, data)?.with_feature_names(names)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32, std::io::Error> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64, std::io::Error> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// CRC-32 (IEEE 802.3), table-driven — no external crates offline.
+struct Crc32 {
+    state: u32,
+    table: [u32; 256],
+}
+
+impl Crc32 {
+    fn new() -> Crc32 {
+        let mut table = [0u32; 256];
+        for (i, entry) in table.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *entry = c;
+        }
+        Crc32 {
+            state: 0xFFFF_FFFF,
+            table,
+        }
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state =
+                self.table[((self.state ^ b as u32) & 0xFF) as usize] ^ (self.state >> 8);
+        }
+    }
+
+    fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GmmSpec};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("parclust_binfmt");
+        let _ = std::fs::create_dir_all(&dir);
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let g = generate(&GmmSpec::new(500, 7, 3).seed(1));
+        let path = tmp("rt.pcb");
+        write_path(&g.dataset, &path).unwrap();
+        let back = read_path(&path).unwrap();
+        assert_eq!(back, g.dataset, "binary roundtrip must be bit-exact");
+    }
+
+    #[test]
+    fn crc32_reference_vector() {
+        // CRC-32("123456789") = 0xCBF43926 (IEEE check value)
+        let mut c = Crc32::new();
+        c.update(b"123456789");
+        assert_eq!(c.finish(), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let g = generate(&GmmSpec::new(100, 4, 2).seed(2));
+        let path = tmp("corrupt.pcb");
+        write_path(&g.dataset, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, bytes).unwrap();
+        let err = read_path(&path).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_version() {
+        let path = tmp("magic.pcb");
+        std::fs::write(&path, b"NOTRIGHT________________").unwrap();
+        assert!(read_path(&path).unwrap_err().to_string().contains("magic"));
+    }
+
+    #[test]
+    fn preserves_feature_names() {
+        let ds = Dataset::from_vec(2, 2, vec![1., 2., 3., 4.])
+            .unwrap()
+            .with_feature_names(vec!["age".into(), "income".into()])
+            .unwrap();
+        let path = tmp("names.pcb");
+        write_path(&ds, &path).unwrap();
+        let back = read_path(&path).unwrap();
+        assert_eq!(back.feature_names, vec!["age", "income"]);
+    }
+}

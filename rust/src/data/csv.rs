@@ -1,0 +1,211 @@
+//! CSV read/write for datasets.
+//!
+//! Minimal but robust: comma or semicolon separators, optional header
+//! (auto-detected: a first line with any non-numeric cell), quoted fields,
+//! CRLF tolerance, and precise line-numbered parse errors. The statistical
+//! packages the paper compares against (STATISTICA, STADIA, …) exchange
+//! data as delimited text, so the CLI speaks CSV as its primary format.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+use crate::data::{DataError, Dataset};
+
+/// Read a dataset from a CSV file.
+pub fn read_path(path: &Path) -> Result<Dataset, DataError> {
+    let file = std::fs::File::open(path)?;
+    read(BufReader::new(file))
+}
+
+/// Read a dataset from any reader.
+pub fn read<R: Read>(reader: BufReader<R>) -> Result<Dataset, DataError> {
+    let mut values: Vec<f32> = Vec::new();
+    let mut names: Option<Vec<String>> = None;
+    let mut m = 0usize;
+    let mut n = 0usize;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim_end_matches('\r');
+        if line.trim().is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let sep = if line.contains(';') && !line.contains(',') {
+            ';'
+        } else {
+            ','
+        };
+        let fields = split_fields(line, sep).map_err(|msg| DataError::Parse {
+            line: lineno + 1,
+            msg,
+        })?;
+
+        if n == 0 && names.is_none() && m == 0 {
+            // Header detection: any non-numeric field makes it a header.
+            let numeric = fields.iter().all(|f| f.trim().parse::<f32>().is_ok());
+            if !numeric {
+                names = Some(fields.iter().map(|s| s.trim().to_string()).collect());
+                m = fields.len();
+                continue;
+            }
+        }
+
+        if m == 0 {
+            m = fields.len();
+        } else if fields.len() != m {
+            return Err(DataError::Parse {
+                line: lineno + 1,
+                msg: format!("expected {m} fields, got {}", fields.len()),
+            });
+        }
+        for f in &fields {
+            let v = f.trim().parse::<f32>().map_err(|_| DataError::Parse {
+                line: lineno + 1,
+                msg: format!("'{f}' is not a number"),
+            })?;
+            values.push(v);
+        }
+        n += 1;
+    }
+
+    if m == 0 {
+        return Err(DataError::Shape("empty csv".into()));
+    }
+    let ds = Dataset::from_vec(n, m, values)?;
+    match names {
+        Some(names) => ds.with_feature_names(names),
+        None => Ok(ds),
+    }
+}
+
+/// Split one CSV line honouring double-quoted fields.
+fn split_fields(line: &str, sep: char) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        cur.push('"');
+                        chars.next();
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => cur.push(c),
+            }
+        } else if c == '"' {
+            in_quotes = true;
+        } else if c == sep {
+            out.push(std::mem::take(&mut cur));
+        } else {
+            cur.push(c);
+        }
+    }
+    if in_quotes {
+        return Err("unterminated quoted field".into());
+    }
+    out.push(cur);
+    Ok(out)
+}
+
+/// Write a dataset (with header) to a CSV file.
+pub fn write_path(ds: &Dataset, path: &Path) -> Result<(), DataError> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write(ds, &mut f)
+}
+
+/// Write a dataset (with header) to any writer.
+pub fn write<W: Write>(ds: &Dataset, w: &mut W) -> Result<(), DataError> {
+    writeln!(w, "{}", ds.feature_names.join(","))?;
+    for i in 0..ds.n() {
+        let row: Vec<String> = ds.row(i).iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(text: &str) -> Result<Dataset, DataError> {
+        read(BufReader::new(Cursor::new(text.to_string())))
+    }
+
+    #[test]
+    fn headerless_numeric() {
+        let ds = parse("1,2,3\n4,5,6\n").unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.m(), 3);
+        assert_eq!(ds.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn header_detected() {
+        let ds = parse("age,income\n30,50000\n40,60000\n").unwrap();
+        assert_eq!(ds.feature_names, vec!["age", "income"]);
+        assert_eq!(ds.n(), 2);
+    }
+
+    #[test]
+    fn semicolon_separator_and_crlf() {
+        let ds = parse("1;2\r\n3;4\r\n").unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.row(0), &[1., 2.]);
+    }
+
+    #[test]
+    fn quoted_fields_and_comments() {
+        let ds = parse("# comment\n\"a\",\"b\"\n1,2\n").unwrap();
+        assert_eq!(ds.feature_names, vec!["a", "b"]);
+        assert_eq!(ds.n(), 1);
+    }
+
+    #[test]
+    fn quoted_with_embedded_separator_and_quote() {
+        let fields = split_fields("\"x,y\",\"he said \"\"hi\"\"\",3", ',').unwrap();
+        assert_eq!(fields, vec!["x,y", "he said \"hi\"", "3"]);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("1,2\n3\n").unwrap_err();
+        match err {
+            DataError::Parse { line, .. } => assert_eq!(line, 2),
+            other => panic!("wrong error: {other}"),
+        }
+        // (a non-numeric FIRST line is header detection, not an error —
+        // so the bad value sits on line 2 here)
+        let err = parse("1,2\n3,x\n").unwrap_err();
+        match err {
+            DataError::Parse { line, msg } => {
+                assert_eq!(line, 2);
+                assert!(msg.contains('x'));
+            }
+            other => panic!("wrong error: {other}"),
+        }
+    }
+
+    #[test]
+    fn empty_is_error() {
+        assert!(parse("").is_err());
+        assert!(parse("# only comments\n").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ds = Dataset::from_vec(2, 2, vec![1.5, -2.0, 0.25, 1e6])
+            .unwrap()
+            .with_feature_names(vec!["a".into(), "b".into()])
+            .unwrap();
+        let mut buf = Vec::new();
+        write(&ds, &mut buf).unwrap();
+        let rt = parse(std::str::from_utf8(&buf).unwrap()).unwrap();
+        assert_eq!(rt, ds);
+    }
+}

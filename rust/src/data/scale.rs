@@ -1,0 +1,160 @@
+//! Feature scaling.
+//!
+//! The paper notes it "did not consider the problems associated with the
+//! correct preparation of the initial data" — but a production package
+//! must: K-means with Euclidean distance (paper Eq. 2) is scale-sensitive,
+//! so the pipeline offers min-max and z-score normalisation with
+//! invertible parameters.
+
+use crate::data::Dataset;
+
+/// Per-feature scaling parameters, invertible.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Scaler {
+    /// x' = (x - min) / (max - min); constant features map to 0.
+    MinMax { mins: Vec<f32>, maxs: Vec<f32> },
+    /// x' = (x - mean) / std; constant features map to 0.
+    ZScore { means: Vec<f32>, stds: Vec<f32> },
+}
+
+impl Scaler {
+    /// Fit min-max parameters on a dataset.
+    pub fn fit_min_max(ds: &Dataset) -> Scaler {
+        let m = ds.m();
+        let mut mins = vec![f32::INFINITY; m];
+        let mut maxs = vec![f32::NEG_INFINITY; m];
+        for i in 0..ds.n() {
+            for (j, &v) in ds.row(i).iter().enumerate() {
+                mins[j] = mins[j].min(v);
+                maxs[j] = maxs[j].max(v);
+            }
+        }
+        if ds.n() == 0 {
+            mins.fill(0.0);
+            maxs.fill(0.0);
+        }
+        Scaler::MinMax { mins, maxs }
+    }
+
+    /// Fit z-score parameters on a dataset.
+    pub fn fit_z_score(ds: &Dataset) -> Scaler {
+        let m = ds.m();
+        let n = ds.n().max(1) as f64;
+        let mut means = vec![0f64; m];
+        for i in 0..ds.n() {
+            for (j, &v) in ds.row(i).iter().enumerate() {
+                means[j] += v as f64;
+            }
+        }
+        for mu in means.iter_mut() {
+            *mu /= n;
+        }
+        let mut vars = vec![0f64; m];
+        for i in 0..ds.n() {
+            for (j, &v) in ds.row(i).iter().enumerate() {
+                let d = v as f64 - means[j];
+                vars[j] += d * d;
+            }
+        }
+        let stds: Vec<f32> = vars.iter().map(|&v| ((v / n).sqrt()) as f32).collect();
+        Scaler::ZScore {
+            means: means.iter().map(|&v| v as f32).collect(),
+            stds,
+        }
+    }
+
+    /// Apply in place.
+    pub fn transform(&self, ds: &mut Dataset) {
+        let m = ds.m();
+        match self {
+            Scaler::MinMax { mins, maxs } => {
+                for (idx, v) in ds.values_mut().iter_mut().enumerate() {
+                    let j = idx % m;
+                    let range = maxs[j] - mins[j];
+                    *v = if range > 0.0 { (*v - mins[j]) / range } else { 0.0 };
+                }
+            }
+            Scaler::ZScore { means, stds } => {
+                for (idx, v) in ds.values_mut().iter_mut().enumerate() {
+                    let j = idx % m;
+                    *v = if stds[j] > 0.0 { (*v - means[j]) / stds[j] } else { 0.0 };
+                }
+            }
+        }
+    }
+
+    /// Invert in place (best effort; constant features restore to their
+    /// min / mean).
+    pub fn inverse(&self, ds: &mut Dataset) {
+        let m = ds.m();
+        match self {
+            Scaler::MinMax { mins, maxs } => {
+                for (idx, v) in ds.values_mut().iter_mut().enumerate() {
+                    let j = idx % m;
+                    *v = mins[j] + *v * (maxs[j] - mins[j]);
+                }
+            }
+            Scaler::ZScore { means, stds } => {
+                for (idx, v) in ds.values_mut().iter_mut().enumerate() {
+                    let j = idx % m;
+                    *v = means[j] + *v * stds[j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Dataset {
+        Dataset::from_vec(4, 2, vec![0., 10., 2., 20., 4., 30., 8., 40.]).unwrap()
+    }
+
+    #[test]
+    fn min_max_range_and_inverse() {
+        let ds0 = sample();
+        let sc = Scaler::fit_min_max(&ds0);
+        let mut ds = ds0.clone();
+        sc.transform(&mut ds);
+        for &v in ds.values() {
+            assert!((0.0..=1.0).contains(&v));
+        }
+        // column mins/maxs hit 0 and 1
+        assert_eq!(ds.row(0)[0], 0.0);
+        assert_eq!(ds.row(3)[0], 1.0);
+        sc.inverse(&mut ds);
+        for (a, b) in ds.values().iter().zip(ds0.values()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn z_score_moments_and_inverse() {
+        let ds0 = sample();
+        let sc = Scaler::fit_z_score(&ds0);
+        let mut ds = ds0.clone();
+        sc.transform(&mut ds);
+        for j in 0..2 {
+            let mean: f32 = (0..4).map(|i| ds.row(i)[j]).sum::<f32>() / 4.0;
+            let var: f32 = (0..4).map(|i| ds.row(i)[j].powi(2)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-4);
+        }
+        sc.inverse(&mut ds);
+        for (a, b) in ds.values().iter().zip(ds0.values()) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn constant_feature_maps_to_zero() {
+        let ds0 = Dataset::from_vec(3, 1, vec![5., 5., 5.]).unwrap();
+        for sc in [Scaler::fit_min_max(&ds0), Scaler::fit_z_score(&ds0)] {
+            let mut ds = ds0.clone();
+            sc.transform(&mut ds);
+            assert!(ds.values().iter().all(|&v| v == 0.0), "{sc:?}");
+        }
+    }
+}

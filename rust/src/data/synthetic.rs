@@ -1,0 +1,226 @@
+//! Synthetic dataset generation.
+//!
+//! The paper's applied datasets are confidential ("the arising applied
+//! problems are often confidential … in medicine, genetic engineering"),
+//! and its evaluation is parameterised purely by size (n, M). We therefore
+//! generate Gaussian-mixture data with ground-truth labels — the standard
+//! synthetic workload for K-means — plus two domain-flavoured generators
+//! used by the examples (survey-style ordinal features, expression-style
+//! log-normal features).
+
+use crate::data::Dataset;
+use crate::prng::Pcg32;
+
+/// Specification of a Gaussian-mixture dataset.
+#[derive(Clone, Debug)]
+pub struct GmmSpec {
+    pub n: usize,
+    pub m: usize,
+    pub k: usize,
+    /// Cluster-center scale (centers ~ N(0, scale²)).
+    pub center_scale: f32,
+    /// Within-cluster standard deviation.
+    pub spread: f32,
+    /// Mixing weights; uniform if empty.
+    pub weights: Vec<f32>,
+    pub seed: u64,
+}
+
+impl GmmSpec {
+    pub fn new(n: usize, m: usize, k: usize) -> Self {
+        Self {
+            n,
+            m,
+            k,
+            center_scale: 10.0,
+            spread: 1.0,
+            weights: Vec::new(),
+            seed: 0,
+        }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn spread(mut self, spread: f32) -> Self {
+        self.spread = spread;
+        self
+    }
+
+    pub fn center_scale(mut self, s: f32) -> Self {
+        self.center_scale = s;
+        self
+    }
+
+    pub fn weights(mut self, w: Vec<f32>) -> Self {
+        self.weights = w;
+        self
+    }
+}
+
+/// A generated dataset together with its ground truth.
+#[derive(Clone, Debug)]
+pub struct Generated {
+    pub dataset: Dataset,
+    pub labels: Vec<u32>,
+    /// True mixture centers, row-major (k × m).
+    pub centers: Vec<f32>,
+}
+
+/// Generate a Gaussian mixture per `spec`. Deterministic in `spec.seed`.
+pub fn generate(spec: &GmmSpec) -> Generated {
+    assert!(spec.k >= 1, "k must be >= 1");
+    assert!(spec.m >= 1, "m must be >= 1");
+    let mut rng = Pcg32::with_stream(spec.seed, 0x6D6D);
+    let mut centers = vec![0f32; spec.k * spec.m];
+    for c in centers.iter_mut() {
+        *c = rng.normal_with(0.0, spec.center_scale);
+    }
+    let weights: Vec<f32> = if spec.weights.is_empty() {
+        vec![1.0; spec.k]
+    } else {
+        assert_eq!(spec.weights.len(), spec.k, "weights.len() != k");
+        spec.weights.clone()
+    };
+
+    let mut values = vec![0f32; spec.n * spec.m];
+    let mut labels = vec![0u32; spec.n];
+    for i in 0..spec.n {
+        let c = rng.weighted_index(&weights);
+        labels[i] = c as u32;
+        let base = &centers[c * spec.m..(c + 1) * spec.m];
+        let row = &mut values[i * spec.m..(i + 1) * spec.m];
+        for (x, &mu) in row.iter_mut().zip(base.iter()) {
+            *x = mu + rng.normal_with(0.0, spec.spread);
+        }
+    }
+    Generated {
+        dataset: Dataset::from_vec(spec.n, spec.m, values).unwrap(),
+        labels,
+        centers,
+    }
+}
+
+/// Survey-style data (paper's sociology motivation): `m` ordinal features
+/// on a 1..=scale Likert scale, with `k` latent respondent profiles.
+pub fn survey(n: usize, m: usize, k: usize, scale: u32, seed: u64) -> Generated {
+    let mut rng = Pcg32::with_stream(seed, 0x5u64);
+    let mut centers = vec![0f32; k * m];
+    for c in centers.iter_mut() {
+        *c = 1.0 + rng.next_below(scale) as f32;
+    }
+    let mut values = vec![0f32; n * m];
+    let mut labels = vec![0u32; n];
+    for i in 0..n {
+        let c = rng.next_below(k as u32) as usize;
+        labels[i] = c as u32;
+        for j in 0..m {
+            let v = centers[c * m + j] + rng.normal_with(0.0, 0.8);
+            values[i * m + j] = v.round().clamp(1.0, scale as f32);
+        }
+    }
+    Generated {
+        dataset: Dataset::from_vec(n, m, values)
+            .unwrap()
+            .with_feature_names((0..m).map(|i| format!("q{i}")).collect())
+            .unwrap(),
+        labels,
+        centers,
+    }
+}
+
+/// Expression-style data (paper's genetics motivation): log-normal-ish
+/// positive features with cluster-specific up/down regulation.
+pub fn expression(n: usize, m: usize, k: usize, seed: u64) -> Generated {
+    let mut rng = Pcg32::with_stream(seed, 0xE1u64);
+    let mut centers = vec![0f32; k * m];
+    for c in centers.iter_mut() {
+        // log2 fold-change profile in [-3, 3]
+        *c = rng.uniform(-3.0, 3.0);
+    }
+    let mut values = vec![0f32; n * m];
+    let mut labels = vec![0u32; n];
+    for i in 0..n {
+        let c = rng.next_below(k as u32) as usize;
+        labels[i] = c as u32;
+        for j in 0..m {
+            let log2 = centers[c * m + j] + rng.normal_with(0.0, 0.5);
+            values[i * m + j] = (log2 as f64).exp2() as f32;
+        }
+    }
+    Generated {
+        dataset: Dataset::from_vec(n, m, values)
+            .unwrap()
+            .with_feature_names((0..m).map(|i| format!("gene{i}")).collect())
+            .unwrap(),
+        labels,
+        centers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = generate(&GmmSpec::new(100, 5, 3).seed(42));
+        let b = generate(&GmmSpec::new(100, 5, 3).seed(42));
+        assert_eq!(a.dataset, b.dataset);
+        assert_eq!(a.labels, b.labels);
+        let c = generate(&GmmSpec::new(100, 5, 3).seed(43));
+        assert_ne!(a.dataset, c.dataset);
+    }
+
+    #[test]
+    fn shapes_and_label_range() {
+        let g = generate(&GmmSpec::new(500, 7, 4).seed(1));
+        assert_eq!(g.dataset.n(), 500);
+        assert_eq!(g.dataset.m(), 7);
+        assert_eq!(g.labels.len(), 500);
+        assert_eq!(g.centers.len(), 4 * 7);
+        assert!(g.labels.iter().all(|&l| l < 4));
+    }
+
+    #[test]
+    fn samples_near_their_center() {
+        let g = generate(&GmmSpec::new(200, 4, 3).seed(2).spread(0.1).center_scale(50.0));
+        for i in 0..g.dataset.n() {
+            let c = g.labels[i] as usize;
+            let center = &g.centers[c * 4..(c + 1) * 4];
+            let d2: f32 = g
+                .dataset
+                .row(i)
+                .iter()
+                .zip(center)
+                .map(|(x, mu)| (x - mu) * (x - mu))
+                .sum();
+            assert!(d2 < 1.0, "sample {i} far from its center: d2={d2}");
+        }
+    }
+
+    #[test]
+    fn weighted_mixture_respected() {
+        let g = generate(&GmmSpec::new(10_000, 2, 2).seed(3).weights(vec![9.0, 1.0]));
+        let c0 = g.labels.iter().filter(|&&l| l == 0).count();
+        let frac = c0 as f64 / 10_000.0;
+        assert!((frac - 0.9).abs() < 0.03, "frac={frac}");
+    }
+
+    #[test]
+    fn survey_values_on_likert_scale() {
+        let g = survey(300, 6, 3, 5, 4);
+        for &v in g.dataset.values() {
+            assert!((1.0..=5.0).contains(&v));
+            assert_eq!(v.fract(), 0.0, "ordinal values must be integral");
+        }
+    }
+
+    #[test]
+    fn expression_values_positive() {
+        let g = expression(200, 8, 3, 5);
+        assert!(g.dataset.values().iter().all(|&v| v > 0.0));
+    }
+}

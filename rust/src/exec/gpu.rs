@@ -1,0 +1,389 @@
+//! GPU-offload executor — paper Algorithm 4.
+//!
+//! "Each thread prepares the task for the GPU, sends this task for
+//! execution and receives the results": host worker threads cut the
+//! dataset into chunks sized to the compiled artifact, pad/mask them
+//! (runtime::pad), submit to the device thread (which, like a single
+//! CUDA stream, executes kernels in order), and the leader absorbs the
+//! returned partials.
+//!
+//! The kernels are the Layer-1 Pallas modules, AOT-lowered to HLO and
+//! executed through PJRT — the same dataflow as the paper's CUDA path
+//! (host shards → device kernel → tiny partial results back), with the
+//! transfer and launch overheads that the paper's "intermediate
+//! conclusion" is about tracked in [`crate::runtime::DeviceStats`].
+
+use std::sync::{Arc, Mutex};
+
+use crate::data::Dataset;
+use crate::exec::{AssignStats, DiameterResult, ExecError, Executor};
+use crate::metric::Metric;
+use crate::runtime::{pad, ArtifactKind, Device, HostTensor, InputRef};
+
+/// Identity of a dataset pinned on the device (see
+/// [`GpuExecutor::preload`]): buffer address + length is enough because
+/// the caller keeps the dataset alive for the duration of the fit.
+#[derive(Clone, Debug, PartialEq)]
+struct ResidentSet {
+    ptr: usize,
+    len: usize,
+    artifact: String,
+    cap: usize,
+}
+
+/// Executor that offloads every stage to PJRT-compiled artifacts.
+#[derive(Clone)]
+pub struct GpuExecutor {
+    device: Device,
+    threads: usize,
+    resident: Arc<Mutex<Option<ResidentSet>>>,
+}
+
+impl GpuExecutor {
+    /// `threads` = number of host preparation threads (paper: N CPU
+    /// threads each preparing GPU tasks).
+    pub fn new(device: Device, threads: usize) -> Self {
+        Self {
+            device,
+            threads: threads.max(1),
+            resident: Arc::new(Mutex::new(None)),
+        }
+    }
+
+    /// Pin `ds`'s padded shards on the device so the iterated assignment
+    /// stage re-uses them instead of re-uploading the whole dataset every
+    /// Lloyd iteration — the paper's §7 future-work item ("parallel
+    /// algorithms for the shared memory architecture … significant gain
+    /// in comparison with the global GPU memory"), realised here as
+    /// device-resident buffers. Requires `k`/`m` to pick the artifact.
+    ///
+    /// The caller must keep `ds` alive and unmodified while it is
+    /// resident (the library's `fit` path guarantees this; `clear` with
+    /// [`GpuExecutor::clear_resident`] when done if reusing the device).
+    pub fn preload(&self, ds: &Dataset, k: usize) -> Result<(), ExecError> {
+        let m = ds.m();
+        let art = self
+            .device
+            .manifest()
+            .select(ArtifactKind::Assign, ds.n(), m, k)
+            .map_err(ExecError)?
+            .clone();
+        let cap = art.n;
+        self.device.clear_store("resident:");
+        let mut start = 0;
+        while start < ds.n() {
+            let end = (start + cap).min(ds.n());
+            let rows = end - start;
+            let padded = pad::pad_points(ds.rows(start..end), rows, m, cap, art.m);
+            let mask = pad::make_mask(rows, cap);
+            self.device
+                .store(
+                    &format!("resident:pts:{start}"),
+                    HostTensor::f32(&[cap as i64, art.m as i64], padded),
+                )
+                .map_err(ExecError)?;
+            self.device
+                .store(
+                    &format!("resident:mask:{start}"),
+                    HostTensor::f32(&[cap as i64], mask),
+                )
+                .map_err(ExecError)?;
+            start = end;
+        }
+        *self.resident.lock().unwrap() = Some(ResidentSet {
+            ptr: ds.values().as_ptr() as usize,
+            len: ds.values().len(),
+            artifact: art.name.clone(),
+            cap,
+        });
+        Ok(())
+    }
+
+    /// Drop the pinned dataset (if any).
+    pub fn clear_resident(&self) {
+        self.device.clear_store("resident:");
+        *self.resident.lock().unwrap() = None;
+    }
+
+    /// The pinned-set descriptor if `ds` is currently resident.
+    fn resident_for(&self, ds: &Dataset) -> Option<ResidentSet> {
+        let guard = self.resident.lock().unwrap();
+        guard.as_ref().and_then(|r| {
+            (r.ptr == ds.values().as_ptr() as usize
+                && r.len == ds.values().len())
+            .then(|| r.clone())
+        })
+    }
+
+    pub fn device(&self) -> &Device {
+        &self.device
+    }
+
+    /// Pre-compile the artifacts a `(n, m, k)` run will need, so compile
+    /// latency does not pollute stage timings.
+    pub fn warmup(&self, n: usize, m: usize, k: usize) -> Result<(), ExecError> {
+        let manifest = self.device.manifest().clone();
+        let assign = manifest
+            .select(ArtifactKind::Assign, n, m, k)
+            .map_err(ExecError)?;
+        self.device.warmup(&assign.name).map_err(ExecError)?;
+        let sum = manifest
+            .select(ArtifactKind::Sum, n, m, 0)
+            .map_err(ExecError)?;
+        self.device.warmup(&sum.name).map_err(ExecError)?;
+        if let Ok(dia) = manifest.select_diameter(m) {
+            self.device.warmup(&dia.name).map_err(ExecError)?;
+        }
+        Ok(())
+    }
+
+    /// Process chunks of `total` rows, `chunk_cap` at a time, on up to
+    /// `self.threads` scoped workers. `work(chunk_range) -> T` runs on
+    /// the worker; results come back in chunk order.
+    fn parallel_chunks<T, F>(&self, total: usize, chunk_cap: usize, work: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(std::ops::Range<usize>) -> T + Send + Sync,
+    {
+        let mut chunks = Vec::new();
+        let mut start = 0;
+        while start < total {
+            let end = (start + chunk_cap).min(total);
+            chunks.push(start..end);
+            start = end;
+        }
+        let n_workers = self.threads.min(chunks.len()).max(1);
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let mut out: Vec<Option<T>> = (0..chunks.len()).map(|_| None).collect();
+        let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        std::thread::scope(|s| {
+            for _ in 0..n_workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    if i >= chunks.len() {
+                        return;
+                    }
+                    let r = chunks[i].clone();
+                    let val = work(r);
+                    **slots[i].lock().unwrap() = Some(val);
+                });
+            }
+        });
+        out.into_iter().map(|v| v.expect("chunk not processed")).collect()
+    }
+}
+
+impl Executor for GpuExecutor {
+    fn name(&self) -> &'static str {
+        "gpu"
+    }
+
+    fn diameter(
+        &self,
+        ds: &Dataset,
+        candidates: &[usize],
+    ) -> Result<DiameterResult, ExecError> {
+        if candidates.len() < 2 {
+            return Err(ExecError("diameter needs at least 2 candidates".into()));
+        }
+        let m = ds.m();
+        let art = self.device.manifest().select_diameter(m).map_err(ExecError)?;
+        let (an, bn, am) = (art.n, art.bn, art.m);
+        let s = candidates.len();
+        let n_blocks = s.div_ceil(an);
+
+        // Gather + pad each candidate block once.
+        let gather_block = |b: usize, cap: usize| -> (Vec<f32>, Vec<f32>, usize) {
+            let lo = b * cap;
+            let hi = ((b + 1) * cap).min(s);
+            let rows = hi - lo;
+            let gathered = ds.gather(&candidates[lo..hi]);
+            let padded = pad::pad_points(&gathered, rows, m, cap, am);
+            (padded, pad::make_mask(rows, cap), rows)
+        };
+
+        // Rectangle list covering the upper triangle (bi <= bj).
+        let mut rects = Vec::new();
+        for bi in 0..n_blocks {
+            for bj in bi..n_blocks {
+                rects.push((bi, bj));
+            }
+        }
+
+        let device = &self.device;
+        let art_name = art.name.clone();
+        let results = self.parallel_chunks(rects.len(), 1, |r| {
+            let (bi, bj) = rects[r.start];
+            let (pa, ma, _) = gather_block(bi, an);
+            let (pb, mb, _) = gather_block(bj, bn);
+            let out = device
+                .execute(
+                    &art_name,
+                    vec![
+                        HostTensor::f32(&[an as i64, am as i64], pa),
+                        HostTensor::f32(&[bn as i64, am as i64], pb),
+                        HostTensor::f32(&[an as i64], ma),
+                        HostTensor::f32(&[bn as i64], mb),
+                    ],
+                )
+                .map_err(ExecError)?;
+            let max_d2 = out[0].as_f32()[0];
+            let ai = out[1].as_i32()[0];
+            let aj = out[2].as_i32()[0];
+            Ok::<(usize, usize, f32, i32, i32), ExecError>((bi, bj, max_d2, ai, aj))
+        });
+
+        let mut best = DiameterResult { d2: -1.0, i: 0, j: 0 };
+        for r in results {
+            let (bi, bj, max_d2, ai, aj) = r?;
+            if max_d2 > best.d2 && max_d2 >= 0.0 && ai >= 0 && aj >= 0 {
+                best = DiameterResult {
+                    d2: max_d2,
+                    i: candidates[bi * an + ai as usize],
+                    j: candidates[bj * bn + aj as usize],
+                };
+            }
+        }
+        if best.d2 < 0.0 {
+            return Err(ExecError("no valid pair found on device".into()));
+        }
+        Ok(best)
+    }
+
+    fn center_of_gravity(&self, ds: &Dataset) -> Result<Vec<f32>, ExecError> {
+        let m = ds.m();
+        let art = self
+            .device
+            .manifest()
+            .select(ArtifactKind::Sum, ds.n(), m, 0)
+            .map_err(ExecError)?;
+        let (cap, am) = (art.n, art.m);
+        let device = &self.device;
+        let art_name = art.name.clone();
+
+        let partials = self.parallel_chunks(ds.n(), cap, |r| {
+            let rows = r.len();
+            let padded = pad::pad_points(ds.rows(r.clone()), rows, m, cap, am);
+            let mask = pad::make_mask(rows, cap);
+            let out = device
+                .execute(
+                    &art_name,
+                    vec![
+                        HostTensor::f32(&[cap as i64, am as i64], padded),
+                        HostTensor::f32(&[cap as i64], mask),
+                    ],
+                )
+                .map_err(ExecError)?;
+            Ok::<Vec<f32>, ExecError>(out[0].as_f32().to_vec())
+        });
+
+        let mut total = vec![0f64; m];
+        for p in partials {
+            let sums = p?;
+            for j in 0..m {
+                total[j] += sums[j] as f64;
+            }
+        }
+        let n = ds.n().max(1) as f64;
+        Ok(total.iter().map(|&s| (s / n) as f32).collect())
+    }
+
+    fn assign_update(
+        &self,
+        ds: &Dataset,
+        centroids: &[f32],
+        k: usize,
+        metric: Metric,
+    ) -> Result<AssignStats, ExecError> {
+        if metric != Metric::Euclidean {
+            return Err(ExecError(format!(
+                "gpu kernels are compiled for the euclidean metric, got {}",
+                metric.name()
+            )));
+        }
+        let m = ds.m();
+        // When the dataset was preloaded (fit path), reference the
+        // device-resident shards; otherwise stream pad+upload per chunk.
+        let resident = self.resident_for(ds);
+        let art = match &resident {
+            Some(r) => self
+                .device
+                .manifest()
+                .artifacts
+                .iter()
+                .find(|a| a.name == r.artifact)
+                .ok_or_else(|| ExecError("resident artifact vanished".into()))?,
+            None => self
+                .device
+                .manifest()
+                .select(ArtifactKind::Assign, ds.n(), m, k)
+                .map_err(ExecError)?,
+        };
+        if art.k < k || art.m < m {
+            return Err(ExecError(format!(
+                "artifact {} capacity (m={}, k={}) below logical (m={m}, k={k})",
+                art.name, art.m, art.k
+            )));
+        }
+        let (cap, am, ak) = (art.n, art.m, art.k);
+        let padded_centroids = pad::pad_centroids(centroids, k, m, ak, am);
+        let device = &self.device;
+        let art_name = art.name.clone();
+        let pc = &padded_centroids;
+        let resident = &resident;
+
+        let partials = self.parallel_chunks(ds.n(), cap, |r| {
+            let rows = r.len();
+            let centroid_in = InputRef::Inline(HostTensor::f32(
+                &[ak as i64, am as i64],
+                pc.clone(),
+            ));
+            let inputs = if resident.is_some() {
+                vec![
+                    InputRef::Stored(format!("resident:pts:{}", r.start)),
+                    InputRef::Stored(format!("resident:mask:{}", r.start)),
+                    centroid_in,
+                ]
+            } else {
+                let padded =
+                    pad::pad_points(ds.rows(r.clone()), rows, m, cap, am);
+                let mask = pad::make_mask(rows, cap);
+                vec![
+                    InputRef::Inline(HostTensor::f32(&[cap as i64, am as i64], padded)),
+                    InputRef::Inline(HostTensor::f32(&[cap as i64], mask)),
+                    centroid_in,
+                ]
+            };
+            let out = device
+                .execute_refs(&art_name, inputs)
+                .map_err(ExecError)?;
+            let labels = out[0].as_i32();
+            let sums = out[1].as_f32();
+            let counts = out[2].as_f32();
+            let inertia = out[3].as_f32()[0];
+
+            let mut shard = AssignStats::zeros(rows, k, m);
+            for (dst, &src) in shard.labels.iter_mut().zip(labels.iter().take(rows)) {
+                debug_assert!((0..k as i32).contains(&src), "label out of range");
+                *dst = src as u32;
+            }
+            let trimmed = pad::unpad_matrix(sums, ak, am, k, m);
+            for (a, &b) in shard.sums.iter_mut().zip(&trimmed) {
+                *a = b as f64;
+            }
+            for (a, &b) in shard.counts.iter_mut().zip(counts.iter().take(k)) {
+                *a = b as u64;
+            }
+            shard.inertia = inertia as f64;
+            Ok::<(usize, AssignStats), ExecError>((r.start, shard))
+        });
+
+        let mut total = AssignStats::zeros(ds.n(), k, m);
+        for p in partials {
+            let (offset, shard) = p?;
+            total.absorb(offset, &shard);
+        }
+        Ok(total)
+    }
+}

@@ -1,0 +1,173 @@
+//! Stage executors — the paper's contribution.
+//!
+//! Litvinenko's Algorithms 2, 3 and 4 are the *same* K-means pipeline run
+//! under three execution regimes: single-threaded, multi-threaded (N
+//! threads × 1/N of the data, partial results combined by the leader),
+//! and multi-threaded with GPU offload (each thread prepares a task for
+//! the accelerator and receives a partial result). [`Executor`] is that
+//! stage-level contract; the Lloyd driver in [`crate::kmeans`] is regime-
+//! agnostic and the three implementations differ only in *how* each stage
+//! runs:
+//!
+//! * [`single::SingleExecutor`] — Algorithm 2 (scalar reference);
+//! * [`multi::MultiExecutor`] — Algorithm 3 (thread pool + sharding);
+//! * [`gpu::GpuExecutor`] — Algorithm 4 (PJRT artifacts per shard).
+
+pub mod gpu;
+pub mod multi;
+pub mod regime;
+pub mod single;
+
+use crate::data::Dataset;
+use crate::metric::Metric;
+
+/// Result of the diameter stage (paper Eq. 3): the max-distance pair.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DiameterResult {
+    /// Squared distance between the farthest pair (squared Euclidean —
+    /// the diameter stage always uses the paper's Eq. 2 metric).
+    pub d2: f32,
+    /// Dataset row indices of the pair.
+    pub i: usize,
+    pub j: usize,
+}
+
+/// Partial statistics produced by the assignment stage over (a shard of)
+/// the data. Sums/counts accumulate in f64/u64 on the host so combining
+/// millions of rows stays exact regardless of shard order.
+#[derive(Clone, Debug)]
+pub struct AssignStats {
+    /// Per-row nearest-centroid index (dataset order).
+    pub labels: Vec<u32>,
+    /// Row-major (k × m) per-cluster coordinate sums.
+    pub sums: Vec<f64>,
+    /// Per-cluster member counts.
+    pub counts: Vec<u64>,
+    /// Sum of min squared distances (the K-means objective).
+    pub inertia: f64,
+}
+
+impl AssignStats {
+    pub fn zeros(n: usize, k: usize, m: usize) -> AssignStats {
+        AssignStats {
+            labels: vec![0; n],
+            sums: vec![0.0; k * m],
+            counts: vec![0; k],
+            inertia: 0.0,
+        }
+    }
+
+    /// Fold a shard's partials (with its row offset) into `self`.
+    pub fn absorb(&mut self, offset: usize, shard: &AssignStats) {
+        self.labels[offset..offset + shard.labels.len()]
+            .copy_from_slice(&shard.labels);
+        for (a, b) in self.sums.iter_mut().zip(&shard.sums) {
+            *a += b;
+        }
+        for (a, b) in self.counts.iter_mut().zip(&shard.counts) {
+            *a += b;
+        }
+        self.inertia += shard.inertia;
+    }
+
+    /// New centroid table from the accumulated statistics; clusters with
+    /// no members keep their previous centroid (the same policy as the
+    /// L2 model function).
+    pub fn centroids(&self, prev: &[f32], k: usize, m: usize) -> Vec<f32> {
+        let mut out = vec![0f32; k * m];
+        for c in 0..k {
+            if self.counts[c] == 0 {
+                out[c * m..(c + 1) * m].copy_from_slice(&prev[c * m..(c + 1) * m]);
+            } else {
+                let inv = 1.0 / self.counts[c] as f64;
+                for j in 0..m {
+                    out[c * m + j] = (self.sums[c * m + j] * inv) as f32;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Errors from stage execution (artifact selection, device failures…).
+#[derive(Debug)]
+pub struct ExecError(pub String);
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "executor error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+/// The stage-level contract shared by the three regimes.
+///
+/// `candidates` in [`Executor::diameter`] is the row subset the driver
+/// selected (all rows for exact mode, a deterministic sample for large n
+/// — see [`crate::kmeans::DiameterMode`]).
+pub trait Executor {
+    fn name(&self) -> &'static str;
+
+    /// Paper step 1: the farthest pair among `candidates`.
+    fn diameter(
+        &self,
+        ds: &Dataset,
+        candidates: &[usize],
+    ) -> Result<DiameterResult, ExecError>;
+
+    /// Paper step 2: the center of gravity of the whole set.
+    fn center_of_gravity(&self, ds: &Dataset) -> Result<Vec<f32>, ExecError>;
+
+    /// Paper steps 4-7 fused: assign every row to its nearest centroid
+    /// (under `metric` — paper Eq. 2 by default, "other metrics can be
+    /// chosen") and accumulate the statistics for the next centroid table.
+    fn assign_update(
+        &self,
+        ds: &Dataset,
+        centroids: &[f32],
+        k: usize,
+        metric: Metric,
+    ) -> Result<AssignStats, ExecError>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absorb_accumulates_and_places_labels() {
+        let mut total = AssignStats::zeros(4, 2, 2);
+        let shard_a = AssignStats {
+            labels: vec![1, 0],
+            sums: vec![1.0, 2.0, 3.0, 4.0],
+            counts: vec![1, 1],
+            inertia: 0.5,
+        };
+        let shard_b = AssignStats {
+            labels: vec![0, 1],
+            sums: vec![10.0, 20.0, 30.0, 40.0],
+            counts: vec![2, 0],
+            inertia: 1.5,
+        };
+        total.absorb(0, &shard_a);
+        total.absorb(2, &shard_b);
+        assert_eq!(total.labels, vec![1, 0, 0, 1]);
+        assert_eq!(total.sums, vec![11.0, 22.0, 33.0, 44.0]);
+        assert_eq!(total.counts, vec![3, 1]);
+        assert!((total.inertia - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn centroids_mean_and_empty_cluster_policy() {
+        let stats = AssignStats {
+            labels: vec![],
+            sums: vec![2.0, 4.0, 0.0, 0.0],
+            counts: vec![2, 0],
+            inertia: 0.0,
+        };
+        let prev = [9.0f32, 9.0, 7.0, 7.0];
+        let c = stats.centroids(&prev, 2, 2);
+        assert_eq!(c, vec![1.0, 2.0, 7.0, 7.0]);
+    }
+}

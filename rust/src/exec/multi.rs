@@ -1,0 +1,216 @@
+//! Multi-threaded executor — paper Algorithm 3.
+//!
+//! Every stage splits the data into N near-equal shards ("each thread
+//! handles (1/N)-th part of the elements of the whole set"), computes the
+//! shard's partial result on its own thread, and the leader combines:
+//!
+//! * step 1 (diameter): each thread takes a slice of the *candidate* rows
+//!   and scans it against the rest of the set (triangle split), returning
+//!   its local max pair; the leader takes the global max;
+//! * step 2 (center of gravity): per-shard coordinate sums, leader adds;
+//! * steps 4-7 (assignment): per-shard [`AssignStats`], leader absorbs.
+//!
+//! Threads are scoped (`std::thread::scope`) so shards borrow the dataset
+//! without copies. Thread count defaults to the paper's testbed (8
+//! hardware threads on the i7-3770) but follows the host when smaller.
+
+use crate::data::Dataset;
+use crate::exec::single::{assign_update_range, diameter_scalar};
+use crate::exec::{AssignStats, DiameterResult, ExecError, Executor};
+use crate::metric::Metric;
+use crate::pool::{scoped_map_chunks, split_ranges};
+
+/// Multi-threaded executor with a fixed thread count.
+#[derive(Clone, Debug)]
+pub struct MultiExecutor {
+    threads: usize,
+}
+
+impl MultiExecutor {
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Use the host's available parallelism.
+    pub fn host() -> Self {
+        let t = std::thread::available_parallelism()
+            .map(|v| v.get())
+            .unwrap_or(1);
+        Self::new(t)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl Executor for MultiExecutor {
+    fn name(&self) -> &'static str {
+        "multi"
+    }
+
+    fn diameter(
+        &self,
+        ds: &Dataset,
+        candidates: &[usize],
+    ) -> Result<DiameterResult, ExecError> {
+        if candidates.len() < 2 {
+            return Err(ExecError("diameter needs at least 2 candidates".into()));
+        }
+        // Balance the triangle: slice `a`'s work is (len - a) pairs, so
+        // split by equal pair-count, not equal slice length.
+        let bounds = triangle_splits(candidates.len(), self.threads);
+        let parts: Vec<Result<DiameterResult, ExecError>> = std::thread::scope(|s| {
+            let handles: Vec<_> = bounds
+                .windows(2)
+                .map(|w| {
+                    let (lo, hi) = (w[0], w[1]);
+                    s.spawn(move || diameter_scalar(ds, candidates, lo, hi))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("diameter worker panicked"))
+                .collect()
+        });
+        let mut best = DiameterResult { d2: -1.0, i: 0, j: 0 };
+        for p in parts {
+            let p = p?;
+            if p.d2 > best.d2 {
+                best = p;
+            }
+        }
+        Ok(best)
+    }
+
+    fn center_of_gravity(&self, ds: &Dataset) -> Result<Vec<f32>, ExecError> {
+        let m = ds.m();
+        let partials = scoped_map_chunks(self.threads, ds.n(), |r| {
+            let mut sums = vec![0f64; m];
+            for i in r {
+                for (s, &v) in sums.iter_mut().zip(ds.row(i)) {
+                    *s += v as f64;
+                }
+            }
+            sums
+        });
+        let mut total = vec![0f64; m];
+        for p in partials {
+            for (t, v) in total.iter_mut().zip(p) {
+                *t += v;
+            }
+        }
+        let n = ds.n().max(1) as f64;
+        Ok(total.iter().map(|&s| (s / n) as f32).collect())
+    }
+
+    fn assign_update(
+        &self,
+        ds: &Dataset,
+        centroids: &[f32],
+        k: usize,
+        metric: Metric,
+    ) -> Result<AssignStats, ExecError> {
+        let m = ds.m();
+        let ranges = split_ranges(ds.n(), self.threads);
+        let offsets: Vec<usize> = ranges.iter().map(|r| r.start).collect();
+        let partials: Vec<AssignStats> = std::thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .map(|r| {
+                    let r = r.clone();
+                    s.spawn(move || assign_update_range(ds, centroids, k, metric, r))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("assign worker panicked"))
+                .collect()
+        });
+        let mut total = AssignStats::zeros(ds.n(), k, m);
+        for (offset, shard) in offsets.into_iter().zip(&partials) {
+            total.absorb(offset, shard);
+        }
+        Ok(total)
+    }
+}
+
+/// Split the upper-triangle pair space of `len` candidates into at most
+/// `parts` contiguous `a`-ranges with near-equal pair counts. Returns the
+/// boundary indices (first = 0, last = len).
+pub fn triangle_splits(len: usize, parts: usize) -> Vec<usize> {
+    let parts = parts.max(1);
+    let total_pairs = len as u64 * (len as u64 - 1) / 2;
+    let per_part = total_pairs.div_ceil(parts as u64).max(1);
+    let mut bounds = vec![0usize];
+    let mut acc = 0u64;
+    for a in 0..len {
+        acc += (len - a - 1) as u64;
+        if acc >= per_part && *bounds.last().unwrap() < a + 1 {
+            bounds.push(a + 1);
+            acc = 0;
+        }
+    }
+    if *bounds.last().unwrap() != len {
+        bounds.push(len);
+    }
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GmmSpec};
+    use crate::exec::single::SingleExecutor;
+
+    #[test]
+    fn triangle_splits_cover_and_balance() {
+        for len in [2usize, 3, 10, 100, 1000] {
+            for parts in [1usize, 2, 4, 8] {
+                let b = triangle_splits(len, parts);
+                assert_eq!(b[0], 0);
+                assert_eq!(*b.last().unwrap(), len);
+                assert!(b.windows(2).all(|w| w[0] < w[1]), "{b:?}");
+                assert!(b.len() - 1 <= parts.max(1) + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_with_single_executor() {
+        let g = generate(&GmmSpec::new(500, 6, 4).seed(11));
+        let ds = &g.dataset;
+        let single = SingleExecutor::new();
+        let multi = MultiExecutor::new(4);
+
+        let cand: Vec<usize> = (0..ds.n()).collect();
+        let d_s = single.diameter(ds, &cand).unwrap();
+        let d_m = multi.diameter(ds, &cand).unwrap();
+        assert!((d_s.d2 - d_m.d2).abs() < 1e-4 * d_s.d2.max(1.0));
+
+        let c_s = single.center_of_gravity(ds).unwrap();
+        let c_m = multi.center_of_gravity(ds).unwrap();
+        for (a, b) in c_s.iter().zip(&c_m) {
+            assert!((a - b).abs() < 1e-4);
+        }
+
+        let cent = ds.gather(&[0, 1, 2, 3]);
+        let s_s = single.assign_update(ds, &cent, 4, Metric::Euclidean).unwrap();
+        let s_m = multi.assign_update(ds, &cent, 4, Metric::Euclidean).unwrap();
+        assert_eq!(s_s.labels, s_m.labels);
+        assert_eq!(s_s.counts, s_m.counts);
+        assert!((s_s.inertia - s_m.inertia).abs() < 1e-6 * s_s.inertia.max(1.0));
+    }
+
+    #[test]
+    fn more_threads_than_rows() {
+        let g = generate(&GmmSpec::new(5, 3, 2).seed(1));
+        let multi = MultiExecutor::new(16);
+        let cent = g.dataset.gather(&[0, 1]);
+        let stats = multi.assign_update(&g.dataset, &cent, 2, Metric::Euclidean).unwrap();
+        assert_eq!(stats.labels.len(), 5);
+        assert_eq!(stats.counts.iter().sum::<u64>(), 5);
+    }
+}

@@ -1,0 +1,186 @@
+//! Regime selection — the paper's §4 policy.
+//!
+//! "As a first approximation we will assume that a single-threaded regime
+//! should be used for problems with less than 10000 samples. In problems
+//! with up to 100000 samples, the user should have a choice between a
+//! single-threaded and multi-threaded regime. In complexer problems the
+//! user should be able to use all three regimes."
+//!
+//! [`Regime::Auto`] implements that policy; explicit regimes are honoured
+//! but validated against it (requesting GPU below the choice threshold
+//! produces a warning-grade advice string, matching the paper's
+//! intermediate conclusion that thin problems don't amortize offload).
+
+use crate::{CHOICE_MAX, SINGLE_THREAD_MAX};
+
+/// Execution regime of a clustering run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regime {
+    /// Paper Algorithm 2.
+    Single,
+    /// Paper Algorithm 3.
+    Multi,
+    /// Paper Algorithm 4.
+    Gpu,
+    /// Paper §4 policy decides from the problem size.
+    Auto,
+}
+
+impl Regime {
+    pub fn from_str(s: &str) -> Option<Regime> {
+        match s.to_ascii_lowercase().as_str() {
+            "single" | "st" => Some(Regime::Single),
+            "multi" | "mt" => Some(Regime::Multi),
+            "gpu" => Some(Regime::Gpu),
+            "auto" => Some(Regime::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Regime::Single => "single",
+            Regime::Multi => "multi",
+            Regime::Gpu => "gpu",
+            Regime::Auto => "auto",
+        }
+    }
+}
+
+/// Which regimes the policy *permits* for a problem size (paper §4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Allowed {
+    pub single: bool,
+    pub multi: bool,
+    pub gpu: bool,
+}
+
+/// The paper's size-based availability policy.
+pub fn allowed_for(n: usize) -> Allowed {
+    if n < SINGLE_THREAD_MAX {
+        Allowed {
+            single: true,
+            multi: false,
+            gpu: false,
+        }
+    } else if n < CHOICE_MAX {
+        Allowed {
+            single: true,
+            multi: true,
+            gpu: false,
+        }
+    } else {
+        Allowed {
+            single: true,
+            multi: true,
+            gpu: true,
+        }
+    }
+}
+
+/// Resolve `Auto` to a concrete regime for a problem of `n` samples:
+/// the fastest regime the policy permits (single below 10⁴; multi below
+/// 10⁵; GPU above — the paper's large-data headline case).
+pub fn resolve(regime: Regime, n: usize) -> Regime {
+    match regime {
+        Regime::Auto => {
+            let a = allowed_for(n);
+            if a.gpu {
+                Regime::Gpu
+            } else if a.multi {
+                Regime::Multi
+            } else {
+                Regime::Single
+            }
+        }
+        explicit => explicit,
+    }
+}
+
+/// Advisory string when an explicit regime contradicts the policy
+/// (`None` = no objection). The run still proceeds — the user "should
+/// have a choice" — but the coordinator logs the paper's guidance.
+pub fn advice(regime: Regime, n: usize) -> Option<String> {
+    let a = allowed_for(n);
+    match regime {
+        Regime::Gpu if !a.gpu => Some(format!(
+            "n={n} is below the GPU threshold ({CHOICE_MAX}): offload overhead \
+             is unlikely to be amortized (paper §5, intermediate conclusion)"
+        )),
+        Regime::Multi if !a.multi => Some(format!(
+            "n={n} is below the multi-thread threshold ({SINGLE_THREAD_MAX}): \
+             thread overhead may dominate (paper §4)"
+        )),
+        Regime::Single if n >= CHOICE_MAX => Some(format!(
+            "n={n} is large; single-threaded will be ~4-6x slower than multi \
+             (paper §4 permits all regimes here)"
+        )),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thresholds_match_paper() {
+        assert_eq!(
+            allowed_for(9_999),
+            Allowed { single: true, multi: false, gpu: false }
+        );
+        assert_eq!(
+            allowed_for(10_000),
+            Allowed { single: true, multi: true, gpu: false }
+        );
+        assert_eq!(
+            allowed_for(99_999),
+            Allowed { single: true, multi: true, gpu: false }
+        );
+        assert_eq!(
+            allowed_for(100_000),
+            Allowed { single: true, multi: true, gpu: true }
+        );
+    }
+
+    #[test]
+    fn auto_resolution_monotone() {
+        assert_eq!(resolve(Regime::Auto, 100), Regime::Single);
+        assert_eq!(resolve(Regime::Auto, 50_000), Regime::Multi);
+        assert_eq!(resolve(Regime::Auto, 2_000_000), Regime::Gpu);
+        // availability only widens with n
+        let mut prev = 0;
+        for n in [0usize, 9_999, 10_000, 99_999, 100_000, 2_000_000] {
+            let a = allowed_for(n);
+            let count = a.single as u32 + a.multi as u32 + a.gpu as u32;
+            assert!(count >= prev, "availability shrank at n={n}");
+            prev = count;
+        }
+    }
+
+    #[test]
+    fn explicit_regimes_pass_through() {
+        for r in [Regime::Single, Regime::Multi, Regime::Gpu] {
+            assert_eq!(resolve(r, 5), r);
+            assert_eq!(resolve(r, 5_000_000), r);
+        }
+    }
+
+    #[test]
+    fn advice_matches_policy() {
+        assert!(advice(Regime::Gpu, 500).is_some());
+        assert!(advice(Regime::Gpu, 200_000).is_none());
+        assert!(advice(Regime::Multi, 500).is_some());
+        assert!(advice(Regime::Multi, 50_000).is_none());
+        assert!(advice(Regime::Single, 200_000).is_some());
+        assert!(advice(Regime::Single, 500).is_none());
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Regime::from_str("GPU"), Some(Regime::Gpu));
+        assert_eq!(Regime::from_str("mt"), Some(Regime::Multi));
+        assert_eq!(Regime::from_str("auto"), Some(Regime::Auto));
+        assert_eq!(Regime::from_str("wat"), None);
+    }
+}

@@ -1,0 +1,235 @@
+//! Centroid initialization — paper Algorithm 2 steps 1-3 plus baselines.
+//!
+//! ## The paper's method, as implemented
+//!
+//! The paper prescribes: (1) compute the diameter D of the sample set —
+//! the farthest pair; (2) compute the center of gravity C; (3) "define K
+//! points that will be centers of gravity of clusters in the first
+//! approximation", requiring (Algorithm 1) "K objects which are far away
+//! from each other". The text does not spell out step 3 beyond that, so
+//! we implement the standard construction consistent with it —
+//! **farthest-point (maximin) traversal seeded by the diameter pair**:
+//!
+//! * centers 1 and 2 are the diameter endpoints (the two objects with the
+//!   largest mutual distance — maximally "far away from each other");
+//! * each subsequent center is the candidate row whose distance to its
+//!   nearest already-chosen center is maximal;
+//! * k = 1 degenerates to the center of gravity C (paper step 2).
+//!
+//! This interpretation is recorded in DESIGN.md §4; the `Random` and
+//! `KMeansPlusPlus` baselines allow the ablation bench (T3) to quantify
+//! what the diameter-based init buys.
+
+use crate::data::Dataset;
+use crate::exec::{DiameterResult, ExecError, Executor};
+use crate::kmeans::{DiameterMode, InitMethod, KMeansConfig};
+use crate::metric::sq_euclidean;
+use crate::prng::Pcg32;
+
+/// Everything init produced (the paper's steps 1-3 outputs).
+#[derive(Clone, Debug)]
+pub struct InitOutcome {
+    /// Row-major (k × m) initial centroid table.
+    pub centroids: Vec<f32>,
+    /// The diameter pair, when the method computed it.
+    pub diameter: Option<DiameterResult>,
+    /// Center of gravity of the whole set (paper step 2).
+    pub center_of_gravity: Vec<f32>,
+}
+
+/// Run the configured init method through the regime executor (so the
+/// diameter / center-of-gravity stages execute under the same regime
+/// being measured, exactly as in Algorithms 2-4).
+pub fn initialize(
+    ds: &Dataset,
+    cfg: &KMeansConfig,
+    exec: &dyn Executor,
+) -> Result<InitOutcome, ExecError> {
+    let center = exec.center_of_gravity(ds)?;
+    match cfg.init {
+        InitMethod::PaperDiameter => paper_init(ds, cfg, exec, center),
+        InitMethod::Random => Ok(InitOutcome {
+            centroids: random_init(ds, cfg.k, cfg.seed),
+            diameter: None,
+            center_of_gravity: center,
+        }),
+        InitMethod::KMeansPlusPlus => Ok(InitOutcome {
+            centroids: kmeanspp_init(ds, cfg.k, cfg.seed, &cfg.diameter),
+            diameter: None,
+            center_of_gravity: center,
+        }),
+    }
+}
+
+/// Paper steps 1-3 (see module docs for the interpretation).
+fn paper_init(
+    ds: &Dataset,
+    cfg: &KMeansConfig,
+    exec: &dyn Executor,
+    center: Vec<f32>,
+) -> Result<InitOutcome, ExecError> {
+    if cfg.k == 1 {
+        return Ok(InitOutcome {
+            centroids: center.clone(),
+            diameter: None,
+            center_of_gravity: center,
+        });
+    }
+    let candidates = cfg.diameter.candidates(ds.n());
+    let dia = exec.diameter(ds, &candidates)?;
+
+    let mut chosen: Vec<usize> = vec![dia.i, dia.j];
+    // maximin traversal over the candidate set
+    let mut min_d2: Vec<f32> = candidates
+        .iter()
+        .map(|&r| {
+            sq_euclidean(ds.row(r), ds.row(dia.i))
+                .min(sq_euclidean(ds.row(r), ds.row(dia.j)))
+        })
+        .collect();
+    while chosen.len() < cfg.k {
+        let (best_pos, _) = min_d2
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .expect("non-empty candidates");
+        let new_row = candidates[best_pos];
+        if min_d2[best_pos] <= 0.0 {
+            // all remaining candidates coincide with chosen centers
+            // (duplicate-heavy data): fall back to stride rows.
+            let mut extra = 0usize;
+            while chosen.len() < cfg.k {
+                let r = (extra * ds.n() / cfg.k).min(ds.n() - 1);
+                chosen.push(r);
+                extra += 1;
+            }
+            break;
+        }
+        chosen.push(new_row);
+        for (pos, &r) in candidates.iter().enumerate() {
+            min_d2[pos] = min_d2[pos].min(sq_euclidean(ds.row(r), ds.row(new_row)));
+        }
+    }
+    Ok(InitOutcome {
+        centroids: ds.gather(&chosen),
+        diameter: Some(dia),
+        center_of_gravity: center,
+    })
+}
+
+/// K distinct rows uniformly at random (paper Algorithm 1 step 1's
+/// "randomly choose K objects").
+pub fn random_init(ds: &Dataset, k: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::with_stream(seed, 0x1217);
+    let idx = rng.sample_indices(ds.n(), k);
+    ds.gather(&idx)
+}
+
+/// k-means++ over a candidate subset (D² sampling), the standard
+/// comparison baseline.
+pub fn kmeanspp_init(ds: &Dataset, k: usize, seed: u64, mode: &DiameterMode) -> Vec<f32> {
+    let mut rng = Pcg32::with_stream(seed, 0x997);
+    let candidates = mode.candidates(ds.n());
+    let first = candidates[rng.next_below(candidates.len() as u32) as usize];
+    let mut chosen = vec![first];
+    let mut min_d2: Vec<f32> = candidates
+        .iter()
+        .map(|&r| sq_euclidean(ds.row(r), ds.row(first)))
+        .collect();
+    while chosen.len() < k {
+        let pos = rng.weighted_index(&min_d2);
+        let new_row = candidates[pos];
+        chosen.push(new_row);
+        for (p, &r) in candidates.iter().enumerate() {
+            min_d2[p] = min_d2[p].min(sq_euclidean(ds.row(r), ds.row(new_row)));
+        }
+    }
+    ds.gather(&chosen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GmmSpec};
+    use crate::exec::single::SingleExecutor;
+    use crate::kmeans::KMeansConfig;
+
+    fn init_with(ds: &Dataset, cfg: &KMeansConfig) -> InitOutcome {
+        initialize(ds, cfg, &SingleExecutor::new()).unwrap()
+    }
+
+    #[test]
+    fn paper_init_starts_with_diameter_pair() {
+        let g = generate(&GmmSpec::new(200, 4, 3).seed(5));
+        let cfg = KMeansConfig::new(3);
+        let out = init_with(&g.dataset, &cfg);
+        let dia = out.diameter.expect("paper init computes the diameter");
+        assert_eq!(out.centroids.len(), 3 * 4);
+        // first two centroids are the diameter endpoints
+        assert_eq!(&out.centroids[0..4], g.dataset.row(dia.i));
+        assert_eq!(&out.centroids[4..8], g.dataset.row(dia.j));
+    }
+
+    #[test]
+    fn paper_init_centers_are_far_apart() {
+        let g = generate(&GmmSpec::new(500, 6, 5).seed(6).spread(0.2));
+        let cfg = KMeansConfig::new(5);
+        let out = init_with(&g.dataset, &cfg);
+        // pairwise distances between chosen centers are all positive and
+        // the smallest is a decent fraction of the largest (maximin
+        // guarantees spread)
+        let m = 6;
+        let mut min_pair = f32::INFINITY;
+        let mut max_pair = 0f32;
+        for a in 0..5 {
+            for b in (a + 1)..5 {
+                let d = sq_euclidean(
+                    &out.centroids[a * m..(a + 1) * m],
+                    &out.centroids[b * m..(b + 1) * m],
+                );
+                min_pair = min_pair.min(d);
+                max_pair = max_pair.max(d);
+            }
+        }
+        assert!(min_pair > 0.0);
+        assert!(min_pair >= max_pair * 0.05, "min {min_pair} max {max_pair}");
+    }
+
+    #[test]
+    fn k1_returns_center_of_gravity() {
+        let g = generate(&GmmSpec::new(50, 3, 2).seed(7));
+        let cfg = KMeansConfig::new(1);
+        let out = init_with(&g.dataset, &cfg);
+        assert_eq!(out.centroids, out.center_of_gravity);
+        assert!(out.diameter.is_none());
+    }
+
+    #[test]
+    fn duplicate_heavy_data_still_yields_k_centroids() {
+        // every row identical except two
+        let mut vals = vec![1.0f32; 20 * 2];
+        vals[0] = 0.0;
+        vals[38] = 5.0;
+        let ds = Dataset::from_vec(20, 2, vals).unwrap();
+        let cfg = KMeansConfig::new(6);
+        let out = init_with(&ds, &cfg);
+        assert_eq!(out.centroids.len(), 6 * 2);
+    }
+
+    #[test]
+    fn random_init_deterministic_and_distinct() {
+        let g = generate(&GmmSpec::new(100, 4, 3).seed(8));
+        let a = random_init(&g.dataset, 5, 1);
+        let b = random_init(&g.dataset, 5, 1);
+        assert_eq!(a, b);
+        let c = random_init(&g.dataset, 5, 2);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn kmeanspp_yields_k_centroids() {
+        let g = generate(&GmmSpec::new(300, 5, 4).seed(9));
+        let c = kmeanspp_init(&g.dataset, 4, 3, &DiameterMode::Auto);
+        assert_eq!(c.len(), 4 * 5);
+    }
+}

@@ -1,0 +1,234 @@
+//! The regime-agnostic Lloyd driver — paper Algorithm 2 steps 4-8 (and
+//! identically steps 4-9 of Algorithms 3/4; only the executor differs).
+//!
+//! Loop: assign every object to its nearest centroid and accumulate the
+//! statistics (one fused stage), form the new centers of gravity, and
+//! compare with the previous iteration's centers **in the single-threaded
+//! regime** (paper step 8 — the comparison is O(k·m) and stays on the
+//! leader). Convergence is exact congruence (`tol = 0`, the paper's test)
+//! or a squared-shift tolerance.
+
+use std::time::Instant;
+
+use crate::data::Dataset;
+use crate::exec::Executor;
+use crate::kmeans::init::initialize;
+use crate::kmeans::{FitResult, KMeansConfig, KMeansError};
+use crate::metric::{sq_euclidean, Metric};
+use crate::metrics::{RunMetrics, StageTimer};
+
+/// Stage names used in [`StageTimer`] (shared with benches/reports).
+pub mod stage {
+    pub const INIT_DIAMETER: &str = "init.diameter+choose";
+    pub const INIT_COG: &str = "init.center_of_gravity";
+    pub const ASSIGN_UPDATE: &str = "iterate.assign_update";
+    pub const FORM_CENTROIDS: &str = "iterate.form_centroids";
+    pub const CONVERGENCE: &str = "iterate.congruence_check";
+}
+
+/// Run the full pipeline on `exec`. Called through [`crate::kmeans::fit`].
+pub fn run(
+    ds: &Dataset,
+    cfg: &KMeansConfig,
+    exec: &dyn Executor,
+) -> Result<FitResult, KMeansError> {
+    let wall_start = Instant::now();
+    let mut timer = StageTimer::new();
+    let k = cfg.k;
+    let m = ds.m();
+
+    // ----- paper steps 1-3: initialization -------------------------------
+    // (center-of-gravity timing is folded into the executor call; the
+    // diameter + choose-K step dominates.)
+    let t0 = Instant::now();
+    let init = initialize(ds, cfg, exec)?;
+    timer.add(stage::INIT_DIAMETER, t0.elapsed());
+
+    let mut centroids = init.centroids.clone();
+    debug_assert_eq!(centroids.len(), k * m);
+
+    // ----- paper steps 4-8: iterate to congruence -------------------------
+    let mut labels: Vec<u32> = Vec::new();
+    let mut inertia = f64::INFINITY;
+    let mut iterations = 0usize;
+    let mut converged = false;
+
+    while iterations < cfg.max_iters {
+        let t = Instant::now();
+        let stats = exec.assign_update(ds, &centroids, k, cfg.metric)?;
+        timer.add(stage::ASSIGN_UPDATE, t.elapsed());
+
+        let t = Instant::now();
+        let new_centroids = stats.centroids(&centroids, k, m);
+        timer.add(stage::FORM_CENTROIDS, t.elapsed());
+
+        // paper step 8: compare centers of gravity of the last two
+        // iterations, single-threaded on the leader.
+        let t = Instant::now();
+        let shift = max_centroid_shift(&centroids, &new_centroids, k, m);
+        timer.add(stage::CONVERGENCE, t.elapsed());
+
+        labels = stats.labels;
+        inertia = stats.inertia;
+        centroids = new_centroids;
+        iterations += 1;
+
+        if shift <= cfg.tol {
+            converged = true;
+            break;
+        }
+    }
+
+    let metrics = RunMetrics {
+        regime: exec.name().to_string(),
+        n: ds.n(),
+        m,
+        k,
+        iterations,
+        inertia,
+        converged,
+        wall: wall_start.elapsed(),
+        stages: timer,
+    };
+
+    Ok(FitResult {
+        labels,
+        centroids,
+        inertia,
+        iterations,
+        converged,
+        diameter: init.diameter,
+        center_of_gravity: init.center_of_gravity,
+        metrics,
+    })
+}
+
+/// Max squared per-centroid movement between two tables — the congruence
+/// measure of paper step 8 (0.0 ⇔ all centers identical).
+pub fn max_centroid_shift(old: &[f32], new: &[f32], k: usize, m: usize) -> f32 {
+    let mut max_d2 = 0f32;
+    for c in 0..k {
+        let d2 = sq_euclidean(&old[c * m..(c + 1) * m], &new[c * m..(c + 1) * m]);
+        max_d2 = max_d2.max(d2);
+    }
+    max_d2
+}
+
+/// Compute the final inertia of a labeling under an arbitrary metric
+/// (used by reports when the run metric differs from Euclidean).
+pub fn inertia_of(ds: &Dataset, labels: &[u32], centroids: &[f32], m: usize, metric: Metric) -> f64 {
+    labels
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| {
+            let c = &centroids[l as usize * m..(l as usize + 1) * m];
+            metric.comparable(ds.row(i), c) as f64
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GmmSpec};
+    use crate::exec::single::SingleExecutor;
+    use crate::kmeans::{InitMethod, KMeansConfig};
+
+    fn well_separated(n: usize, k: usize) -> crate::data::synthetic::Generated {
+        generate(&GmmSpec::new(n, 4, k).seed(3).spread(0.05).center_scale(30.0))
+    }
+
+    #[test]
+    fn converges_exactly_on_separated_blobs() {
+        let g = well_separated(400, 4);
+        let cfg = KMeansConfig::new(4).seed(1);
+        let res = run(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+        assert!(res.converged, "exact congruence expected");
+        assert!(res.iterations < 50);
+        assert_eq!(res.labels.len(), 400);
+        // clustering must match ground truth up to label permutation:
+        // samples sharing a true label share a predicted label
+        for i in 1..400 {
+            for j in 0..i.min(20) {
+                let same_true = g.labels[i] == g.labels[j];
+                let same_pred = res.labels[i] == res.labels[j];
+                assert_eq!(same_true, same_pred, "rows {i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn recovers_true_centers() {
+        let g = well_separated(600, 3);
+        let cfg = KMeansConfig::new(3).seed(2);
+        let res = run(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+        // every true center has a recovered centroid nearby
+        for c in 0..3 {
+            let truth = &g.centers[c * 4..(c + 1) * 4];
+            let best = (0..3)
+                .map(|r| sq_euclidean(truth, &res.centroids[r * 4..(r + 1) * 4]))
+                .fold(f32::INFINITY, f32::min);
+            assert!(best < 0.1, "center {c} not recovered: d2={best}");
+        }
+    }
+
+    #[test]
+    fn inertia_monotone_under_more_iterations() {
+        let g = well_separated(300, 3);
+        let mut last = f64::INFINITY;
+        for iters in [1usize, 2, 4, 16] {
+            let cfg = KMeansConfig::new(3).seed(4).max_iters(iters);
+            let res = run(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+            assert!(
+                res.inertia <= last * (1.0 + 1e-9) + 1e-9,
+                "inertia must not increase: {last} -> {}",
+                res.inertia
+            );
+            last = res.inertia;
+        }
+    }
+
+    #[test]
+    fn max_iters_bound_respected() {
+        let g = generate(&GmmSpec::new(2000, 8, 6).seed(5).spread(3.0));
+        let cfg = KMeansConfig::new(6).seed(5).max_iters(2);
+        let res = run(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+        assert_eq!(res.iterations, 2);
+    }
+
+    #[test]
+    fn shift_zero_iff_identical() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        assert_eq!(max_centroid_shift(&a, &a, 2, 2), 0.0);
+        let mut b = a;
+        b[3] = 5.0;
+        assert!(max_centroid_shift(&a, &b, 2, 2) > 0.0);
+    }
+
+    #[test]
+    fn stage_timers_populated() {
+        let g = well_separated(200, 2);
+        let cfg = KMeansConfig::new(2).seed(6);
+        let res = run(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+        assert!(res.metrics.stages.count(stage::ASSIGN_UPDATE) as usize >= res.iterations);
+        assert!(res.metrics.stages.total(stage::INIT_DIAMETER) > std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn random_init_also_converges() {
+        let g = well_separated(300, 3);
+        let cfg = KMeansConfig::new(3).seed(7).init_method(InitMethod::Random);
+        let res = run(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+        assert!(res.converged);
+        assert!(res.diameter.is_none(), "random init skips the diameter stage");
+    }
+
+    #[test]
+    fn inertia_of_matches_run_inertia() {
+        let g = well_separated(150, 2);
+        let cfg = KMeansConfig::new(2).seed(8);
+        let res = run(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+        let recomputed = inertia_of(&g.dataset, &res.labels, &res.centroids, 4, Metric::Euclidean);
+        assert!((recomputed - res.inertia).abs() <= 1e-6 * res.inertia.max(1.0));
+    }
+}

@@ -1,0 +1,355 @@
+//! K-means core: configuration, initialization, the Lloyd driver, and the
+//! public [`fit`] entry point that wires a regime-specific executor to the
+//! regime-agnostic pipeline (paper Algorithm 1 / 2).
+
+pub mod init;
+pub mod lloyd;
+pub mod select_k;
+
+use std::path::PathBuf;
+
+use crate::data::Dataset;
+use crate::exec::gpu::GpuExecutor;
+use crate::exec::multi::MultiExecutor;
+use crate::exec::regime::{self, Regime};
+use crate::exec::single::SingleExecutor;
+use crate::exec::{DiameterResult, ExecError, Executor};
+use crate::metric::Metric;
+use crate::metrics::RunMetrics;
+use crate::runtime::Device;
+
+/// How the diameter stage (paper Eq. 3, O(n²)) bounds its cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiameterMode {
+    /// All pairs — the paper's literal step 1.
+    Exact,
+    /// Deterministic stride sample of at most this many rows; the
+    /// farthest pair of the sample approximates the diameter.
+    Sampled(usize),
+    /// Exact below [`DiameterMode::AUTO_EXACT_MAX`] rows, sampled above.
+    Auto,
+}
+
+impl DiameterMode {
+    /// Auto mode switches from exact to sampled above this n.
+    pub const AUTO_EXACT_MAX: usize = 16_384;
+    /// Sample cap used by Auto.
+    pub const AUTO_SAMPLE: usize = 4_096;
+
+    /// The candidate row set for a dataset of `n` rows.
+    pub fn candidates(&self, n: usize) -> Vec<usize> {
+        let cap = match self {
+            DiameterMode::Exact => n,
+            DiameterMode::Sampled(cap) => (*cap).max(2),
+            DiameterMode::Auto => {
+                if n <= Self::AUTO_EXACT_MAX {
+                    n
+                } else {
+                    Self::AUTO_SAMPLE
+                }
+            }
+        };
+        if cap >= n {
+            (0..n).collect()
+        } else {
+            // even deterministic stride over the dataset
+            (0..cap).map(|i| i * n / cap).collect()
+        }
+    }
+}
+
+/// Initialization method for the first centroid table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitMethod {
+    /// The paper's Algorithm 2 steps 1-3: diameter pair + farthest-point
+    /// traversal (see `init::paper_init` for the documented
+    /// interpretation).
+    PaperDiameter,
+    /// K distinct rows uniformly at random (paper Algorithm 1 step 1).
+    Random,
+    /// k-means++ (D² weighting) — the standard baseline.
+    KMeansPlusPlus,
+}
+
+impl InitMethod {
+    pub fn from_str(s: &str) -> Option<InitMethod> {
+        match s.to_ascii_lowercase().as_str() {
+            "paper" | "diameter" => Some(InitMethod::PaperDiameter),
+            "random" => Some(InitMethod::Random),
+            "kmeans++" | "kmeanspp" | "plusplus" => Some(InitMethod::KMeansPlusPlus),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InitMethod::PaperDiameter => "paper",
+            InitMethod::Random => "random",
+            InitMethod::KMeansPlusPlus => "kmeans++",
+        }
+    }
+}
+
+/// Configuration of one clustering run (builder-style).
+#[derive(Clone, Debug)]
+pub struct KMeansConfig {
+    pub k: usize,
+    pub max_iters: usize,
+    /// Squared centroid-shift tolerance; `0.0` = the paper's exact
+    /// congruence test (step 8).
+    pub tol: f32,
+    pub metric: Metric,
+    pub init: InitMethod,
+    pub seed: u64,
+    /// Worker threads for the multi / gpu regimes.
+    pub threads: usize,
+    pub regime: Regime,
+    pub diameter: DiameterMode,
+    /// AOT artifact directory for the gpu regime (default: `artifacts/`
+    /// next to the working directory, or `PARCLUST_ARTIFACTS`).
+    pub artifact_dir: Option<PathBuf>,
+}
+
+impl KMeansConfig {
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            max_iters: 300,
+            tol: 0.0,
+            metric: Metric::Euclidean,
+            init: InitMethod::PaperDiameter,
+            seed: 0,
+            threads: std::thread::available_parallelism()
+                .map(|v| v.get())
+                .unwrap_or(1),
+            regime: Regime::Auto,
+            diameter: DiameterMode::Auto,
+            artifact_dir: None,
+        }
+    }
+
+    pub fn regime(mut self, r: Regime) -> Self {
+        self.regime = r;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn threads(mut self, t: usize) -> Self {
+        self.threads = t.max(1);
+        self
+    }
+
+    pub fn max_iters(mut self, it: usize) -> Self {
+        self.max_iters = it;
+        self
+    }
+
+    pub fn tol(mut self, tol: f32) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    pub fn metric(mut self, m: Metric) -> Self {
+        self.metric = m;
+        self
+    }
+
+    pub fn init_method(mut self, i: InitMethod) -> Self {
+        self.init = i;
+        self
+    }
+
+    pub fn diameter_mode(mut self, d: DiameterMode) -> Self {
+        self.diameter = d;
+        self
+    }
+
+    pub fn artifact_dir(mut self, p: PathBuf) -> Self {
+        self.artifact_dir = Some(p);
+        self
+    }
+
+    /// Validate against dataset shape; returns the resolved concrete
+    /// regime.
+    pub fn validate(&self, ds: &Dataset) -> Result<Regime, KMeansError> {
+        if self.k == 0 {
+            return Err(KMeansError::Config("k must be >= 1".into()));
+        }
+        if ds.n() < self.k {
+            return Err(KMeansError::Config(format!(
+                "k={} exceeds n={} samples",
+                self.k,
+                ds.n()
+            )));
+        }
+        if self.max_iters == 0 {
+            return Err(KMeansError::Config("max_iters must be >= 1".into()));
+        }
+        let resolved = regime::resolve(self.regime, ds.n());
+        if resolved == Regime::Gpu && self.metric != Metric::Euclidean {
+            return Err(KMeansError::Config(format!(
+                "gpu regime kernels are compiled for the euclidean metric \
+                 (paper Eq. 2); got {}",
+                self.metric.name()
+            )));
+        }
+        Ok(resolved)
+    }
+
+    /// Resolve the artifact directory for the gpu regime.
+    pub fn resolve_artifact_dir(&self) -> PathBuf {
+        if let Some(d) = &self.artifact_dir {
+            return d.clone();
+        }
+        if let Ok(d) = std::env::var("PARCLUST_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        PathBuf::from("artifacts")
+    }
+}
+
+/// Errors from [`fit`].
+#[derive(Debug)]
+pub enum KMeansError {
+    Config(String),
+    Exec(ExecError),
+}
+
+impl std::fmt::Display for KMeansError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KMeansError::Config(s) => write!(f, "config error: {s}"),
+            KMeansError::Exec(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for KMeansError {}
+
+impl From<ExecError> for KMeansError {
+    fn from(e: ExecError) -> Self {
+        KMeansError::Exec(e)
+    }
+}
+
+/// Result of a clustering run.
+#[derive(Debug, Clone)]
+pub struct FitResult {
+    /// Per-row cluster assignment.
+    pub labels: Vec<u32>,
+    /// Row-major (k × m) final centroid table.
+    pub centroids: Vec<f32>,
+    /// Final objective (sum of min comparable distances).
+    pub inertia: f64,
+    pub iterations: usize,
+    /// True if the congruence test passed within `max_iters`.
+    pub converged: bool,
+    /// Diameter found during init (paper step 1), if the init used it.
+    pub diameter: Option<DiameterResult>,
+    /// Center of gravity of the whole set (paper step 2).
+    pub center_of_gravity: Vec<f32>,
+    /// Stage timings and metadata.
+    pub metrics: RunMetrics,
+}
+
+/// Cluster `ds` per `cfg`: builds the regime executor and runs the
+/// pipeline. This is the library's main entry point.
+pub fn fit(ds: &Dataset, cfg: &KMeansConfig) -> Result<FitResult, KMeansError> {
+    let resolved = cfg.validate(ds)?;
+    if let Some(msg) = regime::advice(cfg.regime, ds.n()) {
+        crate::log_warn!("{msg}");
+    }
+    match resolved {
+        Regime::Single => lloyd::run(ds, cfg, &SingleExecutor::new()),
+        Regime::Multi => lloyd::run(ds, cfg, &MultiExecutor::new(cfg.threads)),
+        Regime::Gpu => {
+            let device = Device::open(&cfg.resolve_artifact_dir())
+                .map_err(|e| KMeansError::Exec(ExecError(e)))?;
+            let exec = GpuExecutor::new(device, cfg.threads);
+            exec.warmup(ds.n(), ds.m(), cfg.k)?;
+            // Pin the shards on the device: the iterated assignment stage
+            // then ships only the (k × m) centroid table per chunk.
+            exec.preload(ds, cfg.k)?;
+            let out = lloyd::run(ds, cfg, &exec);
+            exec.clear_resident();
+            out
+        }
+        Regime::Auto => unreachable!("resolve() returns a concrete regime"),
+    }
+}
+
+/// [`fit`] with a caller-provided executor (used by benches to reuse one
+/// device across runs).
+pub fn fit_with(
+    ds: &Dataset,
+    cfg: &KMeansConfig,
+    exec: &dyn Executor,
+) -> Result<FitResult, KMeansError> {
+    cfg.validate(ds)?;
+    lloyd::run(ds, cfg, exec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GmmSpec};
+
+    #[test]
+    fn config_builder_defaults() {
+        let cfg = KMeansConfig::new(5);
+        assert_eq!(cfg.k, 5);
+        assert_eq!(cfg.tol, 0.0, "paper's exact congruence by default");
+        assert_eq!(cfg.init, InitMethod::PaperDiameter);
+        assert_eq!(cfg.regime, Regime::Auto);
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        let g = generate(&GmmSpec::new(10, 2, 2).seed(0));
+        assert!(KMeansConfig::new(0).validate(&g.dataset).is_err());
+        assert!(KMeansConfig::new(11).validate(&g.dataset).is_err());
+        assert!(KMeansConfig::new(2)
+            .max_iters(0)
+            .validate(&g.dataset)
+            .is_err());
+        let gpu_cosine = KMeansConfig::new(2)
+            .regime(Regime::Gpu)
+            .metric(Metric::Cosine);
+        assert!(gpu_cosine.validate(&g.dataset).is_err());
+    }
+
+    #[test]
+    fn validate_resolves_auto() {
+        let g = generate(&GmmSpec::new(100, 2, 2).seed(0));
+        let r = KMeansConfig::new(2).validate(&g.dataset).unwrap();
+        assert_eq!(r, Regime::Single);
+    }
+
+    #[test]
+    fn diameter_mode_candidates() {
+        assert_eq!(DiameterMode::Exact.candidates(5), vec![0, 1, 2, 3, 4]);
+        let s = DiameterMode::Sampled(3).candidates(9);
+        assert_eq!(s, vec![0, 3, 6]);
+        assert_eq!(DiameterMode::Auto.candidates(100).len(), 100);
+        assert_eq!(
+            DiameterMode::Auto.candidates(1_000_000).len(),
+            DiameterMode::AUTO_SAMPLE
+        );
+        // strictly increasing, in range
+        let c = DiameterMode::Sampled(100).candidates(1_000_000);
+        assert!(c.windows(2).all(|w| w[0] < w[1]));
+        assert!(*c.last().unwrap() < 1_000_000);
+    }
+
+    #[test]
+    fn init_method_names() {
+        for i in [InitMethod::PaperDiameter, InitMethod::Random, InitMethod::KMeansPlusPlus] {
+            assert_eq!(InitMethod::from_str(i.name()), Some(i));
+        }
+        assert_eq!(InitMethod::from_str("diameter"), Some(InitMethod::PaperDiameter));
+    }
+}

@@ -1,0 +1,168 @@
+//! Choosing K — the step the paper leaves to the user (Algorithm 1:
+//! "Randomly choose K objects…" presumes K is known).
+//!
+//! A production package must support the workflow where K is unknown:
+//! sweep a K range, record inertia + silhouette, and pick the elbow
+//! (maximum-curvature / maximum distance-to-chord point of the inertia
+//! curve) or the silhouette peak. The sweep runs under any regime via the
+//! usual executor, so large-data selection inherits the paper's
+//! parallelism.
+
+use crate::data::Dataset;
+use crate::exec::Executor;
+use crate::kmeans::{fit_with, KMeansConfig, KMeansError};
+use crate::quality::silhouette_sampled;
+
+/// One row of the K sweep.
+#[derive(Clone, Debug)]
+pub struct KCandidate {
+    pub k: usize,
+    pub inertia: f64,
+    pub silhouette: f64,
+    pub iterations: usize,
+}
+
+/// Result of a sweep: all candidates plus the two selectors' picks.
+#[derive(Clone, Debug)]
+pub struct KSelection {
+    pub candidates: Vec<KCandidate>,
+    /// Elbow of the inertia curve (max distance to the chord).
+    pub elbow_k: usize,
+    /// K with the best sampled silhouette.
+    pub silhouette_k: usize,
+}
+
+/// Sweep `k_range` (inclusive) and pick K. `base` carries seed / regime
+/// / tolerance; `silhouette_sample` bounds the O(n²) quality metric.
+pub fn select_k(
+    ds: &Dataset,
+    k_range: std::ops::RangeInclusive<usize>,
+    base: &KMeansConfig,
+    exec: &dyn Executor,
+    silhouette_sample: usize,
+) -> Result<KSelection, KMeansError> {
+    let (lo, hi) = (*k_range.start(), *k_range.end());
+    if lo < 2 || hi < lo {
+        return Err(KMeansError::Config(format!(
+            "k range {lo}..={hi} invalid (need 2 <= lo <= hi)"
+        )));
+    }
+    let mut candidates = Vec::new();
+    for k in lo..=hi {
+        let cfg = KMeansConfig {
+            k,
+            ..base.clone()
+        };
+        let fit = fit_with(ds, &cfg, exec)?;
+        let silhouette = silhouette_sampled(
+            ds,
+            &fit.labels,
+            k,
+            silhouette_sample,
+            base.seed,
+        );
+        candidates.push(KCandidate {
+            k,
+            inertia: fit.inertia,
+            silhouette,
+            iterations: fit.iterations,
+        });
+    }
+    let elbow_k = elbow(&candidates);
+    let silhouette_k = candidates
+        .iter()
+        .max_by(|a, b| a.silhouette.partial_cmp(&b.silhouette).unwrap())
+        .map(|c| c.k)
+        .unwrap_or(lo);
+    Ok(KSelection {
+        candidates,
+        elbow_k,
+        silhouette_k,
+    })
+}
+
+/// Elbow: the point of the (k, inertia) curve with maximum perpendicular
+/// distance to the chord between its endpoints (the "kneedle" criterion,
+/// on log-inertia for scale robustness).
+fn elbow(cands: &[KCandidate]) -> usize {
+    if cands.len() < 3 {
+        return cands.first().map(|c| c.k).unwrap_or(2);
+    }
+    let xs: Vec<f64> = cands.iter().map(|c| c.k as f64).collect();
+    let ys: Vec<f64> = cands
+        .iter()
+        .map(|c| (c.inertia.max(1e-12)).ln())
+        .collect();
+    let (x0, y0) = (xs[0], ys[0]);
+    let (x1, y1) = (*xs.last().unwrap(), *ys.last().unwrap());
+    let dx = x1 - x0;
+    let dy = y1 - y0;
+    let norm = (dx * dx + dy * dy).sqrt().max(1e-12);
+    let mut best = 0usize;
+    let mut best_d = f64::NEG_INFINITY;
+    for (i, (&x, &y)) in xs.iter().zip(&ys).enumerate() {
+        // signed distance; the elbow bulges BELOW the chord
+        let d = (dy * x - dx * y + x1 * y0 - y1 * x0) / norm;
+        if d > best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    cands[best].k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GmmSpec};
+    use crate::exec::single::SingleExecutor;
+    use crate::kmeans::DiameterMode;
+
+    fn base() -> KMeansConfig {
+        KMeansConfig::new(2)
+            .seed(3)
+            .max_iters(100)
+            .diameter_mode(DiameterMode::Sampled(256))
+    }
+
+    #[test]
+    fn recovers_true_k_on_separated_blobs() {
+        let true_k = 4;
+        let g = generate(
+            &GmmSpec::new(600, 5, true_k).seed(3).spread(0.15).center_scale(25.0),
+        );
+        let sel = select_k(&g.dataset, 2..=8, &base(), &SingleExecutor::new(), 300)
+            .unwrap();
+        assert_eq!(sel.candidates.len(), 7);
+        assert_eq!(sel.silhouette_k, true_k, "silhouette should peak at true k");
+        assert!(
+            (true_k as i64 - sel.elbow_k as i64).abs() <= 1,
+            "elbow {} far from true k {true_k}",
+            sel.elbow_k
+        );
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let g = generate(&GmmSpec::new(300, 4, 3).seed(4).spread(0.5));
+        let sel = select_k(&g.dataset, 2..=6, &base(), &SingleExecutor::new(), 200)
+            .unwrap();
+        for w in sel.candidates.windows(2) {
+            assert!(
+                w[1].inertia <= w[0].inertia * 1.02,
+                "inertia should not increase much with k: {} -> {}",
+                w[0].inertia,
+                w[1].inertia
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_bad_ranges() {
+        let g = generate(&GmmSpec::new(50, 3, 2).seed(5));
+        assert!(select_k(&g.dataset, 1..=4, &base(), &SingleExecutor::new(), 50).is_err());
+        #[allow(clippy::reversed_empty_ranges)]
+        let bad = 5..=3;
+        assert!(select_k(&g.dataset, bad, &base(), &SingleExecutor::new(), 50).is_err());
+    }
+}

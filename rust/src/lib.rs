@@ -1,0 +1,70 @@
+//! # parclust — parallel K-means cluster analysis for large data
+//!
+//! Production-shaped reproduction of **N. Litvinenko, "Using of GPUs for
+//! cluster analysis of large data by K-means method" (CS.DC 2014)**: a
+//! clustering package that solves K-means over up to 2·10⁶ samples with up
+//! to 25 features in three execution regimes —
+//!
+//! 1. **single-threaded** (paper Algorithm 2),
+//! 2. **multi-threaded** (Algorithm 3: N threads, each handling 1/N of the
+//!    data and returning partial results),
+//! 3. **multi-threaded with GPU offload** (Algorithm 4: each worker ships
+//!    its shard to an accelerator-compiled kernel and combines partials) —
+//!
+//! with the paper's automatic regime-selection policy (§4) and its honest
+//! finding — GPU offload can *lose* when per-stage compute is too small —
+//! reproduced by the `simulate` performance model and the F1 bench.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **Layer 3 (this crate)** — coordinator: dataset pipeline, thread
+//!   pool, sharding, Lloyd loop, regime policy, metrics, CLI.
+//! * **Layer 2 (python/compile, build-time only)** — JAX stage functions
+//!   AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels)** — Pallas kernels: fused
+//!   distance+argmin assignment, one-hot centroid update, tiled diameter.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT (`xla`
+//! crate) — python never runs on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use parclust::data::synthetic::{generate, GmmSpec};
+//! use parclust::kmeans::{fit, KMeansConfig};
+//! use parclust::exec::regime::Regime;
+//!
+//! let ds = generate(&GmmSpec::new(100_000, 25, 10).seed(7));
+//! let cfg = KMeansConfig::new(10).regime(Regime::Multi).seed(7);
+//! let result = fit(&ds.dataset, &cfg).unwrap();
+//! println!("{} iterations, inertia {}", result.iterations, result.inertia);
+//! ```
+
+pub mod benchkit;
+pub mod cliargs;
+pub mod config;
+pub mod data;
+pub mod exec;
+pub mod hier;
+pub mod json;
+pub mod kmeans;
+pub mod logging;
+pub mod metric;
+pub mod metrics;
+pub mod pool;
+pub mod prng;
+pub mod quality;
+pub mod report;
+pub mod runtime;
+pub mod simulate;
+pub mod testkit;
+
+/// Crate version (from Cargo).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// The paper's regime-policy thresholds (§4 Problem statement):
+/// below [`SINGLE_THREAD_MAX`] samples a single-threaded regime is selected
+/// automatically; below [`CHOICE_MAX`] the user may choose single or multi;
+/// above it all three regimes are available.
+pub const SINGLE_THREAD_MAX: usize = 10_000;
+pub const CHOICE_MAX: usize = 100_000;

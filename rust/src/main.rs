@@ -1,0 +1,578 @@
+//! parclust CLI — the launcher of the clustering package.
+//!
+//! Subcommands:
+//! * `run`      — cluster a CSV or synthetic dataset under a regime
+//! * `generate` — emit synthetic datasets (gmm / survey / expression)
+//! * `bench`    — quick three-regime comparison on one workload
+//! * `simulate` — predicted timings on the paper's 2014 testbed model
+//! * `info`     — artifact manifest, regime policy, version
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use parclust::benchkit::{fmt_duration, Table};
+use parclust::cliargs::{AppSpec, CommandSpec, Parsed};
+use parclust::config::{parse_diameter_mode, DataSource, RunConfig};
+use parclust::data::scale::Scaler;
+use parclust::data::synthetic::{expression, generate, survey, GmmSpec};
+use parclust::data::{csv, Dataset};
+use parclust::exec::regime::{allowed_for, Regime};
+use parclust::kmeans::{fit, InitMethod, KMeansConfig};
+use parclust::metric::Metric;
+use parclust::report;
+use parclust::simulate::{predict, Testbed, WorkloadSpec};
+use parclust::{json::Json, log_info};
+
+fn app() -> AppSpec {
+    AppSpec {
+        program: "parclust",
+        about: "parallel K-means cluster analysis for large data \
+                (single / multi / gpu regimes)",
+        commands: vec![
+            CommandSpec::new("run", "cluster a dataset")
+                .opt("config", Some('c'), None, "JSON run-config file")
+                .opt("input", Some('i'), None, "input CSV path")
+                .opt("n", None, Some("100k"), "synthetic sample count")
+                .opt("m", None, Some("25"), "synthetic feature count")
+                .opt("true-k", None, Some("10"), "synthetic mixture components")
+                .opt("k", Some('k'), Some("10"), "clusters to fit")
+                .opt("regime", Some('r'), Some("auto"),
+                     "single | multi | gpu | auto")
+                .opt("threads", Some('t'), None, "worker threads")
+                .opt("metric", None, Some("euclidean"),
+                     "euclidean | manhattan | chebyshev | cosine")
+                .opt("init", None, Some("paper"),
+                     "paper | random | kmeans++")
+                .opt("diameter", None, Some("auto"),
+                     "exact | auto | sampled:<N>")
+                .opt("max-iters", None, Some("300"), "iteration cap")
+                .opt("tol", None, Some("0"),
+                     "squared centroid-shift tolerance (0 = exact congruence)")
+                .opt("seed", None, Some("0"), "PRNG seed")
+                .opt("scale", None, Some("none"), "none | minmax | zscore")
+                .opt("labels", None, None, "write per-row labels to this path")
+                .opt("report", None, None, "write JSON run report to this path")
+                .opt("artifacts", None, None, "AOT artifact directory"),
+            CommandSpec::new("generate", "emit a synthetic dataset as CSV")
+                .opt("kind", None, Some("gmm"), "gmm | survey | expression")
+                .opt("n", None, Some("10k"), "samples")
+                .opt("m", None, Some("25"), "features")
+                .opt("k", None, Some("10"), "latent clusters")
+                .opt("seed", None, Some("0"), "PRNG seed")
+                .positional("output", "output CSV path"),
+            CommandSpec::new("bench", "quick three-regime comparison")
+                .opt("n", None, Some("200k"), "samples")
+                .opt("m", None, Some("25"), "features")
+                .opt("k", None, Some("10"), "clusters")
+                .opt("seed", None, Some("0"), "PRNG seed")
+                .opt("threads", Some('t'), None, "worker threads")
+                .opt("artifacts", None, None, "AOT artifact directory"),
+            CommandSpec::new("hcluster",
+                             "hierarchical clustering (paper §7 methods)")
+                .opt("input", Some('i'), None, "input CSV path")
+                .opt("n", None, Some("2000"), "synthetic sample count")
+                .opt("m", None, Some("10"), "synthetic feature count")
+                .opt("true-k", None, Some("5"), "synthetic mixture components")
+                .opt("k", Some('k'), Some("5"), "flat clusters to cut")
+                .opt("linkage", Some('l'), Some("average"),
+                     "single | complete | average | centroid")
+                .opt("regime", Some('r'), Some("multi"),
+                     "single | multi | gpu (distance-matrix build)")
+                .opt("threads", Some('t'), None, "worker threads")
+                .opt("seed", None, Some("0"), "PRNG seed")
+                .opt("labels", None, None, "write per-row labels to this path")
+                .opt("artifacts", None, None, "AOT artifact directory"),
+            CommandSpec::new("simulate",
+                             "predicted timings on the paper's 2014 testbed")
+                .opt("n", None, Some("2m"), "samples")
+                .opt("m", None, Some("25"), "features")
+                .opt("k", None, Some("10"), "clusters")
+                .opt("iters", None, Some("20"), "Lloyd iterations to model")
+                .opt("threads", None, Some("8"), "CPU threads")
+                .opt("testbed", None, Some("paper2014"), "paper2014 | modern"),
+            CommandSpec::new("selectk", "sweep K and pick by elbow/silhouette")
+                .opt("input", Some('i'), None, "input CSV path")
+                .opt("n", None, Some("20k"), "synthetic sample count")
+                .opt("m", None, Some("10"), "synthetic feature count")
+                .opt("true-k", None, Some("5"), "synthetic mixture components")
+                .opt("k-min", None, Some("2"), "smallest K to try")
+                .opt("k-max", None, Some("10"), "largest K to try")
+                .opt("regime", Some('r'), Some("multi"), "single | multi")
+                .opt("threads", Some('t'), None, "worker threads")
+                .opt("seed", None, Some("0"), "PRNG seed"),
+            CommandSpec::new("convert", "convert CSV <-> parclust binary (.pcb)")
+                .positional("input", "input path (.csv or .pcb)")
+                .positional("output", "output path (.csv or .pcb)"),
+            CommandSpec::new("info", "artifacts, policy thresholds, version")
+                .opt("artifacts", None, None, "AOT artifact directory"),
+        ],
+    }
+}
+
+fn main() {
+    parclust::logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match app().parse(&argv) {
+        Ok(p) => p,
+        Err((msg, is_help)) => {
+            if is_help {
+                println!("{msg}");
+                std::process::exit(0);
+            } else {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    };
+    let code = match parsed.command.as_str() {
+        "run" => cmd_run(&parsed),
+        "hcluster" => cmd_hcluster(&parsed),
+        "selectk" => cmd_selectk(&parsed),
+        "convert" => cmd_convert(&parsed),
+        "generate" => cmd_generate(&parsed),
+        "bench" => cmd_bench(&parsed),
+        "simulate" => cmd_simulate(&parsed),
+        "info" => cmd_info(&parsed),
+        _ => unreachable!(),
+    };
+    std::process::exit(match code {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    });
+}
+
+fn build_run_config(p: &Parsed) -> Result<RunConfig, String> {
+    let mut cfg = match p.get("config") {
+        Some(path) => RunConfig::from_file(&PathBuf::from(path))?,
+        None => RunConfig::default_synthetic(),
+    };
+    if let Some(input) = p.get("input") {
+        cfg.source = DataSource::Csv(PathBuf::from(input));
+    } else if p.get("config").is_none() {
+        cfg.source = DataSource::Synthetic {
+            n: p.usize_or("n", 100_000).map_err(|e| e.to_string())?,
+            m: p.usize_or("m", 25).map_err(|e| e.to_string())?,
+            k: p.usize_or("true-k", 10).map_err(|e| e.to_string())?,
+        };
+    }
+    cfg.kmeans.k = p.usize_or("k", cfg.kmeans.k).map_err(|e| e.to_string())?;
+    cfg.kmeans.max_iters = p
+        .usize_or("max-iters", cfg.kmeans.max_iters)
+        .map_err(|e| e.to_string())?;
+    cfg.kmeans.tol = p
+        .f64_or("tol", cfg.kmeans.tol as f64)
+        .map_err(|e| e.to_string())? as f32;
+    cfg.kmeans.seed = p
+        .get_u64("seed")
+        .map_err(|e| e.to_string())?
+        .unwrap_or(cfg.kmeans.seed);
+    if let Some(t) = p.get_usize("threads").map_err(|e| e.to_string())? {
+        cfg.kmeans.threads = t.max(1);
+    }
+    if let Some(r) = p.get("regime") {
+        cfg.kmeans.regime =
+            Regime::from_str(r).ok_or_else(|| format!("unknown regime '{r}'"))?;
+    }
+    if let Some(mt) = p.get("metric") {
+        cfg.kmeans.metric =
+            Metric::from_str(mt).ok_or_else(|| format!("unknown metric '{mt}'"))?;
+    }
+    if let Some(init) = p.get("init") {
+        cfg.kmeans.init = InitMethod::from_str(init)
+            .ok_or_else(|| format!("unknown init '{init}'"))?;
+    }
+    if let Some(d) = p.get("diameter") {
+        cfg.kmeans.diameter = parse_diameter_mode(d)?;
+    }
+    if let Some(s) = p.get("scale") {
+        if !["none", "minmax", "zscore"].contains(&s) {
+            return Err(format!("unknown scaling '{s}'"));
+        }
+        cfg.scaling = s.to_string();
+    }
+    if let Some(l) = p.get("labels") {
+        cfg.labels_path = Some(PathBuf::from(l));
+    }
+    if let Some(r) = p.get("report") {
+        cfg.report_path = Some(PathBuf::from(r));
+    }
+    if let Some(a) = p.get("artifacts") {
+        cfg.kmeans.artifact_dir = Some(PathBuf::from(a));
+    }
+    Ok(cfg)
+}
+
+fn load_dataset(cfg: &RunConfig) -> Result<Dataset, String> {
+    match &cfg.source {
+        DataSource::Csv(path) => {
+            csv::read_path(path).map_err(|e| format!("{}: {e}", path.display()))
+        }
+        DataSource::Synthetic { n, m, k } => {
+            log_info!("generating synthetic gmm: n={n} m={m} k={k}");
+            Ok(generate(&GmmSpec::new(*n, *m, *k).seed(cfg.kmeans.seed)).dataset)
+        }
+    }
+}
+
+fn cmd_run(p: &Parsed) -> Result<(), String> {
+    let cfg = build_run_config(p)?;
+    let mut ds = load_dataset(&cfg)?;
+    match cfg.scaling.as_str() {
+        "minmax" => Scaler::fit_min_max(&ds).transform(&mut ds),
+        "zscore" => Scaler::fit_z_score(&ds).transform(&mut ds),
+        _ => {}
+    }
+    let allowed = allowed_for(ds.n());
+    let allowed_str = if allowed.gpu {
+        "single, multi, gpu"
+    } else if allowed.multi {
+        "single, multi"
+    } else {
+        "single"
+    };
+    log_info!("n={} m={} — policy allows: {allowed_str}", ds.n(), ds.m());
+    let t0 = Instant::now();
+    let result = fit(&ds, &cfg.kmeans).map_err(|e| e.to_string())?;
+    println!("{}", result.metrics.render());
+    log_info!("total wall: {}", fmt_duration(t0.elapsed()));
+    if let Some(path) = &cfg.labels_path {
+        report::write_labels(&result.labels, path).map_err(|e| e.to_string())?;
+        log_info!("labels -> {}", path.display());
+    }
+    if let Some(path) = &cfg.report_path {
+        report::write_json(&report::run_report(&cfg, &result), path)
+            .map_err(|e| e.to_string())?;
+        log_info!("report -> {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_hcluster(p: &Parsed) -> Result<(), String> {
+    use parclust::hier::{fit as hfit, matrix::Builder, Linkage};
+    let k = p.usize_or("k", 5).map_err(|e| e.to_string())?;
+    let seed = p.get_u64("seed").map_err(|e| e.to_string())?.unwrap_or(0);
+    let linkage = {
+        let s = p.get("linkage").unwrap_or("average");
+        Linkage::from_str(s).ok_or_else(|| format!("unknown linkage '{s}'"))?
+    };
+    let threads = p
+        .get_usize("threads")
+        .map_err(|e| e.to_string())?
+        .unwrap_or(8);
+    let ds = match p.get("input") {
+        Some(path) => csv::read_path(&PathBuf::from(path))
+            .map_err(|e| format!("{path}: {e}"))?,
+        None => {
+            let n = p.usize_or("n", 2000).map_err(|e| e.to_string())?;
+            let m = p.usize_or("m", 10).map_err(|e| e.to_string())?;
+            let tk = p.usize_or("true-k", 5).map_err(|e| e.to_string())?;
+            generate(&GmmSpec::new(n, m, tk).seed(seed)).dataset
+        }
+    };
+    if ds.n() > 25_000 {
+        return Err(format!(
+            "hierarchical clustering holds the full distance matrix: n={} is \
+             too large (max ~25000). Use `run` (k-means) for large data — \
+             that is the paper's §8 point.",
+            ds.n()
+        ));
+    }
+    let builder = match p.get("regime").unwrap_or("multi") {
+        "single" => Builder::single(),
+        "multi" => Builder::multi(threads),
+        "gpu" => {
+            let dir = p
+                .get("artifacts")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| KMeansConfig::new(1).resolve_artifact_dir());
+            Builder::gpu(
+                parclust::runtime::Device::open(&dir)?,
+                threads,
+            )
+        }
+        other => return Err(format!("unknown regime '{other}'")),
+    };
+    let t0 = Instant::now();
+    let (dendro, labels) = hfit(&ds, linkage, k, &builder).map_err(|e| e.to_string())?;
+    let wall = t0.elapsed();
+    let mut sizes = std::collections::BTreeMap::new();
+    for &l in &labels {
+        *sizes.entry(l).or_insert(0usize) += 1;
+    }
+    println!(
+        "linkage={} regime={} n={} m={} k={} wall={}",
+        linkage.name(),
+        builder.name(),
+        ds.n(),
+        ds.m(),
+        k,
+        fmt_duration(wall)
+    );
+    println!(
+        "merges={} inversions={} cluster sizes={:?}",
+        dendro.merges.len(),
+        dendro.inversions(),
+        sizes.values().collect::<Vec<_>>()
+    );
+    if let Some(path) = p.get("labels") {
+        report::write_labels(&labels, &PathBuf::from(path)).map_err(|e| e.to_string())?;
+        log_info!("labels -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_generate(p: &Parsed) -> Result<(), String> {
+    let out = p
+        .positionals
+        .first()
+        .ok_or("generate needs an output path")?;
+    let n = p.usize_or("n", 10_000).map_err(|e| e.to_string())?;
+    let m = p.usize_or("m", 25).map_err(|e| e.to_string())?;
+    let k = p.usize_or("k", 10).map_err(|e| e.to_string())?;
+    let seed = p.get_u64("seed").map_err(|e| e.to_string())?.unwrap_or(0);
+    let kind = p.get("kind").unwrap_or("gmm");
+    let g = match kind {
+        "gmm" => generate(&GmmSpec::new(n, m, k).seed(seed)),
+        "survey" => survey(n, m, k, 5, seed),
+        "expression" => expression(n, m, k, seed),
+        other => return Err(format!("unknown kind '{other}'")),
+    };
+    csv::write_path(&g.dataset, &PathBuf::from(out)).map_err(|e| e.to_string())?;
+    println!("wrote {} rows × {} features ({kind}) to {out}", n, m);
+    Ok(())
+}
+
+fn cmd_bench(p: &Parsed) -> Result<(), String> {
+    let n = p.usize_or("n", 200_000).map_err(|e| e.to_string())?;
+    let m = p.usize_or("m", 25).map_err(|e| e.to_string())?;
+    let k = p.usize_or("k", 10).map_err(|e| e.to_string())?;
+    let seed = p.get_u64("seed").map_err(|e| e.to_string())?.unwrap_or(0);
+    let threads = p
+        .get_usize("threads")
+        .map_err(|e| e.to_string())?
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+        });
+    log_info!("bench workload: n={n} m={m} k={k} seed={seed}");
+    let g = generate(&GmmSpec::new(n, m, k).seed(seed).spread(0.5));
+    let mut table = Table::new(
+        &format!("three-regime comparison (n={n}, m={m}, k={k})"),
+        &["regime", "wall", "iterations", "inertia", "speedup vs single"],
+    );
+    let mut single_wall = None;
+    for regime in [Regime::Single, Regime::Multi, Regime::Gpu] {
+        let mut cfg = KMeansConfig::new(k).seed(seed).regime(regime).threads(threads);
+        if let Some(a) = p.get("artifacts") {
+            cfg = cfg.artifact_dir(PathBuf::from(a));
+        }
+        let t0 = Instant::now();
+        match fit(&g.dataset, &cfg) {
+            Ok(res) => {
+                let wall = t0.elapsed();
+                let speedup = single_wall
+                    .map(|s: std::time::Duration| {
+                        format!("{:.2}x", s.as_secs_f64() / wall.as_secs_f64())
+                    })
+                    .unwrap_or_else(|| "1.00x".into());
+                if regime == Regime::Single {
+                    single_wall = Some(wall);
+                }
+                table.row(vec![
+                    regime.name().into(),
+                    fmt_duration(wall),
+                    res.iterations.to_string(),
+                    format!("{:.4e}", res.inertia),
+                    speedup,
+                ]);
+            }
+            Err(e) => {
+                table.row(vec![
+                    regime.name().into(),
+                    format!("failed: {e}"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "note: this host has {} hardware thread(s); the paper-testbed model \
+         (`parclust simulate`) carries the regime-shape claims. See DESIGN.md §3.",
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    );
+    Ok(())
+}
+
+fn cmd_selectk(p: &Parsed) -> Result<(), String> {
+    use parclust::exec::multi::MultiExecutor;
+    use parclust::exec::single::SingleExecutor;
+    use parclust::exec::Executor;
+    use parclust::kmeans::select_k::select_k;
+
+    let seed = p.get_u64("seed").map_err(|e| e.to_string())?.unwrap_or(0);
+    let ds = match p.get("input") {
+        Some(path) => csv::read_path(&PathBuf::from(path))
+            .map_err(|e| format!("{path}: {e}"))?,
+        None => {
+            let n = p.usize_or("n", 20_000).map_err(|e| e.to_string())?;
+            let m = p.usize_or("m", 10).map_err(|e| e.to_string())?;
+            let tk = p.usize_or("true-k", 5).map_err(|e| e.to_string())?;
+            generate(&GmmSpec::new(n, m, tk).seed(seed)).dataset
+        }
+    };
+    let k_min = p.usize_or("k-min", 2).map_err(|e| e.to_string())?;
+    let k_max = p.usize_or("k-max", 10).map_err(|e| e.to_string())?;
+    let threads = p
+        .get_usize("threads")
+        .map_err(|e| e.to_string())?
+        .unwrap_or(8);
+    let base = KMeansConfig::new(k_min).seed(seed).threads(threads);
+    let single_exec = SingleExecutor::new();
+    let multi_exec = MultiExecutor::new(threads);
+    let exec: &dyn Executor = match p.get("regime").unwrap_or("multi") {
+        "single" => &single_exec,
+        "multi" => &multi_exec,
+        other => return Err(format!("selectk supports single|multi, got '{other}'")),
+    };
+    let sel = select_k(&ds, k_min..=k_max, &base, exec, 2_000)
+        .map_err(|e| e.to_string())?;
+    let mut table = Table::new(
+        &format!("K sweep on n={}, m={}", ds.n(), ds.m()),
+        &["K", "inertia", "silhouette", "iterations"],
+    );
+    for c in &sel.candidates {
+        table.row(vec![
+            c.k.to_string(),
+            format!("{:.4e}", c.inertia),
+            format!("{:.3}", c.silhouette),
+            c.iterations.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "elbow pick: K = {}; silhouette pick: K = {}",
+        sel.elbow_k, sel.silhouette_k
+    );
+    Ok(())
+}
+
+fn cmd_convert(p: &Parsed) -> Result<(), String> {
+    use parclust::data::binfmt;
+    let input = p.positionals.first().ok_or("convert needs <input>")?;
+    let output = p.positionals.get(1).ok_or("convert needs <output>")?;
+    let in_path = PathBuf::from(input);
+    let out_path = PathBuf::from(output);
+    let ds = if input.ends_with(".pcb") {
+        binfmt::read_path(&in_path).map_err(|e| format!("{input}: {e}"))?
+    } else {
+        csv::read_path(&in_path).map_err(|e| format!("{input}: {e}"))?
+    };
+    if output.ends_with(".pcb") {
+        binfmt::write_path(&ds, &out_path).map_err(|e| format!("{output}: {e}"))?;
+    } else {
+        csv::write_path(&ds, &out_path).map_err(|e| format!("{output}: {e}"))?;
+    }
+    println!(
+        "converted {} rows × {} features: {input} -> {output}",
+        ds.n(),
+        ds.m()
+    );
+    Ok(())
+}
+
+fn cmd_simulate(p: &Parsed) -> Result<(), String> {
+    let spec = WorkloadSpec {
+        n: p.usize_or("n", 2_000_000).map_err(|e| e.to_string())?,
+        m: p.usize_or("m", 25).map_err(|e| e.to_string())?,
+        k: p.usize_or("k", 10).map_err(|e| e.to_string())?,
+        iterations: p.usize_or("iters", 20).map_err(|e| e.to_string())?,
+        diameter_candidates: 4_096,
+        threads: p.usize_or("threads", 8).map_err(|e| e.to_string())?,
+    };
+    let bed = match p.get("testbed").unwrap_or("paper2014") {
+        "paper2014" => Testbed::paper2014(),
+        "modern" => Testbed::modern(),
+        other => return Err(format!("unknown testbed '{other}'")),
+    };
+    let mut table = Table::new(
+        &format!(
+            "predicted on {} — n={}, m={}, k={}, {} iterations",
+            bed.name, spec.n, spec.m, spec.k, spec.iterations
+        ),
+        &["regime", "total", "init.diameter", "init.cog", "iterate", "gain vs single"],
+    );
+    let single = predict(&spec, &bed, Regime::Single).total;
+    for regime in [Regime::Single, Regime::Multi, Regime::Gpu] {
+        let pr = predict(&spec, &bed, regime);
+        let stage = |name: &str| {
+            pr.stages
+                .iter()
+                .find(|s| s.name.starts_with(name))
+                .map(|s| format!("{:.3} s", s.seconds))
+                .unwrap_or_else(|| "-".into())
+        };
+        table.row(vec![
+            regime.name().into(),
+            format!("{:.3} s", pr.total),
+            stage("init.diameter"),
+            stage("init.cog"),
+            stage("iterate"),
+            format!("{:.2}x", single / pr.total),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_info(p: &Parsed) -> Result<(), String> {
+    println!("parclust {}", parclust::VERSION);
+    println!(
+        "regime policy (paper §4): single < {} ≤ single/multi < {} ≤ all three",
+        parclust::SINGLE_THREAD_MAX,
+        parclust::CHOICE_MAX
+    );
+    let dir = p
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| KMeansConfig::new(1).resolve_artifact_dir());
+    match parclust::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!(
+                "artifacts: {} compiled modules in {} (manifest v{})",
+                m.artifacts.len(),
+                dir.display(),
+                m.version
+            );
+            let mut t = Table::new("", &["name", "kind", "n", "m", "k/bn"]);
+            for a in &m.artifacts {
+                t.row(vec![
+                    a.name.clone(),
+                    format!("{:?}", a.kind),
+                    a.n.to_string(),
+                    a.m.to_string(),
+                    if a.bn > 0 { a.bn.to_string() } else { a.k.to_string() },
+                ]);
+            }
+            println!("{}", t.render());
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    let j = Json::obj(vec![
+        ("version", Json::str(parclust::VERSION)),
+        (
+            "host_threads",
+            Json::num(
+                std::thread::available_parallelism()
+                    .map(|v| v.get())
+                    .unwrap_or(1) as f64,
+            ),
+        ),
+    ]);
+    println!("{}", j.to_pretty());
+    Ok(())
+}

@@ -1,0 +1,190 @@
+//! Stage timing and run metrics (substrate).
+//!
+//! The coordinator reports per-stage wall time (diameter, init, assign,
+//! update, converge-check) and per-regime totals — the numbers the
+//! paper's evaluation compares across its three regimes. `StageTimer`
+//! accumulates named durations; `RunMetrics` is the structured result the
+//! CLI and benches print and `report` serializes.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::json::Json;
+
+/// Accumulates named durations and counters for one clustering run.
+#[derive(Default, Debug, Clone)]
+pub struct StageTimer {
+    totals: BTreeMap<String, Duration>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl StageTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`, accumulating across calls.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(name, t.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, name: &str, d: Duration) {
+        *self.totals.entry(name.to_string()).or_default() += d;
+        *self.counts.entry(name.to_string()).or_default() += 1;
+    }
+
+    pub fn incr(&mut self, name: &str, by: u64) {
+        *self.counts.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn total(&self, name: &str) -> Duration {
+        self.totals.get(name).copied().unwrap_or_default()
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.counts.get(name).copied().unwrap_or(0)
+    }
+
+    /// Sum of all stage durations.
+    pub fn grand_total(&self) -> Duration {
+        self.totals.values().sum()
+    }
+
+    /// Merge another timer into this one (used to fold per-thread timers).
+    pub fn merge(&mut self, other: &StageTimer) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k.clone()).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k.clone()).or_default() += *v;
+        }
+    }
+
+    pub fn stages(&self) -> impl Iterator<Item = (&str, Duration)> {
+        self.totals.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.totals
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(v.as_secs_f64())))
+                .collect(),
+        )
+    }
+}
+
+/// Structured result of one clustering run: quality + timing + metadata.
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub regime: String,
+    pub n: usize,
+    pub m: usize,
+    pub k: usize,
+    pub iterations: usize,
+    pub inertia: f64,
+    pub converged: bool,
+    pub wall: Duration,
+    pub stages: StageTimer,
+}
+
+impl RunMetrics {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("regime", Json::str(self.regime.clone())),
+            ("n", Json::num(self.n as f64)),
+            ("m", Json::num(self.m as f64)),
+            ("k", Json::num(self.k as f64)),
+            ("iterations", Json::num(self.iterations as f64)),
+            ("inertia", Json::num(self.inertia)),
+            ("converged", Json::Bool(self.converged)),
+            ("wall_s", Json::num(self.wall.as_secs_f64())),
+            ("stages", self.stages.to_json()),
+        ])
+    }
+
+    /// Human-readable one-run summary block.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "regime={} n={} m={} k={} iterations={} converged={} inertia={:.4e} wall={:?}\n",
+            self.regime, self.n, self.m, self.k, self.iterations,
+            self.converged, self.inertia, self.wall
+        );
+        for (name, d) in self.stages.stages() {
+            s.push_str(&format!(
+                "  {:<22} {:>12?}  ({} calls)\n",
+                name,
+                d,
+                self.stages.count(name)
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_accumulates() {
+        let mut t = StageTimer::new();
+        t.add("assign", Duration::from_millis(10));
+        t.add("assign", Duration::from_millis(5));
+        t.add("update", Duration::from_millis(1));
+        assert_eq!(t.total("assign"), Duration::from_millis(15));
+        assert_eq!(t.count("assign"), 2);
+        assert_eq!(t.grand_total(), Duration::from_millis(16));
+        assert_eq!(t.total("missing"), Duration::ZERO);
+    }
+
+    #[test]
+    fn timer_time_closure() {
+        let mut t = StageTimer::new();
+        let out = t.time("work", || {
+            std::thread::sleep(Duration::from_millis(2));
+            42
+        });
+        assert_eq!(out, 42);
+        assert!(t.total("work") >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn timer_merge() {
+        let mut a = StageTimer::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = StageTimer::new();
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.total("x"), Duration::from_millis(3));
+        assert_eq!(a.total("y"), Duration::from_millis(3));
+        assert_eq!(a.count("x"), 2);
+    }
+
+    #[test]
+    fn run_metrics_json_roundtrip() {
+        let mut stages = StageTimer::new();
+        stages.add("assign", Duration::from_millis(7));
+        let m = RunMetrics {
+            regime: "multi".into(),
+            n: 1000,
+            m: 25,
+            k: 10,
+            iterations: 13,
+            inertia: 123.5,
+            converged: true,
+            wall: Duration::from_millis(99),
+            stages,
+        };
+        let j = m.to_json();
+        let parsed = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(parsed.req_usize("n").unwrap(), 1000);
+        assert_eq!(parsed.req_str("regime").unwrap(), "multi");
+        assert_eq!(parsed.get("converged").unwrap().as_bool(), Some(true));
+        assert!(parsed.get("stages").unwrap().get("assign").is_some());
+    }
+}

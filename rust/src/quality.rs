@@ -1,0 +1,235 @@
+//! Cluster-quality metrics.
+//!
+//! The paper evaluates by runtime only; a production package must also
+//! report *quality*. This module provides the standard internal metrics
+//! (silhouette — sampled for large n — and Davies–Bouldin) and external
+//! metrics against ground truth (adjusted Rand index, purity), used by
+//! the examples and the T3 init-ablation bench.
+
+use crate::data::Dataset;
+use crate::metric::sq_euclidean;
+use crate::prng::Pcg32;
+
+/// Mean silhouette coefficient over a deterministic sample of at most
+/// `sample` points (silhouette is O(n²); sampling is standard practice).
+/// Returns a value in [-1, 1]; higher is better. `k` must be >= 2.
+pub fn silhouette_sampled(
+    ds: &Dataset,
+    labels: &[u32],
+    k: usize,
+    sample: usize,
+    seed: u64,
+) -> f64 {
+    assert!(k >= 2, "silhouette needs k >= 2");
+    assert_eq!(labels.len(), ds.n());
+    let mut rng = Pcg32::with_stream(seed, 0x51);
+    let n = ds.n();
+    let idx: Vec<usize> = if n <= sample {
+        (0..n).collect()
+    } else {
+        rng.sample_indices(n, sample)
+    };
+    // cluster membership lists restricted to the sample
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for &i in &idx {
+        members[labels[i] as usize].push(i);
+    }
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for &i in &idx {
+        let own = labels[i] as usize;
+        if members[own].len() < 2 {
+            continue; // silhouette undefined for singleton clusters
+        }
+        let a = mean_dist(ds, i, &members[own], true);
+        let mut b = f64::INFINITY;
+        for (c, m) in members.iter().enumerate() {
+            if c != own && !m.is_empty() {
+                b = b.min(mean_dist(ds, i, m, false));
+            }
+        }
+        if b.is_finite() {
+            let s = (b - a) / a.max(b);
+            total += s;
+            count += 1;
+        }
+    }
+    if count == 0 {
+        0.0
+    } else {
+        total / count as f64
+    }
+}
+
+fn mean_dist(ds: &Dataset, i: usize, members: &[usize], exclude_self: bool) -> f64 {
+    let mut sum = 0.0f64;
+    let mut cnt = 0usize;
+    for &j in members {
+        if exclude_self && j == i {
+            continue;
+        }
+        sum += (sq_euclidean(ds.row(i), ds.row(j)) as f64).sqrt();
+        cnt += 1;
+    }
+    if cnt == 0 {
+        0.0
+    } else {
+        sum / cnt as f64
+    }
+}
+
+/// Davies–Bouldin index (lower is better). Clusters with no members are
+/// skipped.
+pub fn davies_bouldin(ds: &Dataset, labels: &[u32], centroids: &[f32], k: usize) -> f64 {
+    let m = ds.m();
+    let mut scatter = vec![0.0f64; k];
+    let mut counts = vec![0usize; k];
+    for (i, &l) in labels.iter().enumerate() {
+        scatter[l as usize] +=
+            (sq_euclidean(ds.row(i), &centroids[l as usize * m..(l as usize + 1) * m])
+                as f64)
+                .sqrt();
+        counts[l as usize] += 1;
+    }
+    for c in 0..k {
+        if counts[c] > 0 {
+            scatter[c] /= counts[c] as f64;
+        }
+    }
+    let live: Vec<usize> = (0..k).filter(|&c| counts[c] > 0).collect();
+    if live.len() < 2 {
+        return 0.0;
+    }
+    let mut total = 0.0f64;
+    for &a in &live {
+        let mut worst = 0.0f64;
+        for &b in &live {
+            if a == b {
+                continue;
+            }
+            let d = (sq_euclidean(&centroids[a * m..(a + 1) * m], &centroids[b * m..(b + 1) * m])
+                as f64)
+                .sqrt();
+            if d > 0.0 {
+                worst = worst.max((scatter[a] + scatter[b]) / d);
+            }
+        }
+        total += worst;
+    }
+    total / live.len() as f64
+}
+
+/// Adjusted Rand index between two labelings (1 = identical partitions,
+/// ~0 = random agreement). Exact pair-counting via the contingency table.
+pub fn adjusted_rand_index(a: &[u32], b: &[u32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let ka = a.iter().copied().max().unwrap_or(0) as usize + 1;
+    let kb = b.iter().copied().max().unwrap_or(0) as usize + 1;
+    let mut table = vec![0u64; ka * kb];
+    let mut row = vec![0u64; ka];
+    let mut col = vec![0u64; kb];
+    for i in 0..n {
+        table[a[i] as usize * kb + b[i] as usize] += 1;
+        row[a[i] as usize] += 1;
+        col[b[i] as usize] += 1;
+    }
+    let choose2 = |x: u64| -> f64 { (x as f64) * (x as f64 - 1.0) / 2.0 };
+    let sum_table: f64 = table.iter().map(|&x| choose2(x)).sum();
+    let sum_row: f64 = row.iter().map(|&x| choose2(x)).sum();
+    let sum_col: f64 = col.iter().map(|&x| choose2(x)).sum();
+    let total = choose2(n as u64);
+    let expected = sum_row * sum_col / total;
+    let max_index = 0.5 * (sum_row + sum_col);
+    if (max_index - expected).abs() < 1e-12 {
+        return 1.0;
+    }
+    (sum_table - expected) / (max_index - expected)
+}
+
+/// Purity: fraction of samples whose cluster's majority true label
+/// matches their own (upper-bounded by 1; trivially 1 when k = n).
+pub fn purity(pred: &[u32], truth: &[u32]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 1.0;
+    }
+    let kp = pred.iter().copied().max().unwrap_or(0) as usize + 1;
+    let kt = truth.iter().copied().max().unwrap_or(0) as usize + 1;
+    let mut table = vec![0u64; kp * kt];
+    for i in 0..pred.len() {
+        table[pred[i] as usize * kt + truth[i] as usize] += 1;
+    }
+    let correct: u64 = (0..kp)
+        .map(|c| (0..kt).map(|t| table[c * kt + t]).max().unwrap_or(0))
+        .sum();
+    correct as f64 / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GmmSpec};
+    use crate::exec::single::SingleExecutor;
+    use crate::kmeans::{fit_with, KMeansConfig};
+
+    fn fitted(n: usize, k: usize, spread: f32) -> (crate::data::synthetic::Generated, crate::kmeans::FitResult) {
+        let g = generate(&GmmSpec::new(n, 4, k).seed(1).spread(spread).center_scale(20.0));
+        let cfg = KMeansConfig::new(k).seed(1);
+        let r = fit_with(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+        (g, r)
+    }
+
+    #[test]
+    fn silhouette_high_for_separated_low_for_merged() {
+        let (g, r) = fitted(300, 3, 0.1);
+        let good = silhouette_sampled(&g.dataset, &r.labels, 3, 200, 1);
+        assert!(good > 0.7, "separated blobs: {good}");
+        // random labels destroy the silhouette
+        let mut rng = Pcg32::new(2);
+        let random: Vec<u32> = (0..300).map(|_| rng.next_below(3)).collect();
+        let bad = silhouette_sampled(&g.dataset, &random, 3, 200, 1);
+        assert!(bad < good - 0.3, "random labels must score worse: {bad}");
+    }
+
+    #[test]
+    fn davies_bouldin_lower_for_separated() {
+        let (g, r) = fitted(300, 3, 0.1);
+        let good = davies_bouldin(&g.dataset, &r.labels, &r.centroids, 3);
+        let (g2, r2) = fitted(300, 3, 5.0);
+        let bad = davies_bouldin(&g2.dataset, &r2.labels, &r2.centroids, 3);
+        assert!(good < bad, "separated {good} !< overlapping {bad}");
+        assert!(good > 0.0);
+    }
+
+    #[test]
+    fn ari_bounds_and_permutation_invariance() {
+        let a = vec![0u32, 0, 1, 1, 2, 2];
+        assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+        // permuted label names: still a perfect match
+        let b = vec![2u32, 2, 0, 0, 1, 1];
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+        // one big cluster vs 3 clusters: low score
+        let c = vec![0u32; 6];
+        assert!(adjusted_rand_index(&a, &c) < 0.1);
+    }
+
+    #[test]
+    fn ari_recovers_ground_truth_on_blobs() {
+        let (g, r) = fitted(400, 4, 0.1);
+        let ari = adjusted_rand_index(&r.labels, &g.labels);
+        assert!(ari > 0.99, "ari {ari}");
+    }
+
+    #[test]
+    fn purity_properties() {
+        let truth = vec![0u32, 0, 1, 1];
+        assert_eq!(purity(&truth, &truth), 1.0);
+        assert_eq!(purity(&[0, 0, 0, 0], &truth), 0.5);
+        // every point its own cluster: purity 1 (known degeneracy)
+        assert_eq!(purity(&[0, 1, 2, 3], &truth), 1.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Experiment report emitter: structured JSON + markdown summaries for
+//! runs and benches; what EXPERIMENTS.md records comes from here.
+
+use std::path::Path;
+
+use crate::benchkit::Table;
+use crate::config::RunConfig;
+use crate::json::Json;
+use crate::kmeans::FitResult;
+
+/// A full run report (config echo + result + environment).
+pub fn run_report(cfg: &RunConfig, result: &FitResult) -> Json {
+    Json::obj(vec![
+        ("parclust_version", Json::str(crate::VERSION)),
+        ("config", cfg.to_json()),
+        ("result", result.metrics.to_json()),
+        (
+            "diameter",
+            match result.diameter {
+                Some(d) => Json::obj(vec![
+                    ("d", Json::num((d.d2 as f64).sqrt())),
+                    ("i", Json::num(d.i as f64)),
+                    ("j", Json::num(d.j as f64)),
+                ]),
+                None => Json::Null,
+            },
+        ),
+        (
+            "cluster_sizes",
+            Json::arr(cluster_sizes(&result.labels, result.centroids.len())
+                .into_iter()
+                .map(|c| Json::num(c as f64))),
+        ),
+    ])
+}
+
+fn cluster_sizes(labels: &[u32], kxm: usize) -> Vec<usize> {
+    let k = labels.iter().copied().max().map(|v| v as usize + 1).unwrap_or(0);
+    let _ = kxm;
+    let mut counts = vec![0usize; k];
+    for &l in labels {
+        counts[l as usize] += 1;
+    }
+    counts
+}
+
+/// Write a JSON report to disk (pretty-printed).
+pub fn write_json(j: &Json, path: &Path) -> std::io::Result<()> {
+    std::fs::write(path, j.to_pretty())
+}
+
+/// Write labels (one per line) to disk — the CLI's `--labels` output.
+pub fn write_labels(labels: &[u32], path: &Path) -> std::io::Result<()> {
+    let mut s = String::with_capacity(labels.len() * 3);
+    s.push_str("label\n");
+    for l in labels {
+        s.push_str(&format!("{l}\n"));
+    }
+    std::fs::write(path, s)
+}
+
+/// Append a rendered table to a markdown log (used by benches with
+/// `PARCLUST_BENCH_LOG` set).
+pub fn append_markdown(table: &Table, path: &Path) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    writeln!(f, "{}", table.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GmmSpec};
+    use crate::kmeans::{fit_with, KMeansConfig};
+    use crate::exec::single::SingleExecutor;
+
+    #[test]
+    fn report_is_valid_json_with_expected_fields() {
+        let g = generate(&GmmSpec::new(100, 4, 3).seed(1).spread(0.1));
+        let cfg = KMeansConfig::new(3).seed(1);
+        let res = fit_with(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+        let run_cfg = RunConfig::default_synthetic();
+        let j = run_report(&run_cfg, &res);
+        let parsed = Json::parse(&j.to_pretty()).unwrap();
+        assert!(parsed.get("result").unwrap().get("iterations").is_some());
+        assert_eq!(
+            parsed.get("parclust_version").unwrap().as_str(),
+            Some(crate::VERSION)
+        );
+        let sizes = parsed.get("cluster_sizes").unwrap().as_arr().unwrap();
+        let total: f64 = sizes.iter().map(|s| s.as_f64().unwrap()).sum();
+        assert_eq!(total as usize, 100);
+    }
+
+    #[test]
+    fn labels_file_roundtrip() {
+        let dir = std::env::temp_dir().join("parclust_test_labels");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("labels.csv");
+        write_labels(&[0, 1, 2, 1], &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "label\n0\n1\n2\n1\n");
+        let _ = std::fs::remove_file(&path);
+    }
+}

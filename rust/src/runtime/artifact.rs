@@ -1,0 +1,257 @@
+//! Artifact manifest: what the AOT compile path produced, and how the
+//! coordinator picks a compiled shape for a logical problem size.
+//!
+//! `python -m compile.aot` writes `artifacts/manifest.json` describing
+//! every emitted HLO module (kind, static shapes, input/output specs).
+//! This module parses it and implements shape selection: an artifact
+//! compiled for `(n, m, k)` serves any logical `(n' <= n, m' <= m,
+//! k' <= k)` via the padding/masking contract (see runtime::pad).
+
+use std::path::Path;
+
+use crate::json::Json;
+
+/// Stage kind of an artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Shard assignment + partial centroid stats.
+    Assign,
+    /// Whole-dataset fused Lloyd step.
+    Step,
+    /// Masked coordinate sums (center of gravity).
+    Sum,
+    /// Pairwise max-distance rectangle.
+    Diameter,
+    /// Pairwise distance-matrix block (hierarchical methods).
+    Pdist,
+}
+
+impl ArtifactKind {
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "assign" => Some(Self::Assign),
+            "step" => Some(Self::Step),
+            "sum" => Some(Self::Sum),
+            "diameter" => Some(Self::Diameter),
+            "pdist" => Some(Self::Pdist),
+            _ => None,
+        }
+    }
+}
+
+/// One artifact's metadata (mirrors the manifest entry).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: String,
+    pub kind: ArtifactKind,
+    /// Compiled sample capacity (rows) — `an` for diameter.
+    pub n: usize,
+    /// Compiled feature width.
+    pub m: usize,
+    /// Compiled centroid capacity (assign/step only).
+    pub k: usize,
+    /// Column-block capacity (diameter only).
+    pub bn: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: usize,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            format!(
+                "cannot read manifest {}: {e}. Run `make artifacts` first.",
+                path.display()
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let root = Json::parse(text).map_err(|e| format!("manifest: {e}"))?;
+        let version = root
+            .req_usize("version")
+            .map_err(|e| format!("manifest: {e}"))?;
+        let mut artifacts = Vec::new();
+        for a in root
+            .req_arr("artifacts")
+            .map_err(|e| format!("manifest: {e}"))?
+        {
+            let kind_s = a.req_str("kind").map_err(|e| format!("manifest: {e}"))?;
+            let kind = ArtifactKind::from_str(kind_s)
+                .ok_or_else(|| format!("manifest: unknown kind '{kind_s}'"))?;
+            let (n, bn) = match kind {
+                ArtifactKind::Diameter | ArtifactKind::Pdist => (
+                    a.req_usize("an").map_err(|e| format!("manifest: {e}"))?,
+                    a.req_usize("bn").map_err(|e| format!("manifest: {e}"))?,
+                ),
+                _ => (
+                    a.req_usize("n").map_err(|e| format!("manifest: {e}"))?,
+                    0,
+                ),
+            };
+            let k = match kind {
+                ArtifactKind::Assign | ArtifactKind::Step => {
+                    a.req_usize("k").map_err(|e| format!("manifest: {e}"))?
+                }
+                _ => 0,
+            };
+            artifacts.push(ArtifactMeta {
+                name: a.req_str("name").map_err(|e| format!("manifest: {e}"))?.to_string(),
+                path: a.req_str("path").map_err(|e| format!("manifest: {e}"))?.to_string(),
+                kind,
+                n,
+                m: a.req_usize("m").map_err(|e| format!("manifest: {e}"))?,
+                k,
+                bn,
+            });
+        }
+        if artifacts.is_empty() {
+            return Err("manifest has no artifacts".into());
+        }
+        Ok(Manifest { version, artifacts })
+    }
+
+    /// All artifacts of a kind.
+    pub fn of_kind(&self, kind: ArtifactKind) -> impl Iterator<Item = &ArtifactMeta> {
+        self.artifacts.iter().filter(move |a| a.kind == kind)
+    }
+
+    /// Pick the assign/step/sum artifact for a logical `(n, m, k)`:
+    /// smallest compiled `n` whose `m`/`k` capacities fit. If no capacity
+    /// holds all of `n`, returns the largest-capacity artifact (the
+    /// caller chunks the shard). `k` is ignored for `Sum`.
+    pub fn select(
+        &self,
+        kind: ArtifactKind,
+        n: usize,
+        m: usize,
+        k: usize,
+    ) -> Result<&ArtifactMeta, String> {
+        let fits_mk = |a: &&ArtifactMeta| {
+            a.m >= m
+                && match kind {
+                    ArtifactKind::Assign | ArtifactKind::Step => a.k >= k,
+                    _ => true,
+                }
+        };
+        let candidates: Vec<&ArtifactMeta> =
+            self.of_kind(kind).filter(fits_mk).collect();
+        if candidates.is_empty() {
+            return Err(format!(
+                "no {kind:?} artifact with m>={m}, k>={k}; re-run `make artifacts` \
+                 with larger variants"
+            ));
+        }
+        // smallest n that holds the whole shard…
+        if let Some(a) = candidates
+            .iter()
+            .filter(|a| a.n >= n)
+            .min_by_key(|a| (a.n, a.m, a.k))
+        {
+            return Ok(a);
+        }
+        // …otherwise the largest capacity (caller chunks)
+        Ok(candidates.into_iter().max_by_key(|a| a.n).unwrap())
+    }
+
+    /// Pick a diameter artifact for rectangle blocks of `bn` columns and
+    /// `m` features (same fit-else-largest policy).
+    pub fn select_diameter(&self, m: usize) -> Result<&ArtifactMeta, String> {
+        self.of_kind(ArtifactKind::Diameter)
+            .filter(|a| a.m >= m)
+            .max_by_key(|a| (a.n, a.bn))
+            .ok_or_else(|| {
+                format!("no diameter artifact with m>={m}; re-run `make artifacts`")
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+              "version": 2,
+              "artifacts": [
+                {"kind":"assign","name":"a1","path":"a1.hlo.txt","n":1024,"m":32,"k":16},
+                {"kind":"assign","name":"a2","path":"a2.hlo.txt","n":16384,"m":32,"k":16},
+                {"kind":"assign","name":"a3","path":"a3.hlo.txt","n":4096,"m":8,"k":8},
+                {"kind":"step","name":"s1","path":"s1.hlo.txt","n":16384,"m":32,"k":16},
+                {"kind":"sum","name":"u1","path":"u1.hlo.txt","n":65536,"m":32},
+                {"kind":"diameter","name":"d1","path":"d1.hlo.txt","an":2048,"bn":2048,"m":32}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_all_kinds() {
+        let m = manifest();
+        assert_eq!(m.version, 2);
+        assert_eq!(m.artifacts.len(), 6);
+        assert_eq!(m.of_kind(ArtifactKind::Assign).count(), 3);
+        let d = m.of_kind(ArtifactKind::Diameter).next().unwrap();
+        assert_eq!((d.n, d.bn, d.m), (2048, 2048, 32));
+    }
+
+    #[test]
+    fn select_prefers_smallest_fit() {
+        let m = manifest();
+        let a = m.select(ArtifactKind::Assign, 1000, 25, 10).unwrap();
+        assert_eq!(a.name, "a1");
+        let a = m.select(ArtifactKind::Assign, 2000, 25, 10).unwrap();
+        assert_eq!(a.name, "a2");
+    }
+
+    #[test]
+    fn select_falls_back_to_largest_for_chunking() {
+        let m = manifest();
+        let a = m.select(ArtifactKind::Assign, 1_000_000, 25, 10).unwrap();
+        assert_eq!(a.name, "a2", "largest capacity for chunked execution");
+    }
+
+    #[test]
+    fn select_respects_m_and_k_capacity() {
+        let m = manifest();
+        // m=8/k=8 fits both a3 (n=4096) and the 32/16 artifacts; the
+        // smallest n that holds the shard wins (least padding waste)
+        let a = m.select(ArtifactKind::Assign, 100, 8, 8).unwrap();
+        assert_eq!(a.name, "a1", "smallest fitting n preferred");
+        let a = m.select(ArtifactKind::Assign, 2000, 8, 8).unwrap();
+        assert_eq!(a.name, "a3", "next capacity up once n exceeds 1024");
+        assert!(m.select(ArtifactKind::Assign, 100, 33, 10).is_err());
+        assert!(m.select(ArtifactKind::Assign, 100, 10, 17).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"version":2,"artifacts":[]}"#).is_err());
+        assert!(Manifest::parse(
+            r#"{"version":2,"artifacts":[{"kind":"wat","name":"x","path":"p","n":1,"m":1}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Soft test: only runs when `make artifacts` has produced output.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.of_kind(ArtifactKind::Assign).count() >= 1);
+        }
+    }
+}

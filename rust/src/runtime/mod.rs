@@ -1,0 +1,467 @@
+//! PJRT runtime: load AOT artifacts and execute them from the hot path.
+//!
+//! The `xla` crate's PJRT handles are raw-pointer wrappers (not `Send`),
+//! so all device objects live on one dedicated **device thread** — which
+//! is also the honest model of the paper's hardware: a GTX 660 executes
+//! kernels from one CUDA stream in order, while host threads prepare and
+//! enqueue work (paper Algorithm 4: "each thread prepares the task for
+//! the GPU, sends this task for execution and receives the results").
+//!
+//! [`Device::execute`] is the request path: host tensors in, host tensors
+//! out, with transfer/exec accounting for the performance model. The
+//! executable cache compiles each artifact once per process.
+
+pub mod artifact;
+pub mod pad;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+pub use artifact::{ArtifactKind, ArtifactMeta, Manifest};
+
+/// A host-side tensor: shape + typed buffer. The only currency crossing
+/// the device-thread boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<i64>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn f32(dims: &[i64], data: Vec<f32>) -> HostTensor {
+        debug_assert_eq!(dims.iter().product::<i64>() as usize, data.len());
+        HostTensor {
+            dims: dims.to_vec(),
+            data: TensorData::F32(data),
+        }
+    }
+
+    pub fn i32(dims: &[i64], data: Vec<i32>) -> HostTensor {
+        debug_assert_eq!(dims.iter().product::<i64>() as usize, data.len());
+        HostTensor {
+            dims: dims.to_vec(),
+            data: TensorData::I32(data),
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    pub fn byte_len(&self) -> usize {
+        4 * match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Cumulative device counters (thread-safe), used by the perf model
+/// calibration and the stage reports.
+#[derive(Debug, Default)]
+pub struct DeviceStats {
+    pub h2d_bytes: AtomicU64,
+    pub d2h_bytes: AtomicU64,
+    pub executions: AtomicU64,
+    pub exec_nanos: AtomicU64,
+    pub compilations: AtomicU64,
+}
+
+impl DeviceStats {
+    pub fn snapshot(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.h2d_bytes.load(Ordering::Relaxed),
+            self.d2h_bytes.load(Ordering::Relaxed),
+            self.executions.load(Ordering::Relaxed),
+            self.exec_nanos.load(Ordering::Relaxed),
+            self.compilations.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// An input to [`Device::execute_refs`]: either sent fresh from the host
+/// or referencing a tensor previously pinned with [`Device::store`].
+#[derive(Clone, Debug)]
+pub enum InputRef {
+    Inline(HostTensor),
+    Stored(String),
+}
+
+enum Request {
+    Execute {
+        artifact: String,
+        inputs: Vec<InputRef>,
+        reply: Sender<Result<Vec<HostTensor>, String>>,
+    },
+    Store {
+        key: String,
+        tensor: HostTensor,
+        reply: Sender<Result<(), String>>,
+    },
+    ClearStore {
+        prefix: String,
+        reply: Sender<usize>,
+    },
+    Warmup {
+        artifact: String,
+        reply: Sender<Result<(), String>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the device thread. Clone-cheap (`Arc` inside); many host
+/// workers may submit concurrently — execution is serialized in request
+/// order, like kernels on a single CUDA stream.
+#[derive(Clone)]
+pub struct Device {
+    inner: Arc<DeviceInner>,
+}
+
+struct DeviceInner {
+    sender: Sender<Request>,
+    handle: Option<JoinHandle<()>>,
+    pub stats: Arc<DeviceStats>,
+    manifest: Manifest,
+}
+
+impl Drop for DeviceInner {
+    fn drop(&mut self) {
+        let _ = self.sender.send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Device {
+    /// Start the device thread over an artifact directory (reads
+    /// `manifest.json`, compiles artifacts lazily on first use).
+    pub fn open(artifact_dir: &Path) -> Result<Device, String> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let stats = Arc::new(DeviceStats::default());
+        let (tx, rx) = channel::<Request>();
+        let dir = artifact_dir.to_path_buf();
+        let thread_stats = Arc::clone(&stats);
+        let paths: HashMap<String, PathBuf> = manifest
+            .artifacts
+            .iter()
+            .map(|a| (a.name.clone(), dir.join(&a.path)))
+            .collect();
+        let handle = std::thread::Builder::new()
+            .name("parclust-device".into())
+            .spawn(move || device_loop(rx, paths, thread_stats))
+            .map_err(|e| format!("spawn device thread: {e}"))?;
+        Ok(Device {
+            inner: Arc::new(DeviceInner {
+                sender: tx,
+                handle: Some(handle),
+                stats,
+                manifest,
+            }),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.inner.manifest
+    }
+
+    pub fn stats(&self) -> &DeviceStats {
+        &self.inner.stats
+    }
+
+    /// Execute an artifact by name. Blocks until the device thread
+    /// returns the outputs.
+    pub fn execute(
+        &self,
+        artifact: &str,
+        inputs: Vec<HostTensor>,
+    ) -> Result<Vec<HostTensor>, String> {
+        self.execute_refs(artifact, inputs.into_iter().map(InputRef::Inline).collect())
+    }
+
+    /// Execute with a mix of fresh and device-resident inputs (see
+    /// [`Device::store`]). This is the paper's §7 "future work" — keeping
+    /// the shard data on the accelerator instead of re-shipping it with
+    /// every task — applied to the iterated assignment stage.
+    pub fn execute_refs(
+        &self,
+        artifact: &str,
+        inputs: Vec<InputRef>,
+    ) -> Result<Vec<HostTensor>, String> {
+        let (tx, rx) = channel();
+        self.inner
+            .sender
+            .send(Request::Execute {
+                artifact: artifact.to_string(),
+                inputs,
+                reply: tx,
+            })
+            .map_err(|_| "device thread gone".to_string())?;
+        rx.recv().map_err(|_| "device thread dropped reply".to_string())?
+    }
+
+    /// Pin a tensor on the device under `key` (overwrites). Subsequent
+    /// [`Device::execute_refs`] calls may reference it without re-upload.
+    pub fn store(&self, key: &str, tensor: HostTensor) -> Result<(), String> {
+        let (tx, rx) = channel();
+        self.inner
+            .sender
+            .send(Request::Store {
+                key: key.to_string(),
+                tensor,
+                reply: tx,
+            })
+            .map_err(|_| "device thread gone".to_string())?;
+        rx.recv().map_err(|_| "device thread dropped reply".to_string())?
+    }
+
+    /// Drop all pinned tensors whose key starts with `prefix`; returns the
+    /// number removed. An empty prefix clears everything.
+    pub fn clear_store(&self, prefix: &str) -> usize {
+        let (tx, rx) = channel();
+        if self
+            .inner
+            .sender
+            .send(Request::ClearStore {
+                prefix: prefix.to_string(),
+                reply: tx,
+            })
+            .is_err()
+        {
+            return 0;
+        }
+        rx.recv().unwrap_or(0)
+    }
+
+    /// Compile an artifact ahead of time (removes first-use latency from
+    /// measured stages).
+    pub fn warmup(&self, artifact: &str) -> Result<(), String> {
+        let (tx, rx) = channel();
+        self.inner
+            .sender
+            .send(Request::Warmup {
+                artifact: artifact.to_string(),
+                reply: tx,
+            })
+            .map_err(|_| "device thread gone".to_string())?;
+        rx.recv().map_err(|_| "device thread dropped reply".to_string())?
+    }
+}
+
+fn device_loop(
+    rx: std::sync::mpsc::Receiver<Request>,
+    paths: HashMap<String, PathBuf>,
+    stats: Arc<DeviceStats>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Every request will fail with this message.
+            let msg = format!("PJRT client init failed: {e}");
+            for req in rx {
+                match req {
+                    Request::Execute { reply, .. } => {
+                        let _ = reply.send(Err(msg.clone()));
+                    }
+                    Request::Store { reply, .. } => {
+                        let _ = reply.send(Err(msg.clone()));
+                    }
+                    Request::ClearStore { reply, .. } => {
+                        let _ = reply.send(0);
+                    }
+                    Request::Warmup { reply, .. } => {
+                        let _ = reply.send(Err(msg.clone()));
+                    }
+                    Request::Shutdown => return,
+                }
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    // Device-resident tensors (paper §7 future work: data stays on the
+    // accelerator across iterated stages).
+    let mut store: HashMap<String, xla::Literal> = HashMap::new();
+
+    let compile = |name: &str,
+                   cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+                   client: &xla::PjRtClient|
+     -> Result<(), String> {
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = paths
+            .get(name)
+            .ok_or_else(|| format!("unknown artifact '{name}'"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or("non-utf8 path")?,
+        )
+        .map_err(|e| format!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| format!("compile {name}: {e}"))?;
+        stats.compilations.fetch_add(1, Ordering::Relaxed);
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    };
+
+    let make_literal = |t: &HostTensor| -> Result<xla::Literal, String> {
+        let lit = match &t.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+        };
+        lit.reshape(&t.dims).map_err(|e| format!("reshape input: {e}"))
+    };
+
+    for req in rx {
+        match req {
+            Request::Shutdown => return,
+            Request::Warmup { artifact, reply } => {
+                let _ = reply.send(compile(&artifact, &mut cache, &client));
+            }
+            Request::Store { key, tensor, reply } => {
+                stats
+                    .h2d_bytes
+                    .fetch_add(tensor.byte_len() as u64, Ordering::Relaxed);
+                let _ = reply.send(make_literal(&tensor).map(|lit| {
+                    store.insert(key, lit);
+                }));
+            }
+            Request::ClearStore { prefix, reply } => {
+                let before = store.len();
+                store.retain(|k, _| !k.starts_with(&prefix));
+                let _ = reply.send(before - store.len());
+            }
+            Request::Execute {
+                artifact,
+                inputs,
+                reply,
+            } => {
+                let result = (|| -> Result<Vec<HostTensor>, String> {
+                    compile(&artifact, &mut cache, &client)?;
+                    let exe = cache.get(&artifact).unwrap();
+                    // Fresh inputs become literals (counted as H2D
+                    // traffic); stored inputs are referenced in place.
+                    let mut fresh: Vec<xla::Literal> = Vec::new();
+                    for r in &inputs {
+                        if let InputRef::Inline(t) = r {
+                            stats
+                                .h2d_bytes
+                                .fetch_add(t.byte_len() as u64, Ordering::Relaxed);
+                            fresh.push(make_literal(t)?);
+                        }
+                    }
+                    let mut fresh_iter = fresh.iter();
+                    let mut literals: Vec<&xla::Literal> =
+                        Vec::with_capacity(inputs.len());
+                    for r in &inputs {
+                        match r {
+                            InputRef::Inline(_) => {
+                                literals.push(fresh_iter.next().unwrap())
+                            }
+                            InputRef::Stored(key) => literals.push(
+                                store.get(key).ok_or_else(|| {
+                                    format!("no stored tensor '{key}'")
+                                })?,
+                            ),
+                        }
+                    }
+                    let t0 = Instant::now();
+                    let out = exe
+                        .execute::<&xla::Literal>(&literals)
+                        .map_err(|e| format!("execute {artifact}: {e}"))?;
+                    let root = out[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| format!("fetch result: {e}"))?;
+                    stats
+                        .exec_nanos
+                        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    stats.executions.fetch_add(1, Ordering::Relaxed);
+                    let parts = root
+                        .to_tuple()
+                        .map_err(|e| format!("untuple result: {e}"))?;
+                    let mut outs = Vec::with_capacity(parts.len());
+                    for p in parts {
+                        let shape = p
+                            .array_shape()
+                            .map_err(|e| format!("result shape: {e}"))?;
+                        let dims: Vec<i64> = shape.dims().to_vec();
+                        let t = match shape.ty() {
+                            xla::ElementType::F32 => HostTensor::f32(
+                                &dims,
+                                p.to_vec::<f32>()
+                                    .map_err(|e| format!("read f32: {e}"))?,
+                            ),
+                            xla::ElementType::S32 => HostTensor::i32(
+                                &dims,
+                                p.to_vec::<i32>()
+                                    .map_err(|e| format!("read i32: {e}"))?,
+                            ),
+                            other => {
+                                return Err(format!(
+                                    "unsupported output dtype {other:?}"
+                                ))
+                            }
+                        };
+                        stats
+                            .d2h_bytes
+                            .fetch_add(t.byte_len() as u64, Ordering::Relaxed);
+                        outs.push(t);
+                    }
+                    Ok(outs)
+                })();
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::f32(&[2, 2], vec![1., 2., 3., 4.]);
+        assert_eq!(t.as_f32(), &[1., 2., 3., 4.]);
+        assert_eq!(t.byte_len(), 16);
+        let t = HostTensor::i32(&[3], vec![1, 2, 3]);
+        assert_eq!(t.as_i32(), &[1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not f32")]
+    fn host_tensor_type_confusion_panics() {
+        HostTensor::i32(&[1], vec![1]).as_f32();
+    }
+
+    #[test]
+    fn open_missing_dir_fails() {
+        match Device::open(Path::new("/nonexistent/nope")) {
+            Ok(_) => panic!("open of missing dir must fail"),
+            Err(err) => assert!(err.contains("manifest"), "{err}"),
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Padding & masking: adapt a logical shard to a compiled artifact shape.
+//!
+//! The contract shared with the Layer-1 kernels (see
+//! `python/compile/kernels/assign.py`):
+//!
+//! * **rows** beyond the shard get mask 0 → excluded from sums, counts,
+//!   inertia and diameter argmax;
+//! * **feature columns** beyond the logical `m` are zero in points AND
+//!   centroids → distances unchanged;
+//! * **centroid rows** beyond the logical `k` are set to [`PAD_CENTROID`]
+//!   → never the argmin.
+
+/// Matches `python/compile/kernels/assign.py::PAD_CENTROID`.
+pub const PAD_CENTROID: f32 = 1.0e30;
+
+/// Pad a row-major `(rows × m_src)` block into `(cap_rows × m_dst)`,
+/// zero-filling both padded columns and padded rows.
+pub fn pad_points(
+    src: &[f32],
+    rows: usize,
+    m_src: usize,
+    cap_rows: usize,
+    m_dst: usize,
+) -> Vec<f32> {
+    assert_eq!(src.len(), rows * m_src, "source shape mismatch");
+    assert!(rows <= cap_rows && m_src <= m_dst, "shard exceeds capacity");
+    let mut out = vec![0f32; cap_rows * m_dst];
+    if m_src == m_dst {
+        out[..rows * m_src].copy_from_slice(src);
+    } else {
+        for r in 0..rows {
+            out[r * m_dst..r * m_dst + m_src]
+                .copy_from_slice(&src[r * m_src..(r + 1) * m_src]);
+        }
+    }
+    out
+}
+
+/// Validity mask: `rows` ones then zeros up to `cap_rows`.
+pub fn make_mask(rows: usize, cap_rows: usize) -> Vec<f32> {
+    assert!(rows <= cap_rows);
+    let mut mask = vec![0f32; cap_rows];
+    mask[..rows].fill(1.0);
+    mask
+}
+
+/// Pad a `(k_src × m_src)` centroid table into `(k_dst × m_dst)`:
+/// real rows zero-extended in features, padding rows set to PAD_CENTROID.
+pub fn pad_centroids(
+    src: &[f32],
+    k_src: usize,
+    m_src: usize,
+    k_dst: usize,
+    m_dst: usize,
+) -> Vec<f32> {
+    assert_eq!(src.len(), k_src * m_src, "centroid shape mismatch");
+    assert!(k_src <= k_dst && m_src <= m_dst, "centroids exceed capacity");
+    let mut out = vec![0f32; k_dst * m_dst];
+    for r in 0..k_src {
+        out[r * m_dst..r * m_dst + m_src]
+            .copy_from_slice(&src[r * m_src..(r + 1) * m_src]);
+    }
+    for r in k_src..k_dst {
+        out[r * m_dst..(r + 1) * m_dst].fill(PAD_CENTROID);
+    }
+    out
+}
+
+/// Strip padding from a `(k_dst × m_dst)` sums table back to
+/// `(k_src × m_src)`.
+pub fn unpad_matrix(
+    src: &[f32],
+    k_dst: usize,
+    m_dst: usize,
+    k_src: usize,
+    m_src: usize,
+) -> Vec<f32> {
+    assert_eq!(src.len(), k_dst * m_dst);
+    assert!(k_src <= k_dst && m_src <= m_dst);
+    let mut out = Vec::with_capacity(k_src * m_src);
+    for r in 0..k_src {
+        out.extend_from_slice(&src[r * m_dst..r * m_dst + m_src]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_points_rows_and_cols() {
+        let src = [1., 2., 3., 4.]; // 2×2
+        let out = pad_points(&src, 2, 2, 3, 4);
+        assert_eq!(out.len(), 12);
+        assert_eq!(&out[0..4], &[1., 2., 0., 0.]);
+        assert_eq!(&out[4..8], &[3., 4., 0., 0.]);
+        assert_eq!(&out[8..12], &[0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn pad_points_same_width_fast_path() {
+        let src = [1., 2., 3., 4.];
+        let out = pad_points(&src, 2, 2, 4, 2);
+        assert_eq!(out, vec![1., 2., 3., 4., 0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn mask_prefix() {
+        assert_eq!(make_mask(2, 4), vec![1., 1., 0., 0.]);
+        assert_eq!(make_mask(0, 2), vec![0., 0.]);
+        assert_eq!(make_mask(3, 3), vec![1., 1., 1.]);
+    }
+
+    #[test]
+    fn centroids_padding_rows_are_sentinel() {
+        let src = [1., 2.]; // 1×2
+        let out = pad_centroids(&src, 1, 2, 3, 3);
+        assert_eq!(&out[0..3], &[1., 2., 0.]);
+        assert!(out[3..].iter().all(|&v| v == PAD_CENTROID));
+    }
+
+    #[test]
+    fn unpad_inverts_pad() {
+        let src: Vec<f32> = (0..6).map(|x| x as f32).collect(); // 2×3
+        let padded = pad_points(&src, 2, 3, 4, 5);
+        let back = unpad_matrix(&padded, 4, 5, 2, 3);
+        assert_eq!(back, src);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds capacity")]
+    fn over_capacity_panics() {
+        pad_points(&[0.0; 4], 2, 2, 1, 2);
+    }
+}

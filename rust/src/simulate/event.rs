@@ -1,0 +1,303 @@
+//! Discrete-event simulation engine.
+//!
+//! Minimal but general: named FIFO **resources** with integer capacity
+//! (CPU cores, the GPU stream, the PCIe link) and **task chains** — a
+//! task is a sequence of `(resource, service_time)` steps, optionally
+//! preceded by dependencies on other tasks. The engine advances a
+//! simulated clock, assigning each step to its resource as capacity
+//! frees, and reports per-task completion times plus per-resource busy
+//! time (for utilisation reporting).
+//!
+//! This is enough to model Algorithm 4's per-shard pipeline (prepare on a
+//! core → H2D on the link → kernel on the GPU → D2H → combine on a core)
+//! with realistic overlap, without pulling in a full simulation
+//! framework.
+
+use std::collections::BinaryHeap;
+
+/// Index of a declared resource.
+pub type ResourceId = usize;
+/// Index of a submitted task.
+pub type TaskId = usize;
+
+/// One step of a task: occupy `resource` for `duration` seconds.
+#[derive(Clone, Debug)]
+pub struct Step {
+    pub resource: ResourceId,
+    pub duration: f64,
+}
+
+#[derive(Clone, Debug)]
+struct Task {
+    steps: Vec<Step>,
+    deps: Vec<TaskId>,
+    // runtime state
+    next_step: usize,
+    finished_at: Option<f64>,
+}
+
+#[derive(Clone, Debug)]
+struct Resource {
+    capacity: usize,
+    in_use: usize,
+    queue: std::collections::VecDeque<TaskId>,
+    busy_time: f64,
+}
+
+/// Event: a task finishes its current step at `time`.
+#[derive(PartialEq)]
+struct Finish {
+    time: f64,
+    task: TaskId,
+}
+
+impl Eq for Finish {}
+
+impl Ord for Finish {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap by time (ties by task id for determinism)
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then(other.task.cmp(&self.task))
+    }
+}
+
+impl PartialOrd for Finish {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The simulation: declare resources, submit tasks, run.
+#[derive(Default)]
+pub struct Sim {
+    resources: Vec<Resource>,
+    names: Vec<String>,
+    tasks: Vec<Task>,
+}
+
+/// Results of a completed simulation.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Total simulated time (max completion).
+    pub makespan: f64,
+    /// Completion time of every task.
+    pub completions: Vec<f64>,
+    /// Busy seconds per resource (utilisation = busy / makespan / capacity).
+    pub busy: Vec<f64>,
+}
+
+impl Sim {
+    pub fn new() -> Sim {
+        Sim::default()
+    }
+
+    pub fn resource(&mut self, name: &str, capacity: usize) -> ResourceId {
+        assert!(capacity >= 1);
+        self.resources.push(Resource {
+            capacity,
+            in_use: 0,
+            queue: Default::default(),
+            busy_time: 0.0,
+        });
+        self.names.push(name.to_string());
+        self.resources.len() - 1
+    }
+
+    /// Submit a task (chain of steps) depending on earlier tasks.
+    pub fn task(&mut self, steps: Vec<Step>, deps: Vec<TaskId>) -> TaskId {
+        assert!(!steps.is_empty(), "task needs at least one step");
+        for s in &steps {
+            assert!(s.resource < self.resources.len(), "unknown resource");
+            assert!(s.duration >= 0.0, "negative duration");
+        }
+        for &d in &deps {
+            assert!(d < self.tasks.len(), "dependency on later task");
+        }
+        self.tasks.push(Task {
+            steps,
+            deps,
+            next_step: 0,
+            finished_at: None,
+        });
+        self.tasks.len() - 1
+    }
+
+    /// Run to completion; consumes the task set.
+    pub fn run(mut self) -> SimResult {
+        let n = self.tasks.len();
+        let mut heap: BinaryHeap<Finish> = BinaryHeap::new();
+        let mut deps_left: Vec<usize> = self
+            .tasks
+            .iter()
+            .map(|t| t.deps.len())
+            .collect();
+        let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+        for (id, t) in self.tasks.iter().enumerate() {
+            for &d in &t.deps {
+                dependents[d].push(id);
+            }
+        }
+        let mut clock = 0.0f64;
+
+        // initially ready tasks enter their first resource queue
+        let ready: Vec<TaskId> = (0..n).filter(|&i| deps_left[i] == 0).collect();
+        for id in ready {
+            self.enqueue(id, clock, &mut heap);
+        }
+
+        while let Some(Finish { time, task }) = heap.pop() {
+            clock = time;
+            // step completed: release resource
+            let step = self.tasks[task].steps[self.tasks[task].next_step].clone();
+            let res = &mut self.resources[step.resource];
+            res.in_use -= 1;
+            res.busy_time += step.duration;
+            self.tasks[task].next_step += 1;
+
+            // admit next queued task on this resource
+            if let Some(next) = self.resources[step.resource].queue.pop_front() {
+                self.start_step(next, clock, &mut heap);
+            }
+
+            if self.tasks[task].next_step == self.tasks[task].steps.len() {
+                // task finished: unlock dependents
+                self.tasks[task].finished_at = Some(clock);
+                for &dep in &dependents[task].clone() {
+                    deps_left[dep] -= 1;
+                    if deps_left[dep] == 0 {
+                        self.enqueue(dep, clock, &mut heap);
+                    }
+                }
+            } else {
+                self.enqueue(task, clock, &mut heap);
+            }
+        }
+
+        let completions: Vec<f64> = self
+            .tasks
+            .iter()
+            .map(|t| t.finished_at.expect("task never completed (cycle?)"))
+            .collect();
+        SimResult {
+            makespan: completions.iter().cloned().fold(0.0, f64::max),
+            completions,
+            busy: self.resources.iter().map(|r| r.busy_time).collect(),
+        }
+    }
+
+    fn enqueue(&mut self, task: TaskId, clock: f64, heap: &mut BinaryHeap<Finish>) {
+        let rid = self.tasks[task].steps[self.tasks[task].next_step].resource;
+        if self.resources[rid].in_use < self.resources[rid].capacity {
+            self.start_step(task, clock, heap);
+        } else {
+            self.resources[rid].queue.push_back(task);
+        }
+    }
+
+    fn start_step(&mut self, task: TaskId, clock: f64, heap: &mut BinaryHeap<Finish>) {
+        let step = &self.tasks[task].steps[self.tasks[task].next_step];
+        self.resources[step.resource].in_use += 1;
+        heap.push(Finish {
+            time: clock + step.duration,
+            task,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_task_single_resource() {
+        let mut sim = Sim::new();
+        let cpu = sim.resource("cpu", 1);
+        sim.task(vec![Step { resource: cpu, duration: 2.0 }], vec![]);
+        let r = sim.run();
+        assert!((r.makespan - 2.0).abs() < 1e-12);
+        assert!((r.busy[cpu] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_limits_parallelism() {
+        // 4 unit tasks on capacity-2 resource => makespan 2
+        let mut sim = Sim::new();
+        let cpu = sim.resource("cpu", 2);
+        for _ in 0..4 {
+            sim.task(vec![Step { resource: cpu, duration: 1.0 }], vec![]);
+        }
+        let r = sim.run();
+        assert!((r.makespan - 2.0).abs() < 1e-12);
+        // capacity 4 => makespan 1
+        let mut sim = Sim::new();
+        let cpu = sim.resource("cpu", 4);
+        for _ in 0..4 {
+            sim.task(vec![Step { resource: cpu, duration: 1.0 }], vec![]);
+        }
+        assert!((sim.run().makespan - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dependencies_serialize() {
+        let mut sim = Sim::new();
+        let cpu = sim.resource("cpu", 8);
+        let a = sim.task(vec![Step { resource: cpu, duration: 1.0 }], vec![]);
+        let b = sim.task(vec![Step { resource: cpu, duration: 1.0 }], vec![a]);
+        let c = sim.task(vec![Step { resource: cpu, duration: 1.0 }], vec![b]);
+        let r = sim.run();
+        assert!((r.completions[c] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipeline_overlaps_across_resources() {
+        // two-stage pipeline (cpu -> gpu), 3 tasks: classic overlap
+        // cpu: t0 [0,1], t1 [1,2], t2 [2,3]
+        // gpu: t0 [1,3], t1 [3,5], t2 [5,7] => makespan 7
+        let mut sim = Sim::new();
+        let cpu = sim.resource("cpu", 1);
+        let gpu = sim.resource("gpu", 1);
+        for _ in 0..3 {
+            sim.task(
+                vec![
+                    Step { resource: cpu, duration: 1.0 },
+                    Step { resource: gpu, duration: 2.0 },
+                ],
+                vec![],
+            );
+        }
+        let r = sim.run();
+        assert!((r.makespan - 7.0).abs() < 1e-12, "makespan={}", r.makespan);
+        assert!((r.busy[gpu] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fifo_order_is_deterministic() {
+        let mut sim = Sim::new();
+        let gpu = sim.resource("gpu", 1);
+        let ids: Vec<_> = (0..5)
+            .map(|i| {
+                sim.task(
+                    vec![Step { resource: gpu, duration: 1.0 + i as f64 * 0.1 }],
+                    vec![],
+                )
+            })
+            .collect();
+        let r = sim.run();
+        // completion order == submission order on a FIFO resource
+        for w in ids.windows(2) {
+            assert!(r.completions[w[0]] < r.completions[w[1]]);
+        }
+    }
+
+    #[test]
+    fn zero_duration_steps_ok() {
+        let mut sim = Sim::new();
+        let cpu = sim.resource("cpu", 1);
+        sim.task(vec![Step { resource: cpu, duration: 0.0 }], vec![]);
+        let r = sim.run();
+        assert_eq!(r.makespan, 0.0);
+    }
+}

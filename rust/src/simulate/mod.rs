@@ -1,0 +1,29 @@
+//! Performance model of the paper's testbed (substrate / substitution).
+//!
+//! The paper's evaluation ran on an Intel i7-3770 (4 cores / 8 threads,
+//! 3.4 GHz) with an NVIDIA GeForce GTX 660 under CUDA 5.5 — hardware this
+//! reproduction does not have (and the present host has a single core, so
+//! wall-clock cannot exhibit the paper's multi-thread/GPU gains at all).
+//! Per the substitution policy in DESIGN.md §3, this module provides a
+//! **calibrated discrete-event model** of that testbed:
+//!
+//! * [`event`] — a small discrete-event simulation engine (FIFO resources,
+//!   task chains, a simulated clock);
+//! * [`testbed`] — the device parameters (CPU/GPU throughput, PCIe
+//!   bandwidth, per-task launch overhead, thread overhead) with the
+//!   calibration rationale documented per constant;
+//! * [`predict`] — maps a K-means workload `(n, m, k, iterations,
+//!   regime, threads)` to the op/byte counts of OUR implementation's
+//!   stages and schedules them on the modelled devices.
+//!
+//! The benches report both real wall-clock (measured on this host) and
+//! the model's predictions; EXPERIMENTS.md compares the *shape* of the
+//! predictions (who wins, by what factor, where the GPU crossover falls)
+//! against the paper's claims.
+
+pub mod event;
+pub mod predict;
+pub mod testbed;
+
+pub use predict::{predict, StagePrediction, WorkloadSpec};
+pub use testbed::Testbed;

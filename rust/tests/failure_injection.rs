@@ -1,0 +1,164 @@
+//! Failure injection: the coordinator must fail *cleanly* (typed errors,
+//! no panics, no partial state) when the artifact store, device, or
+//! inputs are broken.
+
+mod common;
+
+use std::path::PathBuf;
+
+use parclust::data::synthetic::{generate, GmmSpec};
+use parclust::exec::gpu::GpuExecutor;
+use parclust::exec::Executor;
+use parclust::kmeans::{fit, fit_with, KMeansConfig};
+use parclust::metric::Metric;
+use parclust::runtime::{Device, Manifest};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("parclust_fail_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_artifact_dir_is_clean_config_error() {
+    let g = generate(&GmmSpec::new(200_000, 4, 2).seed(1));
+    let cfg = KMeansConfig::new(2)
+        .regime(parclust::exec::regime::Regime::Gpu)
+        .artifact_dir(PathBuf::from("/nonexistent/artifacts"));
+    let err = fit(&g.dataset, &cfg).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("manifest"), "{msg}");
+    assert!(msg.contains("make artifacts"), "error must tell the user the fix: {msg}");
+}
+
+#[test]
+fn corrupt_manifest_is_rejected_with_location() {
+    let dir = tmpdir("manifest");
+    std::fs::write(dir.join("manifest.json"), "{ not json !").unwrap();
+    match Device::open(&dir) {
+        Ok(_) => panic!("corrupt manifest accepted"),
+        Err(err) => assert!(err.contains("manifest"), "{err}"),
+    }
+}
+
+#[test]
+fn manifest_with_missing_fields_is_rejected() {
+    for bad in [
+        r#"{"version": 2}"#,
+        r#"{"version": 2, "artifacts": [{"kind": "assign"}]}"#,
+        r#"{"version": 2, "artifacts": [{"kind": "assign", "name": "x",
+            "path": "x.hlo.txt", "n": "not-a-number", "m": 8, "k": 4}]}"#,
+    ] {
+        assert!(Manifest::parse(bad).is_err(), "accepted: {bad}");
+    }
+}
+
+#[test]
+fn corrupt_hlo_text_fails_compile_not_process() {
+    require_artifacts!();
+    let dir = tmpdir("hlo");
+    // manifest points at a garbage HLO file
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version":2,"artifacts":[
+            {"kind":"sum","name":"bad","path":"bad.hlo.txt","n":64,"m":8}
+        ]}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "HloModule utter garbage\n!!!")
+        .unwrap();
+    let dev = Device::open(&dir).expect("manifest parses");
+    let err = dev.warmup("bad").unwrap_err();
+    assert!(
+        err.contains("parse") || err.contains("compile") || err.contains("bad"),
+        "{err}"
+    );
+    // the device thread survives and keeps answering
+    let err2 = dev.warmup("bad").unwrap_err();
+    assert!(!err2.is_empty());
+}
+
+#[test]
+fn artifact_file_deleted_after_manifest_load() {
+    require_artifacts!();
+    let real = common::artifact_dir();
+    let dir = tmpdir("deleted");
+    // copy manifest but NOT the artifact files
+    std::fs::copy(real.join("manifest.json"), dir.join("manifest.json")).unwrap();
+    let dev = Device::open(&dir).unwrap();
+    let name = dev.manifest().artifacts[0].name.clone();
+    let err = dev.warmup(&name).unwrap_err();
+    assert!(err.contains("parse") || err.contains("No such file"), "{err}");
+}
+
+#[test]
+fn gpu_executor_surfaces_device_errors_from_fit() {
+    require_artifacts!();
+    // a manifest whose capacities cannot serve the request (m too small)
+    let dir = tmpdir("capacity");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version":2,"artifacts":[
+            {"kind":"assign","name":"tiny","path":"t.hlo.txt","n":64,"m":2,"k":2},
+            {"kind":"sum","name":"s","path":"s.hlo.txt","n":64,"m":2}
+        ]}"#,
+    )
+    .unwrap();
+    let dev = Device::open(&dir).unwrap();
+    let exec = GpuExecutor::new(dev, 1);
+    let g = generate(&GmmSpec::new(100, 25, 2).seed(2)); // m=25 > capacity 2
+    let err = exec
+        .assign_update(&g.dataset, &g.dataset.gather(&[0, 1]), 2, Metric::Euclidean)
+        .unwrap_err();
+    assert!(err.0.contains("artifact"), "{err}");
+}
+
+#[test]
+fn fit_with_k_larger_than_n_is_config_error() {
+    let g = generate(&GmmSpec::new(5, 3, 2).seed(3));
+    let cfg = KMeansConfig::new(10);
+    let err = fit_with(
+        &g.dataset,
+        &cfg,
+        &parclust::exec::single::SingleExecutor::new(),
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("exceeds"), "{err}");
+}
+
+#[test]
+fn stale_resident_set_is_not_used_for_other_datasets() {
+    require_artifacts!();
+    // preload dataset A, then run assign on dataset B: the executor must
+    // stream B, not reuse A's pinned shards.
+    let dev = Device::open(&common::artifact_dir()).unwrap();
+    let exec = GpuExecutor::new(dev, 1);
+    let a = generate(&GmmSpec::new(1500, 8, 3).seed(4));
+    let b = generate(&GmmSpec::new(1500, 8, 3).seed(5));
+    exec.preload(&a.dataset, 3).unwrap();
+    let cent = b.dataset.gather(&[0, 500, 1000]);
+    let gpu = exec
+        .assign_update(&b.dataset, &cent, 3, Metric::Euclidean)
+        .unwrap();
+    let reference = parclust::exec::single::SingleExecutor::new()
+        .assign_update(&b.dataset, &cent, 3, Metric::Euclidean)
+        .unwrap();
+    assert_eq!(gpu.labels, reference.labels, "stale resident data used!");
+    exec.clear_resident();
+}
+
+#[test]
+fn csv_with_nan_and_inf_values_parses_and_fit_stays_finite_or_errors() {
+    // inf/nan are valid f32 text; the pipeline must not panic on them
+    use std::io::BufReader;
+    let text = "1.0,2.0\n3.0,4.0\ninf,0.5\n0.25,0.125\n";
+    let ds = parclust::data::csv::read(BufReader::new(text.as_bytes())).unwrap();
+    let cfg = KMeansConfig::new(2).max_iters(10);
+    // must not panic; converging or not is acceptable with inf present
+    let _ = fit_with(
+        &ds,
+        &cfg,
+        &parclust::exec::single::SingleExecutor::new(),
+    );
+}

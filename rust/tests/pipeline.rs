@@ -1,0 +1,160 @@
+//! End-to-end pipeline tests: CSV ⇄ dataset ⇄ scaling ⇄ fit ⇄ reports,
+//! plus config-file loading — the full data path of the CLI `run`
+//! command, exercised as a library.
+
+mod common;
+
+use std::io::BufReader;
+
+use parclust::config::RunConfig;
+use parclust::data::scale::Scaler;
+use parclust::data::synthetic::{expression, generate, survey, GmmSpec};
+use parclust::data::{csv, Dataset};
+use parclust::exec::single::SingleExecutor;
+use parclust::json::Json;
+use parclust::kmeans::{fit_with, KMeansConfig};
+use parclust::report;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("parclust_{name}"));
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn csv_roundtrip_preserves_clustering() {
+    let g = generate(&GmmSpec::new(500, 6, 3).seed(31).spread(0.1));
+    let dir = tmpdir("csv_roundtrip");
+    let path = dir.join("data.csv");
+    csv::write_path(&g.dataset, &path).unwrap();
+    let reloaded = csv::read_path(&path).unwrap();
+    assert_eq!(reloaded.n(), 500);
+    assert_eq!(reloaded.m(), 6);
+
+    let cfg = KMeansConfig::new(3).seed(31);
+    let a = fit_with(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+    let b = fit_with(&reloaded, &cfg, &SingleExecutor::new()).unwrap();
+    assert_eq!(a.labels, b.labels, "csv roundtrip changed the clustering");
+}
+
+#[test]
+fn scaling_improves_mixed_scale_clustering() {
+    // one feature 1000x the other: unscaled k-means ignores the small one
+    let n = 600;
+    let mut values = Vec::with_capacity(n * 2);
+    let g = generate(&GmmSpec::new(n, 2, 3).seed(32).spread(0.05).center_scale(3.0));
+    for i in 0..n {
+        let r = g.dataset.row(i);
+        values.push(r[0] * 1000.0);
+        values.push(r[1]);
+    }
+    let mut ds = Dataset::from_vec(n, 2, values).unwrap();
+    Scaler::fit_z_score(&ds).transform(&mut ds);
+    // after scaling both features are O(1)
+    let (mut max0, mut max1) = (0f32, 0f32);
+    for i in 0..n {
+        max0 = max0.max(ds.row(i)[0].abs());
+        max1 = max1.max(ds.row(i)[1].abs());
+    }
+    assert!(max0 < 10.0 && max1 < 10.0);
+    let cfg = KMeansConfig::new(3).seed(32);
+    let res = fit_with(&ds, &cfg, &SingleExecutor::new()).unwrap();
+    assert!(res.converged);
+}
+
+#[test]
+fn survey_and_expression_generators_cluster() {
+    for (name, g) in [
+        ("survey", survey(400, 8, 3, 5, 33)),
+        ("expression", expression(400, 8, 3, 33)),
+    ] {
+        let cfg = KMeansConfig::new(3).seed(33).max_iters(200);
+        let res = fit_with(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+        assert_eq!(res.labels.len(), 400, "{name}");
+        assert!(res.inertia.is_finite(), "{name}");
+    }
+}
+
+#[test]
+fn run_report_and_labels_files() {
+    let g = generate(&GmmSpec::new(200, 4, 2).seed(34).spread(0.1));
+    let cfg = KMeansConfig::new(2).seed(34);
+    let res = fit_with(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+    let dir = tmpdir("report");
+    let report_path = dir.join("report.json");
+    let labels_path = dir.join("labels.csv");
+    report::write_json(
+        &report::run_report(&RunConfig::default_synthetic(), &res),
+        &report_path,
+    )
+    .unwrap();
+    report::write_labels(&res.labels, &labels_path).unwrap();
+
+    let parsed = Json::parse(&std::fs::read_to_string(&report_path).unwrap()).unwrap();
+    assert_eq!(
+        parsed
+            .get("result")
+            .unwrap()
+            .get("converged")
+            .unwrap()
+            .as_bool(),
+        Some(true)
+    );
+    let lines: Vec<String> = std::fs::read_to_string(&labels_path)
+        .unwrap()
+        .lines()
+        .map(String::from)
+        .collect();
+    assert_eq!(lines.len(), 201); // header + 200 rows
+    assert_eq!(lines[0], "label");
+}
+
+#[test]
+fn config_file_drives_the_pipeline() {
+    let dir = tmpdir("config");
+    let cfg_path = dir.join("run.json");
+    std::fs::write(
+        &cfg_path,
+        r#"{
+          "synthetic": {"n": 300, "m": 5, "k": 3},
+          "k": 3, "regime": "single", "seed": 35,
+          "init": "kmeans++", "max_iters": 100, "scaling": "minmax"
+        }"#,
+    )
+    .unwrap();
+    let cfg = RunConfig::from_file(&cfg_path).unwrap();
+    let mut ds = match cfg.source {
+        parclust::config::DataSource::Synthetic { n, m, k } => {
+            generate(&GmmSpec::new(n, m, k).seed(cfg.kmeans.seed)).dataset
+        }
+        _ => panic!("expected synthetic"),
+    };
+    if cfg.scaling == "minmax" {
+        Scaler::fit_min_max(&ds).transform(&mut ds);
+    }
+    let res = fit_with(&ds, &cfg.kmeans, &SingleExecutor::new()).unwrap();
+    assert_eq!(res.labels.len(), 300);
+    assert!(res.converged);
+}
+
+#[test]
+fn headerless_semicolon_csv_from_foreign_tool() {
+    // the paper's audience exports from STATISTICA-style tools
+    let text = "1.5;2.5;3.5\n4.5;5.5;6.5\n7.5;8.5;9.5\n";
+    let ds = csv::read(BufReader::new(text.as_bytes())).unwrap();
+    assert_eq!(ds.n(), 3);
+    assert_eq!(ds.m(), 3);
+    assert_eq!(ds.row(2), &[7.5, 8.5, 9.5]);
+}
+
+#[test]
+fn large_dataset_memory_layout_sane() {
+    // 2e5 × 25 ≈ 20 MB — verify the row-major invariants hold at scale
+    let g = generate(&GmmSpec::new(200_000, 25, 8).seed(36));
+    let ds = &g.dataset;
+    assert_eq!(ds.values().len(), 200_000 * 25);
+    assert_eq!(ds.row(199_999).len(), 25);
+    let shard = ds.rows(100_000..100_010);
+    assert_eq!(shard.len(), 250);
+    assert_eq!(&shard[0..25], ds.row(100_000));
+}

@@ -1,0 +1,138 @@
+//! Cross-regime equivalence: the paper's three algorithms are the same
+//! K-means — single, multi and gpu must produce the same clustering.
+//!
+//! Labels are compared exactly on well-separated data (no boundary ties);
+//! accumulated statistics are compared to float tolerance (the GPU sums
+//! in f32 on-device, the CPU regimes in f64 on the host).
+
+mod common;
+
+use parclust::data::synthetic::{generate, GmmSpec};
+use parclust::exec::gpu::GpuExecutor;
+use parclust::exec::multi::MultiExecutor;
+use parclust::exec::single::SingleExecutor;
+use parclust::exec::Executor;
+use parclust::kmeans::{fit_with, DiameterMode, KMeansConfig};
+use parclust::metric::Metric;
+use parclust::runtime::Device;
+use parclust::testkit::assert_allclose;
+
+fn device() -> Device {
+    Device::open(&common::artifact_dir()).expect("device")
+}
+
+#[test]
+fn assign_update_matches_across_regimes() {
+    require_artifacts!();
+    let g = generate(&GmmSpec::new(3000, 25, 6).seed(21).spread(0.3));
+    let ds = &g.dataset;
+    let cent = ds.gather(&[0, 500, 1000, 1500, 2000, 2500]);
+
+    let single = SingleExecutor::new()
+        .assign_update(ds, &cent, 6, Metric::Euclidean)
+        .unwrap();
+    let multi = MultiExecutor::new(4)
+        .assign_update(ds, &cent, 6, Metric::Euclidean)
+        .unwrap();
+    let gpu = GpuExecutor::new(device(), 2)
+        .assign_update(ds, &cent, 6, Metric::Euclidean)
+        .unwrap();
+
+    assert_eq!(single.labels, multi.labels, "single vs multi labels");
+    assert_eq!(single.labels, gpu.labels, "single vs gpu labels");
+    assert_eq!(single.counts, multi.counts);
+    assert_eq!(single.counts, gpu.counts);
+
+    let s32: Vec<f32> = single.sums.iter().map(|&v| v as f32).collect();
+    let g32: Vec<f32> = gpu.sums.iter().map(|&v| v as f32).collect();
+    assert_allclose(&s32, &g32, 1e-4, 1e-2);
+    assert!(
+        (single.inertia - gpu.inertia).abs()
+            <= 1e-3 * single.inertia.max(1.0),
+        "inertia: {} vs {}",
+        single.inertia,
+        gpu.inertia
+    );
+}
+
+#[test]
+fn diameter_matches_across_regimes() {
+    require_artifacts!();
+    let g = generate(&GmmSpec::new(1200, 10, 4).seed(22));
+    let ds = &g.dataset;
+    let cand: Vec<usize> = (0..ds.n()).collect();
+
+    let s = SingleExecutor::new().diameter(ds, &cand).unwrap();
+    let m = MultiExecutor::new(4).diameter(ds, &cand).unwrap();
+    let gpu = GpuExecutor::new(device(), 2).diameter(ds, &cand).unwrap();
+
+    let rel = |a: f32, b: f32| (a - b).abs() / a.max(1.0);
+    assert!(rel(s.d2, m.d2) < 1e-5, "single {} vs multi {}", s.d2, m.d2);
+    assert!(rel(s.d2, gpu.d2) < 1e-3, "single {} vs gpu {}", s.d2, gpu.d2);
+    // the returned pair must actually realise the distance
+    let d_at = parclust::metric::sq_euclidean(ds.row(gpu.i), ds.row(gpu.j));
+    assert!(rel(gpu.d2, d_at) < 1e-3);
+}
+
+#[test]
+fn center_of_gravity_matches_across_regimes() {
+    require_artifacts!();
+    let g = generate(&GmmSpec::new(40_000, 25, 5).seed(23));
+    let ds = &g.dataset;
+    let s = SingleExecutor::new().center_of_gravity(ds).unwrap();
+    let m = MultiExecutor::new(4).center_of_gravity(ds).unwrap();
+    let gpu = GpuExecutor::new(device(), 2).center_of_gravity(ds).unwrap();
+    assert_allclose(&s, &m, 1e-5, 1e-4);
+    assert_allclose(&s, &gpu, 1e-3, 1e-2);
+}
+
+#[test]
+fn full_fit_agrees_across_regimes() {
+    require_artifacts!();
+    let g = generate(&GmmSpec::new(5000, 12, 5).seed(24).spread(0.1).center_scale(40.0));
+    let base = KMeansConfig::new(5)
+        .seed(24)
+        .diameter_mode(DiameterMode::Sampled(1024))
+        .max_iters(100);
+
+    let r_single = fit_with(&g.dataset, &base, &SingleExecutor::new()).unwrap();
+    let r_multi = fit_with(&g.dataset, &base, &MultiExecutor::new(4)).unwrap();
+    let r_gpu = fit_with(&g.dataset, &base, &GpuExecutor::new(device(), 2)).unwrap();
+
+    assert!(r_single.converged && r_multi.converged && r_gpu.converged);
+    assert_eq!(r_single.labels, r_multi.labels);
+    assert_eq!(r_single.labels, r_gpu.labels, "gpu clustering must agree");
+    // The device accumulates inertia in f32 via |x|²−2xC+|c|² (cancellation
+    // when ‖x‖ ≫ d), the host in f64 via (x−c)² — ~0.2% drift is expected.
+    let rel = (r_single.inertia - r_gpu.inertia).abs() / r_single.inertia;
+    assert!(rel < 5e-3, "inertia rel diff {rel}");
+}
+
+#[test]
+fn gpu_handles_non_divisible_and_tiny_shards() {
+    require_artifacts!();
+    // n deliberately not a multiple of any artifact capacity; k=3, m=7
+    let g = generate(&GmmSpec::new(2029, 7, 3).seed(25).spread(0.2));
+    let ds = &g.dataset;
+    let cent = ds.gather(&[3, 700, 1400]);
+    let single = SingleExecutor::new()
+        .assign_update(ds, &cent, 3, Metric::Euclidean)
+        .unwrap();
+    let gpu = GpuExecutor::new(device(), 3)
+        .assign_update(ds, &cent, 3, Metric::Euclidean)
+        .unwrap();
+    assert_eq!(single.labels, gpu.labels);
+    assert_eq!(single.counts, gpu.counts);
+    assert_eq!(gpu.counts.iter().sum::<u64>(), 2029, "padding must not leak");
+}
+
+#[test]
+fn gpu_rejects_non_euclidean_metric() {
+    require_artifacts!();
+    let g = generate(&GmmSpec::new(100, 4, 2).seed(26));
+    let cent = g.dataset.gather(&[0, 1]);
+    let err = GpuExecutor::new(device(), 1)
+        .assign_update(&g.dataset, &cent, 2, Metric::Manhattan)
+        .unwrap_err();
+    assert!(err.0.contains("euclidean"), "{err}");
+}

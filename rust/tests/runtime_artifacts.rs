@@ -1,0 +1,241 @@
+//! Runtime ↔ artifact contract: every compiled module in the manifest
+//! loads, compiles and produces numerics that match the rust scalar
+//! reference under the padding/masking contract.
+
+mod common;
+
+use parclust::prng::Pcg32;
+use parclust::runtime::{pad, ArtifactKind, Device, HostTensor};
+
+fn device() -> Device {
+    Device::open(&common::artifact_dir()).expect("device")
+}
+
+fn random_matrix(rng: &mut Pcg32, n: usize, m: usize, scale: f32) -> Vec<f32> {
+    (0..n * m).map(|_| rng.uniform(-scale, scale)).collect()
+}
+
+#[test]
+fn every_artifact_compiles_and_warms_up() {
+    require_artifacts!();
+    let dev = device();
+    let names: Vec<String> = dev
+        .manifest()
+        .artifacts
+        .iter()
+        .map(|a| a.name.clone())
+        .collect();
+    for name in names {
+        dev.warmup(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+    let (_, _, _, _, compilations) = dev.stats().snapshot();
+    assert_eq!(compilations as usize, dev.manifest().artifacts.len());
+    // second warmup is cached
+    let first = dev.manifest().artifacts[0].name.clone();
+    dev.warmup(&first).unwrap();
+    let (_, _, _, _, compilations2) = dev.stats().snapshot();
+    assert_eq!(compilations, compilations2, "compile cache must hit");
+}
+
+#[test]
+fn assign_artifact_matches_scalar_reference() {
+    require_artifacts!();
+    let dev = device();
+    let art = dev
+        .manifest()
+        .select(ArtifactKind::Assign, 1000, 25, 10)
+        .unwrap()
+        .clone();
+    let mut rng = Pcg32::new(77);
+    let n_logical = 1000usize;
+    let (m_logical, k_logical) = (25usize, 10usize);
+    let points = random_matrix(&mut rng, n_logical, m_logical, 5.0);
+    let centroids = random_matrix(&mut rng, k_logical, m_logical, 5.0);
+
+    let padded = pad::pad_points(&points, n_logical, m_logical, art.n, art.m);
+    let mask = pad::make_mask(n_logical, art.n);
+    let pc = pad::pad_centroids(&centroids, k_logical, m_logical, art.k, art.m);
+    let out = dev
+        .execute(
+            &art.name,
+            vec![
+                HostTensor::f32(&[art.n as i64, art.m as i64], padded),
+                HostTensor::f32(&[art.n as i64], mask),
+                HostTensor::f32(&[art.k as i64, art.m as i64], pc),
+            ],
+        )
+        .unwrap();
+
+    // scalar reference
+    let ds = parclust::data::Dataset::from_vec(n_logical, m_logical, points).unwrap();
+    use parclust::exec::{single::SingleExecutor, Executor};
+    let reference = SingleExecutor::new()
+        .assign_update(&ds, &centroids, k_logical, parclust::metric::Metric::Euclidean)
+        .unwrap();
+
+    let labels = out[0].as_i32();
+    for i in 0..n_logical {
+        assert_eq!(labels[i] as u32, reference.labels[i], "label {i}");
+    }
+    let sums = pad::unpad_matrix(out[1].as_f32(), art.k, art.m, k_logical, m_logical);
+    for (i, (&a, &b)) in sums.iter().zip(&reference.sums).enumerate() {
+        assert!(
+            (a as f64 - b).abs() < 1e-2 + 1e-4 * b.abs(),
+            "sums[{i}]: {a} vs {b}"
+        );
+    }
+    let counts = out[2].as_f32();
+    for c in 0..k_logical {
+        assert_eq!(counts[c] as u64, reference.counts[c], "count {c}");
+    }
+    for c in k_logical..art.k {
+        assert_eq!(counts[c], 0.0, "padded centroid {c} captured rows");
+    }
+    let inertia = out[3].as_f32()[0] as f64;
+    assert!((inertia - reference.inertia).abs() < 1e-3 * reference.inertia);
+}
+
+#[test]
+fn sum_artifact_matches_scalar_reference() {
+    require_artifacts!();
+    let dev = device();
+    let art = dev
+        .manifest()
+        .select(ArtifactKind::Sum, 500, 25, 0)
+        .unwrap()
+        .clone();
+    let mut rng = Pcg32::new(78);
+    let n_logical = 500usize;
+    let m_logical = 25usize;
+    let points = random_matrix(&mut rng, n_logical, m_logical, 3.0);
+    let padded = pad::pad_points(&points, n_logical, m_logical, art.n, art.m);
+    let mask = pad::make_mask(n_logical, art.n);
+    let out = dev
+        .execute(
+            &art.name,
+            vec![
+                HostTensor::f32(&[art.n as i64, art.m as i64], padded),
+                HostTensor::f32(&[art.n as i64], mask),
+            ],
+        )
+        .unwrap();
+    let sums = out[0].as_f32();
+    for j in 0..m_logical {
+        let expect: f64 = (0..n_logical).map(|i| points[i * m_logical + j] as f64).sum();
+        assert!(
+            (sums[j] as f64 - expect).abs() < 1e-2 + 1e-4 * expect.abs(),
+            "col {j}"
+        );
+    }
+    assert_eq!(out[1].as_f32()[0], n_logical as f32);
+}
+
+#[test]
+fn diameter_artifact_matches_scalar_reference() {
+    require_artifacts!();
+    let dev = device();
+    let art = dev.manifest().select_diameter(25).unwrap().clone();
+    let mut rng = Pcg32::new(79);
+    let rows = 300usize;
+    let m_logical = 25usize;
+    let points = random_matrix(&mut rng, rows, m_logical, 10.0);
+    let padded = pad::pad_points(&points, rows, m_logical, art.n, art.m);
+    let mask = pad::make_mask(rows, art.n);
+    let out = dev
+        .execute(
+            &art.name,
+            vec![
+                HostTensor::f32(&[art.n as i64, art.m as i64], padded.clone()),
+                HostTensor::f32(&[art.bn as i64, art.m as i64], padded),
+                HostTensor::f32(&[art.n as i64], mask.clone()),
+                HostTensor::f32(&[art.bn as i64], mask),
+            ],
+        )
+        .unwrap();
+    let max_d2 = out[0].as_f32()[0];
+    let (ai, aj) = (out[1].as_i32()[0] as usize, out[2].as_i32()[0] as usize);
+    // brute force
+    let mut best = -1f32;
+    for i in 0..rows {
+        for j in 0..rows {
+            let d2 = parclust::metric::sq_euclidean(
+                &points[i * m_logical..(i + 1) * m_logical],
+                &points[j * m_logical..(j + 1) * m_logical],
+            );
+            best = best.max(d2);
+        }
+    }
+    assert!((max_d2 - best).abs() < 1e-2 + 1e-4 * best, "{max_d2} vs {best}");
+    assert!(ai < rows && aj < rows, "argmax pointed into padding");
+}
+
+#[test]
+fn device_reports_transfer_stats() {
+    require_artifacts!();
+    let dev = device();
+    let art = dev
+        .manifest()
+        .select(ArtifactKind::Sum, 100, 8, 0)
+        .unwrap()
+        .clone();
+    let points = vec![1.0f32; art.n * art.m];
+    let mask = pad::make_mask(art.n, art.n);
+    let (h2d0, d2h0, exec0, _, _) = dev.stats().snapshot();
+    dev.execute(
+        &art.name,
+        vec![
+            HostTensor::f32(&[art.n as i64, art.m as i64], points),
+            HostTensor::f32(&[art.n as i64], mask),
+        ],
+    )
+    .unwrap();
+    let (h2d, d2h, execs, nanos, _) = dev.stats().snapshot();
+    assert_eq!(execs - exec0, 1);
+    assert_eq!(
+        h2d - h2d0,
+        (art.n * art.m * 4 + art.n * 4) as u64,
+        "h2d accounting"
+    );
+    assert_eq!(d2h - d2h0, (art.m * 4 + 4) as u64, "d2h accounting");
+    assert!(nanos > 0);
+}
+
+#[test]
+fn unknown_artifact_is_a_clean_error() {
+    require_artifacts!();
+    let dev = device();
+    let err = dev.execute("nope", vec![]).unwrap_err();
+    assert!(err.contains("unknown artifact"), "{err}");
+}
+
+#[test]
+fn pdist_artifact_matches_scalar_matrix() {
+    require_artifacts!();
+    use parclust::data::synthetic::{generate, GmmSpec};
+    use parclust::hier::matrix::Builder;
+    let g = generate(&GmmSpec::new(700, 12, 3).seed(41));
+    let a = Builder::single().build(&g.dataset, false).unwrap();
+    let b = Builder::gpu(device(), 2).build(&g.dataset, false).unwrap();
+    for i in (0..700).step_by(13) {
+        for j in (i + 1..700).step_by(17) {
+            let (x, y) = (a.get(i, j), b.get(i, j));
+            assert!(
+                (x - y).abs() < 1e-3 + 1e-4 * x,
+                "({i},{j}): {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn hier_gpu_pipeline_recovers_blobs() {
+    require_artifacts!();
+    use parclust::data::synthetic::{generate, GmmSpec};
+    use parclust::hier::{fit, matrix::Builder, Linkage};
+    use parclust::quality::adjusted_rand_index;
+    let g = generate(&GmmSpec::new(300, 6, 3).seed(42).spread(0.1).center_scale(30.0));
+    let builder = Builder::gpu(device(), 2);
+    let (_, labels) = fit(&g.dataset, Linkage::Average, 3, &builder).unwrap();
+    let ari = adjusted_rand_index(&labels, &g.labels);
+    assert!(ari > 0.99, "ari {ari}");
+}
