@@ -5,6 +5,13 @@
 //! times each stage separately in every regime — the evidence behind the
 //! paper's per-stage offload decisions (Algorithm 4 keeps step 4 partly
 //! on the CPU).
+//!
+//! Stage rows are named after the kernel-layer entry point that carries
+//! them (`kernel.diameter` / `kernel.reduce` / `kernel.assign`); the
+//! extra `kernel.assign scalar-ref` row is the pre-tiling row-at-a-time
+//! reference (`kernel::assign::assign_update_range_scalar`), kept so the
+//! tiled norm-decomposition speedup stays measurable — record the pair
+//! in EXPERIMENTS.md §Perf.
 
 mod common;
 
@@ -13,13 +20,14 @@ use parclust::exec::gpu::GpuExecutor;
 use parclust::exec::multi::MultiExecutor;
 use parclust::exec::single::SingleExecutor;
 use parclust::exec::Executor;
+use parclust::kernel::assign::assign_update_range_scalar;
 use parclust::metric::Metric;
 use parclust::simulate::{predict, Testbed, WorkloadSpec};
 
 fn main() {
     common::banner("F2", "stage-level costs explain the offload decisions");
-    let n = 40_000usize;
-    let (m, k) = (25usize, 10usize);
+    let n = 100_000usize;
+    let (m, k) = (25usize, 16usize);
     let g = common::workload(n, m, k, 5);
     let ds = &g.dataset;
     let cent = ds.gather(&(0..k).collect::<Vec<_>>());
@@ -35,7 +43,7 @@ fn main() {
         &["stage", "single", "multi(8)", "gpu (pjrt)"],
     );
 
-    // diameter
+    // diameter — kernel::diameter::farthest_pair
     let s = bencher.bench(|| {
         let _ = single.diameter(ds, &candidates).unwrap();
     });
@@ -49,13 +57,13 @@ fn main() {
         })
     });
     table.row(vec![
-        "diameter (step 1)".into(),
+        "kernel.diameter (step 1)".into(),
         fmt_duration(s.mean),
         fmt_duration(mt.mean),
         gp.map(|g| fmt_duration(g.mean)).unwrap_or_else(|| "-".into()),
     ]);
 
-    // center of gravity
+    // center of gravity — kernel::reduce::coordinate_sums
     let s = bencher.bench(|| {
         let _ = single.center_of_gravity(ds).unwrap();
     });
@@ -69,13 +77,13 @@ fn main() {
         })
     });
     table.row(vec![
-        "center of gravity (step 2)".into(),
+        "kernel.reduce: cog (step 2)".into(),
         fmt_duration(s.mean),
         fmt_duration(mt.mean),
         gp.map(|g| fmt_duration(g.mean)).unwrap_or_else(|| "-".into()),
     ]);
 
-    // assignment + update
+    // assignment + update — kernel::assign (tiled norm-decomposition)
     let s = bencher.bench(|| {
         let _ = single.assign_update(ds, &cent, k, Metric::Euclidean).unwrap();
     });
@@ -90,12 +98,25 @@ fn main() {
         })
     });
     table.row(vec![
-        "assign+update (steps 4-7)".into(),
+        "kernel.assign (steps 4-7)".into(),
         fmt_duration(s.mean),
         fmt_duration(mt.mean),
         gp.map(|g| fmt_duration(g.mean)).unwrap_or_else(|| "-".into()),
     ]);
+
+    // before/after: the pre-tiling scalar reference on one thread
+    let sr = bencher.bench(|| {
+        let _ = assign_update_range_scalar(ds, &cent, k, Metric::Euclidean, 0..ds.n());
+    });
+    table.row(vec![
+        "kernel.assign scalar-ref (pre-tiling)".into(),
+        fmt_duration(sr.mean),
+        "-".into(),
+        "-".into(),
+    ]);
     println!("{}", table.render());
+    let speedup = sr.mean.as_secs_f64() / s.mean.as_secs_f64().max(1e-12);
+    println!("tiled kernel.assign speedup vs scalar-ref (single thread): {speedup:.2}x");
 
     // ---- modelled stage split at the paper's headline size -----------------
     let bed = Testbed::paper2014();

@@ -9,9 +9,13 @@
 //! agnostic and the three implementations differ only in *how* each stage
 //! runs:
 //!
-//! * [`single::SingleExecutor`] — Algorithm 2 (scalar reference);
+//! * [`single::SingleExecutor`] — Algorithm 2 (kernel calls, full range);
 //! * [`multi::MultiExecutor`] — Algorithm 3 (thread pool + sharding);
 //! * [`gpu::GpuExecutor`] — Algorithm 4 (PJRT artifacts per shard).
+//!
+//! Executors are **orchestration only**: the CPU stage math lives in one
+//! place, the block-tiled kernels of [`crate::kernel`], which single and
+//! multi both call per shard.
 
 pub mod gpu;
 pub mod multi;

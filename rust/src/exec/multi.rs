@@ -13,10 +13,13 @@
 //! Threads are scoped (`std::thread::scope`) so shards borrow the dataset
 //! without copies. Thread count defaults to the paper's testbed (8
 //! hardware threads on the i7-3770) but follows the host when smaller.
+//!
+//! Pure orchestration: all per-shard math is the shared kernel layer
+//! ([`crate::kernel`]); this module only shards, spawns and combines.
 
 use crate::data::Dataset;
-use crate::exec::single::{assign_update_range, diameter_scalar};
 use crate::exec::{AssignStats, DiameterResult, ExecError, Executor};
+use crate::kernel::{assign, diameter, reduce};
 use crate::metric::Metric;
 use crate::pool::{scoped_map_chunks, split_ranges};
 
@@ -67,7 +70,7 @@ impl Executor for MultiExecutor {
                 .windows(2)
                 .map(|w| {
                     let (lo, hi) = (w[0], w[1]);
-                    s.spawn(move || diameter_scalar(ds, candidates, lo, hi))
+                    s.spawn(move || diameter::farthest_pair(ds, candidates, lo, hi))
                 })
                 .collect();
             handles
@@ -86,24 +89,14 @@ impl Executor for MultiExecutor {
     }
 
     fn center_of_gravity(&self, ds: &Dataset) -> Result<Vec<f32>, ExecError> {
-        let m = ds.m();
         let partials = scoped_map_chunks(self.threads, ds.n(), |r| {
-            let mut sums = vec![0f64; m];
-            for i in r {
-                for (s, &v) in sums.iter_mut().zip(ds.row(i)) {
-                    *s += v as f64;
-                }
-            }
-            sums
+            reduce::coordinate_sums(ds, r)
         });
-        let mut total = vec![0f64; m];
+        let mut total = vec![0f64; ds.m()];
         for p in partials {
-            for (t, v) in total.iter_mut().zip(p) {
-                *t += v;
-            }
+            reduce::fold_sums(&mut total, &p);
         }
-        let n = ds.n().max(1) as f64;
-        Ok(total.iter().map(|&s| (s / n) as f32).collect())
+        Ok(reduce::mean_from_sums(&total, ds.n()))
     }
 
     fn assign_update(
@@ -121,7 +114,7 @@ impl Executor for MultiExecutor {
                 .iter()
                 .map(|r| {
                     let r = r.clone();
-                    s.spawn(move || assign_update_range(ds, centroids, k, metric, r))
+                    s.spawn(move || assign::assign_update_range(ds, centroids, k, metric, r))
                 })
                 .collect();
             handles

@@ -1,13 +1,16 @@
-//! Single-threaded executor — paper Algorithm 2, the scalar reference.
+//! Single-threaded executor — paper Algorithm 2, the reference regime.
 //!
-//! Every other regime must agree with this one (up to float summation
-//! order); the integration tests in `rust/tests/` enforce it. The inner
-//! assignment loop is the performance-critical path for the single/multi
-//! regimes — see `benches/f2_stage_breakdown` and EXPERIMENTS.md §Perf.
+//! Pure orchestration: every stage is one call into the shared kernel
+//! layer ([`crate::kernel`]) over the full row range. Every other regime
+//! must agree with this one (up to float summation order); the
+//! integration tests in `rust/tests/` enforce it. The assignment kernel
+//! is the performance-critical path for the single/multi regimes — see
+//! `benches/f2_stage_breakdown` and EXPERIMENTS.md §Perf.
 
 use crate::data::Dataset;
 use crate::exec::{AssignStats, DiameterResult, ExecError, Executor};
-use crate::metric::{sq_euclidean, Metric};
+use crate::kernel::{assign, diameter, reduce};
+use crate::metric::Metric;
 
 /// Scalar executor. Stateless; `Default` constructible.
 #[derive(Default, Clone, Debug)]
@@ -29,19 +32,12 @@ impl Executor for SingleExecutor {
         ds: &Dataset,
         candidates: &[usize],
     ) -> Result<DiameterResult, ExecError> {
-        diameter_scalar(ds, candidates, 0, candidates.len())
+        diameter::farthest_pair(ds, candidates, 0, candidates.len())
     }
 
     fn center_of_gravity(&self, ds: &Dataset) -> Result<Vec<f32>, ExecError> {
-        let m = ds.m();
-        let mut sums = vec![0f64; m];
-        for i in 0..ds.n() {
-            for (s, &v) in sums.iter_mut().zip(ds.row(i)) {
-                *s += v as f64;
-            }
-        }
-        let n = ds.n().max(1) as f64;
-        Ok(sums.iter().map(|&s| (s / n) as f32).collect())
+        let sums = reduce::coordinate_sums(ds, 0..ds.n());
+        Ok(reduce::mean_from_sums(&sums, ds.n()))
     }
 
     fn assign_update(
@@ -51,109 +47,8 @@ impl Executor for SingleExecutor {
         k: usize,
         metric: Metric,
     ) -> Result<AssignStats, ExecError> {
-        Ok(assign_update_range(ds, centroids, k, metric, 0..ds.n()))
+        Ok(assign::assign_update_range(ds, centroids, k, metric, 0..ds.n()))
     }
-}
-
-/// Assignment + statistics over a row range — shared with the
-/// multi-threaded executor (each worker runs this on its 1/N slice).
-/// The Euclidean case takes a specialised fast path (the compiler
-/// monomorphises `sq_euclidean` into the loop).
-pub fn assign_update_range(
-    ds: &Dataset,
-    centroids: &[f32],
-    k: usize,
-    metric: Metric,
-    range: std::ops::Range<usize>,
-) -> AssignStats {
-    let m = ds.m();
-    debug_assert_eq!(centroids.len(), k * m);
-    let mut stats = AssignStats::zeros(range.len(), k, m);
-    for (out_i, i) in range.clone().enumerate() {
-        let row = ds.row(i);
-        let (label, d2) = if metric == Metric::Euclidean {
-            nearest_centroid(row, centroids, k, m)
-        } else {
-            nearest_centroid_metric(row, centroids, k, m, metric)
-        };
-        stats.labels[out_i] = label as u32;
-        stats.counts[label] += 1;
-        stats.inertia += d2 as f64;
-        let dst = &mut stats.sums[label * m..(label + 1) * m];
-        for (s, &v) in dst.iter_mut().zip(row) {
-            *s += v as f64;
-        }
-    }
-    stats
-}
-
-/// Nearest centroid of one row (squared-Euclidean argmin) — the hot path.
-#[inline]
-pub fn nearest_centroid(row: &[f32], centroids: &[f32], k: usize, m: usize) -> (usize, f32) {
-    let mut best = 0usize;
-    let mut best_d2 = f32::INFINITY;
-    for c in 0..k {
-        let d2 = sq_euclidean(row, &centroids[c * m..(c + 1) * m]);
-        if d2 < best_d2 {
-            best_d2 = d2;
-            best = c;
-        }
-    }
-    (best, best_d2)
-}
-
-/// Nearest centroid under an arbitrary metric ("other metrics can be
-/// chosen", paper §5). Uses the metric's comparable form.
-#[inline]
-pub fn nearest_centroid_metric(
-    row: &[f32],
-    centroids: &[f32],
-    k: usize,
-    m: usize,
-    metric: Metric,
-) -> (usize, f32) {
-    let mut best = 0usize;
-    let mut best_d = f32::INFINITY;
-    for c in 0..k {
-        let d = metric.comparable(row, &centroids[c * m..(c + 1) * m]);
-        if d < best_d {
-            best_d = d;
-            best = c;
-        }
-    }
-    (best, best_d)
-}
-
-/// The farthest pair where the first element's *candidate index* lies in
-/// `[lo, hi)` — the unit of work one thread handles in Algorithm 3 step 1
-/// ("distances between the elements of the whole set and elements of
-/// (1/N)-th part of this set"). Exploits symmetry: inner loop starts at
-/// `a + 1`.
-pub fn diameter_scalar(
-    ds: &Dataset,
-    candidates: &[usize],
-    lo: usize,
-    hi: usize,
-) -> Result<DiameterResult, ExecError> {
-    if candidates.len() < 2 {
-        return Err(ExecError("diameter needs at least 2 candidates".into()));
-    }
-    let mut best = DiameterResult {
-        d2: -1.0,
-        i: 0,
-        j: 0,
-    };
-    for a in lo..hi.min(candidates.len()) {
-        let ia = candidates[a];
-        let row_a = ds.row(ia);
-        for &ib in candidates.iter().skip(a + 1) {
-            let d2 = sq_euclidean(row_a, ds.row(ib));
-            if d2 > best.d2 {
-                best = DiameterResult { d2, i: ia, j: ib };
-            }
-        }
-    }
-    Ok(best)
 }
 
 #[cfg(test)]
@@ -208,27 +103,5 @@ mod tests {
         assert!((stats.inertia - (1.0 + 1.0 + 0.5)).abs() < 1e-6);
         let new_c = stats.centroids(&cent, 2, 2);
         assert_eq!(new_c.len(), 4);
-    }
-
-    #[test]
-    fn nearest_centroid_tie_breaks_low_index() {
-        let row = [0.5f32];
-        let cent = [0.0f32, 1.0];
-        let (label, d2) = nearest_centroid(&row, &cent, 2, 1);
-        assert_eq!(label, 0, "ties must go to the lower index");
-        assert!((d2 - 0.25).abs() < 1e-7);
-    }
-
-    #[test]
-    fn range_version_matches_full() {
-        let ds = square();
-        let cent = [0.0f32, 0.0, 1.0, 1.0];
-        let full = SingleExecutor.assign_update(&ds, &cent, 2, Metric::Euclidean).unwrap();
-        let mut combined = AssignStats::zeros(5, 2, 2);
-        combined.absorb(0, &assign_update_range(&ds, &cent, 2, Metric::Euclidean, 0..2));
-        combined.absorb(2, &assign_update_range(&ds, &cent, 2, Metric::Euclidean, 2..5));
-        assert_eq!(combined.labels, full.labels);
-        assert_eq!(combined.counts, full.counts);
-        assert!((combined.inertia - full.inertia).abs() < 1e-9);
     }
 }

@@ -8,11 +8,15 @@
 //! paper's diameter step: single-threaded scan, multi-threaded triangle
 //! split, or GPU offload through the `pdist` Pallas artifact (blocks of
 //! the pair space shipped to the device, the distance block coming back).
+//! The CPU fill reuses the diameter kernel's pairwise walk
+//! ([`crate::kernel::diameter::pairwise_condensed`]): the same distance
+//! scan that finds the farthest pair here streams distances out in
+//! condensed order.
 
 use crate::data::Dataset;
 use crate::exec::multi::triangle_splits;
 use crate::exec::ExecError;
-use crate::metric::sq_euclidean;
+use crate::kernel::diameter::pairwise_condensed;
 use crate::pool::scoped_map_chunks;
 use crate::runtime::{pad, ArtifactKind, Device, HostTensor};
 
@@ -102,26 +106,19 @@ impl Builder {
     }
 }
 
-/// Scalar build over a row range of the upper triangle.
+/// Build over a row range of the upper triangle via the shared pairwise
+/// kernel. Row `i`'s pairs are contiguous in the condensed layout, so
+/// the kernel's emission order writes straight through the buffer.
 fn build_rows(ds: &Dataset, squared: bool, rows: std::ops::Range<usize>) -> DistanceMatrix {
-    let mut dm = DistanceMatrix::zeros(ds.n());
-    fill_rows(ds, squared, rows, &mut dm);
+    let n = ds.n();
+    let mut dm = DistanceMatrix::zeros(n);
+    let start = rows.start;
+    let mut cursor = start * n - start * (start + 1) / 2;
+    pairwise_condensed(ds, squared, rows, |d| {
+        dm.data[cursor] = d;
+        cursor += 1;
+    });
     dm
-}
-
-fn fill_rows(
-    ds: &Dataset,
-    squared: bool,
-    rows: std::ops::Range<usize>,
-    dm: &mut DistanceMatrix,
-) {
-    for i in rows {
-        let ri = ds.row(i);
-        for j in (i + 1)..ds.n() {
-            let d2 = sq_euclidean(ri, ds.row(j));
-            dm.set(i, j, if squared { d2 } else { d2.sqrt() });
-        }
-    }
 }
 
 /// Multi-threaded build: triangle-balanced row ranges, each worker fills
@@ -138,13 +135,7 @@ fn build_multi(ds: &Dataset, squared: bool, threads: usize) -> DistanceMatrix {
     let pieces = scoped_map_chunks(ranges.len(), ranges.len(), |ri| {
         let mut out = Vec::new();
         for r in &ranges[ri.clone()] {
-            for i in r.clone() {
-                let row_i = ds.row(i);
-                for j in (i + 1)..n {
-                    let d2 = sq_euclidean(row_i, ds.row(j));
-                    out.push(if squared { d2 } else { d2.sqrt() });
-                }
-            }
+            pairwise_condensed(ds, squared, r.clone(), |d| out.push(d));
         }
         (ri.start, out)
     });
@@ -253,6 +244,7 @@ fn build_gpu(
 mod tests {
     use super::*;
     use crate::data::synthetic::{generate, GmmSpec};
+    use crate::metric::sq_euclidean;
 
     #[test]
     fn condensed_indexing_roundtrip() {

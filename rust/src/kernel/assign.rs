@@ -1,0 +1,319 @@
+//! Assignment kernel — paper steps 4–7 fused: nearest-centroid argmin
+//! plus statistics accumulation (labels, per-cluster sums/counts,
+//! inertia) in one pass.
+//!
+//! Two paths, selected by metric:
+//!
+//! * **Euclidean** (paper Eq. 2, the default): rows are walked in cache
+//!   tiles of [`crate::kernel::ROW_TILE`]; centroid squared norms are
+//!   precomputed once per call (= once per Lloyd iteration), and the
+//!   argmin uses the norm-decomposition ‖x−c‖² = ‖x‖² − 2·x·c + ‖c‖².
+//!   Since ‖x‖² is constant per row it drops out of the argmin entirely,
+//!   so the inner loop is a pure dot product — 2 flops/element instead of
+//!   the subtract-square form's 3, and a shape LLVM vectorises well.
+//!   Norms and dots accumulate in **f64** (f32 products are exact in
+//!   f64): the decomposed form cancels catastrophically in f32 when
+//!   features carry a large common offset, and f64 accumulation keeps
+//!   the argmin faithful on unscaled data. The winner's distance is then
+//!   recomputed exactly with [`sq_euclidean`], so the reported inertia
+//!   is bit-identical to the scalar reference whenever the labels agree.
+//! * **generic** (Manhattan / Chebyshev / Cosine): the scalar row walk
+//!   ([`assign_update_range_scalar`]) with the metric's comparable form
+//!   in the argmin — no norm decomposition exists for these metrics, so
+//!   the reference loop *is* the live path.
+//!
+//! Both paths are range-invariant: a row's label and distance depend only
+//! on the row and the centroid table, never on tile or shard geometry, so
+//! per-shard partials combined by [`crate::exec::AssignStats::absorb`]
+//! equal the global single-pass result exactly (labels/counts) — the
+//! invariant `tests/coordinator_properties.rs` checks.
+
+use crate::data::Dataset;
+use crate::exec::AssignStats;
+use crate::kernel::{tiles, ROW_TILE};
+use crate::metric::{sq_euclidean, Metric};
+
+/// Assignment + statistics over a row range — the one entry point every
+/// regime calls (single: the full range; multi: one range per worker).
+pub fn assign_update_range(
+    ds: &Dataset,
+    centroids: &[f32],
+    k: usize,
+    metric: Metric,
+    range: std::ops::Range<usize>,
+) -> AssignStats {
+    debug_assert_eq!(centroids.len(), k * ds.m());
+    match metric {
+        Metric::Euclidean => assign_euclidean_tiled(ds, centroids, k, range),
+        _ => assign_update_range_scalar(ds, centroids, k, metric, range),
+    }
+}
+
+/// Per-centroid squared norms ‖c‖², computed once per call / iteration.
+/// Accumulated in f64 (every f32 product is exact in f64) so the
+/// decomposed score stays faithful on data with large common offsets.
+pub fn centroid_sq_norms(centroids: &[f32], k: usize, m: usize) -> Vec<f64> {
+    debug_assert_eq!(centroids.len(), k * m);
+    (0..k)
+        .map(|c| {
+            let cen = &centroids[c * m..(c + 1) * m];
+            let mut acc = 0.0f64;
+            for &v in cen {
+                acc += v as f64 * v as f64;
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Dot product x·c in f64 — the inner loop of the decomposed Euclidean
+/// path. Plain indexed loop over equal-length slices so LLVM
+/// auto-vectorises; f32 products widened to f64 are exact, so the only
+/// rounding is in the m additions.
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        acc += a[i] as f64 * b[i] as f64;
+    }
+    acc
+}
+
+/// Tiled Euclidean assignment via the norm-decomposition argmin.
+fn assign_euclidean_tiled(
+    ds: &Dataset,
+    centroids: &[f32],
+    k: usize,
+    range: std::ops::Range<usize>,
+) -> AssignStats {
+    let m = ds.m();
+    let c_norms = centroid_sq_norms(centroids, k, m);
+    let mut stats = AssignStats::zeros(range.len(), k, m);
+    // Per-tile argmin state, reused across tiles.
+    let mut best_score = vec![f64::INFINITY; ROW_TILE];
+    let mut best_idx = vec![0u32; ROW_TILE];
+    for tile in tiles(range.clone(), ROW_TILE) {
+        let t = tile.len();
+        best_score[..t].fill(f64::INFINITY);
+        best_idx[..t].fill(0);
+        // Sweep centroids over the L1-resident row tile: score(x, c) =
+        // ‖c‖² − 2·x·c  (= ‖x−c‖² − ‖x‖², monotone per row). Strict `<`
+        // keeps the scalar reference's lowest-index tie-break.
+        for (c, &cn) in c_norms.iter().enumerate() {
+            let cen = &centroids[c * m..(c + 1) * m];
+            for (li, i) in tile.clone().enumerate() {
+                let score = cn - 2.0 * dot(ds.row(i), cen);
+                if score < best_score[li] {
+                    best_score[li] = score;
+                    best_idx[li] = c as u32;
+                }
+            }
+        }
+        // Fold the tile into the statistics. The winner's distance is
+        // recomputed with the exact subtract-square form: one extra
+        // m-length pass per row (k-independent), buying an inertia that
+        // matches the scalar reference bit-for-bit on agreeing labels.
+        for (li, i) in tile.clone().enumerate() {
+            let row = ds.row(i);
+            let label = best_idx[li] as usize;
+            let out_i = i - range.start;
+            stats.labels[out_i] = label as u32;
+            stats.counts[label] += 1;
+            let d2 = sq_euclidean(row, &centroids[label * m..(label + 1) * m]);
+            stats.inertia += d2 as f64;
+            let dst = &mut stats.sums[label * m..(label + 1) * m];
+            for (s, &v) in dst.iter_mut().zip(row) {
+                *s += v as f64;
+            }
+        }
+    }
+    stats
+}
+
+/// Nearest centroid of one row (squared-Euclidean argmin) — the scalar
+/// primitive, kept as the semantic reference for the tiled path.
+#[inline]
+pub fn nearest_centroid(row: &[f32], centroids: &[f32], k: usize, m: usize) -> (usize, f32) {
+    let mut best = 0usize;
+    let mut best_d2 = f32::INFINITY;
+    for c in 0..k {
+        let d2 = sq_euclidean(row, &centroids[c * m..(c + 1) * m]);
+        if d2 < best_d2 {
+            best_d2 = d2;
+            best = c;
+        }
+    }
+    (best, best_d2)
+}
+
+/// Nearest centroid under an arbitrary metric, via its comparable form.
+#[inline]
+pub fn nearest_centroid_metric(
+    row: &[f32],
+    centroids: &[f32],
+    k: usize,
+    m: usize,
+    metric: Metric,
+) -> (usize, f32) {
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for c in 0..k {
+        let d = metric.comparable(row, &centroids[c * m..(c + 1) * m]);
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    (best, best_d)
+}
+
+/// The pre-tiling scalar implementation: row-at-a-time comparable-form
+/// scan. Three roles: the golden reference the tiled Euclidean path is
+/// tested against, the "before" row of `benches/f2_stage_breakdown`,
+/// and the *live* path for the non-Euclidean metrics (which have no
+/// norm decomposition — one loop, no duplicate to drift).
+pub fn assign_update_range_scalar(
+    ds: &Dataset,
+    centroids: &[f32],
+    k: usize,
+    metric: Metric,
+    range: std::ops::Range<usize>,
+) -> AssignStats {
+    let m = ds.m();
+    debug_assert_eq!(centroids.len(), k * m);
+    let mut stats = AssignStats::zeros(range.len(), k, m);
+    for (out_i, i) in range.clone().enumerate() {
+        let row = ds.row(i);
+        let (label, d2) = if metric == Metric::Euclidean {
+            nearest_centroid(row, centroids, k, m)
+        } else {
+            nearest_centroid_metric(row, centroids, k, m, metric)
+        };
+        stats.labels[out_i] = label as u32;
+        stats.counts[label] += 1;
+        stats.inertia += d2 as f64;
+        let dst = &mut stats.sums[label * m..(label + 1) * m];
+        for (s, &v) in dst.iter_mut().zip(row) {
+            *s += v as f64;
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GmmSpec};
+    use crate::data::Dataset;
+
+    const ALL_METRICS: [Metric; 4] = [
+        Metric::Euclidean,
+        Metric::Manhattan,
+        Metric::Chebyshev,
+        Metric::Cosine,
+    ];
+
+    fn square() -> Dataset {
+        // four corners of a 1×1 square plus the center
+        Dataset::from_vec(5, 2, vec![0., 0., 1., 0., 0., 1., 1., 1., 0.5, 0.5]).unwrap()
+    }
+
+    #[test]
+    fn nearest_centroid_tie_breaks_low_index() {
+        let row = [0.5f32];
+        let cent = [0.0f32, 1.0];
+        let (label, d2) = nearest_centroid(&row, &cent, 2, 1);
+        assert_eq!(label, 0, "ties must go to the lower index");
+        assert!((d2 - 0.25).abs() < 1e-7);
+    }
+
+    #[test]
+    fn tiled_tie_breaks_low_index_too() {
+        // one row equidistant from two centroids: the decomposed scores
+        // are exactly equal (same dot, same norm), so strict `<` keeps
+        // centroid 0 — matching the scalar reference.
+        let ds = Dataset::from_vec(1, 1, vec![0.5]).unwrap();
+        let cent = [0.0f32, 1.0];
+        let stats = assign_update_range(&ds, &cent, 2, Metric::Euclidean, 0..1);
+        assert_eq!(stats.labels, vec![0]);
+    }
+
+    #[test]
+    fn tiled_matches_scalar_reference_all_metrics() {
+        // Golden parity on a seeded GMM large enough to cross several
+        // tile boundaries, k past the paper's defaults. Separated
+        // geometry (tight blobs, true centers as centroids) keeps every
+        // argmin margin far above f32 rounding noise, so Euclidean label
+        // parity between the dot-product and subtract-square forms is
+        // deterministic; exact-tie semantics are covered separately by
+        // `tiled_tie_breaks_low_index_too`.
+        let g = generate(&GmmSpec::new(1500, 7, 9).seed(42).spread(0.05).center_scale(30.0));
+        let ds = &g.dataset;
+        let cent = g.centers.clone();
+        for metric in ALL_METRICS {
+            let tiled = assign_update_range(ds, &cent, 9, metric, 0..ds.n());
+            let scalar = assign_update_range_scalar(ds, &cent, 9, metric, 0..ds.n());
+            assert_eq!(tiled.labels, scalar.labels, "{metric:?} labels");
+            assert_eq!(tiled.counts, scalar.counts, "{metric:?} counts");
+            assert!(
+                (tiled.inertia - scalar.inertia).abs()
+                    <= 1e-9 * scalar.inertia.max(1.0),
+                "{metric:?} inertia {} vs {}",
+                tiled.inertia,
+                scalar.inertia
+            );
+            for (a, b) in tiled.sums.iter().zip(&scalar.sums) {
+                assert!((a - b).abs() <= 1e-9 * b.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn range_version_matches_full() {
+        let ds = square();
+        let cent = [0.0f32, 0.0, 1.0, 1.0];
+        for metric in ALL_METRICS {
+            let full = assign_update_range(&ds, &cent, 2, metric, 0..5);
+            let mut combined = AssignStats::zeros(5, 2, 2);
+            combined.absorb(0, &assign_update_range(&ds, &cent, 2, metric, 0..2));
+            combined.absorb(2, &assign_update_range(&ds, &cent, 2, metric, 2..5));
+            assert_eq!(combined.labels, full.labels, "{metric:?}");
+            assert_eq!(combined.counts, full.counts, "{metric:?}");
+            assert!((combined.inertia - full.inertia).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn labels_invariant_to_shard_geometry() {
+        // range-invariance across an uneven split that misaligns tiles
+        let g = generate(&GmmSpec::new(700, 5, 4).seed(9));
+        let ds = &g.dataset;
+        let cent = ds.gather(&[0, 100, 200, 300]);
+        let full = assign_update_range(ds, &cent, 4, Metric::Euclidean, 0..700);
+        let mut combined = AssignStats::zeros(700, 4, 5);
+        for r in [0..37, 37..300, 300..700] {
+            let start = r.start;
+            combined.absorb(start, &assign_update_range(ds, &cent, 4, Metric::Euclidean, r));
+        }
+        assert_eq!(combined.labels, full.labels);
+        assert_eq!(combined.counts, full.counts);
+    }
+
+    #[test]
+    fn centroid_sq_norms_match_definition() {
+        let cent = [3.0f32, 4.0, 1.0, 0.0];
+        let norms = centroid_sq_norms(&cent, 2, 2);
+        assert_eq!(norms, vec![25.0, 1.0]);
+    }
+
+    #[test]
+    fn empty_range_yields_empty_stats() {
+        let ds = square();
+        let cent = [0.0f32, 0.0, 1.0, 1.0];
+        let stats = assign_update_range(&ds, &cent, 2, Metric::Euclidean, 2..2);
+        assert!(stats.labels.is_empty());
+        assert_eq!(stats.counts, vec![0, 0]);
+        assert_eq!(stats.inertia, 0.0);
+    }
+}

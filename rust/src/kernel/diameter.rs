@@ -1,0 +1,149 @@
+//! Diameter kernel — paper step 1 (Eq. 3): the farthest pair of the
+//! candidate set, plus the condensed pairwise-distance fill the
+//! hierarchical module builds its matrix from.
+//!
+//! The pair space is walked in [`crate::kernel::PAIR_TILE`]² blocks so
+//! both row blocks stay cache-resident while their cross-distances are
+//! scanned — the same tile walker shape as the assignment kernel, on the
+//! O(n²) stage. The diameter stage always uses the paper's Eq. 2 metric
+//! (squared Euclidean; argmax is invariant under the square root).
+
+use crate::data::Dataset;
+use crate::exec::{DiameterResult, ExecError};
+use crate::kernel::{tiles, PAIR_TILE};
+use crate::metric::sq_euclidean;
+
+/// The farthest pair whose first element's *candidate index* lies in
+/// `[lo, hi)` — the unit of work one thread handles in Algorithm 3
+/// step 1 ("distances between the elements of the whole set and elements
+/// of (1/N)-th part of this set"). Exploits symmetry: the second index
+/// always exceeds the first.
+pub fn farthest_pair(
+    ds: &Dataset,
+    candidates: &[usize],
+    lo: usize,
+    hi: usize,
+) -> Result<DiameterResult, ExecError> {
+    if candidates.len() < 2 {
+        return Err(ExecError("diameter needs at least 2 candidates".into()));
+    }
+    let len = candidates.len();
+    let hi = hi.min(len);
+    let mut best = DiameterResult { d2: -1.0, i: 0, j: 0 };
+    for a_tile in tiles(lo..hi, PAIR_TILE) {
+        for b_tile in tiles(a_tile.start..len, PAIR_TILE) {
+            for a in a_tile.clone() {
+                let ia = candidates[a];
+                let row_a = ds.row(ia);
+                let b_from = b_tile.start.max(a + 1);
+                for &ib in &candidates[b_from..b_tile.end] {
+                    let d2 = sq_euclidean(row_a, ds.row(ib));
+                    if d2 > best.d2 {
+                        best = DiameterResult { d2, i: ia, j: ib };
+                    }
+                }
+            }
+        }
+    }
+    Ok(best)
+}
+
+/// Pairwise distances of the upper-triangle rows `rows × (row+1..n)`,
+/// emitted in condensed row-major order (the layout
+/// [`crate::hier::matrix::DistanceMatrix`] stores). `squared` keeps
+/// squared distances (centroid linkage), otherwise raw Euclidean.
+pub fn pairwise_condensed(
+    ds: &Dataset,
+    squared: bool,
+    rows: std::ops::Range<usize>,
+    mut emit: impl FnMut(f32),
+) {
+    // A plain row-major walk: the condensed layout fixes the emission
+    // order, so i-blocking (which would reorder pairs) is not available
+    // here — `farthest_pair` is the blocked variant for order-free scans.
+    let n = ds.n();
+    for i in rows {
+        let row_i = ds.row(i);
+        for j in (i + 1)..n {
+            let d2 = sq_euclidean(row_i, ds.row(j));
+            emit(if squared { d2 } else { d2.sqrt() });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GmmSpec};
+    use crate::data::Dataset;
+
+    #[test]
+    fn finds_the_diagonal_of_a_square() {
+        let ds = Dataset::from_vec(
+            5,
+            2,
+            vec![0., 0., 1., 0., 0., 1., 1., 1., 0.5, 0.5],
+        )
+        .unwrap();
+        let cand: Vec<usize> = (0..5).collect();
+        let d = farthest_pair(&ds, &cand, 0, 5).unwrap();
+        assert!((d.d2 - 2.0).abs() < 1e-6);
+        let pair = (d.i.min(d.j), d.i.max(d.j));
+        assert!(pair == (0, 3) || pair == (1, 2), "{pair:?}");
+    }
+
+    #[test]
+    fn requires_two_candidates() {
+        let ds = Dataset::from_vec(2, 1, vec![0.0, 1.0]).unwrap();
+        assert!(farthest_pair(&ds, &[0], 0, 1).is_err());
+    }
+
+    #[test]
+    fn split_scan_covers_all_pairs() {
+        // the [lo, hi) split must find the same max as the full scan,
+        // including pairs that straddle block boundaries
+        let g = generate(&GmmSpec::new(801, 4, 3).seed(17));
+        let ds = &g.dataset;
+        let cand: Vec<usize> = (0..ds.n()).collect();
+        let full = farthest_pair(ds, &cand, 0, cand.len()).unwrap();
+        let mut best = DiameterResult { d2: -1.0, i: 0, j: 0 };
+        for (lo, hi) in [(0, 100), (100, 500), (500, 801)] {
+            let p = farthest_pair(ds, &cand, lo, hi).unwrap();
+            if p.d2 > best.d2 {
+                best = p;
+            }
+        }
+        assert_eq!(best.d2, full.d2);
+        assert_eq!(
+            sq_euclidean(ds.row(best.i), ds.row(best.j)),
+            best.d2,
+            "returned pair must realise the distance"
+        );
+    }
+
+    #[test]
+    fn blocked_scan_matches_naive_reference() {
+        let g = generate(&GmmSpec::new(300, 5, 2).seed(23));
+        let ds = &g.dataset;
+        let cand: Vec<usize> = (0..ds.n()).step_by(2).collect();
+        let blocked = farthest_pair(ds, &cand, 0, cand.len()).unwrap();
+        let mut naive = -1.0f32;
+        for a in 0..cand.len() {
+            for b in (a + 1)..cand.len() {
+                naive = naive.max(sq_euclidean(ds.row(cand[a]), ds.row(cand[b])));
+            }
+        }
+        assert_eq!(blocked.d2, naive);
+    }
+
+    #[test]
+    fn pairwise_condensed_order_and_values() {
+        let ds = Dataset::from_vec(4, 1, vec![0.0, 1.0, 3.0, 6.0]).unwrap();
+        let mut got = Vec::new();
+        pairwise_condensed(&ds, false, 0..4, |d| got.push(d));
+        assert_eq!(got, vec![1.0, 3.0, 6.0, 2.0, 5.0, 3.0]);
+        let mut sq = Vec::new();
+        pairwise_condensed(&ds, true, 1..3, |d| sq.push(d));
+        assert_eq!(sq, vec![4.0, 25.0, 9.0]);
+    }
+}

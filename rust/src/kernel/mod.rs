@@ -1,0 +1,71 @@
+//! Stage kernels — the single home of every hot scalar loop.
+//!
+//! The paper's three regimes (Algorithms 2–4) share the same per-stage
+//! math; what differs is orchestration: how the data is sharded, which
+//! threads run, how partials are combined. This module owns the math so
+//! the executor layer ([`crate::exec`]) can stay pure orchestration:
+//!
+//! * [`assign`] — fused nearest-centroid assignment + statistics
+//!   accumulation (paper steps 4–7), block-tiled over rows with the
+//!   Euclidean path monomorphised onto the norm-decomposition form
+//!   ‖x−c‖² = ‖x‖² − 2·x·c + ‖c‖²;
+//! * [`reduce`] — tiled center-of-gravity coordinate sums (paper step 2)
+//!   and partial-sum folding;
+//! * [`diameter`] — blocked farthest-pair scan (paper step 1, Eq. 3) and
+//!   the condensed pairwise-distance fill reused by the hierarchical
+//!   module.
+//!
+//! Every kernel takes an explicit row (or candidate) range, so the same
+//! function serves the single-threaded regime (full range), the
+//! multi-threaded regime (one range per worker) and future backends. The
+//! per-row results are range-invariant: a row gets the same label and
+//! distance no matter which shard or tile it lands in, which is what the
+//! cross-regime equality tests rely on.
+//!
+//! Any future SIMD or batched-PJRT implementation slots in behind these
+//! entry points without touching the orchestration layer.
+
+pub mod assign;
+pub mod diameter;
+pub mod reduce;
+
+/// Rows per cache tile. A tile of `ROW_TILE × m` f32 (m ≤ 25 in the
+/// paper's workloads → ≤ 12.8 KB) stays L1-resident while the centroid
+/// table sweeps over it.
+pub const ROW_TILE: usize = 128;
+
+/// Candidate rows per block of the farthest-pair / pairwise scans.
+pub const PAIR_TILE: usize = 256;
+
+/// Iterate `range` in tiles of at most `tile` rows.
+#[inline]
+pub(crate) fn tiles(
+    range: std::ops::Range<usize>,
+    tile: usize,
+) -> impl Iterator<Item = std::ops::Range<usize>> {
+    let end = range.end;
+    range.step_by(tile.max(1)).map(move |t0| {
+        let t1 = (t0 + tile.max(1)).min(end);
+        t0..t1
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiles_partition_the_range() {
+        for (start, end, tile) in [(0usize, 10usize, 3usize), (5, 5, 4), (7, 300, 128), (0, 128, 128)] {
+            let ts: Vec<_> = tiles(start..end, tile).collect();
+            let mut next = start;
+            for t in &ts {
+                assert_eq!(t.start, next, "contiguous");
+                assert!(t.len() <= tile && !t.is_empty());
+                next = t.end;
+            }
+            assert_eq!(next, end, "full coverage");
+        }
+        assert_eq!(tiles(3..3, 8).count(), 0);
+    }
+}

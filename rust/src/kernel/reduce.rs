@@ -1,0 +1,82 @@
+//! Reduction kernels — paper step 2 (center of gravity) and the
+//! partial-sum folding every regime's leader performs.
+//!
+//! Coordinate sums accumulate in f64 two levels deep: each
+//! [`crate::kernel::ROW_TILE`] tile sums locally, then folds into the
+//! range total. Pairwise-style summation is both cache-friendly and
+//! slightly *more* accurate than a flat left-to-right sum over millions
+//! of rows, and stays well inside the tolerances the cross-regime tests
+//! allow.
+
+use crate::data::Dataset;
+use crate::kernel::{tiles, ROW_TILE};
+
+/// Per-feature coordinate sums over a row range, in f64. The unit of
+/// work one shard contributes to the center-of-gravity stage.
+pub fn coordinate_sums(ds: &Dataset, range: std::ops::Range<usize>) -> Vec<f64> {
+    let m = ds.m();
+    let mut total = vec![0f64; m];
+    let mut local = vec![0f64; m];
+    for tile in tiles(range, ROW_TILE) {
+        local.fill(0.0);
+        for i in tile {
+            for (s, &v) in local.iter_mut().zip(ds.row(i)) {
+                *s += v as f64;
+            }
+        }
+        fold_sums(&mut total, &local);
+    }
+    total
+}
+
+/// Fold one partial sum vector into the accumulator (leader-side
+/// combine; also the tile → range fold above).
+pub fn fold_sums(total: &mut [f64], partial: &[f64]) {
+    debug_assert_eq!(total.len(), partial.len());
+    for (t, &p) in total.iter_mut().zip(partial) {
+        *t += p;
+    }
+}
+
+/// Finish the center-of-gravity stage: sums / n, back in f32.
+pub fn mean_from_sums(sums: &[f64], n: usize) -> Vec<f32> {
+    let n = n.max(1) as f64;
+    sums.iter().map(|&s| (s / n) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GmmSpec};
+    use crate::data::Dataset;
+
+    #[test]
+    fn sums_match_definition() {
+        let ds = Dataset::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let s = coordinate_sums(&ds, 0..3);
+        assert_eq!(s, vec![9.0, 12.0]);
+        assert_eq!(coordinate_sums(&ds, 1..2), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn mean_is_sums_over_n() {
+        let c = mean_from_sums(&[9.0, 12.0], 3);
+        assert_eq!(c, vec![3.0, 4.0]);
+        // n=0 guarded (empty dataset conventions)
+        assert_eq!(mean_from_sums(&[5.0], 0), vec![5.0]);
+    }
+
+    #[test]
+    fn sharded_fold_matches_global() {
+        let g = generate(&GmmSpec::new(999, 6, 3).seed(13));
+        let ds = &g.dataset;
+        let global = coordinate_sums(ds, 0..ds.n());
+        let mut folded = vec![0f64; ds.m()];
+        for r in [0..250, 250..251, 251..999] {
+            fold_sums(&mut folded, &coordinate_sums(ds, r));
+        }
+        for (a, b) in folded.iter().zip(&global) {
+            assert!((a - b).abs() <= 1e-9 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+}

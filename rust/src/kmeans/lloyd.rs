@@ -18,10 +18,12 @@ use crate::metric::{sq_euclidean, Metric};
 use crate::metrics::{RunMetrics, StageTimer};
 
 /// Stage names used in [`StageTimer`] (shared with benches/reports).
+/// The `kernel.` segment names the [`crate::kernel`] entry point that
+/// carries the stage; leader-side O(k·m) steps have no kernel segment.
 pub mod stage {
-    pub const INIT_DIAMETER: &str = "init.diameter+choose";
-    pub const INIT_COG: &str = "init.center_of_gravity";
-    pub const ASSIGN_UPDATE: &str = "iterate.assign_update";
+    pub const INIT_DIAMETER: &str = "init.kernel.diameter+choose";
+    pub const INIT_COG: &str = "init.kernel.reduce";
+    pub const ASSIGN_UPDATE: &str = "iterate.kernel.assign";
     pub const FORM_CENTROIDS: &str = "iterate.form_centroids";
     pub const CONVERGENCE: &str = "iterate.congruence_check";
 }

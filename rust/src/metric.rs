@@ -17,15 +17,41 @@ pub enum Metric {
     Cosine,
 }
 
-impl Metric {
-    pub fn from_str(s: &str) -> Option<Metric> {
+/// Error for parsing an unknown metric name via `str::parse::<Metric>()`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParseMetricError(pub String);
+
+impl std::fmt::Display for ParseMetricError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown metric '{}' (expected euclidean | manhattan | chebyshev | cosine)",
+            self.0
+        )
+    }
+}
+
+impl std::error::Error for ParseMetricError {}
+
+impl std::str::FromStr for Metric {
+    type Err = ParseMetricError;
+
+    fn from_str(s: &str) -> Result<Metric, ParseMetricError> {
         match s.to_ascii_lowercase().as_str() {
-            "euclidean" | "l2" => Some(Metric::Euclidean),
-            "manhattan" | "l1" | "cityblock" => Some(Metric::Manhattan),
-            "chebyshev" | "linf" => Some(Metric::Chebyshev),
-            "cosine" => Some(Metric::Cosine),
-            _ => None,
+            "euclidean" | "l2" => Ok(Metric::Euclidean),
+            "manhattan" | "l1" | "cityblock" => Ok(Metric::Manhattan),
+            "chebyshev" | "linf" => Ok(Metric::Chebyshev),
+            "cosine" => Ok(Metric::Cosine),
+            _ => Err(ParseMetricError(s.to_string())),
         }
+    }
+}
+
+impl Metric {
+    /// Option-shaped convenience used by the CLI/config paths; thin
+    /// delegate to the [`std::str::FromStr`] impl.
+    pub fn from_str(s: &str) -> Option<Metric> {
+        s.parse().ok()
     }
 
     pub fn name(&self) -> &'static str {
@@ -159,6 +185,18 @@ mod tests {
         assert_eq!(Metric::from_str("bogus"), None);
         for m in [Metric::Euclidean, Metric::Manhattan, Metric::Chebyshev, Metric::Cosine] {
             assert_eq!(Metric::from_str(m.name()), Some(m));
+        }
+    }
+
+    #[test]
+    fn fromstr_trait_parses() {
+        // the trait path must work alongside the inherent helper
+        assert_eq!("l2".parse::<Metric>(), Ok(Metric::Euclidean));
+        assert_eq!("Chebyshev".parse::<Metric>(), Ok(Metric::Chebyshev));
+        let err = "taxicab".parse::<Metric>().unwrap_err();
+        assert!(err.to_string().contains("taxicab"), "{err}");
+        for m in [Metric::Euclidean, Metric::Manhattan, Metric::Chebyshev, Metric::Cosine] {
+            assert_eq!(m.name().parse::<Metric>(), Ok(m));
         }
     }
 }

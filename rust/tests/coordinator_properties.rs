@@ -8,8 +8,9 @@ use parclust::data::synthetic::{generate, GmmSpec};
 use parclust::data::Dataset;
 use parclust::exec::multi::{triangle_splits, MultiExecutor};
 use parclust::exec::regime::{allowed_for, resolve, Regime};
-use parclust::exec::single::{assign_update_range, SingleExecutor};
+use parclust::exec::single::SingleExecutor;
 use parclust::exec::{AssignStats, Executor};
+use parclust::kernel::assign::assign_update_range;
 use parclust::kmeans::{fit_with, DiameterMode, KMeansConfig};
 use parclust::metric::Metric;
 use parclust::pool::split_ranges;

@@ -1,0 +1,107 @@
+//! Golden parity for the tiled kernel layer: the block-tiled,
+//! norm-decomposition assignment path must reproduce the pre-refactor
+//! scalar path bit-for-bit on labels over a fixed seeded GMM (the
+//! acceptance gate for replacing the subtract-square scan with the
+//! ‖x‖² − 2·x·c + ‖c‖² dot-product form), and the blocked diameter scan
+//! must find the exact same farthest distance as a naive triangle scan.
+
+use parclust::data::synthetic::{generate, GmmSpec};
+use parclust::exec::multi::MultiExecutor;
+use parclust::exec::single::SingleExecutor;
+use parclust::exec::Executor;
+use parclust::kernel::{assign, diameter};
+use parclust::metric::{sq_euclidean, Metric};
+
+/// The f2 bench shape (n scaled down 5× to keep the suite fast; same m
+/// and k). Separated geometry: with tight blobs and the true mixture
+/// centers as the centroid table, every row's argmin margin is orders of
+/// magnitude above f32 rounding noise, so label parity between the
+/// norm-decomposition and subtract-square forms is deterministic —
+/// exact-tie semantics are pinned by the kernel's unit tests instead.
+fn golden_workload() -> parclust::data::synthetic::Generated {
+    generate(&GmmSpec::new(20_000, 25, 16).seed(4242).spread(0.05).center_scale(30.0))
+}
+
+#[test]
+fn tiled_assignment_labels_match_scalar_golden() {
+    let g = golden_workload();
+    let ds = &g.dataset;
+    let cent = g.centers.clone();
+
+    let tiled = assign::assign_update_range(ds, &cent, 16, Metric::Euclidean, 0..ds.n());
+    let scalar =
+        assign::assign_update_range_scalar(ds, &cent, 16, Metric::Euclidean, 0..ds.n());
+
+    assert_eq!(tiled.labels, scalar.labels, "golden labels must be bit-compatible");
+    assert_eq!(tiled.counts, scalar.counts);
+    // the winner's distance is recomputed with the exact subtract-square
+    // form, so inertia agrees to summation-order noise
+    assert!(
+        (tiled.inertia - scalar.inertia).abs() <= 1e-9 * scalar.inertia.max(1.0),
+        "{} vs {}",
+        tiled.inertia,
+        scalar.inertia
+    );
+    // and the labels are the ground truth on separated data
+    assert_eq!(tiled.labels, g.labels);
+}
+
+#[test]
+fn tiled_assignment_golden_holds_after_one_lloyd_step() {
+    // Parity must also hold on *updated* centroids (cluster means rather
+    // than mixture centers — the state every iteration after the first
+    // sees).
+    let g = golden_workload();
+    let ds = &g.dataset;
+    let step = assign::assign_update_range(ds, &g.centers, 16, Metric::Euclidean, 0..ds.n());
+    let cent1 = step.centroids(&g.centers, 16, ds.m());
+
+    let tiled = assign::assign_update_range(ds, &cent1, 16, Metric::Euclidean, 0..ds.n());
+    let scalar =
+        assign::assign_update_range_scalar(ds, &cent1, 16, Metric::Euclidean, 0..ds.n());
+    assert_eq!(tiled.labels, scalar.labels);
+    assert_eq!(tiled.counts, scalar.counts);
+}
+
+#[test]
+fn executors_match_scalar_golden_end_to_end() {
+    // the same parity through the executor layer, single and multi
+    let g = golden_workload();
+    let ds = &g.dataset;
+    let cent = g.centers.clone();
+    let scalar =
+        assign::assign_update_range_scalar(ds, &cent, 16, Metric::Euclidean, 0..ds.n());
+
+    let single = SingleExecutor::new()
+        .assign_update(ds, &cent, 16, Metric::Euclidean)
+        .unwrap();
+    let multi = MultiExecutor::new(8)
+        .assign_update(ds, &cent, 16, Metric::Euclidean)
+        .unwrap();
+    assert_eq!(single.labels, scalar.labels);
+    assert_eq!(multi.labels, scalar.labels);
+    assert_eq!(single.counts, scalar.counts);
+    assert_eq!(multi.counts, scalar.counts);
+}
+
+#[test]
+fn blocked_diameter_matches_naive_scan_golden() {
+    let g = generate(&GmmSpec::new(2_500, 25, 16).seed(4242));
+    let ds = &g.dataset;
+    let cand: Vec<usize> = (0..ds.n()).collect();
+    let blocked = diameter::farthest_pair(ds, &cand, 0, cand.len()).unwrap();
+
+    let mut naive_d2 = -1.0f32;
+    for a in 0..cand.len() {
+        let row_a = ds.row(cand[a]);
+        for &b in cand.iter().skip(a + 1) {
+            naive_d2 = naive_d2.max(sq_euclidean(row_a, ds.row(b)));
+        }
+    }
+    assert_eq!(blocked.d2, naive_d2, "blocked scan must find the exact max");
+    assert_eq!(
+        sq_euclidean(ds.row(blocked.i), ds.row(blocked.j)),
+        blocked.d2,
+        "returned pair realises the distance"
+    );
+}

@@ -55,6 +55,47 @@ fn assign_update_matches_across_regimes() {
     );
 }
 
+/// Cross-regime agreement matrix over **all four metrics** (the paper's
+/// "other metrics can be chosen"): single and multi run the same shared
+/// kernel per shard, so labels and counts must match exactly, and the
+/// accumulated statistics to f64 summation-order tolerance. (The gpu
+/// regime is Euclidean-only by design and is covered by the tests above.)
+#[test]
+fn assign_update_matrix_all_metrics_single_vs_multi() {
+    let g = generate(&GmmSpec::new(4000, 12, 5).seed(31).spread(0.4));
+    let ds = &g.dataset;
+    let cent = ds.gather(&[0, 800, 1600, 2400, 3200]);
+    for metric in [
+        Metric::Euclidean,
+        Metric::Manhattan,
+        Metric::Chebyshev,
+        Metric::Cosine,
+    ] {
+        let single = SingleExecutor::new()
+            .assign_update(ds, &cent, 5, metric)
+            .unwrap();
+        for threads in [2usize, 4, 7] {
+            let multi = MultiExecutor::new(threads)
+                .assign_update(ds, &cent, 5, metric)
+                .unwrap();
+            assert_eq!(single.labels, multi.labels, "{metric:?} t={threads} labels");
+            assert_eq!(single.counts, multi.counts, "{metric:?} t={threads} counts");
+            assert!(
+                (single.inertia - multi.inertia).abs()
+                    <= 1e-9 * single.inertia.abs().max(1.0),
+                "{metric:?} t={threads} inertia: {} vs {}",
+                single.inertia,
+                multi.inertia
+            );
+            let s32: Vec<f32> = single.sums.iter().map(|&v| v as f32).collect();
+            let m32: Vec<f32> = multi.sums.iter().map(|&v| v as f32).collect();
+            assert_allclose(&s32, &m32, 1e-6, 1e-4);
+        }
+        // the assignment is total under every metric
+        assert_eq!(single.counts.iter().sum::<u64>(), 4000, "{metric:?}");
+    }
+}
+
 #[test]
 fn diameter_matches_across_regimes() {
     require_artifacts!();
