@@ -31,8 +31,11 @@ fn main() {
         ],
     );
 
+    // CI smoke (BENCH_QUICK=1) proves the bench runs without paying for
+    // the large real rows; model rows are free either way.
+    let real_cap = if parclust::benchkit::smoke_mode() { 10_000 } else { 100_000 };
     for n in [10_000usize, 50_000, 100_000, 500_000, 1_000_000, 2_000_000] {
-        let real = n <= 100_000;
+        let real = n <= real_cap;
         let (mut sr, mut mr, mut gr) =
             ("-".to_string(), "-".to_string(), "-".to_string());
         if real {

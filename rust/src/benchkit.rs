@@ -88,8 +88,24 @@ impl Bencher {
         }
     }
 
-    /// Honour `PARCLUST_BENCH_BUDGET_MS` if set (CI knob).
+    /// The bench-smoke profile: warmup 0, pilot + ≤ 2 measured
+    /// iterations — just enough to prove the bench still executes.
+    pub fn smoke(mut self) -> Self {
+        self.budget = Duration::from_millis(1);
+        self.min_iters = 1;
+        self.max_iters = 2;
+        self.warmup_iters = 0;
+        self
+    }
+
+    /// Honour the env knobs: `BENCH_QUICK=1` collapses every benchmark
+    /// to [`Bencher::smoke`] (the CI step that proves the benches still
+    /// build and execute), and `PARCLUST_BENCH_BUDGET_MS` overrides the
+    /// wall budget.
     pub fn from_env(mut self) -> Self {
+        if smoke_mode() {
+            self = self.smoke();
+        }
         if let Ok(ms) = std::env::var("PARCLUST_BENCH_BUDGET_MS") {
             if let Ok(ms) = ms.parse::<u64>() {
                 self.budget = Duration::from_millis(ms);
@@ -121,6 +137,16 @@ impl Bencher {
         }
         Stats::from_samples(samples)
     }
+}
+
+/// True when `BENCH_QUICK` is set truthy — the CI bench-smoke mode.
+/// Benches may also use this to shrink their workloads (the point is
+/// "does every bench still run", not numbers worth recording).
+pub fn smoke_mode() -> bool {
+    matches!(
+        std::env::var("BENCH_QUICK").as_deref(),
+        Ok("1") | Ok("true") | Ok("yes")
+    )
 }
 
 /// Pretty duration: picks a readable unit.
@@ -240,6 +266,16 @@ mod tests {
         // warmup(1) + pilot(1) + iters(>=3)
         assert!(count >= 5, "count={count}");
         assert!(s.iters >= 4);
+    }
+
+    #[test]
+    fn smoke_profile_is_tiny() {
+        // No env mutation here: setenv races sibling test threads (UB
+        // via glibc getenv); the env wiring is one `if` in from_env.
+        let b = Bencher::default().smoke();
+        assert_eq!(b.warmup_iters, 0);
+        assert_eq!(b.min_iters, 1);
+        assert!(b.max_iters <= 2);
     }
 
     #[test]

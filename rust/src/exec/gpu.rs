@@ -16,7 +16,7 @@
 use std::sync::{Arc, Mutex};
 
 use crate::data::Dataset;
-use crate::exec::{AssignStats, DiameterResult, ExecError, Executor};
+use crate::exec::{AssignSession, AssignStats, DenseSession, DiameterResult, ExecError, Executor};
 use crate::metric::Metric;
 use crate::runtime::{pad, ArtifactKind, Device, HostTensor, InputRef};
 
@@ -385,5 +385,29 @@ impl Executor for GpuExecutor {
             total.absorb(offset, &shard);
         }
         Ok(total)
+    }
+
+    /// The GPU regime keeps the **dense** per-iteration sweep: the
+    /// triangle-inequality bounds of [`crate::kernel::pruned`] are
+    /// per-row divergent (each row decides independently whether to
+    /// scan), which is the wrong shape for the wide device kernels —
+    /// and with the dataset pinned on the device
+    /// ([`GpuExecutor::preload`]) the dense sweep only ships the k×m
+    /// centroid table per chunk anyway. This mirrors the paper's
+    /// per-stage offload logic: stages keep their regime-appropriate
+    /// algorithm rather than sharing one shape.
+    fn assign_session<'a>(
+        &'a self,
+        ds: &'a Dataset,
+        k: usize,
+        metric: Metric,
+    ) -> Result<Box<dyn AssignSession + 'a>, ExecError> {
+        if metric != Metric::Euclidean {
+            return Err(ExecError(format!(
+                "gpu kernels are compiled for the euclidean metric, got {}",
+                metric.name()
+            )));
+        }
+        Ok(Box::new(DenseSession::new(self, ds, k, metric)))
     }
 }

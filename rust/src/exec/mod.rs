@@ -25,6 +25,8 @@ pub mod single;
 use crate::data::Dataset;
 use crate::metric::Metric;
 
+pub use crate::kernel::pruned::PruneCounters;
+
 /// Result of the diameter stage (paper Eq. 3): the max-distance pair.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DiameterResult {
@@ -59,6 +61,20 @@ impl AssignStats {
             counts: vec![0; k],
             inertia: 0.0,
         }
+    }
+
+    /// Reset to zeros for an (n, k, m) pass, reusing the existing
+    /// allocations whenever the shapes repeat — the per-iteration entry
+    /// point of the assignment sessions (no n-length churn per
+    /// iteration).
+    pub fn reset(&mut self, n: usize, k: usize, m: usize) {
+        self.labels.clear();
+        self.labels.resize(n, 0);
+        self.sums.clear();
+        self.sums.resize(k * m, 0.0);
+        self.counts.clear();
+        self.counts.resize(k, 0);
+        self.inertia = 0.0;
     }
 
     /// Fold a shard's partials (with its row offset) into `self`.
@@ -126,6 +142,10 @@ pub trait Executor {
     /// Paper steps 4-7 fused: assign every row to its nearest centroid
     /// (under `metric` — paper Eq. 2 by default, "other metrics can be
     /// chosen") and accumulate the statistics for the next centroid table.
+    ///
+    /// Stateless one-shot form; the Lloyd driver uses
+    /// [`Executor::assign_session`] instead so per-fit state (scratch
+    /// buffers, pruning bounds) survives across iterations.
     fn assign_update(
         &self,
         ds: &Dataset,
@@ -133,6 +153,84 @@ pub trait Executor {
         k: usize,
         metric: Metric,
     ) -> Result<AssignStats, ExecError>;
+
+    /// Open a **stateful** assignment session for one fit over `ds`: the
+    /// per-iteration entry point of the Lloyd loop. Sessions own their
+    /// n-length buffers (labels, statistics, triangle-inequality bounds)
+    /// for the whole fit, so iterating allocates nothing per pass, and
+    /// the CPU regimes prune Euclidean assignment work with
+    /// [`crate::kernel::pruned`] bounds carried between iterations. The
+    /// GPU regime returns a [`DenseSession`] (pruning is per-row
+    /// divergent — the wrong shape for the wide device kernels, matching
+    /// the paper's per-stage offload logic).
+    fn assign_session<'a>(
+        &'a self,
+        ds: &'a Dataset,
+        k: usize,
+        metric: Metric,
+    ) -> Result<Box<dyn AssignSession + 'a>, ExecError>;
+}
+
+/// Cross-iteration assignment state for one fit (see
+/// [`Executor::assign_session`]). `step` results stay valid until the
+/// next `step`; `finish` hands the final statistics back without a copy.
+pub trait AssignSession {
+    /// One assignment pass against `centroids` (paper steps 4-7).
+    fn step(&mut self, centroids: &[f32]) -> Result<&AssignStats, ExecError>;
+
+    /// Pruned/scanned row totals accumulated over the session. Dense
+    /// sessions report every row as scanned.
+    fn prune_counters(&self) -> PruneCounters;
+
+    /// Consume the session, returning the last pass's statistics (the
+    /// labels move out — no final n-length copy).
+    fn finish(self: Box<Self>) -> AssignStats;
+}
+
+/// Fallback [`AssignSession`] that re-runs the executor's stateless
+/// [`Executor::assign_update`] every pass: no cross-iteration bounds, no
+/// buffer reuse beyond what the executor does internally. Used by the
+/// GPU regime, which keeps the dense path (device-resident shards make
+/// the dense sweep cheap to re-run, and bound bookkeeping would be
+/// per-row divergent on the device).
+pub struct DenseSession<'a> {
+    exec: &'a dyn Executor,
+    ds: &'a Dataset,
+    k: usize,
+    metric: Metric,
+    stats: AssignStats,
+    counters: PruneCounters,
+}
+
+impl<'a> DenseSession<'a> {
+    pub fn new(exec: &'a dyn Executor, ds: &'a Dataset, k: usize, metric: Metric) -> Self {
+        Self {
+            exec,
+            ds,
+            k,
+            metric,
+            stats: AssignStats::zeros(0, k, ds.m()),
+            counters: PruneCounters::default(),
+        }
+    }
+}
+
+impl AssignSession for DenseSession<'_> {
+    fn step(&mut self, centroids: &[f32]) -> Result<&AssignStats, ExecError> {
+        self.stats = self
+            .exec
+            .assign_update(self.ds, centroids, self.k, self.metric)?;
+        self.counters.scanned_rows += self.ds.n() as u64;
+        Ok(&self.stats)
+    }
+
+    fn prune_counters(&self) -> PruneCounters {
+        self.counters
+    }
+
+    fn finish(self: Box<Self>) -> AssignStats {
+        self.stats
+    }
 }
 
 #[cfg(test)]
@@ -160,6 +258,22 @@ mod tests {
         assert_eq!(total.sums, vec![11.0, 22.0, 33.0, 44.0]);
         assert_eq!(total.counts, vec![3, 1]);
         assert!((total.inertia - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_zeroes_everything_and_reuses_capacity() {
+        let mut s = AssignStats::zeros(10, 2, 3);
+        s.labels[5] = 9;
+        s.counts[1] = 4;
+        s.sums[0] = 1.0;
+        s.inertia = 2.0;
+        let cap = s.labels.capacity();
+        s.reset(10, 2, 3);
+        assert_eq!(s.labels, vec![0; 10]);
+        assert_eq!(s.counts, vec![0, 0]);
+        assert!(s.sums.iter().all(|&v| v == 0.0));
+        assert_eq!(s.inertia, 0.0);
+        assert_eq!(s.labels.capacity(), cap, "same shape must not reallocate");
     }
 
     #[test]

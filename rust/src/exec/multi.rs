@@ -2,37 +2,60 @@
 //!
 //! Every stage splits the data into N near-equal shards ("each thread
 //! handles (1/N)-th part of the elements of the whole set"), computes the
-//! shard's partial result on its own thread, and the leader combines:
+//! shard's partial result on its own worker, and the leader combines:
 //!
-//! * step 1 (diameter): each thread takes a slice of the *candidate* rows
+//! * step 1 (diameter): each worker takes a slice of the *candidate* rows
 //!   and scans it against the rest of the set (triangle split), returning
 //!   its local max pair; the leader takes the global max;
 //! * step 2 (center of gravity): per-shard coordinate sums, leader adds;
 //! * steps 4-7 (assignment): per-shard [`AssignStats`], leader absorbs.
 //!
-//! Threads are scoped (`std::thread::scope`) so shards borrow the dataset
-//! without copies. Thread count defaults to the paper's testbed (8
-//! hardware threads on the i7-3770) but follows the host when smaller.
+//! Workers are the **persistent** [`crate::pool::ThreadPool`], built
+//! lazily on the first stage call and reused for every stage of every
+//! subsequent call — zero OS-thread spawns inside the Lloyd loop after
+//! warm-up (the pre-PR-3 design spawned fresh `std::thread::scope`
+//! threads per stage per iteration). Shards borrow the dataset without
+//! copies through the pool's scoped bridge
+//! ([`crate::pool::ThreadPool::scope_run_all`]). Thread count defaults
+//! to the paper's testbed (8 hardware threads on the i7-3770) but
+//! follows the host when smaller.
 //!
 //! Pure orchestration: all per-shard math is the shared kernel layer
-//! ([`crate::kernel`]); this module only shards, spawns and combines.
+//! ([`crate::kernel`]); this module only shards, schedules and combines.
+
+use std::sync::{Arc, OnceLock};
 
 use crate::data::Dataset;
-use crate::exec::{AssignStats, DiameterResult, ExecError, Executor};
+use crate::exec::{
+    AssignSession, AssignStats, DiameterResult, ExecError, Executor, PruneCounters,
+};
+use crate::kernel::pruned::{assign_pruned_range, PrunedState};
 use crate::kernel::{assign, diameter, reduce};
 use crate::metric::Metric;
-use crate::pool::{scoped_map_chunks, split_ranges};
+use crate::pool::{split_ranges, ThreadPool};
 
-/// Multi-threaded executor with a fixed thread count.
-#[derive(Clone, Debug)]
+/// Multi-threaded executor with a fixed worker count and a lazily-built
+/// persistent pool. Clones share the pool.
+#[derive(Clone)]
 pub struct MultiExecutor {
     threads: usize,
+    pool: Arc<OnceLock<ThreadPool>>,
+}
+
+impl std::fmt::Debug for MultiExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MultiExecutor")
+            .field("threads", &self.threads)
+            .field("pool_built", &self.pool.get().is_some())
+            .finish()
+    }
 }
 
 impl MultiExecutor {
     pub fn new(threads: usize) -> Self {
         Self {
             threads: threads.max(1),
+            pool: Arc::new(OnceLock::new()),
         }
     }
 
@@ -46,6 +69,17 @@ impl MultiExecutor {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The persistent worker pool, built on first use (the executor's
+    /// warm-up). Every stage of every call runs on these same threads.
+    pub fn pool(&self) -> &ThreadPool {
+        self.pool.get_or_init(|| ThreadPool::new(self.threads))
+    }
+
+    /// Whether the worker pool has been built yet (test hook).
+    pub fn pool_built(&self) -> bool {
+        self.pool.get().is_some()
     }
 }
 
@@ -65,19 +99,14 @@ impl Executor for MultiExecutor {
         // Balance the triangle: slice `a`'s work is (len - a) pairs, so
         // split by equal pair-count, not equal slice length.
         let bounds = triangle_splits(candidates.len(), self.threads);
-        let parts: Vec<Result<DiameterResult, ExecError>> = std::thread::scope(|s| {
-            let handles: Vec<_> = bounds
-                .windows(2)
-                .map(|w| {
-                    let (lo, hi) = (w[0], w[1]);
-                    s.spawn(move || diameter::farthest_pair(ds, candidates, lo, hi))
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("diameter worker panicked"))
-                .collect()
-        });
+        let jobs: Vec<_> = bounds
+            .windows(2)
+            .map(|w| {
+                let (lo, hi) = (w[0], w[1]);
+                move || diameter::farthest_pair(ds, candidates, lo, hi)
+            })
+            .collect();
+        let parts = self.pool().scope_run_all(jobs);
         let mut best = DiameterResult { d2: -1.0, i: 0, j: 0 };
         for p in parts {
             let p = p?;
@@ -89,9 +118,9 @@ impl Executor for MultiExecutor {
     }
 
     fn center_of_gravity(&self, ds: &Dataset) -> Result<Vec<f32>, ExecError> {
-        let partials = scoped_map_chunks(self.threads, ds.n(), |r| {
-            reduce::coordinate_sums(ds, r)
-        });
+        let partials = self
+            .pool()
+            .scope_map_chunks(ds.n(), |r| reduce::coordinate_sums(ds, r));
         let mut total = vec![0f64; ds.m()];
         for p in partials {
             reduce::fold_sums(&mut total, &p);
@@ -106,27 +135,121 @@ impl Executor for MultiExecutor {
         k: usize,
         metric: Metric,
     ) -> Result<AssignStats, ExecError> {
-        let m = ds.m();
         let ranges = split_ranges(ds.n(), self.threads);
-        let offsets: Vec<usize> = ranges.iter().map(|r| r.start).collect();
-        let partials: Vec<AssignStats> = std::thread::scope(|s| {
-            let handles: Vec<_> = ranges
-                .iter()
-                .map(|r| {
-                    let r = r.clone();
-                    s.spawn(move || assign::assign_update_range(ds, centroids, k, metric, r))
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("assign worker panicked"))
-                .collect()
-        });
-        let mut total = AssignStats::zeros(ds.n(), k, m);
-        for (offset, shard) in offsets.into_iter().zip(&partials) {
-            total.absorb(offset, shard);
+        let jobs: Vec<_> = ranges
+            .iter()
+            .map(|r| {
+                let r = r.clone();
+                move || assign::assign_update_range(ds, centroids, k, metric, r)
+            })
+            .collect();
+        let partials = self.pool().scope_run_all(jobs);
+        let mut total = AssignStats::zeros(ds.n(), k, ds.m());
+        for (r, shard) in ranges.iter().zip(&partials) {
+            total.absorb(r.start, shard);
         }
         Ok(total)
+    }
+
+    fn assign_session<'a>(
+        &'a self,
+        ds: &'a Dataset,
+        k: usize,
+        metric: Metric,
+    ) -> Result<Box<dyn AssignSession + 'a>, ExecError> {
+        let ranges = split_ranges(ds.n(), self.threads);
+        let shards = ranges
+            .iter()
+            .map(|r| AssignStats::zeros(r.len(), k, ds.m()))
+            .collect();
+        Ok(Box::new(MultiSession {
+            exec: self,
+            ds,
+            k,
+            metric,
+            ranges,
+            shards,
+            total: AssignStats::zeros(ds.n(), k, ds.m()),
+            pruned: (metric == Metric::Euclidean)
+                .then(|| PrunedState::new(ds.n(), k, ds.m())),
+            dense_scanned: 0,
+        }))
+    }
+}
+
+/// Stateful assignment for the multi regime: shard geometry is fixed for
+/// the whole fit, per-shard and combined [`AssignStats`] buffers are
+/// allocated once, and the Euclidean path carries one fit-wide
+/// [`PrunedState`] whose label/bound slices are split per shard. Every
+/// pass runs on the executor's persistent pool — no thread spawns.
+struct MultiSession<'a> {
+    exec: &'a MultiExecutor,
+    ds: &'a Dataset,
+    k: usize,
+    metric: Metric,
+    ranges: Vec<std::ops::Range<usize>>,
+    shards: Vec<AssignStats>,
+    total: AssignStats,
+    pruned: Option<PrunedState>,
+    dense_scanned: u64,
+}
+
+impl AssignSession for MultiSession<'_> {
+    fn step(&mut self, centroids: &[f32]) -> Result<&AssignStats, ExecError> {
+        let (ds, k, m) = (self.ds, self.k, self.ds.m());
+        match &mut self.pruned {
+            Some(state) => {
+                // Leader: per-iteration centroid digest (norms, drifts,
+                // separations), then one pruned pass per shard on the
+                // pool, each borrowing its slice of the fit-wide bounds.
+                state.prepare(centroids);
+                let (mut labels_rest, mut lower_rest, prep, counters) = state.parts();
+                let mut jobs = Vec::with_capacity(self.ranges.len());
+                for (r, shard) in self.ranges.iter().zip(self.shards.iter_mut()) {
+                    let (lab, rest) = std::mem::take(&mut labels_rest).split_at_mut(r.len());
+                    labels_rest = rest;
+                    let (low, rest) = std::mem::take(&mut lower_rest).split_at_mut(r.len());
+                    lower_rest = rest;
+                    let range = r.clone();
+                    jobs.push(move || {
+                        shard.reset(range.len(), k, m);
+                        assign_pruned_range(ds, centroids, k, prep, range, lab, low, shard)
+                    });
+                }
+                for c in self.exec.pool().scope_run_all(jobs) {
+                    counters.add(c);
+                }
+            }
+            None => {
+                let metric = self.metric;
+                let mut jobs = Vec::with_capacity(self.ranges.len());
+                for (r, shard) in self.ranges.iter().zip(self.shards.iter_mut()) {
+                    let range = r.clone();
+                    jobs.push(move || {
+                        assign::assign_update_range_into(ds, centroids, k, metric, range, shard);
+                    });
+                }
+                self.exec.pool().scope_run_all(jobs);
+                self.dense_scanned += ds.n() as u64;
+            }
+        }
+        // Leader combine into the fit-wide totals (reused buffers).
+        self.total.reset(ds.n(), k, m);
+        for (r, shard) in self.ranges.iter().zip(&self.shards) {
+            self.total.absorb(r.start, shard);
+        }
+        Ok(&self.total)
+    }
+
+    fn prune_counters(&self) -> PruneCounters {
+        self.pruned.as_ref().map(|s| s.counters).unwrap_or(PruneCounters {
+            pruned_rows: 0,
+            scanned_rows: self.dense_scanned,
+        })
+    }
+
+    fn finish(self: Box<Self>) -> AssignStats {
+        self.total
     }
 }
 
@@ -205,5 +328,43 @@ mod tests {
         let stats = multi.assign_update(&g.dataset, &cent, 2, Metric::Euclidean).unwrap();
         assert_eq!(stats.labels.len(), 5);
         assert_eq!(stats.counts.iter().sum::<u64>(), 5);
+    }
+
+    #[test]
+    fn pool_is_lazy_and_built_once() {
+        let multi = MultiExecutor::new(3);
+        assert!(!multi.pool_built(), "construction must not spawn threads");
+        let g = generate(&GmmSpec::new(64, 3, 2).seed(2));
+        let _ = multi.center_of_gravity(&g.dataset).unwrap();
+        assert!(multi.pool_built());
+        let p1 = multi.pool() as *const _;
+        let cent = g.dataset.gather(&[0, 1]);
+        let _ = multi.assign_update(&g.dataset, &cent, 2, Metric::Euclidean).unwrap();
+        let p2 = multi.pool() as *const _;
+        assert_eq!(p1, p2, "same pool across stages");
+        // clones share the pool
+        let clone = multi.clone();
+        assert!(clone.pool_built());
+        assert_eq!(clone.pool() as *const _, p1);
+    }
+
+    #[test]
+    fn session_matches_stateless_over_iterations() {
+        let g = generate(&GmmSpec::new(701, 4, 3).seed(5).spread(0.4));
+        let ds = &g.dataset;
+        let multi = MultiExecutor::new(3);
+        let mut cent = ds.gather(&[0, 300, 600]);
+        let mut session = multi.assign_session(ds, 3, Metric::Euclidean).unwrap();
+        for _ in 0..4 {
+            let stateless = multi.assign_update(ds, &cent, 3, Metric::Euclidean).unwrap();
+            let stepped = session.step(&cent).unwrap();
+            assert_eq!(stepped.labels, stateless.labels);
+            assert_eq!(stepped.counts, stateless.counts);
+            assert_eq!(stepped.inertia, stateless.inertia);
+            cent = stateless.centroids(&cent, 3, ds.m());
+        }
+        let c = session.prune_counters();
+        assert_eq!(c.pruned_rows + c.scanned_rows, 4 * 701);
+        assert!(c.pruned_rows > 0, "later iterations must prune: {c:?}");
     }
 }

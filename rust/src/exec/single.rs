@@ -8,7 +8,10 @@
 //! `benches/f2_stage_breakdown` and EXPERIMENTS.md §Perf.
 
 use crate::data::Dataset;
-use crate::exec::{AssignStats, DiameterResult, ExecError, Executor};
+use crate::exec::{
+    AssignSession, AssignStats, DiameterResult, ExecError, Executor, PruneCounters,
+};
+use crate::kernel::pruned::{assign_pruned_range, PrunedState};
 use crate::kernel::{assign, diameter, reduce};
 use crate::metric::Metric;
 
@@ -49,6 +52,77 @@ impl Executor for SingleExecutor {
     ) -> Result<AssignStats, ExecError> {
         Ok(assign::assign_update_range(ds, centroids, k, metric, 0..ds.n()))
     }
+
+    fn assign_session<'a>(
+        &'a self,
+        ds: &'a Dataset,
+        k: usize,
+        metric: Metric,
+    ) -> Result<Box<dyn AssignSession + 'a>, ExecError> {
+        Ok(Box::new(SingleSession {
+            ds,
+            k,
+            metric,
+            stats: AssignStats::zeros(ds.n(), k, ds.m()),
+            // Pruning is lossless only where the triangle inequality
+            // backs the bounds in the exact dense arithmetic — the
+            // Euclidean path. Other metrics keep the dense scalar walk
+            // (still into the reused scratch).
+            pruned: (metric == Metric::Euclidean)
+                .then(|| PrunedState::new(ds.n(), k, ds.m())),
+            dense_scanned: 0,
+        }))
+    }
+}
+
+/// Stateful assignment for the single regime: one [`AssignStats`]
+/// scratch and (for Euclidean) one [`PrunedState`] for the whole fit —
+/// every n-length buffer is allocated here, once, and `step` allocates
+/// nothing.
+struct SingleSession<'a> {
+    ds: &'a Dataset,
+    k: usize,
+    metric: Metric,
+    stats: AssignStats,
+    pruned: Option<PrunedState>,
+    /// Rows processed by the dense (non-Euclidean) path — every one a
+    /// full scan.
+    dense_scanned: u64,
+}
+
+impl AssignSession for SingleSession<'_> {
+    fn step(&mut self, centroids: &[f32]) -> Result<&AssignStats, ExecError> {
+        let (n, m) = (self.ds.n(), self.ds.m());
+        match &mut self.pruned {
+            Some(state) => {
+                state.prepare(centroids);
+                self.stats.reset(n, self.k, m);
+                let (labels, lower, prep, counters) = state.parts();
+                let c = assign_pruned_range(
+                    self.ds, centroids, self.k, prep, 0..n, labels, lower, &mut self.stats,
+                );
+                counters.add(c);
+            }
+            None => {
+                assign::assign_update_range_into(
+                    self.ds, centroids, self.k, self.metric, 0..n, &mut self.stats,
+                );
+                self.dense_scanned += n as u64;
+            }
+        }
+        Ok(&self.stats)
+    }
+
+    fn prune_counters(&self) -> PruneCounters {
+        self.pruned.as_ref().map(|s| s.counters).unwrap_or(PruneCounters {
+            pruned_rows: 0,
+            scanned_rows: self.dense_scanned,
+        })
+    }
+
+    fn finish(self: Box<Self>) -> AssignStats {
+        self.stats
+    }
 }
 
 #[cfg(test)]
@@ -87,6 +161,27 @@ mod tests {
         let ds = square();
         let c = SingleExecutor.center_of_gravity(&ds).unwrap();
         assert!((c[0] - 0.5).abs() < 1e-6 && (c[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn session_steps_match_stateless_calls() {
+        let ds = square();
+        let tables = [vec![0.0f32, 0.0, 1.0, 1.0], vec![0.25f32, 0.25, 0.9, 0.9]];
+        for metric in [Metric::Euclidean, Metric::Manhattan, Metric::Cosine] {
+            let exec = SingleExecutor::new();
+            let mut session = exec.assign_session(&ds, 2, metric).unwrap();
+            for cent in &tables {
+                let stateless = exec.assign_update(&ds, cent, 2, metric).unwrap();
+                let stepped = session.step(cent).unwrap();
+                assert_eq!(stepped.labels, stateless.labels, "{metric:?}");
+                assert_eq!(stepped.counts, stateless.counts, "{metric:?}");
+                assert!((stepped.inertia - stateless.inertia).abs() < 1e-12);
+            }
+            let c = session.prune_counters();
+            assert_eq!(c.pruned_rows + c.scanned_rows, 10, "{metric:?} 2 passes × 5 rows");
+            let final_stats = session.finish();
+            assert_eq!(final_stats.labels.len(), 5);
+        }
     }
 
     #[test]

@@ -42,36 +42,65 @@ pub fn assign_update_range(
     metric: Metric,
     range: std::ops::Range<usize>,
 ) -> AssignStats {
+    let mut stats = AssignStats::zeros(range.len(), k, ds.m());
+    assign_update_range_into(ds, centroids, k, metric, range, &mut stats);
+    stats
+}
+
+/// [`assign_update_range`] into caller-owned statistics: `stats` is reset
+/// (not reallocated when shapes repeat) and filled. The per-iteration
+/// entry point of the stateful assignment sessions — the n-length label
+/// vector and the k×m accumulators are allocated once per fit, not once
+/// per iteration per shard.
+pub fn assign_update_range_into(
+    ds: &Dataset,
+    centroids: &[f32],
+    k: usize,
+    metric: Metric,
+    range: std::ops::Range<usize>,
+    stats: &mut AssignStats,
+) {
     debug_assert_eq!(centroids.len(), k * ds.m());
+    stats.reset(range.len(), k, ds.m());
     match metric {
-        Metric::Euclidean => assign_euclidean_tiled(ds, centroids, k, range),
-        _ => assign_update_range_scalar(ds, centroids, k, metric, range),
+        Metric::Euclidean => assign_euclidean_tiled_into(ds, centroids, k, range, stats),
+        _ => assign_scalar_into(ds, centroids, k, metric, range, stats),
     }
 }
 
 /// Per-centroid squared norms ‖c‖², computed once per call / iteration.
 /// Accumulated in f64 (every f32 product is exact in f64) so the
 /// decomposed score stays faithful on data with large common offsets.
-pub fn centroid_sq_norms(centroids: &[f32], k: usize, m: usize) -> Vec<f64> {
+/// The `_into` form reuses `out` (pruned sessions call it per iteration
+/// without allocating).
+pub fn centroid_sq_norms_into(centroids: &[f32], k: usize, m: usize, out: &mut Vec<f64>) {
     debug_assert_eq!(centroids.len(), k * m);
-    (0..k)
-        .map(|c| {
-            let cen = &centroids[c * m..(c + 1) * m];
-            let mut acc = 0.0f64;
-            for &v in cen {
-                acc += v as f64 * v as f64;
-            }
-            acc
-        })
-        .collect()
+    out.clear();
+    out.extend((0..k).map(|c| {
+        let cen = &centroids[c * m..(c + 1) * m];
+        let mut acc = 0.0f64;
+        for &v in cen {
+            acc += v as f64 * v as f64;
+        }
+        acc
+    }));
+}
+
+/// Allocating convenience over [`centroid_sq_norms_into`].
+pub fn centroid_sq_norms(centroids: &[f32], k: usize, m: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(k);
+    centroid_sq_norms_into(centroids, k, m, &mut out);
+    out
 }
 
 /// Dot product x·c in f64 — the inner loop of the decomposed Euclidean
 /// path. Plain indexed loop over equal-length slices so LLVM
 /// auto-vectorises; f32 products widened to f64 are exact, so the only
-/// rounding is in the m additions.
+/// rounding is in the m additions. `pub(crate)` because the pruned
+/// kernel's fallback scan must use *this exact arithmetic* to keep its
+/// label bit-parity contract — one implementation, structurally shared.
 #[inline]
-fn dot(a: &[f32], b: &[f32]) -> f64 {
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = 0.0f64;
     for i in 0..a.len() {
@@ -81,18 +110,19 @@ fn dot(a: &[f32], b: &[f32]) -> f64 {
 }
 
 /// Tiled Euclidean assignment via the norm-decomposition argmin.
-fn assign_euclidean_tiled(
+fn assign_euclidean_tiled_into(
     ds: &Dataset,
     centroids: &[f32],
     k: usize,
     range: std::ops::Range<usize>,
-) -> AssignStats {
+    stats: &mut AssignStats,
+) {
     let m = ds.m();
     let c_norms = centroid_sq_norms(centroids, k, m);
-    let mut stats = AssignStats::zeros(range.len(), k, m);
-    // Per-tile argmin state, reused across tiles.
-    let mut best_score = vec![f64::INFINITY; ROW_TILE];
-    let mut best_idx = vec![0u32; ROW_TILE];
+    // Per-tile argmin state, reused across tiles (stack arrays: the tiled
+    // path stays allocation-free apart from the per-call centroid norms).
+    let mut best_score = [f64::INFINITY; ROW_TILE];
+    let mut best_idx = [0u32; ROW_TILE];
     for tile in tiles(range.clone(), ROW_TILE) {
         let t = tile.len();
         best_score[..t].fill(f64::INFINITY);
@@ -128,7 +158,6 @@ fn assign_euclidean_tiled(
             }
         }
     }
-    stats
 }
 
 /// Nearest centroid of one row (squared-Euclidean argmin) — the scalar
@@ -180,9 +209,22 @@ pub fn assign_update_range_scalar(
     metric: Metric,
     range: std::ops::Range<usize>,
 ) -> AssignStats {
+    let mut stats = AssignStats::zeros(range.len(), k, ds.m());
+    assign_scalar_into(ds, centroids, k, metric, range, &mut stats);
+    stats
+}
+
+/// Body of the scalar walk, writing into caller-owned statistics.
+fn assign_scalar_into(
+    ds: &Dataset,
+    centroids: &[f32],
+    k: usize,
+    metric: Metric,
+    range: std::ops::Range<usize>,
+    stats: &mut AssignStats,
+) {
     let m = ds.m();
     debug_assert_eq!(centroids.len(), k * m);
-    let mut stats = AssignStats::zeros(range.len(), k, m);
     for (out_i, i) in range.clone().enumerate() {
         let row = ds.row(i);
         let (label, d2) = if metric == Metric::Euclidean {
@@ -198,7 +240,6 @@ pub fn assign_update_range_scalar(
             *s += v as f64;
         }
     }
-    stats
 }
 
 #[cfg(test)]

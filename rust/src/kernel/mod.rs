@@ -9,8 +9,13 @@
 //!   accumulation (paper steps 4–7), block-tiled over rows with the
 //!   Euclidean path monomorphised onto the norm-decomposition form
 //!   ‖x−c‖² = ‖x‖² − 2·x·c + ‖c‖²;
-//! * [`reduce`] — tiled center-of-gravity coordinate sums (paper step 2)
-//!   and partial-sum folding;
+//! * [`pruned`] — the same stage with cross-iteration triangle-inequality
+//!   bounds (Hamerly-style): most rows skip the centroid sweep entirely
+//!   once the centroids settle, with labels provably identical to
+//!   [`assign`]; driven through the executors' stateful
+//!   `AssignSession`s;
+//! * [`reduce`] — tiled center-of-gravity coordinate sums (paper step 2),
+//!   partial-sum folding, and per-centroid drift between tables;
 //! * [`diameter`] — blocked farthest-pair scan (paper step 1, Eq. 3) and
 //!   the condensed pairwise-distance fill reused by the hierarchical
 //!   module.
@@ -27,6 +32,7 @@
 
 pub mod assign;
 pub mod diameter;
+pub mod pruned;
 pub mod reduce;
 
 /// Rows per cache tile. A tile of `ROW_TILE × m` f32 (m ≤ 25 in the

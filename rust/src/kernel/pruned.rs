@@ -1,0 +1,417 @@
+//! Pruned assignment — Hamerly-style triangle-inequality bounds that
+//! skip most of the n·k·m distance work after the first iterations.
+//!
+//! The dense kernel ([`crate::kernel::assign`]) scores every row against
+//! every centroid each iteration. But Lloyd centroids move less and less
+//! as the fit converges, and the triangle inequality turns that into
+//! skipped work. Per row the session keeps the last iteration's label
+//! `a` and a **lower bound** `l` on the distance to every *other*
+//! centroid; per iteration the leader computes each centroid's drift
+//! from the previous table and each centroid's half-separation
+//! `s(c) = ½·min_{c'≠c} d(c, c')`. A row is **pruned** when its exact
+//! distance to the hypothesis centroid strictly beats both bounds:
+//!
+//! * `u < l − max_drift` — no other centroid can have caught up
+//!   (`d(x, c') ≥ l_old − drift(c') ≥ l − max_drift`), and
+//! * `u < s(a)` — the hypothesis centroid's separation alone proves
+//!   dominance (`d(x, c') ≥ d(a, c') − d(x, a) ≥ 2 s(a) − u > u`).
+//!
+//! Either test passing means `a` is the *strict* argmin, so the label —
+//! and therefore counts, sums and inertia — is exactly what the dense
+//! scan would produce. Rows that fail both tests fall back to the same
+//! f64 norm-decomposition scan the dense kernel runs (identical
+//! arithmetic, identical lowest-index tie-break), which also refreshes
+//! the bounds. Pruning is therefore **lossless**: labels are bit-equal
+//! to the dense path, enforced by `tests/kernel_parity.rs`.
+//!
+//! A pruned row still pays one exact distance (needed for the inertia
+//! contract and for the upper bound) plus the O(m) statistics fold, so
+//! the saving is the k−1 other centroid scores — the dominant term of
+//! the paper's hot stage for k ≫ 1. Rate counters ([`PruneCounters`])
+//! surface through `RunMetrics`.
+//!
+//! Floating-point safety: bounds are computed in f64 and padded by
+//! [`BOUND_SLACK`] twice over — a *relative* margin on every distance,
+//! plus an *absolute* margin `η = BOUND_SLACK · (‖x‖² + max‖c‖² + 1)`
+//! in the squared domain. The absolute term matters: the dense scan's
+//! decomposed score `‖c‖² − 2·x·c` cancels catastrophically when
+//! coordinates carry a large common offset, leaving an error that is
+//! absolute in the ‖x‖² scale, not relative to the (possibly tiny)
+//! distance. η overshoots that true `m·2⁻⁵³`-scale error by ~10⁶, so a
+//! rounding-inflated bound can never prune a row the dense scan would
+//! relabel — ambiguous rows simply fall back to the full scan, and the
+//! stored lower bound is deflated by the same η at creation.
+//!
+//! Non-Euclidean metrics are *not* routed here: Manhattan and Chebyshev
+//! satisfy the triangle inequality too, but the sessions keep them on
+//! the dense scalar path (cosine does not, and the paper's hot path is
+//! Eq. 2). The GPU regime also stays dense — per-row divergence is the
+//! wrong shape for the wide SIMT kernels, matching the paper's
+//! per-stage offload logic.
+
+use crate::data::Dataset;
+use crate::exec::AssignStats;
+use crate::kernel::assign::{centroid_sq_norms_into, dot};
+use crate::kernel::reduce::centroid_shifts_sq_into;
+use crate::metric::sq_euclidean;
+
+/// Safety margin applied to every bound comparison — used both
+/// relatively (on distances) and as the coefficient of the absolute
+/// squared-domain guard η (see the module doc). Large enough to
+/// dominate f64 rounding — including the decomposed scan's
+/// cancellation on large-offset data — over any realistic iteration
+/// count, small enough that no real pruning opportunity is lost.
+pub const BOUND_SLACK: f64 = 1e-9;
+
+/// Rows skipped vs fully scanned, accumulated over a fit.
+#[derive(Default, Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PruneCounters {
+    /// Rows whose bounds proved the label without a centroid sweep.
+    pub pruned_rows: u64,
+    /// Rows that fell back to the full k-centroid scan.
+    pub scanned_rows: u64,
+}
+
+impl PruneCounters {
+    pub fn add(&mut self, other: PruneCounters) {
+        self.pruned_rows += other.pruned_rows;
+        self.scanned_rows += other.scanned_rows;
+    }
+
+    /// Fraction of rows pruned (0.0 when nothing was processed).
+    pub fn rate(&self) -> f64 {
+        let total = self.pruned_rows + self.scanned_rows;
+        if total == 0 {
+            0.0
+        } else {
+            self.pruned_rows as f64 / total as f64
+        }
+    }
+}
+
+/// Per-iteration centroid-table digest shared (read-only) by every
+/// shard: squared norms for the decomposed scan, half-separations and
+/// the worst-case drift for the bound tests.
+#[derive(Default, Clone, Debug)]
+pub struct CentroidPrep {
+    /// ‖c‖² per centroid (f64) — the decomposed scan's constant term.
+    pub c_norms: Vec<f64>,
+    /// `½·min_{c'≠c} d(c, c')`, deflated by [`BOUND_SLACK`];
+    /// `+∞` for k = 1 (a lone centroid always dominates).
+    pub half_sep: Vec<f64>,
+    /// `max_c ‖c_new − c_old‖`, inflated by [`BOUND_SLACK`]; `+∞` until
+    /// a previous table exists (disables the lower-bound test only).
+    pub max_drift: f64,
+    /// `max_c ‖c‖²` — the centroid half of the absolute error guard η.
+    pub max_c_norm: f64,
+}
+
+/// Cross-iteration pruning state for one fit: the per-row hypothesis
+/// labels and lower bounds, the previous centroid table, scratch
+/// buffers, and the accumulated counters. Everything n- or k-sized in
+/// here is allocated exactly once, at session construction.
+pub struct PrunedState {
+    k: usize,
+    m: usize,
+    /// Last iteration's label per row — the pruning hypothesis.
+    pub labels: Vec<u32>,
+    /// Lower bound on the distance from each row to its nearest
+    /// *non-label* centroid (`−∞` until the first full scan sets it).
+    pub lower: Vec<f64>,
+    /// The centroid-table digest for the current iteration.
+    pub prep: CentroidPrep,
+    /// Pruned/scanned totals across the fit.
+    pub counters: PruneCounters,
+    prev_centroids: Vec<f32>,
+    has_prev: bool,
+    drift_scratch: Vec<f64>,
+}
+
+impl PrunedState {
+    pub fn new(n: usize, k: usize, m: usize) -> PrunedState {
+        PrunedState {
+            k,
+            m,
+            labels: vec![0; n],
+            lower: vec![f64::NEG_INFINITY; n],
+            prep: CentroidPrep::default(),
+            counters: PruneCounters::default(),
+            prev_centroids: vec![0.0; k * m],
+            has_prev: false,
+            drift_scratch: Vec::with_capacity(k),
+        }
+    }
+
+    /// Refresh [`PrunedState::prep`] for a new centroid table (computing
+    /// the drift against the previous one) and remember the table for
+    /// the next iteration. Leader-side, O(k²·m), allocation-free after
+    /// the first call.
+    pub fn prepare(&mut self, centroids: &[f32]) {
+        let (k, m) = (self.k, self.m);
+        debug_assert_eq!(centroids.len(), k * m);
+
+        centroid_sq_norms_into(centroids, k, m, &mut self.prep.c_norms);
+        self.prep.max_c_norm = self.prep.c_norms.iter().cloned().fold(0.0f64, f64::max);
+
+        self.prep.max_drift = if self.has_prev {
+            centroid_shifts_sq_into(&self.prev_centroids, centroids, k, m, &mut self.drift_scratch);
+            let max_sq = self.drift_scratch.iter().cloned().fold(0.0f64, f64::max);
+            max_sq.sqrt() * (1.0 + BOUND_SLACK)
+        } else {
+            f64::INFINITY
+        };
+
+        self.prep.half_sep.clear();
+        self.prep.half_sep.extend((0..k).map(|c| {
+            let cen = &centroids[c * m..(c + 1) * m];
+            let mut min_sq = f64::INFINITY;
+            for o in 0..k {
+                if o == c {
+                    continue;
+                }
+                min_sq = min_sq.min(sq_dist_f64(cen, &centroids[o * m..(o + 1) * m]));
+            }
+            0.5 * min_sq.sqrt() * (1.0 - BOUND_SLACK) // ∞ stays ∞ for k = 1
+        }));
+
+        self.prev_centroids.copy_from_slice(centroids);
+        self.has_prev = true;
+    }
+
+    /// Split borrows for one pass: the mutable per-row state (labels,
+    /// lower bounds), the shared centroid digest, and the counters —
+    /// disjoint fields, so shards can slice the row state while every
+    /// worker reads the same prep.
+    pub fn parts(
+        &mut self,
+    ) -> (&mut [u32], &mut [f64], &CentroidPrep, &mut PruneCounters) {
+        (
+            &mut self.labels,
+            &mut self.lower,
+            &self.prep,
+            &mut self.counters,
+        )
+    }
+}
+
+/// One pruned assignment pass over `range`. `labels` and `lower` are the
+/// session's state slices for exactly these rows (`len == range.len()`);
+/// `stats` must have been reset by the caller for this range. Returns
+/// this pass's counters. Range-invariant like the dense kernel: a row's
+/// outcome depends only on the row, the tables and its own state, never
+/// on shard geometry.
+#[allow(clippy::too_many_arguments)]
+pub fn assign_pruned_range(
+    ds: &Dataset,
+    centroids: &[f32],
+    k: usize,
+    prep: &CentroidPrep,
+    range: std::ops::Range<usize>,
+    labels: &mut [u32],
+    lower: &mut [f64],
+    stats: &mut AssignStats,
+) -> PruneCounters {
+    let m = ds.m();
+    debug_assert_eq!(centroids.len(), k * m);
+    debug_assert_eq!(labels.len(), range.len());
+    debug_assert_eq!(lower.len(), range.len());
+    debug_assert_eq!(stats.labels.len(), range.len());
+    let mut counters = PruneCounters::default();
+
+    for (li, i) in range.enumerate() {
+        let row = ds.row(i);
+        let a = labels[li] as usize;
+        // Decay the lower bound by the worst-case centroid movement; it
+        // now bounds every non-hypothesis distance under the NEW table.
+        let l = lower[li] - prep.max_drift;
+        // One exact distance to the hypothesis centroid: f32 in the
+        // dense kernel's exact arithmetic (inertia bit-parity), f64 for
+        // the bound test, plus ‖x‖² — one fused pass over the row.
+        let (d2_32, d2_64, xn) = sq_dist_and_norm(row, &centroids[a * m..(a + 1) * m]);
+        // Absolute squared-domain guard: covers the cancellation error
+        // of the decomposed scores (absolute in the ‖x‖²/‖c‖² scale, NOT
+        // relative to the distance — see the module doc).
+        let eta = BOUND_SLACK * (xn + prep.max_c_norm + 1.0);
+        // The test runs in the squared domain: prune iff
+        //   d²(x,a)·(1+slack) + 2η < bound²·(1−slack)
+        // which leaves a > 2η gap between the *computed* dense scores of
+        // `a` and any rival — strict dominance under both exact math and
+        // the dense kernel's rounded arithmetic. `bound` is +∞ for k = 1
+        // (∞² stays ∞) and ≤ 0 only when no bound is available (the
+        // comparison is then false and we scan).
+        let bound = l.max(prep.half_sep[a]);
+
+        if bound > 0.0
+            && d2_64 * (1.0 + BOUND_SLACK) + 2.0 * eta < bound * bound * (1.0 - BOUND_SLACK)
+        {
+            // Strict dominance: `a` is the unique argmin, the dense scan
+            // would return it too. Skip the k−1 other centroids.
+            lower[li] = l;
+            counters.pruned_rows += 1;
+            fold_row(stats, li, row, a, d2_32, m);
+        } else {
+            // Full scan — the dense kernel's decomposed argmin verbatim
+            // (same f64 scores, same strict-< lowest-index tie-break).
+            let mut best = 0usize;
+            let mut best_score = f64::INFINITY;
+            let mut second_score = f64::INFINITY;
+            for (c, &cn) in prep.c_norms.iter().enumerate() {
+                let score = cn - 2.0 * dot(row, &centroids[c * m..(c + 1) * m]);
+                if score < best_score {
+                    second_score = best_score;
+                    best_score = score;
+                    best = c;
+                } else if score < second_score {
+                    second_score = score;
+                }
+            }
+            labels[li] = best as u32;
+            // score + ‖x‖² = ‖x−c‖² up to ±η; subtracting η makes this a
+            // valid lower bound on every non-label centroid even under
+            // the scores' cancellation error (and any score-order
+            // misranking of the runner-up: every rival scores
+            // ≥ second_score).
+            lower[li] = (second_score + xn - eta).max(0.0).sqrt() * (1.0 - BOUND_SLACK);
+            counters.scanned_rows += 1;
+            let d2 = sq_euclidean(row, &centroids[best * m..(best + 1) * m]);
+            fold_row(stats, li, row, best, d2, m);
+        }
+    }
+    counters
+}
+
+/// Fold one labeled row into the statistics (the dense kernel's tail).
+#[inline]
+fn fold_row(stats: &mut AssignStats, out_i: usize, row: &[f32], label: usize, d2: f32, m: usize) {
+    stats.labels[out_i] = label as u32;
+    stats.counts[label] += 1;
+    stats.inertia += d2 as f64;
+    let dst = &mut stats.sums[label * m..(label + 1) * m];
+    for (s, &v) in dst.iter_mut().zip(row) {
+        *s += v as f64;
+    }
+}
+
+/// Fused per-row pass: squared distance in f32 with exactly
+/// [`sq_euclidean`]'s operation sequence (bit-parity for inertia), the
+/// same in f64 for the bound test, and the row's f64 squared norm ‖x‖²
+/// (feeds the η guard and the decomposed-score reconstruction — the
+/// dense path never needs it, so this has no `assign` counterpart).
+#[inline]
+fn sq_dist_and_norm(a: &[f32], b: &[f32]) -> (f32, f64, f64) {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc32 = 0.0f32;
+    let mut acc64 = 0.0f64;
+    let mut norm = 0.0f64;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        acc32 += d * d;
+        let a64 = a[i] as f64;
+        let d64 = a64 - b[i] as f64;
+        acc64 += d64 * d64;
+        norm += a64 * a64;
+    }
+    (acc32, acc64, norm)
+}
+
+/// f64 squared distance (exact f32-to-f64 widening before subtraction).
+#[inline]
+fn sq_dist_f64(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        let d = a[i] as f64 - b[i] as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GmmSpec};
+    use crate::data::Dataset;
+    use crate::kernel::assign::assign_update_range;
+    use crate::metric::Metric;
+
+    /// Drive a pruned state through `tables`, checking every pass
+    /// against the dense kernel.
+    fn check_parity(ds: &Dataset, k: usize, tables: &[Vec<f32>]) -> PrunedState {
+        let (n, m) = (ds.n(), ds.m());
+        let mut state = PrunedState::new(n, k, m);
+        let mut stats = AssignStats::zeros(n, k, m);
+        for cent in tables {
+            state.prepare(cent);
+            stats.reset(n, k, m);
+            let (labels, lower, prep, counters) = state.parts();
+            let c = assign_pruned_range(ds, cent, k, prep, 0..n, labels, lower, &mut stats);
+            counters.add(c);
+
+            let dense = assign_update_range(ds, cent, k, Metric::Euclidean, 0..n);
+            assert_eq!(stats.labels, dense.labels, "labels vs dense");
+            assert_eq!(&state.labels, &dense.labels, "state labels vs dense");
+            assert_eq!(stats.counts, dense.counts);
+            assert_eq!(stats.inertia, dense.inertia, "inertia must be bit-equal");
+            assert_eq!(stats.sums, dense.sums, "sums must be bit-equal");
+        }
+        state
+    }
+
+    #[test]
+    fn lloyd_trajectory_is_label_exact_and_eventually_prunes() {
+        let g = generate(&GmmSpec::new(3000, 8, 6).seed(77).spread(0.4));
+        let ds = &g.dataset;
+        // a real Lloyd trajectory: start from 6 data rows, update 5 times
+        let mut tables = vec![ds.gather(&[0, 500, 1000, 1500, 2000, 2500])];
+        for _ in 0..5 {
+            let last = tables.last().unwrap();
+            let stats = assign_update_range(ds, last, 6, Metric::Euclidean, 0..ds.n());
+            tables.push(stats.centroids(last, 6, ds.m()));
+        }
+        let state = check_parity(ds, 6, &tables);
+        assert!(
+            state.counters.pruned_rows > 0,
+            "bounds must start pruning once drifts shrink: {:?}",
+            state.counters
+        );
+        // first pass can never prune via the lower bound; every row was
+        // processed exactly tables.len() times
+        let total = state.counters.pruned_rows + state.counters.scanned_rows;
+        assert_eq!(total, 3000 * 6);
+    }
+
+    #[test]
+    fn stationary_table_prunes_everything_after_first_pass() {
+        let g = generate(&GmmSpec::new(800, 5, 4).seed(9).spread(0.05).center_scale(20.0));
+        let ds = &g.dataset;
+        let cent = g.centers.clone();
+        // same separated table twice: zero drift, wide separations. The
+        // second pass must scan nothing (every row prunes via its fresh
+        // lower bound or the half-separation); the first pass may already
+        // prune the label-0 rows via half-separation alone.
+        let state = check_parity(ds, 4, &[cent.clone(), cent]);
+        let total = state.counters.pruned_rows + state.counters.scanned_rows;
+        assert_eq!(total, 1600);
+        assert!(
+            state.counters.scanned_rows <= 800,
+            "second pass must scan nothing: {:?}",
+            state.counters
+        );
+        assert!(state.counters.pruned_rows >= 800);
+    }
+
+    #[test]
+    fn k_equals_one_always_prunes_correctly() {
+        let ds = Dataset::from_vec(3, 2, vec![0., 0., 1., 0., 5., 5.]).unwrap();
+        let state = check_parity(&ds, 1, &[vec![1.0, 1.0], vec![2.0, 2.0]]);
+        assert_eq!(state.counters.scanned_rows, 0, "lone centroid: no scans at all");
+    }
+
+    #[test]
+    fn counters_rate() {
+        let mut c = PruneCounters::default();
+        assert_eq!(c.rate(), 0.0);
+        c.add(PruneCounters { pruned_rows: 3, scanned_rows: 1 });
+        assert!((c.rate() - 0.75).abs() < 1e-12);
+    }
+}

@@ -44,6 +44,53 @@ pub fn mean_from_sums(sums: &[f64], n: usize) -> Vec<f32> {
     sums.iter().map(|&s| (s / n) as f32).collect()
 }
 
+/// One centroid's squared drift ‖c_new − c_old‖², accumulated in f64
+/// (f32 coordinates widened before the subtraction, so no f32 rounding
+/// enters the difference).
+#[inline]
+fn centroid_shift_sq_one(old: &[f32], new: &[f32], c: usize, m: usize) -> f64 {
+    let mut acc = 0.0f64;
+    for j in c * m..(c + 1) * m {
+        let d = old[j] as f64 - new[j] as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Squared per-centroid drift between two centroid tables. Reuses `out`
+/// — the pruned assignment path calls this once per Lloyd iteration and
+/// must not allocate.
+pub fn centroid_shifts_sq_into(
+    old: &[f32],
+    new: &[f32],
+    k: usize,
+    m: usize,
+    out: &mut Vec<f64>,
+) {
+    debug_assert_eq!(old.len(), k * m);
+    debug_assert_eq!(new.len(), k * m);
+    out.clear();
+    out.extend((0..k).map(|c| centroid_shift_sq_one(old, new, c, m)));
+}
+
+/// Allocating convenience over [`centroid_shifts_sq_into`].
+pub fn centroid_shifts_sq(old: &[f32], new: &[f32], k: usize, m: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(k);
+    centroid_shifts_sq_into(old, new, k, m, &mut out);
+    out
+}
+
+/// The largest squared per-centroid drift — the Lloyd congruence
+/// measure. Same fold as [`centroid_shifts_sq`] without materialising
+/// the vector (the driver calls this every iteration).
+pub fn max_centroid_shift_sq(old: &[f32], new: &[f32], k: usize, m: usize) -> f64 {
+    debug_assert_eq!(old.len(), k * m);
+    debug_assert_eq!(new.len(), k * m);
+    (0..k)
+        .map(|c| centroid_shift_sq_one(old, new, c, m))
+        .fold(0.0f64, f64::max)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,5 +125,42 @@ mod tests {
         for (a, b) in folded.iter().zip(&global) {
             assert!((a - b).abs() <= 1e-9 * b.abs().max(1.0), "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn centroid_shifts_match_definition() {
+        let old = [0.0f32, 0.0, 1.0, 1.0];
+        let new = [3.0f32, 4.0, 1.0, 1.0];
+        let s = centroid_shifts_sq(&old, &new, 2, 2);
+        assert_eq!(s, vec![25.0, 0.0]);
+    }
+
+    #[test]
+    fn centroid_shifts_into_reuses_buffer() {
+        let old = [1.0f32, 2.0];
+        let new = [1.5f32, 2.0];
+        let mut buf = vec![99.0f64; 7]; // stale content must be cleared
+        centroid_shifts_sq_into(&old, &new, 2, 1, &mut buf);
+        assert_eq!(buf, vec![0.25, 0.0]);
+    }
+
+    #[test]
+    fn max_shift_matches_vector_fold() {
+        let old = [0.0f32, 0.0, 1.0, 1.0, 5.0, 5.0];
+        let new = [3.0f32, 4.0, 1.0, 1.0, 5.0, 6.0];
+        let shifts = centroid_shifts_sq(&old, &new, 3, 2);
+        let folded = shifts.into_iter().fold(0.0f64, f64::max);
+        assert_eq!(max_centroid_shift_sq(&old, &new, 3, 2), folded);
+        assert_eq!(folded, 25.0);
+    }
+
+    #[test]
+    fn centroid_shifts_exact_in_f64_where_f32_rounds() {
+        // 1e8 and 1e8+1: their f64 difference is exact; an f32 subtraction
+        // of the *squared* accumulation path would lose it entirely.
+        let old = [1.0e8f32];
+        let new = [1.00000008e8f32]; // nearest f32 neighbours differ by 8
+        let s = centroid_shifts_sq(&old, &new, 1, 1);
+        assert!(s[0] > 0.0, "drift must not vanish in accumulation");
     }
 }

@@ -14,7 +14,7 @@ use crate::data::Dataset;
 use crate::exec::Executor;
 use crate::kmeans::init::initialize;
 use crate::kmeans::{FitResult, KMeansConfig, KMeansError};
-use crate::metric::{sq_euclidean, Metric};
+use crate::metric::Metric;
 use crate::metrics::{RunMetrics, StageTimer};
 
 /// Stage names used in [`StageTimer`] (shared with benches/reports).
@@ -50,18 +50,23 @@ pub fn run(
     debug_assert_eq!(centroids.len(), k * m);
 
     // ----- paper steps 4-8: iterate to congruence -------------------------
-    let mut labels: Vec<u32> = Vec::new();
+    // The assignment stage runs through a stateful session: scratch
+    // buffers (and, on the CPU regimes' Euclidean path, the
+    // triangle-inequality pruning bounds of [`crate::kernel::pruned`])
+    // live across iterations instead of being rebuilt per pass.
+    let mut session = exec.assign_session(ds, k, cfg.metric)?;
     let mut inertia = f64::INFINITY;
     let mut iterations = 0usize;
     let mut converged = false;
 
     while iterations < cfg.max_iters {
         let t = Instant::now();
-        let stats = exec.assign_update(ds, &centroids, k, cfg.metric)?;
+        let stats = session.step(&centroids)?;
         timer.add(stage::ASSIGN_UPDATE, t.elapsed());
 
         let t = Instant::now();
         let new_centroids = stats.centroids(&centroids, k, m);
+        inertia = stats.inertia;
         timer.add(stage::FORM_CENTROIDS, t.elapsed());
 
         // paper step 8: compare centers of gravity of the last two
@@ -70,8 +75,6 @@ pub fn run(
         let shift = max_centroid_shift(&centroids, &new_centroids, k, m);
         timer.add(stage::CONVERGENCE, t.elapsed());
 
-        labels = stats.labels;
-        inertia = stats.inertia;
         centroids = new_centroids;
         iterations += 1;
 
@@ -80,6 +83,9 @@ pub fn run(
             break;
         }
     }
+
+    let prune = session.prune_counters();
+    let labels = session.finish().labels;
 
     let metrics = RunMetrics {
         regime: exec.name().to_string(),
@@ -91,6 +97,7 @@ pub fn run(
         converged,
         wall: wall_start.elapsed(),
         stages: timer,
+        prune,
     };
 
     Ok(FitResult {
@@ -105,15 +112,19 @@ pub fn run(
     })
 }
 
-/// Max squared per-centroid movement between two tables — the congruence
-/// measure of paper step 8 (0.0 ⇔ all centers identical).
+/// Per-centroid **squared** movement between two tables, f64-accumulated
+/// — the congruence measure of paper step 8, centroid by centroid. The
+/// same drifts feed the pruned assignment path's bound updates; one
+/// kernel primitive, re-exported here for driver-level callers.
+pub use crate::kernel::reduce::centroid_shifts_sq;
+
+/// Max squared per-centroid movement between two tables
+/// (0.0 ⇔ all centers identical). Accumulates in f64 — the old f32 path
+/// could round a genuine sub-ulp drift to zero and declare congruence a
+/// step early on large-offset data — and keeps the public f32 shape.
+/// Allocation-free (this runs on the leader every Lloyd iteration).
 pub fn max_centroid_shift(old: &[f32], new: &[f32], k: usize, m: usize) -> f32 {
-    let mut max_d2 = 0f32;
-    for c in 0..k {
-        let d2 = sq_euclidean(&old[c * m..(c + 1) * m], &new[c * m..(c + 1) * m]);
-        max_d2 = max_d2.max(d2);
-    }
-    max_d2
+    crate::kernel::reduce::max_centroid_shift_sq(old, new, k, m) as f32
 }
 
 /// Compute the final inertia of a labeling under an arbitrary metric
@@ -135,6 +146,7 @@ mod tests {
     use crate::data::synthetic::{generate, GmmSpec};
     use crate::exec::single::SingleExecutor;
     use crate::kmeans::{InitMethod, KMeansConfig};
+    use crate::metric::sq_euclidean;
 
     fn well_separated(n: usize, k: usize) -> crate::data::synthetic::Generated {
         generate(&GmmSpec::new(n, 4, k).seed(3).spread(0.05).center_scale(30.0))
@@ -205,6 +217,34 @@ mod tests {
         let mut b = a;
         b[3] = 5.0;
         assert!(max_centroid_shift(&a, &b, 2, 2) > 0.0);
+    }
+
+    #[test]
+    fn per_centroid_shifts_expose_each_drift() {
+        let a = [0.0f32, 0.0, 1.0, 1.0];
+        let b = [0.0f32, 0.0, 1.0, 3.0];
+        let s = centroid_shifts_sq(&a, &b, 2, 2);
+        assert_eq!(s, vec![0.0, 4.0]);
+        assert_eq!(max_centroid_shift(&a, &b, 2, 2), 4.0);
+    }
+
+    #[test]
+    fn prune_counters_surface_in_run_metrics() {
+        let g = well_separated(500, 3);
+        let cfg = KMeansConfig::new(3).seed(9);
+        let res = run(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+        let prune = &res.metrics.prune;
+        assert_eq!(
+            prune.pruned_rows + prune.scanned_rows,
+            (500 * res.iterations) as u64,
+            "every row counted once per iteration"
+        );
+        assert!(res.iterations >= 2, "separated blobs still need 2+ passes");
+        assert!(
+            prune.pruned_rows > 0,
+            "euclidean fits must prune after iteration 1: {prune:?}"
+        );
+        assert!(prune.rate() > 0.0 && prune.rate() < 1.0);
     }
 
     #[test]

@@ -22,17 +22,30 @@
 //!   Shards are zero-copy row ranges over this buffer.
 //! * **kernel** ([`kernel`]) — the single home of every hot CPU loop:
 //!   block-tiled, metric-monomorphized stage math. Assignment uses the
-//!   norm-decomposition dot-product form ‖x−c‖² = ‖x‖² − 2·x·c + ‖c‖²;
-//!   reductions and the farthest-pair scan share the same tile walker.
-//!   The Pallas/PJRT device kernels (python/compile/kernels, AOT-lowered
-//!   to HLO and loaded by [`runtime`] — python never runs on the request
-//!   path) are this layer's accelerator counterpart.
+//!   norm-decomposition dot-product form ‖x−c‖² = ‖x‖² − 2·x·c + ‖c‖²,
+//!   and the **pruned** variant ([`kernel::pruned`]) carries Hamerly-style
+//!   triangle-inequality bounds across Lloyd iterations so most rows skip
+//!   the centroid sweep entirely once the centroids settle — losslessly
+//!   (labels provably identical to the dense scan). Reductions and the
+//!   farthest-pair scan share the same tile walker. The Pallas/PJRT
+//!   device kernels (python/compile/kernels, AOT-lowered to HLO and
+//!   loaded by [`runtime`] — python never runs on the request path) are
+//!   this layer's accelerator counterpart.
 //! * **executor** ([`exec`]) — pure orchestration per regime: sharding,
-//!   `std::thread::scope` fan-out, partial-result absorption. Single and
-//!   multi call the CPU kernels per shard; gpu ships shards to the PJRT
-//!   artifacts. No distance/argmin/reduction loop lives here.
+//!   fan-out, partial-result absorption. The Lloyd loop enters through
+//!   **stateful assignment sessions** (`Executor::assign_session`): each
+//!   session owns its n-length buffers (labels, statistics, pruning
+//!   bounds) for the whole fit, so iterating allocates nothing per pass.
+//!   The multi regime runs every stage on a lazily-built **persistent
+//!   thread pool** ([`pool`]) — zero OS-thread spawns inside the Lloyd
+//!   loop after warm-up. Single and multi call the CPU kernels per
+//!   shard; gpu ships shards to the PJRT artifacts and keeps the dense
+//!   per-iteration sweep (pruning is per-row divergent — the wrong shape
+//!   for the wide device kernels). No distance/argmin/reduction loop
+//!   lives here.
 //! * **driver** ([`kmeans`], [`hier`], CLI) — the regime-agnostic Lloyd
-//!   loop, initialization, regime policy, metrics and reporting.
+//!   loop driving one assign-session per fit, initialization, regime
+//!   policy, metrics (including pruning-rate counters) and reporting.
 //!
 //! A future SIMD or batched-PJRT backend slots in behind the kernel
 //! entry points without touching orchestration or the driver.

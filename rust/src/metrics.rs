@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use crate::json::Json;
+use crate::kernel::pruned::PruneCounters;
 
 /// Accumulates named durations and counters for one clustering run.
 #[derive(Default, Debug, Clone)]
@@ -89,6 +90,10 @@ pub struct RunMetrics {
     pub converged: bool,
     pub wall: Duration,
     pub stages: StageTimer,
+    /// Assignment rows skipped vs fully scanned by the
+    /// triangle-inequality bounds (`kernel::pruned`) across all
+    /// iterations; all-scanned on dense paths.
+    pub prune: PruneCounters,
 }
 
 impl RunMetrics {
@@ -102,6 +107,9 @@ impl RunMetrics {
             ("inertia", Json::num(self.inertia)),
             ("converged", Json::Bool(self.converged)),
             ("wall_s", Json::num(self.wall.as_secs_f64())),
+            ("pruned_rows", Json::num(self.prune.pruned_rows as f64)),
+            ("scanned_rows", Json::num(self.prune.scanned_rows as f64)),
+            ("prune_rate", Json::num(self.prune.rate())),
             ("stages", self.stages.to_json()),
         ])
     }
@@ -113,6 +121,14 @@ impl RunMetrics {
             self.regime, self.n, self.m, self.k, self.iterations,
             self.converged, self.inertia, self.wall
         );
+        if self.prune.pruned_rows + self.prune.scanned_rows > 0 {
+            s.push_str(&format!(
+                "  assign rows: {} pruned / {} scanned ({:.1}% pruned)\n",
+                self.prune.pruned_rows,
+                self.prune.scanned_rows,
+                self.prune.rate() * 100.0
+            ));
+        }
         for (name, d) in self.stages.stages() {
             s.push_str(&format!(
                 "  {:<22} {:>12?}  ({} calls)\n",
@@ -179,12 +195,16 @@ mod tests {
             converged: true,
             wall: Duration::from_millis(99),
             stages,
+            prune: PruneCounters { pruned_rows: 750, scanned_rows: 250 },
         };
+        assert!((m.prune.rate() - 0.75).abs() < 1e-12);
         let j = m.to_json();
         let parsed = Json::parse(&j.to_pretty()).unwrap();
         assert_eq!(parsed.req_usize("n").unwrap(), 1000);
         assert_eq!(parsed.req_str("regime").unwrap(), "multi");
         assert_eq!(parsed.get("converged").unwrap().as_bool(), Some(true));
+        assert_eq!(parsed.req_usize("pruned_rows").unwrap(), 750);
         assert!(parsed.get("stages").unwrap().get("assign").is_some());
+        assert!(m.render().contains("75.0% pruned"), "{}", m.render());
     }
 }

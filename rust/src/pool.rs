@@ -21,6 +21,17 @@ enum Message {
     Shutdown,
 }
 
+/// Worker threads spawned by every [`ThreadPool`] in this process, ever.
+/// Test hook for the steady-state guarantee that the multi regime spawns
+/// no OS threads inside the Lloyd loop: build the pool, snapshot this
+/// counter, iterate — the counter must not move.
+static WORKER_SPAWNS: AtomicUsize = AtomicUsize::new(0);
+
+/// Total pool worker threads spawned process-wide (monotonic).
+pub fn worker_spawn_count() -> usize {
+    WORKER_SPAWNS.load(Ordering::SeqCst)
+}
+
 /// Fixed-size worker pool.
 pub struct ThreadPool {
     workers: Vec<JoinHandle<()>>,
@@ -40,6 +51,7 @@ impl ThreadPool {
             .map(|i| {
                 let rx = Arc::clone(&receiver);
                 let panics = Arc::clone(&panics);
+                WORKER_SPAWNS.fetch_add(1, Ordering::SeqCst);
                 std::thread::Builder::new()
                     .name(format!("parclust-worker-{i}"))
                     .spawn(move || worker_loop(rx, panics))
@@ -119,6 +131,75 @@ impl ThreadPool {
             })
             .collect();
         self.run_all(jobs)
+    }
+
+    /// Scoped fork-join on the **persistent** workers: run `jobs`, which
+    /// may borrow the caller's stack (`'env`), and return their results in
+    /// submission order. The borrowed-data replacement for spawning fresh
+    /// scoped threads per stage call — this is how the multi regime keeps
+    /// the Lloyd loop free of OS-thread spawns.
+    ///
+    /// Panics in any job are re-raised on the caller after **all** jobs
+    /// have finished, like [`ThreadPool::run_all`]. Must not be called
+    /// from inside a pool job (a job waiting on its own pool can
+    /// deadlock when every worker is occupied).
+    pub fn scope_run_all<'env, T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'env,
+        F: FnOnce() -> T + Send + 'env,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let (tx, rx) = channel::<(usize, std::thread::Result<T>)>();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let tx = tx.clone();
+            let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                let out = catch_unwind(AssertUnwindSafe(job));
+                // receiver may be gone if the caller panicked; ignore
+                let _ = tx.send((i, out));
+            });
+            // SAFETY: only the trait object's lifetime parameter is
+            // erased (`'env` → `'static`); the fat-pointer layout is
+            // unchanged. The receive loop below does not return — or
+            // unwind — until every submitted job has sent its result, so
+            // no borrow captured by `job` outlives this call. The send
+            // cannot fail while `&self` keeps the workers alive.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+            };
+            self.sender
+                .send(Message::Run(job))
+                .expect("pool receiver dropped");
+        }
+        drop(tx);
+        let mut slots: Vec<Option<std::thread::Result<T>>> =
+            (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, res) = rx.recv().expect("worker dropped result channel");
+            slots[i] = Some(res);
+        }
+        slots
+            .into_iter()
+            .map(|s| match s.expect("missing job result") {
+                Ok(v) => v,
+                Err(p) => std::panic::resume_unwind(p),
+            })
+            .collect()
+    }
+
+    /// [`ThreadPool::map_chunks`] for borrowed data: split `0..total`
+    /// into `self.size()` contiguous chunks and apply `f(range)` on the
+    /// persistent workers via [`ThreadPool::scope_run_all`].
+    pub fn scope_map_chunks<'env, T, F>(&self, total: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'env,
+        F: Fn(std::ops::Range<usize>) -> T + Sync + 'env,
+    {
+        let ranges = split_ranges(total, self.size);
+        let f = &f;
+        self.scope_run_all(ranges.into_iter().map(|r| move || f(r)).collect())
     }
 
     /// Count of worker panics observed over the pool's lifetime.
@@ -291,5 +372,80 @@ mod tests {
         let pool = ThreadPool::new(2);
         let out: Vec<usize> = pool.map_chunks(0, |r| r.len());
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scope_run_all_borrows_stack_data_in_order() {
+        let pool = ThreadPool::new(3);
+        let data: Vec<u64> = (0..100).collect();
+        let jobs: Vec<_> = split_ranges(data.len(), 5)
+            .into_iter()
+            .map(|r| {
+                let slice = &data[r];
+                move || slice.iter().sum::<u64>()
+            })
+            .collect();
+        let sums = pool.scope_run_all(jobs);
+        assert_eq!(sums.len(), 5);
+        assert_eq!(sums.iter().sum::<u64>(), (0..100u64).sum());
+        // submission order preserved: first chunk holds the smallest values
+        assert!(sums[0] < sums[4]);
+    }
+
+    #[test]
+    fn scope_jobs_run_on_persistent_named_workers() {
+        let pool = ThreadPool::new(2);
+        let names: Vec<Option<String>> = pool.scope_run_all(
+            (0..4)
+                .map(|_| || std::thread::current().name().map(str::to_string))
+                .collect(),
+        );
+        for n in names {
+            let n = n.expect("pool workers are named");
+            assert!(n.starts_with("parclust-worker-"), "{n}");
+        }
+    }
+
+    #[test]
+    fn scope_run_all_propagates_panics_after_completion() {
+        static FLAG: AtomicU64 = AtomicU64::new(0);
+        let pool = ThreadPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope_run_all(vec![
+                Box::new(|| {
+                    FLAG.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send>,
+                Box::new(|| panic!("scoped boom")),
+            ]);
+        }));
+        assert!(result.is_err(), "job panic must surface on the caller");
+        assert_eq!(FLAG.load(Ordering::SeqCst), 1, "sibling job still ran");
+        // pool remains usable
+        assert_eq!(pool.scope_run_all(vec![|| 3u8]), vec![3]);
+    }
+
+    #[test]
+    fn scope_map_chunks_matches_scoped_free_function() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<u64> = (0..1000).collect();
+        let a = pool.scope_map_chunks(data.len(), |r| data[r].iter().sum::<u64>());
+        let b = scoped_map_chunks(4, data.len(), |r| data[r].iter().sum::<u64>());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn worker_spawn_counter_moves_only_on_pool_construction() {
+        let before = worker_spawn_count();
+        let pool = ThreadPool::new(3);
+        let built = worker_spawn_count();
+        assert!(built >= before + 3, "construction spawns the workers");
+        for _ in 0..5 {
+            let _ = pool.scope_map_chunks(64, |r| r.len());
+        }
+        // NOTE: other tests may build pools concurrently, so only assert
+        // that *this* pool's steady-state work added nothing beyond what
+        // third parties could have: re-check against a same-pool baseline
+        // is done in tests/pool_persistent.rs where the binary is quiet.
+        assert!(worker_spawn_count() >= built);
     }
 }

@@ -1,0 +1,134 @@
+//! Allocation discipline of the stateful assignment sessions: after the
+//! first pass, iterating must not rebuild the n-length buffers that
+//! `AssignStats::zeros` used to allocate once per iteration per shard.
+//!
+//! Measured with a counting global allocator. The single-regime session
+//! is allocation-**free** per step by construction (all scratch lives in
+//! the session); the multi-regime session may allocate O(threads) queue
+//! plumbing per step but nothing that scales with n — asserted by
+//! bounding the per-step byte delta far below one byte per row.
+//!
+//! Everything runs inside ONE `#[test]` (and this file holds nothing
+//! else): the counter is process-global, so sibling tests would bleed
+//! allocations into the measurement windows.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn snapshot() -> (u64, u64) {
+    (
+        ALLOC_CALLS.load(Ordering::SeqCst),
+        ALLOC_BYTES.load(Ordering::SeqCst),
+    )
+}
+
+#[test]
+fn session_steps_do_not_churn_n_length_buffers() {
+    use parclust::data::synthetic::{generate, GmmSpec};
+    use parclust::exec::multi::MultiExecutor;
+    use parclust::exec::single::SingleExecutor;
+    use parclust::exec::Executor;
+    use parclust::metric::Metric;
+
+    let n = 40_000usize;
+    let (m, k) = (12usize, 8usize);
+    let g = generate(&GmmSpec::new(n, m, k).seed(61).spread(0.5));
+    let ds = &g.dataset;
+    let init = ds.gather(&(0..k).map(|i| i * n / k).collect::<Vec<_>>());
+
+    // ---- single regime, Euclidean (pruned path): zero allocations -----
+    let single = SingleExecutor::new();
+    let mut session = single.assign_session(ds, k, Metric::Euclidean).unwrap();
+    let mut cent = init.clone();
+    // two warm passes: fill every lazily-sized scratch buffer
+    for _ in 0..2 {
+        let stats = session.step(&cent).unwrap();
+        cent = stats.centroids(&cent, k, m);
+    }
+    let (calls0, bytes0) = snapshot();
+    for _ in 0..3 {
+        let stats = session.step(&cent).unwrap();
+        cent = stats.centroids(&cent, k, m);
+    }
+    let (calls1, bytes1) = snapshot();
+    // `centroids()` itself allocates the k×m table (leader-side, k-sized,
+    // 3 iterations × 2 small vecs); everything n-sized must be silent.
+    let step_only = {
+        // measure a step alone, no centroid formation
+        let (c0, b0) = snapshot();
+        let _ = session.step(&cent).unwrap();
+        let (c1, b1) = snapshot();
+        (c1 - c0, b1 - b0)
+    };
+    assert_eq!(
+        step_only,
+        (0, 0),
+        "single-regime step must be allocation-free after warm-up"
+    );
+    assert!(
+        bytes1 - bytes0 < 4 * (k * m * 8 + 64) as u64 * 3,
+        "3 steps + centroid updates allocated {} bytes ({} calls)",
+        bytes1 - bytes0,
+        calls1 - calls0
+    );
+
+    // ---- single regime, non-Euclidean (dense scalar into scratch) -----
+    let mut session = single.assign_session(ds, k, Metric::Manhattan).unwrap();
+    let _ = session.step(&init).unwrap();
+    let (c0, b0) = snapshot();
+    let _ = session.step(&init).unwrap();
+    let (c1, b1) = snapshot();
+    assert_eq!(
+        (c1 - c0, b1 - b0),
+        (0, 0),
+        "dense scalar session step must reuse its scratch"
+    );
+
+    // ---- multi regime: per-step allocations bounded, independent of n -
+    let threads = 4usize;
+    let multi = MultiExecutor::new(threads);
+    let mut session = multi.assign_session(ds, k, Metric::Euclidean).unwrap();
+    // warm-up builds the pool and sizes every shard buffer
+    let _ = session.step(&init).unwrap();
+    let _ = session.step(&init).unwrap();
+    let (c0, b0) = snapshot();
+    let _ = session.step(&init).unwrap();
+    let (c1, b1) = snapshot();
+    let (d_calls, d_bytes) = (c1 - c0, b1 - b0);
+    // An n-length relapse would cost ≥ 4·n = 160_000 bytes (labels)
+    // or 8·n (bounds); queue plumbing for 4 workers is a few hundred.
+    assert!(
+        d_bytes < n as u64,
+        "multi step allocated {d_bytes} bytes ({d_calls} calls) — n-length churn?"
+    );
+    assert!(
+        d_calls < 256,
+        "multi step made {d_calls} allocations — expected O(threads) queue plumbing"
+    );
+}

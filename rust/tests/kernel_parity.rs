@@ -2,10 +2,15 @@
 //! norm-decomposition assignment path must reproduce the pre-refactor
 //! scalar path bit-for-bit on labels over a fixed seeded GMM (the
 //! acceptance gate for replacing the subtract-square scan with the
-//! ‖x‖² − 2·x·c + ‖c‖² dot-product form), and the blocked diameter scan
-//! must find the exact same farthest distance as a naive triangle scan.
+//! ‖x‖² − 2·x·c + ‖c‖² dot-product form), the blocked diameter scan
+//! must find the exact same farthest distance as a naive triangle scan,
+//! and the **pruned** assignment sessions (PR 3) must be label-exact
+//! against the dense kernel on every iteration of a real Lloyd
+//! trajectory — triangle-inequality pruning is lossless for Euclidean,
+//! and a bound squeezed to the boundary must fall back, never misprune.
 
 use parclust::data::synthetic::{generate, GmmSpec};
+use parclust::data::Dataset;
 use parclust::exec::multi::MultiExecutor;
 use parclust::exec::single::SingleExecutor;
 use parclust::exec::Executor;
@@ -82,6 +87,118 @@ fn executors_match_scalar_golden_end_to_end() {
     assert_eq!(multi.labels, scalar.labels);
     assert_eq!(single.counts, scalar.counts);
     assert_eq!(multi.counts, scalar.counts);
+}
+
+/// Walk a session and the dense kernel down the same centroid
+/// trajectory (`steps` Lloyd updates from `init`), asserting label,
+/// count and inertia parity at every iteration. Returns the final
+/// pruning counters.
+fn check_session_vs_dense(
+    exec: &dyn Executor,
+    ds: &Dataset,
+    k: usize,
+    metric: Metric,
+    init: Vec<f32>,
+    steps: usize,
+) -> parclust::exec::PruneCounters {
+    let mut session = exec.assign_session(ds, k, metric).unwrap();
+    let mut cent = init;
+    for it in 0..steps {
+        let dense = assign::assign_update_range(ds, &cent, k, metric, 0..ds.n());
+        let stepped = session.step(&cent).unwrap();
+        assert_eq!(stepped.labels, dense.labels, "{metric:?} iter {it} labels");
+        assert_eq!(stepped.counts, dense.counts, "{metric:?} iter {it} counts");
+        assert!(
+            (stepped.inertia - dense.inertia).abs() <= 1e-9 * dense.inertia.abs().max(1.0),
+            "{metric:?} iter {it} inertia {} vs {}",
+            stepped.inertia,
+            dense.inertia
+        );
+        cent = dense.centroids(&cent, k, ds.m());
+    }
+    session.prune_counters()
+}
+
+#[test]
+fn pruned_session_label_exact_on_golden_trajectory() {
+    // The F4/golden workload shape: pruning counters must light up after
+    // iteration 1 while labels stay bit-identical to the dense kernel.
+    let g = generate(&GmmSpec::new(20_000, 25, 16).seed(4242).spread(0.5));
+    let ds = &g.dataset;
+    let init = ds.gather(&(0..16).map(|i| i * ds.n() / 16).collect::<Vec<_>>());
+    let c = check_session_vs_dense(&SingleExecutor::new(), ds, 16, Metric::Euclidean, init, 5);
+    assert_eq!(c.pruned_rows + c.scanned_rows, 5 * 20_000);
+    assert!(c.pruned_rows > 0, "no pruning on the golden workload: {c:?}");
+}
+
+#[test]
+fn pruned_session_parity_all_metrics_and_shard_geometries() {
+    // All four metrics through both CPU regimes (non-Euclidean must
+    // route to the dense path — zero pruned rows), across uneven shard
+    // geometries (thread counts that do not divide n = 2003).
+    let g = generate(&GmmSpec::new(2_003, 7, 5).seed(31).spread(0.6));
+    let ds = &g.dataset;
+    let init = ds.gather(&[0, 400, 800, 1200, 1600]);
+    for metric in [
+        Metric::Euclidean,
+        Metric::Manhattan,
+        Metric::Chebyshev,
+        Metric::Cosine,
+    ] {
+        let c = check_session_vs_dense(
+            &SingleExecutor::new(), ds, 5, metric, init.clone(), 4,
+        );
+        if metric != Metric::Euclidean {
+            assert_eq!(c.pruned_rows, 0, "{metric:?} must stay dense");
+            assert_eq!(c.scanned_rows, 4 * 2_003);
+        }
+        for threads in [2usize, 3, 7, 16] {
+            let c = check_session_vs_dense(
+                &MultiExecutor::new(threads), ds, 5, metric, init.clone(), 4,
+            );
+            if metric != Metric::Euclidean {
+                assert_eq!(c.pruned_rows, 0, "{metric:?} t={threads} must stay dense");
+            }
+        }
+    }
+}
+
+#[test]
+fn pruned_session_handles_duplicate_rows() {
+    // Blocks of byte-identical rows: bounds, tie-breaks and statistics
+    // must treat every copy identically (labels equal within each block).
+    let base = generate(&GmmSpec::new(50, 6, 4).seed(7).spread(0.8));
+    let mut values = Vec::new();
+    for _rep in 0..40 {
+        for i in 0..50 {
+            values.extend_from_slice(base.dataset.row(i));
+        }
+    }
+    let ds = Dataset::from_vec(2000, 6, values).unwrap();
+    let init = ds.gather(&[0, 13, 26, 39]);
+    let c =
+        check_session_vs_dense(&SingleExecutor::new(), &ds, 4, Metric::Euclidean, init.clone(), 4);
+    assert!(c.pruned_rows > 0, "duplicates should prune aggressively: {c:?}");
+    let _ = check_session_vs_dense(&MultiExecutor::new(3), &ds, 4, Metric::Euclidean, init, 4);
+}
+
+#[test]
+fn centroid_on_exact_bound_boundary_falls_back_to_scan() {
+    // One row at 0.5; first table makes centroid 1 its label (distance
+    // 0), then the table moves so the row is *exactly* equidistant from
+    // both centroids. The stale label is 1, but the dense tie-break says
+    // 0 — pruning must refuse the boundary case (strict dominance only)
+    // and rescan, keeping label parity.
+    let ds = Dataset::from_vec(3, 1, vec![0.5, 0.1, 0.9]).unwrap();
+    let tables = [vec![10.0f32, 0.5], vec![0.0f32, 1.0]];
+    let exec = SingleExecutor::new();
+    let mut session = exec.assign_session(&ds, 2, Metric::Euclidean).unwrap();
+    let first = session.step(&tables[0]).unwrap();
+    assert_eq!(first.labels, vec![1, 1, 1], "everything sits on centroid 1");
+    let second = session.step(&tables[1]).unwrap();
+    let dense = assign::assign_update_range(&ds, &tables[1], 2, Metric::Euclidean, 0..3);
+    assert_eq!(second.labels, dense.labels);
+    assert_eq!(second.labels[0], 0, "exact tie must break to the lower index");
 }
 
 #[test]

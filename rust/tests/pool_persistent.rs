@@ -1,0 +1,74 @@
+//! The multi regime's steady-state thread discipline: the persistent
+//! pool is built once (lazily, at the first stage call), every stage of
+//! every Lloyd iteration runs on those same named workers, and **no OS
+//! thread is spawned inside the loop after warm-up**.
+//!
+//! All assertions live in one `#[test]` so the process-wide
+//! [`parclust::pool::worker_spawn_count`] counter sees no concurrent
+//! pool construction from sibling tests.
+
+use parclust::data::synthetic::{generate, GmmSpec};
+use parclust::exec::multi::MultiExecutor;
+use parclust::exec::Executor;
+use parclust::kmeans::{fit_with, DiameterMode, KMeansConfig};
+use parclust::metric::Metric;
+use parclust::pool::worker_spawn_count;
+
+#[test]
+fn multi_regime_spawns_no_threads_after_warmup() {
+    let g = generate(&GmmSpec::new(5_000, 8, 4).seed(3).spread(0.2));
+    let ds = &g.dataset;
+    let threads = 4;
+    let exec = MultiExecutor::new(threads);
+    assert!(!exec.pool_built(), "pool must be lazy");
+
+    // ---- warm-up: the first stage call builds the pool, once ----------
+    let before = worker_spawn_count();
+    let cand: Vec<usize> = (0..256).map(|i| i * ds.n() / 256).collect();
+    let _ = exec.diameter(ds, &cand).unwrap();
+    assert!(exec.pool_built());
+    assert_eq!(
+        worker_spawn_count(),
+        before + threads,
+        "warm-up spawns exactly the pool workers"
+    );
+
+    // ---- steady state: stages, sessions and whole fits spawn nothing --
+    let after_warmup = worker_spawn_count();
+    let _ = exec.center_of_gravity(ds).unwrap();
+    let cent = ds.gather(&[0, 1250, 2500, 3750]);
+    let _ = exec.assign_update(ds, &cent, 4, Metric::Euclidean).unwrap();
+
+    let mut session = exec.assign_session(ds, 4, Metric::Euclidean).unwrap();
+    let mut table = cent.clone();
+    for _ in 0..5 {
+        let stats = session.step(&table).unwrap();
+        table = stats.centroids(&table, 4, ds.m());
+    }
+    drop(session);
+
+    let cfg = KMeansConfig::new(4)
+        .seed(3)
+        .max_iters(30)
+        .diameter_mode(DiameterMode::Sampled(256));
+    for _ in 0..3 {
+        let _ = fit_with(ds, &cfg, &exec).unwrap();
+    }
+    assert_eq!(
+        worker_spawn_count(),
+        after_warmup,
+        "no OS-thread spawns inside the Lloyd loop after warm-up"
+    );
+
+    // ---- the work really runs on the named persistent workers ---------
+    let names = exec.pool().scope_run_all(
+        (0..threads * 2)
+            .map(|_| || std::thread::current().name().map(str::to_string))
+            .collect::<Vec<_>>(),
+    );
+    for n in names {
+        let n = n.expect("pool workers are named");
+        assert!(n.starts_with("parclust-worker-"), "unexpected worker: {n}");
+    }
+    assert_eq!(exec.pool().size(), threads);
+}

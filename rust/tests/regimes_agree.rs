@@ -96,6 +96,72 @@ fn assign_update_matrix_all_metrics_single_vs_multi() {
     }
 }
 
+/// The stateful sessions (the Lloyd loop's actual path since PR 3) must
+/// agree across regimes exactly like the stateless calls: single's
+/// pruned/dense session vs multi's sharded session on the same centroid
+/// trajectory, every metric, uneven thread counts.
+#[test]
+fn assign_sessions_agree_single_vs_multi_all_metrics() {
+    let g = generate(&GmmSpec::new(3001, 9, 4).seed(41).spread(0.5));
+    let ds = &g.dataset;
+    let init = ds.gather(&[0, 750, 1500, 2250]);
+    for metric in [
+        Metric::Euclidean,
+        Metric::Manhattan,
+        Metric::Chebyshev,
+        Metric::Cosine,
+    ] {
+        for threads in [2usize, 5, 8] {
+            let single = SingleExecutor::new();
+            let multi = MultiExecutor::new(threads);
+            let mut s_sess = single.assign_session(ds, 4, metric).unwrap();
+            let mut m_sess = multi.assign_session(ds, 4, metric).unwrap();
+            let mut cent = init.clone();
+            for it in 0..4 {
+                let s = s_sess.step(&cent).unwrap();
+                let next = s.centroids(&cent, 4, ds.m());
+                let s_labels = s.labels.clone();
+                let s_counts = s.counts.clone();
+                let s_inertia = s.inertia;
+                let m = m_sess.step(&cent).unwrap();
+                assert_eq!(s_labels, m.labels, "{metric:?} t={threads} iter {it}");
+                assert_eq!(s_counts, m.counts, "{metric:?} t={threads} iter {it}");
+                assert!(
+                    (s_inertia - m.inertia).abs() <= 1e-9 * s_inertia.abs().max(1.0),
+                    "{metric:?} t={threads} iter {it}: {} vs {}",
+                    s_inertia,
+                    m.inertia
+                );
+                cent = next;
+            }
+            // both regimes processed every row exactly once per pass
+            let (cs, cm) = (s_sess.prune_counters(), m_sess.prune_counters());
+            assert_eq!(cs.pruned_rows + cs.scanned_rows, 4 * 3001);
+            assert_eq!(cm.pruned_rows + cm.scanned_rows, 4 * 3001);
+        }
+    }
+}
+
+/// Full fits through `fit_with` (now session-driven) still agree between
+/// the CPU regimes on labels — the end-to-end check that pruning plus
+/// the persistent pool changed nothing observable.
+#[test]
+fn session_driven_fits_agree_single_vs_multi() {
+    let g = generate(&GmmSpec::new(4000, 10, 5).seed(52).spread(0.15).center_scale(25.0));
+    let base = KMeansConfig::new(5)
+        .seed(52)
+        .diameter_mode(DiameterMode::Sampled(512))
+        .max_iters(60);
+    let r_single = fit_with(&g.dataset, &base, &SingleExecutor::new()).unwrap();
+    let r_multi = fit_with(&g.dataset, &base, &MultiExecutor::new(6)).unwrap();
+    assert!(r_single.converged && r_multi.converged);
+    assert_eq!(r_single.labels, r_multi.labels);
+    assert_eq!(r_single.iterations, r_multi.iterations);
+    // both must have pruned (Euclidean fits on settling centroids)
+    assert!(r_single.metrics.prune.pruned_rows > 0, "{:?}", r_single.metrics);
+    assert!(r_multi.metrics.prune.pruned_rows > 0, "{:?}", r_multi.metrics);
+}
+
 #[test]
 fn diameter_matches_across_regimes() {
     require_artifacts!();
