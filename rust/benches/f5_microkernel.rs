@@ -1,0 +1,85 @@
+//! F5 — register-blocked GEMM-style assignment micro-kernel: dense
+//! Euclidean step time, scalar reference vs pre-blocking row sweep vs
+//! register-blocked micro-kernel, at the paper's scale.
+//!
+//! The row sweep re-reads every row from L1 `k` times and pays a scalar
+//! dot loop per (row, centroid) pair; the micro-kernel re-uses each row
+//! load across a CEN_TILE-wide centroid block and each (transposed,
+//! unit-stride) panel load across a ROW_MICRO-high row block, cutting
+//! L1 traffic by ~the tile factor at identical arithmetic. Because the
+//! per-pair f64 accumulation order is unchanged, the micro-kernel's
+//! labels are **bit-equal** to the row sweep on any input — asserted
+//! here per shape before timing, together with label equality against
+//! the scalar reference (guaranteed on this provably separated
+//! workload; see `testkit::lattice_blobs`).
+//!
+//! Record the numbers in EXPERIMENTS.md §Perf (F5).
+
+mod common;
+
+use parclust::benchkit::{fmt_duration, fmt_throughput, smoke_mode, Bencher, Table};
+use parclust::kernel::assign;
+use parclust::metric::Metric;
+use parclust::testkit::lattice_blobs;
+
+fn main() {
+    common::banner(
+        "F5",
+        "blocked linear-algebra assignment is how the hot stage reaches hardware speed",
+    );
+    let bencher = Bencher::quick().from_env();
+    let n: usize = if smoke_mode() { 60_000 } else { 2_000_000 };
+    let shapes: &[(usize, usize)] = &[(2, 10), (2, 100), (10, 10), (10, 100), (25, 10), (25, 100)];
+
+    let mut table = Table::new(
+        &format!("F5 dense Euclidean assignment, one full pass (n={n}, single thread)"),
+        &[
+            "m", "k", "scalar-ref", "row-sweep", "micro-kernel",
+            "micro rate", "vs scalar", "vs row-sweep",
+        ],
+    );
+
+    for &(m, k) in shapes {
+        let (ds, cent) = lattice_blobs(n, m, k);
+        let ds = &ds;
+
+        // Label-exactness gate before anything is timed: bitwise vs the
+        // row sweep (identical per-pair arithmetic — must hold on any
+        // data), labels vs the scalar reference (margin-guaranteed on
+        // this workload).
+        let micro = assign::assign_update_range(ds, &cent, k, Metric::Euclidean, 0..n);
+        let sweep = assign::assign_update_range_rowsweep(ds, &cent, k, 0..n);
+        assert_eq!(micro.labels, sweep.labels, "m={m} k={k}: micro vs row-sweep labels");
+        assert_eq!(micro.counts, sweep.counts, "m={m} k={k}: counts");
+        assert_eq!(micro.sums, sweep.sums, "m={m} k={k}: sums");
+        assert_eq!(micro.inertia, sweep.inertia, "m={m} k={k}: inertia");
+        let scalar = assign::assign_update_range_scalar(ds, &cent, k, Metric::Euclidean, 0..n);
+        assert_eq!(micro.labels, scalar.labels, "m={m} k={k}: micro vs scalar labels");
+
+        let sc = bencher.bench(|| {
+            let _ = assign::assign_update_range_scalar(ds, &cent, k, Metric::Euclidean, 0..n);
+        });
+        let rs = bencher.bench(|| {
+            let _ = assign::assign_update_range_rowsweep(ds, &cent, k, 0..n);
+        });
+        let mk = bencher.bench(|| {
+            let _ = assign::assign_update_range(ds, &cent, k, Metric::Euclidean, 0..n);
+        });
+
+        table.row(vec![
+            m.to_string(),
+            k.to_string(),
+            fmt_duration(sc.mean),
+            fmt_duration(rs.mean),
+            fmt_duration(mk.mean),
+            fmt_throughput(n as u64, mk.mean),
+            format!("{:.2}x", mk.speedup_vs(&sc)),
+            format!("{:.2}x", mk.speedup_vs(&rs)),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "label-exactness: micro-kernel bit-equal to row-sweep (labels/counts/sums/inertia) \
+         and label-equal to the scalar reference on every shape above"
+    );
+}

@@ -165,6 +165,23 @@ pub fn fmt_duration(d: Duration) -> String {
     }
 }
 
+/// Pretty row throughput for one timed pass over `items` rows: picks a
+/// readable unit (row/s → Grow/s). The unit the F5 micro-kernel rows
+/// are judged in — step *time* alone hides that the workloads differ by
+/// 100× in n·k·m across the shape sweep.
+pub fn fmt_throughput(items: u64, d: Duration) -> String {
+    let per_s = items as f64 / d.as_secs_f64().max(1e-12);
+    if per_s >= 1e9 {
+        format!("{:.2} Grow/s", per_s / 1e9)
+    } else if per_s >= 1e6 {
+        format!("{:.2} Mrow/s", per_s / 1e6)
+    } else if per_s >= 1e3 {
+        format!("{:.2} Krow/s", per_s / 1e3)
+    } else {
+        format!("{per_s:.0} row/s")
+    }
+}
+
 /// A markdown table builder for bench reports.
 #[derive(Default, Clone, Debug)]
 pub struct Table {
@@ -276,6 +293,22 @@ mod tests {
         assert_eq!(b.warmup_iters, 0);
         assert_eq!(b.min_iters, 1);
         assert!(b.max_iters <= 2);
+    }
+
+    #[test]
+    fn fmt_throughput_units() {
+        assert_eq!(fmt_throughput(500, Duration::from_secs(1)), "500 row/s");
+        assert_eq!(fmt_throughput(2_000, Duration::from_secs(1)), "2.00 Krow/s");
+        assert_eq!(fmt_throughput(3_000_000, Duration::from_secs(1)), "3.00 Mrow/s");
+        assert_eq!(
+            fmt_throughput(4_000_000_000, Duration::from_secs(1)),
+            "4.00 Grow/s"
+        );
+        // a 2M-row pass in 0.5 s is 4 Mrow/s
+        assert_eq!(
+            fmt_throughput(2_000_000, Duration::from_millis(500)),
+            "4.00 Mrow/s"
+        );
     }
 
     #[test]

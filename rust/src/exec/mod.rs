@@ -77,6 +77,25 @@ impl AssignStats {
         self.inertia = 0.0;
     }
 
+    /// Fold one labeled row into the statistics — the shared tail of
+    /// every CPU assignment path (scalar reference, row sweep,
+    /// micro-kernel, pruned). The operation sequence — count increment,
+    /// f32→f64 inertia add, per-coordinate f64 sum adds in feature
+    /// order — is part of the kernel layer's bit-parity contract: every
+    /// path folds the same (row, label, d²) stream in the same row
+    /// order, so sums and inertia are bit-identical whenever labels
+    /// agree. One implementation, so the copies can never drift.
+    #[inline]
+    pub fn fold_row(&mut self, out_i: usize, row: &[f32], label: usize, d2: f32, m: usize) {
+        self.labels[out_i] = label as u32;
+        self.counts[label] += 1;
+        self.inertia += d2 as f64;
+        let dst = &mut self.sums[label * m..(label + 1) * m];
+        for (s, &v) in dst.iter_mut().zip(row) {
+            *s += v as f64;
+        }
+    }
+
     /// Fold a shard's partials (with its row offset) into `self`.
     pub fn absorb(&mut self, offset: usize, shard: &AssignStats) {
         self.labels[offset..offset + shard.labels.len()]
@@ -159,10 +178,14 @@ pub trait Executor {
     /// n-length buffers (labels, statistics, triangle-inequality bounds)
     /// for the whole fit, so iterating allocates nothing per pass, and
     /// the CPU regimes prune Euclidean assignment work with
-    /// [`crate::kernel::pruned`] bounds carried between iterations. The
-    /// GPU regime returns a [`DenseSession`] (pruning is per-row
-    /// divergent — the wrong shape for the wide device kernels, matching
-    /// the paper's per-stage offload logic).
+    /// [`crate::kernel::pruned`] bounds carried between iterations.
+    /// Euclidean sessions also own the per-iteration
+    /// [`crate::kernel::prep::CentroidPrep`] (centroid norms + the
+    /// micro-kernel's transposed panel): built once per `step` on the
+    /// leader, shared read-only by every shard. The GPU regime returns a
+    /// [`DenseSession`] (pruning is per-row divergent — the wrong shape
+    /// for the wide device kernels, matching the paper's per-stage
+    /// offload logic).
     fn assign_session<'a>(
         &'a self,
         ds: &'a Dataset,

@@ -8,7 +8,10 @@
 //!   and scans it against the rest of the set (triangle split), returning
 //!   its local max pair; the leader takes the global max;
 //! * step 2 (center of gravity): per-shard coordinate sums, leader adds;
-//! * steps 4-7 (assignment): per-shard [`AssignStats`], leader absorbs.
+//! * steps 4-7 (assignment): the leader builds one
+//!   [`crate::kernel::prep::CentroidPrep`] (centroid norms + transposed
+//!   micro-kernel panel) per iteration, every shard borrows it
+//!   read-only and returns a per-shard [`AssignStats`], leader absorbs.
 //!
 //! Workers are the **persistent** [`crate::pool::ThreadPool`], built
 //! lazily on the first stage call and reused for every stage of every
@@ -29,6 +32,8 @@ use crate::data::Dataset;
 use crate::exec::{
     AssignSession, AssignStats, DiameterResult, ExecError, Executor, PruneCounters,
 };
+use crate::kernel::microkernel::assign_euclidean_prepped;
+use crate::kernel::prep::CentroidPrep;
 use crate::kernel::pruned::{assign_pruned_range, PrunedState};
 use crate::kernel::{assign, diameter, reduce};
 use crate::metric::Metric;
@@ -136,14 +141,33 @@ impl Executor for MultiExecutor {
         metric: Metric,
     ) -> Result<AssignStats, ExecError> {
         let ranges = split_ranges(ds.n(), self.threads);
-        let jobs: Vec<_> = ranges
-            .iter()
-            .map(|r| {
-                let r = r.clone();
-                move || assign::assign_update_range(ds, centroids, k, metric, r)
-            })
-            .collect();
-        let partials = self.pool().scope_run_all(jobs);
+        // Euclidean: build the CentroidPrep (norms + transposed panel)
+        // ONCE on the leader and lend it to every shard — the pre-F5
+        // path rebuilt the norm table inside each shard job, k·m work ×
+        // shards of pure redundancy per call (tests/prep_discipline.rs
+        // pins the single build).
+        let partials = if metric == Metric::Euclidean {
+            let mut prep = CentroidPrep::default();
+            prep.prepare(centroids, k, ds.m());
+            let prep = &prep;
+            let jobs: Vec<_> = ranges
+                .iter()
+                .map(|r| {
+                    let r = r.clone();
+                    move || assign_euclidean_prepped(ds, centroids, prep, r)
+                })
+                .collect();
+            self.pool().scope_run_all(jobs)
+        } else {
+            let jobs: Vec<_> = ranges
+                .iter()
+                .map(|r| {
+                    let r = r.clone();
+                    move || assign::assign_update_range(ds, centroids, k, metric, r)
+                })
+                .collect();
+            self.pool().scope_run_all(jobs)
+        };
         let mut total = AssignStats::zeros(ds.n(), k, ds.m());
         for (r, shard) in ranges.iter().zip(&partials) {
             total.absorb(r.start, shard);

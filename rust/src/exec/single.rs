@@ -78,7 +78,11 @@ impl Executor for SingleExecutor {
 /// Stateful assignment for the single regime: one [`AssignStats`]
 /// scratch and (for Euclidean) one [`PrunedState`] for the whole fit —
 /// every n-length buffer is allocated here, once, and `step` allocates
-/// nothing.
+/// nothing. The per-iteration
+/// [`crate::kernel::prep::CentroidPrep`] (centroid norms + the
+/// micro-kernel's transposed panel) lives inside the [`PrunedState`]
+/// and is refreshed in place by `prepare` — exactly one norm/panel
+/// build per iteration (`tests/prep_discipline.rs`).
 struct SingleSession<'a> {
     ds: &'a Dataset,
     k: usize,

@@ -4,19 +4,28 @@
 //!
 //! Two paths, selected by metric:
 //!
-//! * **Euclidean** (paper Eq. 2, the default): rows are walked in cache
-//!   tiles of [`crate::kernel::ROW_TILE`]; centroid squared norms are
-//!   precomputed once per call (= once per Lloyd iteration), and the
-//!   argmin uses the norm-decomposition ‖x−c‖² = ‖x‖² − 2·x·c + ‖c‖².
-//!   Since ‖x‖² is constant per row it drops out of the argmin entirely,
-//!   so the inner loop is a pure dot product — 2 flops/element instead of
-//!   the subtract-square form's 3, and a shape LLVM vectorises well.
-//!   Norms and dots accumulate in **f64** (f32 products are exact in
-//!   f64): the decomposed form cancels catastrophically in f32 when
-//!   features carry a large common offset, and f64 accumulation keeps
-//!   the argmin faithful on unscaled data. The winner's distance is then
-//!   recomputed exactly with [`sq_euclidean`], so the reported inertia
-//!   is bit-identical to the scalar reference whenever the labels agree.
+//! * **Euclidean** (paper Eq. 2, the default): the register-blocked
+//!   micro-kernel of [`crate::kernel::microkernel`] over a
+//!   [`crate::kernel::prep::CentroidPrep`] (centroid norms + transposed
+//!   panel — built once per Lloyd iteration by the sessions and shared
+//!   across shards; the stateless entry points here build a local one
+//!   per call). The argmin uses the norm-decomposition
+//!   ‖x−c‖² = ‖x‖² − 2·x·c + ‖c‖²: since ‖x‖² is constant per row it
+//!   drops out entirely, so the inner loop is a pure dot product —
+//!   2 flops/element instead of the subtract-square form's 3 — blocked
+//!   into [`crate::kernel::microkernel::ROW_MICRO`] ×
+//!   [`crate::kernel::prep::CEN_TILE`] register tiles that reuse every
+//!   row and panel load across the tile. Norms and dots accumulate in
+//!   **f64** (f32 products are exact in f64): the decomposed form
+//!   cancels catastrophically in f32 when features carry a large common
+//!   offset, and f64 accumulation keeps the argmin faithful on unscaled
+//!   data. The winner's distance is then recomputed exactly with
+//!   [`sq_euclidean`], so the reported inertia is bit-identical to the
+//!   scalar reference whenever the labels agree. The pre-blocking
+//!   row-at-a-time sweep is kept verbatim as
+//!   [`assign_update_range_rowsweep`] — the f5 bench baseline and a
+//!   bit-exact cross-check (same per-pair arithmetic, so identical
+//!   labels on *any* input).
 //! * **generic** (Manhattan / Chebyshev / Cosine): the scalar row walk
 //!   ([`assign_update_range_scalar`]) with the metric's comparable form
 //!   in the argmin — no norm decomposition exists for these metrics, so
@@ -28,8 +37,12 @@
 //! equal the global single-pass result exactly (labels/counts) — the
 //! invariant `tests/coordinator_properties.rs` checks.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::data::Dataset;
 use crate::exec::AssignStats;
+use crate::kernel::microkernel::assign_euclidean_prepped_into;
+use crate::kernel::prep::CentroidPrep;
 use crate::kernel::{tiles, ROW_TILE};
 use crate::metric::{sq_euclidean, Metric};
 
@@ -63,18 +76,39 @@ pub fn assign_update_range_into(
     debug_assert_eq!(centroids.len(), k * ds.m());
     stats.reset(range.len(), k, ds.m());
     match metric {
-        Metric::Euclidean => assign_euclidean_tiled_into(ds, centroids, k, range, stats),
+        // Stateless convenience: build a throwaway prep for this call.
+        // The Lloyd loop never comes through here for Euclidean — the
+        // sessions own one CentroidPrep per fit, refreshed once per
+        // iteration and shared across shards (tests/prep_discipline.rs).
+        Metric::Euclidean => {
+            let mut prep = CentroidPrep::default();
+            prep.prepare(centroids, k, ds.m());
+            assign_euclidean_prepped_into(ds, centroids, &prep, range, stats);
+        }
         _ => assign_scalar_into(ds, centroids, k, metric, range, stats),
     }
+}
+
+static NORM_BUILDS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of centroid-norm table builds — a test hook in the
+/// spirit of [`crate::pool::worker_spawn_count`]. Every way a norm table
+/// can come into existence funnels through [`centroid_sq_norms_into`],
+/// so `tests/prep_discipline.rs` can pin the per-iteration contract:
+/// the Lloyd loop builds **exactly one** per iteration per fit (the
+/// leader's shared [`CentroidPrep`]), never one per shard.
+pub fn centroid_sq_norm_builds() -> u64 {
+    NORM_BUILDS.load(Ordering::Relaxed)
 }
 
 /// Per-centroid squared norms ‖c‖², computed once per call / iteration.
 /// Accumulated in f64 (every f32 product is exact in f64) so the
 /// decomposed score stays faithful on data with large common offsets.
-/// The `_into` form reuses `out` (pruned sessions call it per iteration
+/// The `_into` form reuses `out` (session preps call it per iteration
 /// without allocating).
 pub fn centroid_sq_norms_into(centroids: &[f32], k: usize, m: usize, out: &mut Vec<f64>) {
     debug_assert_eq!(centroids.len(), k * m);
+    NORM_BUILDS.fetch_add(1, Ordering::Relaxed);
     out.clear();
     out.extend((0..k).map(|c| {
         let cen = &centroids[c * m..(c + 1) * m];
@@ -93,12 +127,13 @@ pub fn centroid_sq_norms(centroids: &[f32], k: usize, m: usize) -> Vec<f64> {
     out
 }
 
-/// Dot product x·c in f64 — the inner loop of the decomposed Euclidean
-/// path. Plain indexed loop over equal-length slices so LLVM
-/// auto-vectorises; f32 products widened to f64 are exact, so the only
-/// rounding is in the m additions. `pub(crate)` because the pruned
-/// kernel's fallback scan must use *this exact arithmetic* to keep its
-/// label bit-parity contract — one implementation, structurally shared.
+/// Dot product x·c in f64 — the per-pair arithmetic of the decomposed
+/// Euclidean path, written out linearly. The register-blocked
+/// micro-kernel and the pruned fallback now carry the live traffic
+/// (through [`crate::kernel::microkernel`]), but their per-(row,
+/// centroid) accumulation is *this* loop's operation sequence exactly —
+/// kept here as the semantic reference and as the inner loop of the
+/// [`assign_update_range_rowsweep`] baseline.
 #[inline]
 pub(crate) fn dot(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -109,8 +144,25 @@ pub(crate) fn dot(a: &[f32], b: &[f32]) -> f64 {
     acc
 }
 
-/// Tiled Euclidean assignment via the norm-decomposition argmin.
-fn assign_euclidean_tiled_into(
+/// The pre-F5 tiled Euclidean path: row-at-a-time centroid sweep over
+/// the norm-decomposition argmin, no register blocking. Kept verbatim
+/// for two jobs: the "before" column of `benches/f5_microkernel`, and a
+/// bit-exact cross-check for the micro-kernel (identical per-pair
+/// arithmetic ⇒ identical labels on any input, not just separated data
+/// — `tests/kernel_parity.rs` exploits this). Euclidean only.
+pub fn assign_update_range_rowsweep(
+    ds: &Dataset,
+    centroids: &[f32],
+    k: usize,
+    range: std::ops::Range<usize>,
+) -> AssignStats {
+    let mut stats = AssignStats::zeros(range.len(), k, ds.m());
+    assign_euclidean_rowsweep_into(ds, centroids, k, range, &mut stats);
+    stats
+}
+
+/// Body of [`assign_update_range_rowsweep`].
+fn assign_euclidean_rowsweep_into(
     ds: &Dataset,
     centroids: &[f32],
     k: usize,
@@ -147,15 +199,8 @@ fn assign_euclidean_tiled_into(
         for (li, i) in tile.clone().enumerate() {
             let row = ds.row(i);
             let label = best_idx[li] as usize;
-            let out_i = i - range.start;
-            stats.labels[out_i] = label as u32;
-            stats.counts[label] += 1;
             let d2 = sq_euclidean(row, &centroids[label * m..(label + 1) * m]);
-            stats.inertia += d2 as f64;
-            let dst = &mut stats.sums[label * m..(label + 1) * m];
-            for (s, &v) in dst.iter_mut().zip(row) {
-                *s += v as f64;
-            }
+            stats.fold_row(i - range.start, row, label, d2, m);
         }
     }
 }
@@ -232,13 +277,7 @@ fn assign_scalar_into(
         } else {
             nearest_centroid_metric(row, centroids, k, m, metric)
         };
-        stats.labels[out_i] = label as u32;
-        stats.counts[label] += 1;
-        stats.inertia += d2 as f64;
-        let dst = &mut stats.sums[label * m..(label + 1) * m];
-        for (s, &v) in dst.iter_mut().zip(row) {
-            *s += v as f64;
-        }
+        stats.fold_row(out_i, row, label, d2, m);
     }
 }
 

@@ -1,0 +1,301 @@
+//! Register-blocked GEMM-style dense assignment — the Euclidean hot
+//! loop restructured as blocked linear algebra.
+//!
+//! The pre-F5 dense path swept the centroid table row-at-a-time: every
+//! row was re-read from L1 `k` times and every (row, centroid) pair paid
+//! its own scalar `dot` loop. This module casts the same computation as
+//! a three-level blocking (the shape the paper's GPU kernels — and the
+//! kernel-K-means-as-GEMM literature — get their throughput from):
+//!
+//! 1. **L1 row tile** ([`crate::kernel::ROW_TILE`] rows): the outer
+//!    walk, shared with the rest of the kernel layer;
+//! 2. **panel block** ([`CEN_TILE`] centroids from the transposed,
+//!    padded panel of [`CentroidPrep`]): one `m × CEN_TILE` slab that
+//!    stays resident while a row micro-tile sweeps it;
+//! 3. **register micro-tile** ([`ROW_MICRO`] × [`CEN_TILE`] f64
+//!    accumulators): the innermost loop over features `j` broadcasts
+//!    one row element against a unit-stride [`CEN_TILE`]-wide panel
+//!    load and updates all `ROW_MICRO × CEN_TILE` dots — each row load
+//!    is reused across the centroid micro-tile and each panel load
+//!    across the row micro-tile, cutting L1 traffic by ~the tile factor.
+//!    The fixed-bound inner loops unroll fully and LLVM vectorises the
+//!    [`CEN_TILE`] lane dimension.
+//!
+//! **Bit-parity contract.** Per (row, centroid) pair the accumulation is
+//! `acc += row[j] as f64 * panel_lane[j] as f64` for `j = 0..m` in
+//! order, and the score is `‖c‖² − 2·acc` — *exactly* the arithmetic
+//! (same operations, same order, same f64 widening) of the scalar
+//! reference path's `dot`-based scan. Blocking only reorders work
+//! *across* independent (row, centroid) pairs, never *within* one, so
+//! every score is bit-identical to the pre-blocking kernel and the
+//! argmin (strict `<`, centroids visited in increasing index order both
+//! across and inside blocks) picks bit-identical labels with the same
+//! lowest-index tie-break. Padded lanes score +∞ (see
+//! [`crate::kernel::prep`]) and can never win. `tests/kernel_parity.rs`
+//! enforces label/count/sum/inertia equality against
+//! [`crate::kernel::assign::assign_update_range_scalar`] across ragged
+//! shapes, duplicate rows and exact ties.
+//!
+//! [`scan_row`] is the one-row degenerate form (1 × [`CEN_TILE`] tile)
+//! over the same panel: it serves the ragged row tail here and the
+//! fallback scan of [`crate::kernel::pruned`] — one arithmetic,
+//! structurally shared, so the pruned path's label parity is inherited
+//! rather than re-proven.
+
+use crate::data::Dataset;
+use crate::exec::AssignStats;
+use crate::kernel::prep::{CentroidPrep, CEN_TILE};
+use crate::kernel::{tiles, ROW_TILE};
+use crate::metric::sq_euclidean;
+
+/// Rows per register micro-tile. With [`CEN_TILE`] = 4 this is a 4×4
+/// block of f64 accumulators — 16 values, within the vector register
+/// budget of every target we compile for.
+pub const ROW_MICRO: usize = 4;
+
+// Interior tiles must decompose into whole micro-tiles so the ragged
+// row path only ever runs on the final partial tile of a range.
+const _: () = assert!(ROW_TILE % ROW_MICRO == 0);
+
+/// Dense Euclidean assignment + statistics over `range` through the
+/// register-blocked micro-kernel. `prep` must have been built from
+/// `centroids` (same table, same iteration); `stats` must already be
+/// reset for this range. The winner's distance is recomputed with the
+/// exact subtract-square form ([`sq_euclidean`]) so the reported inertia
+/// matches the scalar reference bit-for-bit whenever the labels agree.
+pub fn assign_euclidean_prepped_into(
+    ds: &Dataset,
+    centroids: &[f32],
+    prep: &CentroidPrep,
+    range: std::ops::Range<usize>,
+    stats: &mut AssignStats,
+) {
+    let m = ds.m();
+    debug_assert_eq!(prep.m(), m);
+    debug_assert_eq!(centroids.len(), prep.k() * m);
+    debug_assert_eq!(stats.labels.len(), range.len());
+    let mut best_score = [f64::INFINITY; ROW_TILE];
+    let mut best_idx = [0u32; ROW_TILE];
+    for tile in tiles(range.clone(), ROW_TILE) {
+        let t = tile.len();
+        best_score[..t].fill(f64::INFINITY);
+        best_idx[..t].fill(0);
+
+        // Whole ROW_MICRO × CEN_TILE register tiles over the L1-resident
+        // rows; the ragged tail (< ROW_MICRO rows, final tile only)
+        // falls through to the one-row panel sweep — same scores, same
+        // visit order, so labels are independent of where tile
+        // boundaries land.
+        let full = t - t % ROW_MICRO;
+        let mut li = 0;
+        while li < full {
+            let i = tile.start + li;
+            micro_rows(
+                ds.rows(i..i + ROW_MICRO),
+                m,
+                prep,
+                &mut best_score[li..li + ROW_MICRO],
+                &mut best_idx[li..li + ROW_MICRO],
+            );
+            li += ROW_MICRO;
+        }
+        while li < t {
+            let (best, _, _) = scan_row(ds.row(tile.start + li), prep);
+            best_idx[li] = best as u32;
+            li += 1;
+        }
+
+        // Fold the tile into the statistics in dataset row order — the
+        // shared `AssignStats::fold_row` tail, so sums and inertia are
+        // bit-equal to the scalar reference on agreeing labels.
+        for (li, i) in tile.clone().enumerate() {
+            let row = ds.row(i);
+            let label = best_idx[li] as usize;
+            let d2 = sq_euclidean(row, &centroids[label * m..(label + 1) * m]);
+            stats.fold_row(i - range.start, row, label, d2, m);
+        }
+    }
+}
+
+/// Allocating convenience over [`assign_euclidean_prepped_into`] — the
+/// stateless per-shard form the multi executor fans out after building
+/// one shared prep on the leader.
+pub fn assign_euclidean_prepped(
+    ds: &Dataset,
+    centroids: &[f32],
+    prep: &CentroidPrep,
+    range: std::ops::Range<usize>,
+) -> AssignStats {
+    let mut stats = AssignStats::zeros(range.len(), prep.k(), ds.m());
+    assign_euclidean_prepped_into(ds, centroids, prep, range, &mut stats);
+    stats
+}
+
+/// One ROW_MICRO × CEN_TILE register tile against every panel block:
+/// `rows` is the contiguous `ROW_MICRO × m` row slab, `best_*` the
+/// argmin state slices for exactly these rows.
+#[inline]
+fn micro_rows(
+    rows: &[f32],
+    m: usize,
+    prep: &CentroidPrep,
+    best_score: &mut [f64],
+    best_idx: &mut [u32],
+) {
+    debug_assert_eq!(rows.len(), ROW_MICRO * m);
+    for cb in 0..prep.blocks() {
+        let panel = prep.panel_block(cb);
+        let sn = &prep.score_norms[cb * CEN_TILE..(cb + 1) * CEN_TILE];
+        // The GEMM outer-product micro-kernel: j-loop outside, fixed
+        // ROW_MICRO × CEN_TILE update inside (fully unrolled; the
+        // CEN_TILE lane loads are unit-stride).
+        let mut acc = [[0.0f64; CEN_TILE]; ROW_MICRO];
+        for j in 0..m {
+            let b = &panel[j * CEN_TILE..(j + 1) * CEN_TILE];
+            for r in 0..ROW_MICRO {
+                let a = rows[r * m + j] as f64;
+                for c in 0..CEN_TILE {
+                    acc[r][c] += a * b[c] as f64;
+                }
+            }
+        }
+        // score(x, c) = ‖c‖² − 2·x·c (monotone per row); lanes compared
+        // in increasing centroid order with strict `<` — the reference
+        // tie-break.
+        let c0 = cb * CEN_TILE;
+        for r in 0..ROW_MICRO {
+            for c in 0..CEN_TILE {
+                let score = sn[c] - 2.0 * acc[r][c];
+                if score < best_score[r] {
+                    best_score[r] = score;
+                    best_idx[r] = (c0 + c) as u32;
+                }
+            }
+        }
+    }
+}
+
+/// Full panel sweep for one row: the 1 × [`CEN_TILE`] degenerate
+/// micro-tile. Returns `(argmin index, best score, runner-up score)` in
+/// the decomposed f64 score domain — the runner-up feeds the pruned
+/// path's lower-bound refresh. Bit-identical scores and visit order to
+/// [`micro_rows`] (and to the pre-blocking `dot`-based scan), so the
+/// dense kernel's ragged tail and the pruned fallback share one
+/// arithmetic.
+#[inline]
+pub(crate) fn scan_row(row: &[f32], prep: &CentroidPrep) -> (usize, f64, f64) {
+    let m = prep.m();
+    debug_assert_eq!(row.len(), m);
+    let mut best = 0usize;
+    let mut best_score = f64::INFINITY;
+    let mut second = f64::INFINITY;
+    for cb in 0..prep.blocks() {
+        let panel = prep.panel_block(cb);
+        let sn = &prep.score_norms[cb * CEN_TILE..(cb + 1) * CEN_TILE];
+        let mut acc = [0.0f64; CEN_TILE];
+        for j in 0..m {
+            let a = row[j] as f64;
+            let b = &panel[j * CEN_TILE..(j + 1) * CEN_TILE];
+            for c in 0..CEN_TILE {
+                acc[c] += a * b[c] as f64;
+            }
+        }
+        for c in 0..CEN_TILE {
+            let score = sn[c] - 2.0 * acc[c];
+            if score < best_score {
+                second = best_score;
+                best_score = score;
+                best = cb * CEN_TILE + c;
+            } else if score < second {
+                second = score;
+            }
+        }
+    }
+    (best, best_score, second)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GmmSpec};
+    use crate::kernel::assign::{
+        assign_update_range, assign_update_range_rowsweep, assign_update_range_scalar,
+    };
+    use crate::metric::Metric;
+
+    #[test]
+    fn padded_lanes_never_win_the_argmin() {
+        // One centroid far from the origin: every real score is
+        // positive, so a zero-padded norm lane (phantom centroid at the
+        // origin, score 0) would steal the argmin. The +inf padding must
+        // keep label 0.
+        let ds = Dataset::from_vec(2, 2, vec![0.0, 0.0, 0.1, -0.1]).unwrap();
+        let cent = [10.0f32, 10.0];
+        let mut prep = CentroidPrep::default();
+        prep.prepare(&cent, 1, 2);
+        let mut stats = AssignStats::zeros(2, 1, 2);
+        assign_euclidean_prepped_into(&ds, &cent, &prep, 0..2, &mut stats);
+        assert_eq!(stats.labels, vec![0, 0]);
+        let (best, score, second) = scan_row(ds.row(0), &prep);
+        assert_eq!(best, 0);
+        assert_eq!(score, 200.0);
+        assert!(second.is_infinite(), "k = 1 has no runner-up");
+    }
+
+    #[test]
+    fn micro_tile_tie_breaks_low_index() {
+        // 5 identical rows equidistant from two centroids: both the 4-row
+        // micro-tile and the 1-row tail must break the exact tie to the
+        // lower index, like the scalar reference.
+        let ds = Dataset::from_vec(5, 1, vec![0.5; 5]).unwrap();
+        let cent = [0.0f32, 1.0];
+        let stats = assign_update_range(&ds, &cent, 2, Metric::Euclidean, 0..5);
+        assert_eq!(stats.labels, vec![0; 5]);
+    }
+
+    #[test]
+    fn bit_equal_to_rowsweep_on_unseparated_data() {
+        // The strong form of the parity contract: scores (not just
+        // labels) are bit-identical to the pre-blocking row sweep, so on
+        // *any* data — including near-ties the scalar f32 reference
+        // could legitimately rank differently — labels, counts, sums and
+        // inertia must match exactly.
+        let g = generate(&GmmSpec::new(1337, 7, 9).seed(99).spread(2.5));
+        let ds = &g.dataset;
+        let cent = ds.gather(&[3, 100, 200, 400, 600, 800, 1000, 1200, 1336]);
+        for range in [0..ds.n(), 5..ds.n(), 129..1003] {
+            let micro = assign_update_range(ds, &cent, 9, Metric::Euclidean, range.clone());
+            let sweep = assign_update_range_rowsweep(ds, &cent, 9, range.clone());
+            assert_eq!(micro.labels, sweep.labels, "{range:?}");
+            assert_eq!(micro.counts, sweep.counts, "{range:?}");
+            assert_eq!(micro.sums, sweep.sums, "{range:?}");
+            assert_eq!(micro.inertia, sweep.inertia, "{range:?}");
+        }
+    }
+
+    #[test]
+    fn scan_row_matches_micro_tile_and_reports_runner_up() {
+        let g = generate(&GmmSpec::new(64, 5, 6).seed(21).spread(1.0));
+        let ds = &g.dataset;
+        let cent = ds.gather(&[0, 10, 20, 30, 40, 50]);
+        let mut prep = CentroidPrep::default();
+        prep.prepare(&cent, 6, 5);
+        let full = assign_update_range(ds, &cent, 6, Metric::Euclidean, 0..64);
+        for i in 0..64 {
+            let (best, best_score, second) = scan_row(ds.row(i), &prep);
+            assert_eq!(best as u32, full.labels[i], "row {i}");
+            assert!(best_score <= second, "row {i}: runner-up below best");
+        }
+    }
+
+    #[test]
+    fn matches_scalar_on_separated_blobs() {
+        let (ds, cent) = crate::testkit::lattice_blobs(301, 6, 5);
+        let micro = assign_update_range(&ds, &cent, 5, Metric::Euclidean, 0..301);
+        let scalar = assign_update_range_scalar(&ds, &cent, 5, Metric::Euclidean, 0..301);
+        assert_eq!(micro.labels, scalar.labels);
+        assert_eq!(micro.counts, scalar.counts);
+        assert_eq!(micro.sums, scalar.sums);
+        assert_eq!(micro.inertia, scalar.inertia);
+    }
+}

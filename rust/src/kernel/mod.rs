@@ -6,13 +6,29 @@
 //! the executor layer ([`crate::exec`]) can stay pure orchestration:
 //!
 //! * [`assign`] — fused nearest-centroid assignment + statistics
-//!   accumulation (paper steps 4–7), block-tiled over rows with the
-//!   Euclidean path monomorphised onto the norm-decomposition form
-//!   ‖x−c‖² = ‖x‖² − 2·x·c + ‖c‖²;
+//!   accumulation (paper steps 4–7), with the Euclidean path
+//!   monomorphised onto the norm-decomposition form
+//!   ‖x−c‖² = ‖x‖² − 2·x·c + ‖c‖² and executed by the register-blocked
+//!   micro-kernel below;
+//! * [`prep`] — the per-iteration [`prep::CentroidPrep`]: centroid
+//!   squared norms plus the **transposed, padded centroid panel** the
+//!   micro-kernel streams. Built exactly once per Lloyd iteration on
+//!   the leader (a session-owned buffer, refreshed allocation-free) and
+//!   shared read-only across every shard;
+//! * [`microkernel`] — the dense Euclidean hot loop as GEMM-style
+//!   blocked linear algebra: an L1 row tile ([`ROW_TILE`]), a
+//!   [`prep::CEN_TILE`]-wide panel block, and a
+//!   [`microkernel::ROW_MICRO`] × [`prep::CEN_TILE`] register tile of
+//!   f64 dot accumulators whose fixed-bound inner loops unroll and
+//!   auto-vectorise. Per (row, centroid) pair the accumulation order is
+//!   identical to the scalar `dot` loop, so blocking reorders work only
+//!   *across* pairs — scores, labels and tie-breaks are bit-equal to
+//!   the unblocked reference;
 //! * [`pruned`] — the same stage with cross-iteration triangle-inequality
 //!   bounds (Hamerly-style): most rows skip the centroid sweep entirely
 //!   once the centroids settle, with labels provably identical to
-//!   [`assign`]; driven through the executors' stateful
+//!   [`assign`]; rows that fail the bounds fall back to the micro-kernel's
+//!   one-row panel sweep; driven through the executors' stateful
 //!   `AssignSession`s;
 //! * [`reduce`] — tiled center-of-gravity coordinate sums (paper step 2),
 //!   partial-sum folding, and per-centroid drift between tables;
@@ -32,6 +48,8 @@
 
 pub mod assign;
 pub mod diameter;
+pub mod microkernel;
+pub mod prep;
 pub mod pruned;
 pub mod reduce;
 

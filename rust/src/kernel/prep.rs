@@ -1,0 +1,198 @@
+//! Per-iteration centroid preparation — the table digest every dense
+//! Euclidean assignment pass reads, built **once per Lloyd iteration**
+//! on the leader and shared read-only across all shards.
+//!
+//! The decomposed Euclidean argmin (‖x−c‖² = ‖x‖² − 2·x·c + ‖c‖², see
+//! [`crate::kernel::assign`]) needs two derived views of the centroid
+//! table per iteration:
+//!
+//! * the **squared norms** ‖c‖² (f64) — the constant term of every
+//!   score, and
+//! * a **transposed, padded centroid panel** — the memory layout the
+//!   register-blocked micro-kernel ([`crate::kernel::microkernel`])
+//!   streams: centroids are grouped into blocks of [`CEN_TILE`], and
+//!   within a block the layout is feature-major, so the [`CEN_TILE`]
+//!   values a micro-kernel step multiplies against one broadcast row
+//!   element are one contiguous (unit-stride, vectorisable) load:
+//!
+//!   ```text
+//!   panel[cb·m·CEN_TILE + j·CEN_TILE + lane] = centroids[(cb·CEN_TILE+lane)·m + j]
+//!   ```
+//!
+//!   `k` is padded up to a multiple of [`CEN_TILE`]: padding lanes hold
+//!   0.0 in the panel and **+∞** in [`CentroidPrep::score_norms`], so a
+//!   padded lane's score is +∞ and can never win the strict-`<` argmin
+//!   (zero-padding the norms instead would fabricate a phantom centroid
+//!   at the origin).
+//!
+//! Before this type existed, every shard of the multi regime recomputed
+//! `centroid_sq_norms` per call — k·m work × shards × iterations of pure
+//! redundancy, plus one Vec allocation each. Now the executor sessions
+//! own one `CentroidPrep` per fit, [`CentroidPrep::prepare`] refreshes
+//! it allocation-free when shapes repeat, and the per-shard kernels
+//! borrow it. `tests/prep_discipline.rs` pins the once-per-iteration
+//! invariant through a process-wide build counter
+//! ([`crate::kernel::assign::centroid_sq_norm_builds`]); the
+//! allocation-free refresh is pinned by `tests/alloc_discipline.rs`.
+//!
+//! The pruned path ([`crate::kernel::pruned`]) extends the same struct
+//! with its triangle-inequality digest (half-separations, worst-case
+//! drift): those fields are only written by
+//! [`crate::kernel::pruned::PrunedState::prepare`] and only read by the
+//! bound tests — dense users ignore them.
+
+use crate::kernel::assign::centroid_sq_norms_into;
+
+/// Centroids per panel block — the width of the micro-kernel's register
+/// tile along the centroid axis. Four f64 accumulator lanes per row fit
+/// one AVX2 register (or two NEON registers), and with
+/// [`crate::kernel::microkernel::ROW_MICRO`] = 4 rows the 4×4 tile uses
+/// 16 accumulators — comfortably inside the 16 (AVX) / 32 (NEON/AVX-512)
+/// architectural vector registers with room for the loads.
+pub const CEN_TILE: usize = 4;
+
+/// Per-iteration centroid-table digest shared (read-only) by every
+/// shard: norms and the transposed panel for the dense micro-kernel,
+/// plus the pruning digest (half-separations, worst-case drift) filled
+/// in by the pruned sessions.
+#[derive(Default, Clone, Debug)]
+pub struct CentroidPrep {
+    k: usize,
+    m: usize,
+    /// ‖c‖² per centroid (f64) — the decomposed scan's constant term,
+    /// length `k`.
+    pub c_norms: Vec<f64>,
+    /// [`CentroidPrep::c_norms`] padded to `k_pad` with `+∞`: the
+    /// argmin-facing view (padding lanes score +∞, never win).
+    pub score_norms: Vec<f64>,
+    /// Transposed, zero-padded centroid panel (`k_pad × m` values in the
+    /// block-feature-lane layout of the module doc).
+    pub panel: Vec<f32>,
+    /// `½·min_{c'≠c} d(c, c')`, deflated by
+    /// [`crate::kernel::pruned::BOUND_SLACK`]; `+∞` for k = 1. Written
+    /// by the pruned sessions only; empty on dense-only preps.
+    pub half_sep: Vec<f64>,
+    /// `max_c ‖c_new − c_old‖`, inflated by `BOUND_SLACK`; `+∞` until a
+    /// previous table exists. Written by the pruned sessions only.
+    pub max_drift: f64,
+    /// `max_c ‖c‖²` — the centroid half of the pruned path's absolute
+    /// error guard η. Refreshed by [`CentroidPrep::prepare`] (it is one
+    /// fold over `c_norms`).
+    pub max_c_norm: f64,
+}
+
+impl CentroidPrep {
+    /// Logical centroid count (the padded count is
+    /// [`CentroidPrep::k_pad`]).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Feature count the panel was built for.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// `k` rounded up to a multiple of [`CEN_TILE`].
+    pub fn k_pad(&self) -> usize {
+        self.score_norms.len()
+    }
+
+    /// Number of [`CEN_TILE`]-wide panel blocks.
+    pub fn blocks(&self) -> usize {
+        self.k_pad() / CEN_TILE
+    }
+
+    /// The `m × CEN_TILE` panel slice for block `cb` (centroids
+    /// `cb·CEN_TILE .. cb·CEN_TILE + CEN_TILE`, feature-major).
+    #[inline]
+    pub fn panel_block(&self, cb: usize) -> &[f32] {
+        let w = self.m * CEN_TILE;
+        &self.panel[cb * w..(cb + 1) * w]
+    }
+
+    /// Rebuild the digest for a new centroid table. Allocation-free when
+    /// the `(k, m)` shape repeats (the session case: one prep per fit,
+    /// refreshed every iteration); shapes may also change freely between
+    /// calls. The pruning fields are *not* touched here — dense users
+    /// never read them, pruned sessions refresh them right after.
+    pub fn prepare(&mut self, centroids: &[f32], k: usize, m: usize) {
+        debug_assert_eq!(centroids.len(), k * m);
+        debug_assert!(k > 0, "prepare needs at least one centroid");
+        self.k = k;
+        self.m = m;
+
+        centroid_sq_norms_into(centroids, k, m, &mut self.c_norms);
+        self.max_c_norm = self.c_norms.iter().cloned().fold(0.0f64, f64::max);
+
+        let k_pad = k.div_ceil(CEN_TILE) * CEN_TILE;
+        self.score_norms.clear();
+        self.score_norms.extend_from_slice(&self.c_norms);
+        self.score_norms.resize(k_pad, f64::INFINITY);
+
+        // clear + resize re-zeroes the buffer without reallocating when
+        // the shape repeats; padding lanes therefore stay 0.0.
+        self.panel.clear();
+        self.panel.resize(k_pad * m, 0.0);
+        for c in 0..k {
+            let (cb, lane) = (c / CEN_TILE, c % CEN_TILE);
+            let src = &centroids[c * m..(c + 1) * m];
+            let base = cb * m * CEN_TILE;
+            for j in 0..m {
+                self.panel[base + j * CEN_TILE + lane] = src[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panel_is_block_transposed_and_padded() {
+        // k = 5, m = 3: two blocks, second block has 3 padding lanes.
+        let cent: Vec<f32> = (0..15).map(|v| v as f32).collect();
+        let mut prep = CentroidPrep::default();
+        prep.prepare(&cent, 5, 3);
+        assert_eq!(prep.k(), 5);
+        assert_eq!(prep.k_pad(), 8);
+        assert_eq!(prep.blocks(), 2);
+        // every real centroid value is where the layout says it is
+        for c in 0..5 {
+            for j in 0..3 {
+                let (cb, lane) = (c / CEN_TILE, c % CEN_TILE);
+                assert_eq!(
+                    prep.panel_block(cb)[j * CEN_TILE + lane],
+                    cent[c * 3 + j],
+                    "centroid {c} feature {j}"
+                );
+            }
+        }
+        // padding lanes: 0.0 in the panel, +inf in the score norms
+        for lane in 1..CEN_TILE {
+            for j in 0..3 {
+                assert_eq!(prep.panel_block(1)[j * CEN_TILE + lane], 0.0);
+            }
+        }
+        assert_eq!(prep.score_norms[..5], prep.c_norms[..]);
+        assert!(prep.score_norms[5..].iter().all(|v| v.is_infinite()));
+    }
+
+    #[test]
+    fn prepare_handles_shape_changes() {
+        let mut prep = CentroidPrep::default();
+        let a: Vec<f32> = (0..8).map(|v| v as f32).collect();
+        prep.prepare(&a, 4, 2); // exactly one block, no padding
+        assert_eq!(prep.k_pad(), 4);
+        assert!(prep.score_norms.iter().all(|v| v.is_finite()));
+        let b: Vec<f32> = (0..7).map(|v| v as f32).collect();
+        prep.prepare(&b, 1, 7); // k = 1: three padding lanes
+        assert_eq!(prep.k_pad(), CEN_TILE);
+        assert_eq!(prep.blocks(), 1);
+        assert_eq!(prep.c_norms.len(), 1);
+        let n: f64 = (0..7).map(|v| (v as f64) * (v as f64)).sum();
+        assert_eq!(prep.c_norms[0], n);
+        assert_eq!(prep.max_c_norm, n);
+    }
+}

@@ -51,9 +51,11 @@
 
 use crate::data::Dataset;
 use crate::exec::AssignStats;
-use crate::kernel::assign::{centroid_sq_norms_into, dot};
+use crate::kernel::microkernel::scan_row;
 use crate::kernel::reduce::centroid_shifts_sq_into;
 use crate::metric::sq_euclidean;
+
+pub use crate::kernel::prep::CentroidPrep;
 
 /// Safety margin applied to every bound comparison — used both
 /// relatively (on distances) and as the coefficient of the absolute
@@ -87,23 +89,6 @@ impl PruneCounters {
             self.pruned_rows as f64 / total as f64
         }
     }
-}
-
-/// Per-iteration centroid-table digest shared (read-only) by every
-/// shard: squared norms for the decomposed scan, half-separations and
-/// the worst-case drift for the bound tests.
-#[derive(Default, Clone, Debug)]
-pub struct CentroidPrep {
-    /// ‖c‖² per centroid (f64) — the decomposed scan's constant term.
-    pub c_norms: Vec<f64>,
-    /// `½·min_{c'≠c} d(c, c')`, deflated by [`BOUND_SLACK`];
-    /// `+∞` for k = 1 (a lone centroid always dominates).
-    pub half_sep: Vec<f64>,
-    /// `max_c ‖c_new − c_old‖`, inflated by [`BOUND_SLACK`]; `+∞` until
-    /// a previous table exists (disables the lower-bound test only).
-    pub max_drift: f64,
-    /// `max_c ‖c‖²` — the centroid half of the absolute error guard η.
-    pub max_c_norm: f64,
 }
 
 /// Cross-iteration pruning state for one fit: the per-row hypothesis
@@ -145,13 +130,15 @@ impl PrunedState {
     /// Refresh [`PrunedState::prep`] for a new centroid table (computing
     /// the drift against the previous one) and remember the table for
     /// the next iteration. Leader-side, O(k²·m), allocation-free after
-    /// the first call.
+    /// the first call. The shared dense digest (norms + transposed
+    /// panel) is [`CentroidPrep::prepare`] — one build per iteration for
+    /// every shard's fallback scans; the pruning-only fields are filled
+    /// in here.
     pub fn prepare(&mut self, centroids: &[f32]) {
         let (k, m) = (self.k, self.m);
         debug_assert_eq!(centroids.len(), k * m);
 
-        centroid_sq_norms_into(centroids, k, m, &mut self.prep.c_norms);
-        self.prep.max_c_norm = self.prep.c_norms.iter().cloned().fold(0.0f64, f64::max);
+        self.prep.prepare(centroids, k, m);
 
         self.prep.max_drift = if self.has_prev {
             centroid_shifts_sq_into(&self.prev_centroids, centroids, k, m, &mut self.drift_scratch);
@@ -248,23 +235,13 @@ pub fn assign_pruned_range(
             // would return it too. Skip the k−1 other centroids.
             lower[li] = l;
             counters.pruned_rows += 1;
-            fold_row(stats, li, row, a, d2_32, m);
+            stats.fold_row(li, row, a, d2_32, m);
         } else {
-            // Full scan — the dense kernel's decomposed argmin verbatim
-            // (same f64 scores, same strict-< lowest-index tie-break).
-            let mut best = 0usize;
-            let mut best_score = f64::INFINITY;
-            let mut second_score = f64::INFINITY;
-            for (c, &cn) in prep.c_norms.iter().enumerate() {
-                let score = cn - 2.0 * dot(row, &centroids[c * m..(c + 1) * m]);
-                if score < best_score {
-                    second_score = best_score;
-                    best_score = score;
-                    best = c;
-                } else if score < second_score {
-                    second_score = score;
-                }
-            }
+            // Full scan — the dense micro-kernel's panel sweep verbatim
+            // ([`scan_row`]: same f64 scores in the same visit order,
+            // same strict-< lowest-index tie-break), so label parity
+            // with the dense path is structural, not re-proven.
+            let (best, _best_score, second_score) = scan_row(row, prep);
             labels[li] = best as u32;
             // score + ‖x‖² = ‖x−c‖² up to ±η; subtracting η makes this a
             // valid lower bound on every non-label centroid even under
@@ -274,22 +251,10 @@ pub fn assign_pruned_range(
             lower[li] = (second_score + xn - eta).max(0.0).sqrt() * (1.0 - BOUND_SLACK);
             counters.scanned_rows += 1;
             let d2 = sq_euclidean(row, &centroids[best * m..(best + 1) * m]);
-            fold_row(stats, li, row, best, d2, m);
+            stats.fold_row(li, row, best, d2, m);
         }
     }
     counters
-}
-
-/// Fold one labeled row into the statistics (the dense kernel's tail).
-#[inline]
-fn fold_row(stats: &mut AssignStats, out_i: usize, row: &[f32], label: usize, d2: f32, m: usize) {
-    stats.labels[out_i] = label as u32;
-    stats.counts[label] += 1;
-    stats.inertia += d2 as f64;
-    let dst = &mut stats.sums[label * m..(label + 1) * m];
-    for (s, &v) in dst.iter_mut().zip(row) {
-        *s += v as f64;
-    }
 }
 
 /// Fused per-row pass: squared distance in f32 with exactly

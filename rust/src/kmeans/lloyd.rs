@@ -53,7 +53,12 @@ pub fn run(
     // The assignment stage runs through a stateful session: scratch
     // buffers (and, on the CPU regimes' Euclidean path, the
     // triangle-inequality pruning bounds of [`crate::kernel::pruned`])
-    // live across iterations instead of being rebuilt per pass.
+    // live across iterations instead of being rebuilt per pass. Each
+    // `step` refreshes the session's shared per-iteration
+    // [`crate::kernel::prep::CentroidPrep`] — centroid norms plus the
+    // transposed panel the register-blocked micro-kernel streams —
+    // exactly once on the leader, allocation-free, before the shards
+    // fan out.
     let mut session = exec.assign_session(ds, k, cfg.metric)?;
     let mut inertia = f64::INFINITY;
     let mut iterations = 0usize;

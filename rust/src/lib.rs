@@ -21,16 +21,24 @@
 //!   f32 matrix, synthetic generation, CSV/binary I/O, feature scaling.
 //!   Shards are zero-copy row ranges over this buffer.
 //! * **kernel** ([`kernel`]) — the single home of every hot CPU loop:
-//!   block-tiled, metric-monomorphized stage math. Assignment uses the
-//!   norm-decomposition dot-product form ‖x−c‖² = ‖x‖² − 2·x·c + ‖c‖²,
-//!   and the **pruned** variant ([`kernel::pruned`]) carries Hamerly-style
-//!   triangle-inequality bounds across Lloyd iterations so most rows skip
-//!   the centroid sweep entirely once the centroids settle — losslessly
-//!   (labels provably identical to the dense scan). Reductions and the
-//!   farthest-pair scan share the same tile walker. The Pallas/PJRT
-//!   device kernels (python/compile/kernels, AOT-lowered to HLO and
-//!   loaded by [`runtime`] — python never runs on the request path) are
-//!   this layer's accelerator counterpart.
+//!   block-tiled, metric-monomorphized stage math. Dense Euclidean
+//!   assignment is a **register-blocked GEMM-style micro-kernel**
+//!   ([`kernel::microkernel`]): a `ROW_MICRO × CEN_TILE` tile of f64
+//!   dot accumulators (norm-decomposition form
+//!   ‖x−c‖² = ‖x‖² − 2·x·c + ‖c‖²) sweeping a transposed, padded
+//!   centroid panel that the per-iteration [`kernel::prep::CentroidPrep`]
+//!   builds once on the leader and shares read-only across shards.
+//!   Blocking reorders work only across (row, centroid) pairs — per
+//!   pair the accumulation order matches the scalar reference, so
+//!   labels stay bit-equal. The **pruned** variant ([`kernel::pruned`])
+//!   carries Hamerly-style triangle-inequality bounds across Lloyd
+//!   iterations so most rows skip the centroid sweep entirely once the
+//!   centroids settle — losslessly (labels provably identical to the
+//!   dense scan; its fallback is the micro-kernel's one-row panel
+//!   sweep). Reductions and the farthest-pair scan share the same tile
+//!   walker. The Pallas/PJRT device kernels (python/compile/kernels,
+//!   AOT-lowered to HLO and loaded by [`runtime`] — python never runs
+//!   on the request path) are this layer's accelerator counterpart.
 //! * **executor** ([`exec`]) — pure orchestration per regime: sharding,
 //!   fan-out, partial-result absorption. The Lloyd loop enters through
 //!   **stateful assignment sessions** (`Executor::assign_session`): each

@@ -131,6 +131,44 @@ fn truncate_debug<T: std::fmt::Debug>(v: &T) -> String {
     }
 }
 
+/// Deterministic, provably separated blob dataset for kernel-parity
+/// checks and label-exactness-gated benches — returns `(dataset, the
+/// k×m centroid table at the blob centers)`.
+///
+/// Why not a seeded GMM: parity between the f64 decomposed argmin and
+/// the f32 subtract-square scalar reference is only *guaranteed* when
+/// every row's argmin margin dwarfs f32 rounding, and random center
+/// placement can put two centers arbitrarily close. Here center `c`
+/// gets the coordinate pattern `((c·31 + j·17) mod 13) · 3.0`: two
+/// distinct centers either differ by ≥ 3.0 in some coordinate (squared
+/// margin ≥ 9, orders of magnitude above f32 noise at these value
+/// scales) or — when `c ≡ c' (mod 13)` — are **bit-identical
+/// duplicates**, which both argmin forms resolve to the lower index via
+/// their shared strict-`<` tie-break. Rows sit within ≤ 0.05 per
+/// coordinate of their center (strictly positive offsets, so no
+/// accidental midpoints), cycling through 5 offset patterns — so the
+/// set also contains byte-identical duplicate rows, exercising the
+/// tie-break on the row side.
+pub fn lattice_blobs(n: usize, m: usize, k: usize) -> (crate::data::Dataset, Vec<f32>) {
+    assert!(k >= 1 && m >= 1 && n >= 1);
+    let mut cent = vec![0f32; k * m];
+    for c in 0..k {
+        for j in 0..m {
+            cent[c * m + j] = ((c * 31 + j * 17) % 13) as f32 * 3.0;
+        }
+    }
+    let mut values = vec![0f32; n * m];
+    for i in 0..n {
+        let c = i % k;
+        for j in 0..m {
+            let offset = ((i / k + j) % 5) as f32 * 0.01 + 0.005;
+            values[i * m + j] = cent[c * m + j] + offset;
+        }
+    }
+    let ds = crate::data::Dataset::from_vec(n, m, values).expect("consistent shape");
+    (ds, cent)
+}
+
 /// Assert two f32 slices are element-wise close (atol + rtol), with a
 /// useful report of the first mismatch.
 pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {

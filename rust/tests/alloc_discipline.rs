@@ -131,4 +131,28 @@ fn session_steps_do_not_churn_n_length_buffers() {
         d_calls < 256,
         "multi step made {d_calls} allocations — expected O(threads) queue plumbing"
     );
+
+    // ---- CentroidPrep: the per-iteration rebuild reuses its buffers ---
+    // The sessions above already prove it transitively (their steps run
+    // PrunedState::prepare → CentroidPrep::prepare inside the measured
+    // windows); this pins the prep in isolation so a relapse is
+    // attributed precisely: norms, padded score norms and the
+    // micro-kernel's transposed panel must all be refreshed in place
+    // once the (k, m) shape has been seen.
+    {
+        use parclust::kernel::prep::CentroidPrep;
+        let cent = ds.gather(&(0..k).map(|i| 1 + i * n / k).collect::<Vec<_>>());
+        let mut prep = CentroidPrep::default();
+        prep.prepare(&cent, k, m);
+        let (c0, b0) = snapshot();
+        for _ in 0..5 {
+            prep.prepare(&cent, k, m);
+        }
+        let (c1, b1) = snapshot();
+        assert_eq!(
+            (c1 - c0, b1 - b0),
+            (0, 0),
+            "CentroidPrep::prepare must be allocation-free on a repeated shape"
+        );
+    }
 }

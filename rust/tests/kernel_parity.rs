@@ -8,6 +8,14 @@
 //! against the dense kernel on every iteration of a real Lloyd
 //! trajectory — triangle-inequality pruning is lossless for Euclidean,
 //! and a bound squeezed to the boundary must fall back, never misprune.
+//!
+//! The register-blocked micro-kernel (PR 5) adds two parity layers:
+//! against the **scalar reference** — labels, counts, sums and inertia
+//! bit-equal on provably separated data across a feature sweep, ragged
+//! tile shapes, duplicate rows and exact ties — and against the
+//! pre-blocking **row sweep**, where per-pair scores are bit-identical
+//! by construction, so equality must hold on *any* data including
+//! near-ties.
 
 use parclust::data::synthetic::{generate, GmmSpec};
 use parclust::data::Dataset;
@@ -16,6 +24,7 @@ use parclust::exec::single::SingleExecutor;
 use parclust::exec::Executor;
 use parclust::kernel::{assign, diameter};
 use parclust::metric::{sq_euclidean, Metric};
+use parclust::testkit::lattice_blobs;
 
 /// The f2 bench shape (n scaled down 5× to keep the suite fast; same m
 /// and k). Separated geometry: with tight blobs and the true mixture
@@ -199,6 +208,125 @@ fn centroid_on_exact_bound_boundary_falls_back_to_scan() {
     let dense = assign::assign_update_range(&ds, &tables[1], 2, Metric::Euclidean, 0..3);
     assert_eq!(second.labels, dense.labels);
     assert_eq!(second.labels[0], 0, "exact tie must break to the lower index");
+}
+
+/// Assert full bit-parity (labels, counts, sums, inertia) between the
+/// micro-kernel and the scalar reference over `range`. Valid only on
+/// data whose argmin margins dwarf f32 rounding (see
+/// [`lattice_blobs`]) — there both argmin forms provably agree, and
+/// then the stat folds run in identical row order, so everything is
+/// bit-equal, not merely close.
+fn assert_micro_vs_scalar_bitwise(
+    ds: &Dataset,
+    cent: &[f32],
+    k: usize,
+    range: std::ops::Range<usize>,
+    ctx: &str,
+) {
+    let micro = assign::assign_update_range(ds, cent, k, Metric::Euclidean, range.clone());
+    let scalar =
+        assign::assign_update_range_scalar(ds, cent, k, Metric::Euclidean, range.clone());
+    assert_eq!(micro.labels, scalar.labels, "{ctx}: labels");
+    assert_eq!(micro.counts, scalar.counts, "{ctx}: counts");
+    assert_eq!(micro.sums, scalar.sums, "{ctx}: sums must be bit-equal");
+    assert_eq!(micro.inertia, scalar.inertia, "{ctx}: inertia must be bit-equal");
+}
+
+#[test]
+fn microkernel_feature_sweep_vs_scalar() {
+    // m sweep crossing every remainder class the inner loops see; k = 7
+    // is odd and not divisible by the 4-wide centroid tile (one padded
+    // panel block); n = 1003 = 7·128 + 107 leaves a ragged final row
+    // tile whose length is not divisible by the 4-row micro-tile either,
+    // so the one-row tail path runs. The offset sub-range misaligns
+    // every tile boundary on top.
+    for m in [1usize, 3, 7, 24, 25] {
+        let (ds, cent) = lattice_blobs(1003, m, 7);
+        assert_micro_vs_scalar_bitwise(&ds, &cent, 7, 0..1003, &format!("m={m} full"));
+        assert_micro_vs_scalar_bitwise(&ds, &cent, 7, 17..998, &format!("m={m} offset"));
+    }
+}
+
+#[test]
+fn microkernel_odd_k_sweep_vs_scalar() {
+    // k sweep around the centroid-tile width: below, equal, above, and
+    // far above with padding lanes in the last block.
+    for k in [1usize, 2, 3, 4, 5, 7, 9, 13, 25] {
+        let (ds, cent) = lattice_blobs(517, 6, k);
+        assert_micro_vs_scalar_bitwise(&ds, &cent, k, 0..517, &format!("k={k}"));
+    }
+}
+
+#[test]
+fn microkernel_duplicate_rows_match_scalar() {
+    // lattice_blobs repeats its 5 offset patterns, so blocks of
+    // byte-identical rows exist by construction; every copy must get
+    // the same label from both paths, and with k = 15 > 13 the centroid
+    // table itself contains bit-identical duplicate centers whose ties
+    // must break to the lower index in both forms.
+    let (ds, cent) = lattice_blobs(1500, 4, 15);
+    assert_micro_vs_scalar_bitwise(&ds, &cent, 15, 0..1500, "duplicates");
+    let stats = assign::assign_update_range(&ds, &cent, 15, Metric::Euclidean, 0..1500);
+    // centers 0 and 13 are duplicates: nothing may ever label 13/14
+    let (sec_a, sec_b) = (13usize, 14usize);
+    assert_eq!(cent[..4], cent[sec_a * 4..(sec_a + 1) * 4]);
+    assert_eq!(stats.counts[sec_a], 0, "duplicate-center ties must go low");
+    assert_eq!(stats.counts[sec_b], 0);
+}
+
+#[test]
+fn microkernel_exact_tie_rows_break_low_in_both_paths() {
+    // Nine identical rows exactly midway between centroids 0 and 1
+    // (plus a far third centroid): enough rows that both the 4-row
+    // micro-tile and the 1-row ragged tail handle ties, all of which
+    // must resolve to centroid 0 — in the micro-kernel *and* the scalar
+    // reference.
+    let ds = Dataset::from_vec(9, 1, vec![0.5; 9]).unwrap();
+    let cent = [0.0f32, 1.0, 50.0];
+    assert_micro_vs_scalar_bitwise(&ds, &cent, 3, 0..9, "exact ties");
+    let stats = assign::assign_update_range(&ds, &cent, 3, Metric::Euclidean, 0..9);
+    assert_eq!(stats.labels, vec![0; 9]);
+}
+
+#[test]
+fn microkernel_bit_equal_to_rowsweep_on_overlapping_blobs() {
+    // The strong contract: identical per-pair arithmetic means the
+    // micro-kernel must match the pre-blocking row sweep bit-for-bit on
+    // data with genuine near-ties (spread ≫ separation), across shard
+    // geometries that misalign every tile boundary.
+    let g = generate(&GmmSpec::new(2_003, 11, 25).seed(4242).spread(3.0));
+    let ds = &g.dataset;
+    let cent = ds.gather(&(0..25).map(|i| i * 80).collect::<Vec<_>>());
+    for range in [0..ds.n(), 0..129, 128..2_003, 1..2_002] {
+        let micro =
+            assign::assign_update_range(ds, &cent, 25, Metric::Euclidean, range.clone());
+        let sweep = assign::assign_update_range_rowsweep(ds, &cent, 25, range.clone());
+        assert_eq!(micro.labels, sweep.labels, "{range:?}");
+        assert_eq!(micro.counts, sweep.counts, "{range:?}");
+        assert_eq!(micro.sums, sweep.sums, "{range:?}");
+        assert_eq!(micro.inertia, sweep.inertia, "{range:?}");
+    }
+}
+
+#[test]
+fn microkernel_parity_through_executors_on_lattice() {
+    // The same bitwise contract end-to-end through both CPU executors'
+    // stateless paths (multi: leader-built shared prep, 3 uneven shards
+    // over n = 1003).
+    let (ds, cent) = lattice_blobs(1003, 7, 5);
+    let scalar =
+        assign::assign_update_range_scalar(&ds, &cent, 5, Metric::Euclidean, 0..1003);
+    let single = SingleExecutor::new()
+        .assign_update(&ds, &cent, 5, Metric::Euclidean)
+        .unwrap();
+    let multi = MultiExecutor::new(3)
+        .assign_update(&ds, &cent, 5, Metric::Euclidean)
+        .unwrap();
+    assert_eq!(single.labels, scalar.labels);
+    assert_eq!(multi.labels, scalar.labels);
+    assert_eq!(single.counts, scalar.counts);
+    assert_eq!(multi.counts, scalar.counts);
+    assert_eq!(single.inertia, scalar.inertia);
 }
 
 #[test]

@@ -1,0 +1,97 @@
+//! Build discipline of the shared per-iteration centroid prep: the
+//! norm table (and with it the micro-kernel's transposed panel) is
+//! computed **exactly once per Lloyd iteration per fit** — on the
+//! leader — never once per shard. Pinned through the process-wide
+//! build counter `kernel::assign::centroid_sq_norm_builds` (the same
+//! pattern as `pool::worker_spawn_count`).
+//!
+//! Everything runs inside ONE `#[test]` (and this file holds nothing
+//! else): the counter is process-global, so sibling tests in the same
+//! binary would bleed builds into the measurement windows.
+
+use parclust::data::synthetic::{generate, GmmSpec};
+use parclust::exec::multi::MultiExecutor;
+use parclust::exec::regime::Regime;
+use parclust::exec::single::SingleExecutor;
+use parclust::exec::Executor;
+use parclust::kernel::assign::centroid_sq_norm_builds;
+use parclust::kmeans::{fit, KMeansConfig};
+use parclust::metric::Metric;
+
+#[test]
+fn norm_table_built_once_per_iteration_in_every_regime() {
+    let (n, m, k) = (4_001usize, 9usize, 6usize);
+    let g = generate(&GmmSpec::new(n, m, k).seed(17).spread(0.5));
+    let ds = &g.dataset;
+    let init = ds.gather(&(0..k).map(|i| i * n / k).collect::<Vec<_>>());
+
+    // Single-regime session: one build per step.
+    let single = SingleExecutor::new();
+    let mut sess = single.assign_session(ds, k, Metric::Euclidean).unwrap();
+    let before = centroid_sq_norm_builds();
+    let mut cent = init.clone();
+    for _ in 0..4 {
+        let stats = sess.step(&cent).unwrap();
+        cent = stats.centroids(&cent, k, m);
+    }
+    assert_eq!(
+        centroid_sq_norm_builds() - before,
+        4,
+        "single session: one norm build per iteration"
+    );
+
+    // Multi-regime session, 5 shards: still one build per step — the
+    // leader's shared CentroidPrep, not one per worker.
+    let multi = MultiExecutor::new(5);
+    let mut sess = multi.assign_session(ds, k, Metric::Euclidean).unwrap();
+    let before = centroid_sq_norm_builds();
+    let mut cent = init.clone();
+    for _ in 0..3 {
+        let stats = sess.step(&cent).unwrap();
+        cent = stats.centroids(&cent, k, m);
+    }
+    assert_eq!(
+        centroid_sq_norm_builds() - before,
+        3,
+        "multi session: one norm build per iteration, not per shard"
+    );
+
+    // Stateless multi assignment: one build per call (leader-side),
+    // shards borrow it.
+    let before = centroid_sq_norm_builds();
+    let _ = multi.assign_update(ds, &init, k, Metric::Euclidean).unwrap();
+    assert_eq!(
+        centroid_sq_norm_builds() - before,
+        1,
+        "stateless multi call: one shared build"
+    );
+
+    // Non-Euclidean paths have no norm decomposition — zero builds.
+    let before = centroid_sq_norm_builds();
+    let _ = multi.assign_update(ds, &init, k, Metric::Manhattan).unwrap();
+    let mut sess = single.assign_session(ds, k, Metric::Manhattan).unwrap();
+    let _ = sess.step(&init).unwrap();
+    assert_eq!(
+        centroid_sq_norm_builds() - before,
+        0,
+        "non-Euclidean paths must not build norm tables"
+    );
+
+    // End-to-end Lloyd fits: exactly `iterations` builds — the
+    // initialization stages (diameter, center of gravity, choose-K)
+    // never touch the norm table. Covers the single and multi regimes;
+    // the gpu regime computes norms inside the device kernel and builds
+    // none on the host (its CPU-side count is zero by construction —
+    // exercised by the artifact-gated gpu suites).
+    for regime in [Regime::Single, Regime::Multi] {
+        let cfg = KMeansConfig::new(k).regime(regime).seed(3).max_iters(6);
+        let before = centroid_sq_norm_builds();
+        let res = fit(ds, &cfg).unwrap();
+        assert!(res.iterations >= 1);
+        assert_eq!(
+            centroid_sq_norm_builds() - before,
+            res.iterations as u64,
+            "{regime:?} fit: one build per Lloyd iteration"
+        );
+    }
+}
