@@ -31,7 +31,22 @@ pub fn try_device() -> Option<Device> {
 
 /// Paper-shaped mixture.
 pub fn workload(n: usize, m: usize, k: usize, seed: u64) -> Generated {
-    generate(&GmmSpec::new(n, m, k).seed(seed).spread(0.5))
+    workload_spread(n, m, k, seed, 0.5)
+}
+
+/// [`workload`] with an explicit blob spread — the one place benches
+/// build GMM workloads, so shapes stay comparable across bench targets
+/// (no per-bench copies of the spec-building code).
+pub fn workload_spread(n: usize, m: usize, k: usize, seed: u64, spread: f32) -> Generated {
+    generate(&GmmSpec::new(n, m, k).seed(seed).spread(spread))
+}
+
+/// The provably separated lattice workload — the same generator the
+/// parity tests and the fuzz harness trust (`testkit::lattice_blobs`),
+/// re-exported so label-exactness-gated benches generate through the
+/// identical code path they are judged against.
+pub fn lattice(n: usize, m: usize, k: usize) -> (parclust::data::Dataset, Vec<f32>) {
+    parclust::testkit::lattice_blobs(n, m, k)
 }
 
 /// Standard bench header naming the experiment id from DESIGN.md §5.

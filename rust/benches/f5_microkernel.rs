@@ -1,60 +1,93 @@
-//! F5 — register-blocked GEMM-style assignment micro-kernel: dense
-//! Euclidean step time, scalar reference vs pre-blocking row sweep vs
-//! register-blocked micro-kernel, at the paper's scale.
+//! F5/F6 — dense Euclidean assignment micro-kernels: scalar reference
+//! vs pre-blocking row sweep vs register-blocked micro-kernel (PR 5)
+//! vs the explicitly vectorized SIMD lane and the opt-in f32 score
+//! path (PR 6), at the paper's scale.
 //!
 //! The row sweep re-reads every row from L1 `k` times and pays a scalar
 //! dot loop per (row, centroid) pair; the micro-kernel re-uses each row
 //! load across a CEN_TILE-wide centroid block and each (transposed,
 //! unit-stride) panel load across a ROW_MICRO-high row block, cutting
-//! L1 traffic by ~the tile factor at identical arithmetic. Because the
-//! per-pair f64 accumulation order is unchanged, the micro-kernel's
-//! labels are **bit-equal** to the row sweep on any input — asserted
-//! here per shape before timing, together with label equality against
-//! the scalar reference (guaranteed on this provably separated
-//! workload; see `testkit::lattice_blobs`).
+//! L1 traffic by ~the tile factor at identical arithmetic. The SIMD
+//! column is the dispatched panel path (`simd_active()` decides AVX2 vs
+//! portable — the banner prints which), the micro column pins the
+//! portable kernel explicitly so AVX2 hosts show the lane speedup. The
+//! f32 column sweeps candidates in f32 and refines ambiguous rows in
+//! f64 — its stats must still be bit-equal, with the refinement rate
+//! reported.
 //!
-//! Record the numbers in EXPERIMENTS.md §Perf (F5).
+//! Because the per-pair f64 accumulation order is shared, every f64
+//! path is **bit-equal** to the row sweep on any input — asserted here
+//! per shape before timing, together with label equality against the
+//! scalar reference (guaranteed on this provably separated workload;
+//! see `testkit::lattice_blobs`) and full bit-equality of the f32
+//! path's refined output.
+//!
+//! Record the numbers in EXPERIMENTS.md §Perf (F5/F6); with
+//! `BENCH_JSON_DIR` set, the same numbers land in `BENCH_f5.json`.
 
 mod common;
 
-use parclust::benchkit::{fmt_duration, fmt_throughput, smoke_mode, Bencher, Table};
-use parclust::kernel::assign;
+use parclust::benchkit::{
+    fmt_duration, fmt_throughput, smoke_mode, write_bench_json, Bencher, Table,
+};
+use parclust::exec::AssignStats;
+use parclust::json::Json;
+use parclust::kernel::prep::CentroidPrep;
+use parclust::kernel::{assign, microkernel, simd};
 use parclust::metric::Metric;
-use parclust::testkit::lattice_blobs;
 
 fn main() {
     common::banner(
-        "F5",
-        "blocked linear-algebra assignment is how the hot stage reaches hardware speed",
+        "F5/F6",
+        "blocked + vectorized linear-algebra assignment is how the hot stage hits hardware speed",
+    );
+    println!(
+        "simd lane: {} (PARCLUST_FORCE_PORTABLE=1 pins the portable micro-kernel)",
+        simd::panel_path_name()
     );
     let bencher = Bencher::quick().from_env();
     let n: usize = if smoke_mode() { 60_000 } else { 2_000_000 };
     let shapes: &[(usize, usize)] = &[(2, 10), (2, 100), (10, 10), (10, 100), (25, 10), (25, 100)];
 
     let mut table = Table::new(
-        &format!("F5 dense Euclidean assignment, one full pass (n={n}, single thread)"),
+        &format!("F5/F6 dense Euclidean assignment, one full pass (n={n}, single thread)"),
         &[
-            "m", "k", "scalar-ref", "row-sweep", "micro-kernel",
-            "micro rate", "vs scalar", "vs row-sweep",
+            "m", "k", "scalar-ref", "row-sweep", "micro", "simd", "simd-f32",
+            "simd rate", "simd vs scalar", "f32 vs simd", "f32 refined",
         ],
     );
+    let mut json_rows: Vec<Json> = Vec::new();
 
     for &(m, k) in shapes {
-        let (ds, cent) = lattice_blobs(n, m, k);
+        let (ds, cent) = common::lattice(n, m, k);
         let ds = &ds;
+        let mut prep = CentroidPrep::default();
+        prep.prepare(&cent, k, m);
+        let prep = &prep;
 
-        // Label-exactness gate before anything is timed: bitwise vs the
-        // row sweep (identical per-pair arithmetic — must hold on any
-        // data), labels vs the scalar reference (margin-guaranteed on
-        // this workload).
-        let micro = assign::assign_update_range(ds, &cent, k, Metric::Euclidean, 0..n);
+        // Label-exactness gates before anything is timed: every f64
+        // path bitwise vs the row sweep (identical per-pair arithmetic
+        // — must hold on any data), labels vs the scalar reference
+        // (margin-guaranteed on this workload), and the f32 path's
+        // refined output bitwise vs the dispatched path.
         let sweep = assign::assign_update_range_rowsweep(ds, &cent, k, 0..n);
-        assert_eq!(micro.labels, sweep.labels, "m={m} k={k}: micro vs row-sweep labels");
-        assert_eq!(micro.counts, sweep.counts, "m={m} k={k}: counts");
-        assert_eq!(micro.sums, sweep.sums, "m={m} k={k}: sums");
-        assert_eq!(micro.inertia, sweep.inertia, "m={m} k={k}: inertia");
+        let dispatched = assign::assign_update_range(ds, &cent, k, Metric::Euclidean, 0..n);
+        let mut portable = AssignStats::zeros(n, k, m);
+        microkernel::assign_euclidean_prepped_into(ds, &cent, prep, 0..n, &mut portable);
+        for (tag, stats) in [("simd", &dispatched), ("micro", &portable)] {
+            assert_eq!(stats.labels, sweep.labels, "m={m} k={k}: {tag} vs row-sweep labels");
+            assert_eq!(stats.counts, sweep.counts, "m={m} k={k}: {tag} counts");
+            assert_eq!(stats.sums, sweep.sums, "m={m} k={k}: {tag} sums");
+            assert_eq!(stats.inertia, sweep.inertia, "m={m} k={k}: {tag} inertia");
+        }
         let scalar = assign::assign_update_range_scalar(ds, &cent, k, Metric::Euclidean, 0..n);
-        assert_eq!(micro.labels, scalar.labels, "m={m} k={k}: micro vs scalar labels");
+        assert_eq!(dispatched.labels, scalar.labels, "m={m} k={k}: simd vs scalar labels");
+        let mut f32_stats = AssignStats::zeros(n, k, m);
+        let ctr = simd::assign_euclidean_f32_into(ds, &cent, prep, 0..n, &mut f32_stats);
+        assert_eq!(f32_stats.labels, dispatched.labels, "m={m} k={k}: f32 labels");
+        assert_eq!(f32_stats.sums, dispatched.sums, "m={m} k={k}: f32 sums");
+        assert_eq!(f32_stats.inertia, dispatched.inertia, "m={m} k={k}: f32 inertia");
+        assert_eq!(ctr.scored_rows, n as u64, "m={m} k={k}: f32 coverage");
 
         let sc = bencher.bench(|| {
             let _ = assign::assign_update_range_scalar(ds, &cent, k, Metric::Euclidean, 0..n);
@@ -62,24 +95,61 @@ fn main() {
         let rs = bencher.bench(|| {
             let _ = assign::assign_update_range_rowsweep(ds, &cent, k, 0..n);
         });
+        let mut scratch = AssignStats::zeros(n, k, m);
         let mk = bencher.bench(|| {
-            let _ = assign::assign_update_range(ds, &cent, k, Metric::Euclidean, 0..n);
+            scratch.reset(n, k, m);
+            microkernel::assign_euclidean_prepped_into(ds, &cent, prep, 0..n, &mut scratch);
+        });
+        let sd = bencher.bench(|| {
+            scratch.reset(n, k, m);
+            simd::assign_euclidean_simd_into(ds, &cent, prep, 0..n, &mut scratch);
+        });
+        let f32b = bencher.bench(|| {
+            scratch.reset(n, k, m);
+            let _ = simd::assign_euclidean_f32_into(ds, &cent, prep, 0..n, &mut scratch);
         });
 
+        let refine_pct = ctr.refine_rate() * 100.0;
         table.row(vec![
             m.to_string(),
             k.to_string(),
             fmt_duration(sc.mean),
             fmt_duration(rs.mean),
             fmt_duration(mk.mean),
-            fmt_throughput(n as u64, mk.mean),
-            format!("{:.2}x", mk.speedup_vs(&sc)),
-            format!("{:.2}x", mk.speedup_vs(&rs)),
+            fmt_duration(sd.mean),
+            fmt_duration(f32b.mean),
+            fmt_throughput(n as u64, sd.mean),
+            format!("{:.2}x", sd.speedup_vs(&sc)),
+            format!("{:.2}x", f32b.speedup_vs(&sd)),
+            format!("{refine_pct:.2}%"),
         ]);
+        json_rows.push(Json::obj(vec![
+            ("m", Json::num(m as f64)),
+            ("k", Json::num(k as f64)),
+            ("scalar", sc.to_json()),
+            ("rowsweep", rs.to_json()),
+            ("micro", mk.to_json()),
+            ("simd", sd.to_json()),
+            ("simd_f32", f32b.to_json()),
+            ("f32_scored_rows", Json::num(ctr.scored_rows as f64)),
+            ("f32_refined_rows", Json::num(ctr.refined_rows as f64)),
+            ("f32_relabeled_rows", Json::num(ctr.relabeled_rows as f64)),
+        ]));
     }
     println!("{}", table.render());
     println!(
-        "label-exactness: micro-kernel bit-equal to row-sweep (labels/counts/sums/inertia) \
-         and label-equal to the scalar reference on every shape above"
+        "label-exactness: micro and simd bit-equal to row-sweep \
+         (labels/counts/sums/inertia), label-equal to the scalar reference, \
+         and the refined f32 path bit-equal to simd on every shape above"
+    );
+    write_bench_json(
+        "f5",
+        &Json::obj(vec![
+            ("bench", Json::str("f5_microkernel")),
+            ("n", Json::num(n as f64)),
+            ("smoke", Json::Bool(smoke_mode())),
+            ("simd_lane", Json::str(simd::panel_path_name())),
+            ("rows", Json::arr(json_rows)),
+        ]),
     );
 }

@@ -77,11 +77,7 @@ fn main() {
         let mut inertias = Vec::new();
         let mut conv = 0usize;
         for &seed in &seeds {
-            let g = parclust::data::synthetic::generate(
-                &parclust::data::synthetic::GmmSpec::new(20_000, 10, k)
-                    .seed(seed)
-                    .spread(2.0),
-            );
+            let g = common::workload_spread(20_000, 10, k, seed, 2.0);
             let cfg = KMeansConfig::new(k)
                 .seed(seed)
                 .max_iters(300)

@@ -8,6 +8,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::json::Json;
+
 /// Summary statistics over a set of per-iteration timings.
 #[derive(Clone, Debug)]
 pub struct Stats {
@@ -50,6 +52,46 @@ impl Stats {
     /// Speedup of `self` relative to `other` (other.mean / self.mean).
     pub fn speedup_vs(&self, other: &Stats) -> f64 {
         other.mean.as_secs_f64() / self.mean.as_secs_f64()
+    }
+
+    /// Machine-readable form (seconds as f64) for the `BENCH_*.json`
+    /// artifacts — the trajectory CI keeps so perf claims are
+    /// falsifiable across PRs, not just prose in EXPERIMENTS.md.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_s", Json::num(self.mean.as_secs_f64())),
+            ("std_s", Json::num(self.std.as_secs_f64())),
+            ("median_s", Json::num(self.median.as_secs_f64())),
+            ("p95_s", Json::num(self.p95.as_secs_f64())),
+            ("min_s", Json::num(self.min.as_secs_f64())),
+            ("max_s", Json::num(self.max.as_secs_f64())),
+        ])
+    }
+}
+
+/// Write a bench's machine-readable result to
+/// `$BENCH_JSON_DIR/BENCH_<id>.json` when `BENCH_JSON_DIR` is set (the
+/// CI bench-smoke step sets it and uploads the directory as an
+/// artifact); a silent no-op otherwise, so local `cargo bench` runs
+/// stay side-effect-free. Returns the path written.
+pub fn write_bench_json(id: &str, payload: &Json) -> Option<std::path::PathBuf> {
+    let dir = std::env::var_os("BENCH_JSON_DIR")?;
+    let dir = std::path::PathBuf::from(dir);
+    if let Err(e) = std::fs::create_dir_all(&dir) {
+        eprintln!("note: BENCH_JSON_DIR {}: {e}", dir.display());
+        return None;
+    }
+    let path = dir.join(format!("BENCH_{id}.json"));
+    match std::fs::write(&path, payload.to_pretty()) {
+        Ok(()) => {
+            eprintln!("wrote {}", path.display());
+            Some(path)
+        }
+        Err(e) => {
+            eprintln!("note: writing {}: {e}", path.display());
+            None
+        }
     }
 }
 
@@ -338,5 +380,29 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn stats_json_roundtrips() {
+        let s = Stats::from_samples(vec![
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            Duration::from_millis(30),
+        ]);
+        let j = Json::parse(&s.to_json().to_pretty()).unwrap();
+        assert_eq!(j.req_usize("iters").unwrap(), 3);
+        assert!((j.req("mean_s").unwrap().as_f64().unwrap() - 0.020).abs() < 1e-9);
+        assert!((j.req("min_s").unwrap().as_f64().unwrap() - 0.010).abs() < 1e-9);
+        assert!((j.req("max_s").unwrap().as_f64().unwrap() - 0.030).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_json_writer_is_noop_without_env() {
+        // No env mutation (see smoke_profile_is_tiny): in the normal
+        // test environment BENCH_JSON_DIR is unset, so the writer must
+        // decline without touching the filesystem.
+        if std::env::var_os("BENCH_JSON_DIR").is_none() {
+            assert!(write_bench_json("unit_test", &Json::num(1.0)).is_none());
+        }
     }
 }

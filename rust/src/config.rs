@@ -8,6 +8,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::exec::regime::Regime;
+use crate::exec::ScorePath;
 use crate::json::Json;
 use crate::kmeans::{DiameterMode, InitMethod, KMeansConfig};
 use crate::metric::Metric;
@@ -57,8 +58,8 @@ impl RunConfig {
         let root = Json::parse(text).map_err(|e| format!("config: {e}"))?;
         let known = [
             "csv", "synthetic", "k", "max_iters", "tol", "metric", "init",
-            "seed", "threads", "regime", "diameter", "scaling", "report",
-            "labels", "artifact_dir",
+            "seed", "threads", "regime", "diameter", "score_path", "scaling",
+            "report", "labels", "artifact_dir",
         ];
         if let Json::Obj(pairs) = &root {
             for (key, _) in pairs {
@@ -142,6 +143,13 @@ impl RunConfig {
                 .ok_or_else(|| "config: 'diameter' must be a string".to_string())?;
             cfg.kmeans.diameter = parse_diameter_mode(s)?;
         }
+        if let Some(v) = root.get("score_path") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| "config: 'score_path' must be a string".to_string())?;
+            cfg.kmeans.score_path = ScorePath::from_str(s)
+                .ok_or_else(|| format!("config: unknown score_path '{s}' (f64 | f32)"))?;
+        }
         if let Some(v) = root.get("scaling") {
             let s = v
                 .as_str()
@@ -198,6 +206,7 @@ impl RunConfig {
             ("seed", Json::num(self.kmeans.seed as f64)),
             ("threads", Json::num(self.kmeans.threads as f64)),
             ("regime", Json::str(self.kmeans.regime.name())),
+            ("score_path", Json::str(self.kmeans.score_path.name())),
             ("scaling", Json::str(self.scaling.clone())),
         ])
     }
@@ -234,7 +243,7 @@ mod tests {
               "k": 4, "max_iters": 50, "tol": 0.001,
               "metric": "manhattan", "init": "random", "seed": 9,
               "threads": 4, "regime": "multi", "diameter": "sampled:1k",
-              "scaling": "zscore", "report": "out.json"
+              "score_path": "f32", "scaling": "zscore", "report": "out.json"
             }"#,
         )
         .unwrap();
@@ -247,6 +256,7 @@ mod tests {
         assert_eq!(cfg.kmeans.init, InitMethod::Random);
         assert_eq!(cfg.kmeans.regime, Regime::Multi);
         assert_eq!(cfg.kmeans.diameter, DiameterMode::Sampled(1000));
+        assert_eq!(cfg.kmeans.score_path, ScorePath::F32Refined);
         assert_eq!(cfg.scaling, "zscore");
         assert_eq!(cfg.report_path, Some(PathBuf::from("out.json")));
     }
@@ -255,6 +265,7 @@ mod tests {
     fn rejects_unknown_keys_and_values() {
         assert!(RunConfig::from_json_text(r#"{"bogus": 1}"#).is_err());
         assert!(RunConfig::from_json_text(r#"{"metric": "wat"}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"score_path": "f16"}"#).is_err());
         assert!(RunConfig::from_json_text(r#"{"regime": 7}"#).is_err());
         assert!(RunConfig::from_json_text(r#"[1,2]"#).is_err());
     }
@@ -278,5 +289,6 @@ mod tests {
         let parsed = Json::parse(&j).unwrap();
         assert_eq!(parsed.req_usize("k").unwrap(), 10);
         assert_eq!(parsed.req_str("regime").unwrap(), "auto");
+        assert_eq!(parsed.req_str("score_path").unwrap(), "f64");
     }
 }

@@ -28,6 +28,12 @@ pub enum DataError {
     Shape(String),
     Io(std::io::Error),
     Parse { line: usize, msg: String },
+    /// A sample value was NaN or ±infinity. Every ingestion route builds
+    /// through [`Dataset::from_vec`], so rejecting here is the crate's
+    /// non-finite policy: kernels may assume finite samples (denormals
+    /// and large finite magnitudes like 1e30 are allowed — see
+    /// `tests/adversarial_float.rs`).
+    NonFinite { index: usize, value: f32 },
 }
 
 impl fmt::Display for DataError {
@@ -38,6 +44,11 @@ impl fmt::Display for DataError {
             DataError::Parse { line, msg } => {
                 write!(f, "parse error at line {line}: {msg}")
             }
+            DataError::NonFinite { index, value } => write!(
+                f,
+                "non-finite sample value {value} at flat index {index}: \
+                 datasets must be finite (NaN/±inf rejected at ingestion)"
+            ),
         }
     }
 }
@@ -51,7 +62,11 @@ impl From<std::io::Error> for DataError {
 }
 
 impl Dataset {
-    /// Build from a row-major buffer. `values.len()` must equal `n * m`.
+    /// Build from a row-major buffer. `values.len()` must equal `n * m`
+    /// and every value must be finite — NaN/±inf are rejected here, the
+    /// single choke point all ingestion (CSV, binary, synthetic, tests)
+    /// flows through, so the kernels can assume finite samples.
+    /// Denormals and extreme finite magnitudes pass.
     pub fn from_vec(n: usize, m: usize, values: Vec<f32>) -> Result<Dataset, DataError> {
         if values.len() != n * m {
             return Err(DataError::Shape(format!(
@@ -62,6 +77,9 @@ impl Dataset {
         }
         if m == 0 {
             return Err(DataError::Shape("zero features".into()));
+        }
+        if let Some(index) = values.iter().position(|v| !v.is_finite()) {
+            return Err(DataError::NonFinite { index, value: values[index] });
         }
         Ok(Dataset {
             n,
@@ -136,6 +154,19 @@ mod tests {
         assert!(Dataset::from_vec(2, 3, vec![0.0; 6]).is_ok());
         assert!(Dataset::from_vec(2, 3, vec![0.0; 5]).is_err());
         assert!(Dataset::from_vec(2, 0, vec![]).is_err());
+    }
+
+    #[test]
+    fn from_vec_rejects_non_finite() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let err = Dataset::from_vec(2, 2, vec![1.0, bad, 3.0, 4.0]).unwrap_err();
+            match err {
+                DataError::NonFinite { index, .. } => assert_eq!(index, 1),
+                other => panic!("expected NonFinite, got {other:?}"),
+            }
+        }
+        // denormals and huge-but-finite magnitudes are data, not errors
+        assert!(Dataset::from_vec(1, 3, vec![1e-40, 1e30, -1e30]).is_ok());
     }
 
     #[test]

@@ -26,6 +26,7 @@ use crate::data::Dataset;
 use crate::metric::Metric;
 
 pub use crate::kernel::pruned::PruneCounters;
+pub use crate::kernel::simd::{F32Counters, ScorePath};
 
 /// Result of the diameter stage (paper Eq. 3): the max-distance pair.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -192,6 +193,28 @@ pub trait Executor {
         k: usize,
         metric: Metric,
     ) -> Result<Box<dyn AssignSession + 'a>, ExecError>;
+
+    /// [`Executor::assign_session`] with an explicit score path. The
+    /// default implementation serves [`ScorePath::F64`] and **rejects**
+    /// [`ScorePath::F32Refined`] — the relaxed-precision path is opt-in
+    /// and must never silently fall back to an executor that does not
+    /// implement it (the caller asked for different arithmetic and has
+    /// to find out if it cannot have it). The CPU regimes override this.
+    fn assign_session_with<'a>(
+        &'a self,
+        ds: &'a Dataset,
+        k: usize,
+        metric: Metric,
+        path: ScorePath,
+    ) -> Result<Box<dyn AssignSession + 'a>, ExecError> {
+        match path {
+            ScorePath::F64 => self.assign_session(ds, k, metric),
+            ScorePath::F32Refined => Err(ExecError(format!(
+                "executor '{}' has no f32 score path (f64 only)",
+                self.name()
+            ))),
+        }
+    }
 }
 
 /// Cross-iteration assignment state for one fit (see
@@ -204,6 +227,18 @@ pub trait AssignSession {
     /// Pruned/scanned row totals accumulated over the session. Dense
     /// sessions report every row as scanned.
     fn prune_counters(&self) -> PruneCounters;
+
+    /// Short name of the kernel path this session steps through
+    /// (surfaced as `RunMetrics::assign_path`).
+    fn path_name(&self) -> &'static str {
+        "dense"
+    }
+
+    /// f32-score-path counters accumulated over the session; all zero
+    /// for f64 sessions (the default).
+    fn f32_counters(&self) -> F32Counters {
+        F32Counters::default()
+    }
 
     /// Consume the session, returning the last pass's statistics (the
     /// labels move out — no final n-length copy).

@@ -29,13 +29,14 @@
 use std::sync::{Arc, OnceLock};
 
 use crate::data::Dataset;
+use crate::exec::single::F32State;
 use crate::exec::{
-    AssignSession, AssignStats, DiameterResult, ExecError, Executor, PruneCounters,
+    AssignSession, AssignStats, DiameterResult, ExecError, Executor, F32Counters, PruneCounters,
+    ScorePath,
 };
-use crate::kernel::microkernel::assign_euclidean_prepped;
 use crate::kernel::prep::CentroidPrep;
 use crate::kernel::pruned::{assign_pruned_range, PrunedState};
-use crate::kernel::{assign, diameter, reduce};
+use crate::kernel::{assign, diameter, reduce, simd};
 use crate::metric::Metric;
 use crate::pool::{split_ranges, ThreadPool};
 
@@ -154,7 +155,7 @@ impl Executor for MultiExecutor {
                 .iter()
                 .map(|r| {
                     let r = r.clone();
-                    move || assign_euclidean_prepped(ds, centroids, prep, r)
+                    move || assign::assign_euclidean_panel(ds, centroids, prep, r)
                 })
                 .collect();
             self.pool().scope_run_all(jobs)
@@ -196,8 +197,47 @@ impl Executor for MultiExecutor {
             total: AssignStats::zeros(ds.n(), k, ds.m()),
             pruned: (metric == Metric::Euclidean)
                 .then(|| PrunedState::new(ds.n(), k, ds.m())),
+            f32state: None,
             dense_scanned: 0,
         }))
+    }
+
+    fn assign_session_with<'a>(
+        &'a self,
+        ds: &'a Dataset,
+        k: usize,
+        metric: Metric,
+        path: ScorePath,
+    ) -> Result<Box<dyn AssignSession + 'a>, ExecError> {
+        match path {
+            ScorePath::F64 => self.assign_session(ds, k, metric),
+            ScorePath::F32Refined => {
+                if metric != Metric::Euclidean {
+                    return Err(ExecError(format!(
+                        "the f32 score path is defined by the euclidean \
+                         norm-decomposition kernel; got metric {}",
+                        metric.name()
+                    )));
+                }
+                let ranges = split_ranges(ds.n(), self.threads);
+                let shards = ranges
+                    .iter()
+                    .map(|r| AssignStats::zeros(r.len(), k, ds.m()))
+                    .collect();
+                Ok(Box::new(MultiSession {
+                    exec: self,
+                    ds,
+                    k,
+                    metric,
+                    ranges,
+                    shards,
+                    total: AssignStats::zeros(ds.n(), k, ds.m()),
+                    pruned: None,
+                    f32state: Some(F32State::new()),
+                    dense_scanned: 0,
+                }))
+            }
+        }
     }
 }
 
@@ -215,12 +255,40 @@ struct MultiSession<'a> {
     shards: Vec<AssignStats>,
     total: AssignStats,
     pruned: Option<PrunedState>,
+    /// The opt-in f32 score path (leader-built prep, per-shard f32
+    /// sweeps); mutually exclusive with `pruned`.
+    f32state: Option<F32State>,
     dense_scanned: u64,
 }
 
 impl AssignSession for MultiSession<'_> {
     fn step(&mut self, centroids: &[f32]) -> Result<&AssignStats, ExecError> {
         let (ds, k, m) = (self.ds, self.k, self.ds.m());
+        if let Some(f32s) = &mut self.f32state {
+            // Leader builds the one per-iteration prep (norms, panel,
+            // f32 score norms); shards sweep in f32 and refine their own
+            // ambiguous rows, returning per-shard counters.
+            f32s.prep.prepare(centroids, k, m);
+            let prep = &f32s.prep;
+            let mut jobs = Vec::with_capacity(self.ranges.len());
+            for (r, shard) in self.ranges.iter().zip(self.shards.iter_mut()) {
+                let range = r.clone();
+                jobs.push(move || {
+                    shard.reset(range.len(), k, m);
+                    simd::assign_euclidean_f32_into(ds, centroids, prep, range, shard)
+                });
+            }
+            let parts = self.exec.pool().scope_run_all(jobs);
+            for c in parts {
+                f32s.counters.add(&c);
+            }
+            self.dense_scanned += ds.n() as u64;
+            self.total.reset(ds.n(), k, m);
+            for (r, shard) in self.ranges.iter().zip(&self.shards) {
+                self.total.absorb(r.start, shard);
+            }
+            return Ok(&self.total);
+        }
         match &mut self.pruned {
             Some(state) => {
                 // Leader: per-iteration centroid digest (norms, drifts,
@@ -270,6 +338,20 @@ impl AssignSession for MultiSession<'_> {
             pruned_rows: 0,
             scanned_rows: self.dense_scanned,
         })
+    }
+
+    fn path_name(&self) -> &'static str {
+        if self.f32state.is_some() {
+            simd::f32_path_name()
+        } else if self.pruned.is_some() {
+            simd::pruned_path_name()
+        } else {
+            "scalar"
+        }
+    }
+
+    fn f32_counters(&self) -> F32Counters {
+        self.f32state.as_ref().map(|s| s.counters).unwrap_or_default()
     }
 
     fn finish(self: Box<Self>) -> AssignStats {
@@ -370,6 +452,34 @@ mod tests {
         let clone = multi.clone();
         assert!(clone.pool_built());
         assert_eq!(clone.pool() as *const _, p1);
+    }
+
+    #[test]
+    fn f32_session_matches_f64_session_bitwise() {
+        // Same shard geometry ⇒ per-shard stats bitwise ⇒ absorbed
+        // totals bitwise, across a short centroid trajectory.
+        let (ds, mut cent) = crate::testkit::lattice_blobs(257, 5, 4);
+        let multi = MultiExecutor::new(3);
+        let mut f64s = multi
+            .assign_session_with(&ds, 4, Metric::Euclidean, ScorePath::F64)
+            .unwrap();
+        let mut f32s = multi
+            .assign_session_with(&ds, 4, Metric::Euclidean, ScorePath::F32Refined)
+            .unwrap();
+        assert_eq!(f32s.path_name(), "f32+refine");
+        for _ in 0..3 {
+            let a = f64s.step(&cent).unwrap().clone();
+            let b = f32s.step(&cent).unwrap();
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.counts, b.counts);
+            assert_eq!(a.sums, b.sums);
+            assert_eq!(a.inertia, b.inertia);
+            cent = a.centroids(&cent, 4, ds.m());
+        }
+        assert_eq!(f32s.f32_counters().scored_rows, 3 * 257);
+        assert!(multi
+            .assign_session_with(&ds, 4, Metric::Cosine, ScorePath::F32Refined)
+            .is_err());
     }
 
     #[test]

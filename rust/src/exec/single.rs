@@ -9,10 +9,12 @@
 
 use crate::data::Dataset;
 use crate::exec::{
-    AssignSession, AssignStats, DiameterResult, ExecError, Executor, PruneCounters,
+    AssignSession, AssignStats, DiameterResult, ExecError, Executor, F32Counters, PruneCounters,
+    ScorePath,
 };
+use crate::kernel::prep::CentroidPrep;
 use crate::kernel::pruned::{assign_pruned_range, PrunedState};
-use crate::kernel::{assign, diameter, reduce};
+use crate::kernel::{assign, diameter, reduce, simd};
 use crate::metric::Metric;
 
 /// Scalar executor. Stateless; `Default` constructible.
@@ -70,8 +72,56 @@ impl Executor for SingleExecutor {
             // (still into the reused scratch).
             pruned: (metric == Metric::Euclidean)
                 .then(|| PrunedState::new(ds.n(), k, ds.m())),
+            f32state: None,
             dense_scanned: 0,
         }))
+    }
+
+    fn assign_session_with<'a>(
+        &'a self,
+        ds: &'a Dataset,
+        k: usize,
+        metric: Metric,
+        path: ScorePath,
+    ) -> Result<Box<dyn AssignSession + 'a>, ExecError> {
+        match path {
+            ScorePath::F64 => self.assign_session(ds, k, metric),
+            ScorePath::F32Refined => {
+                if metric != Metric::Euclidean {
+                    return Err(ExecError(format!(
+                        "the f32 score path is defined by the euclidean \
+                         norm-decomposition kernel; got metric {}",
+                        metric.name()
+                    )));
+                }
+                // The f32 path replaces the pruned session: candidates
+                // come from the dense f32 sweep, ambiguity falls back to
+                // the exact f64 scan per row (not per iteration).
+                Ok(Box::new(SingleSession {
+                    ds,
+                    k,
+                    metric,
+                    stats: AssignStats::zeros(ds.n(), k, ds.m()),
+                    pruned: None,
+                    f32state: Some(F32State::new()),
+                    dense_scanned: 0,
+                }))
+            }
+        }
+    }
+}
+
+/// Per-fit state of the f32 score path: the session-owned
+/// [`CentroidPrep`] (refreshed once per iteration, like the pruned
+/// path's) and the accumulated refinement counters.
+pub(crate) struct F32State {
+    pub prep: CentroidPrep,
+    pub counters: F32Counters,
+}
+
+impl F32State {
+    pub fn new() -> Self {
+        Self { prep: CentroidPrep::default(), counters: F32Counters::default() }
     }
 }
 
@@ -89,14 +139,26 @@ struct SingleSession<'a> {
     metric: Metric,
     stats: AssignStats,
     pruned: Option<PrunedState>,
-    /// Rows processed by the dense (non-Euclidean) path — every one a
-    /// full scan.
+    /// The opt-in f32 score path; mutually exclusive with `pruned`.
+    f32state: Option<F32State>,
+    /// Rows processed by the dense (non-Euclidean or f32) path — every
+    /// one a full scan.
     dense_scanned: u64,
 }
 
 impl AssignSession for SingleSession<'_> {
     fn step(&mut self, centroids: &[f32]) -> Result<&AssignStats, ExecError> {
         let (n, m) = (self.ds.n(), self.ds.m());
+        if let Some(f32s) = &mut self.f32state {
+            f32s.prep.prepare(centroids, self.k, m);
+            self.stats.reset(n, self.k, m);
+            let c = simd::assign_euclidean_f32_into(
+                self.ds, centroids, &f32s.prep, 0..n, &mut self.stats,
+            );
+            f32s.counters.add(&c);
+            self.dense_scanned += n as u64;
+            return Ok(&self.stats);
+        }
         match &mut self.pruned {
             Some(state) => {
                 state.prepare(centroids);
@@ -122,6 +184,20 @@ impl AssignSession for SingleSession<'_> {
             pruned_rows: 0,
             scanned_rows: self.dense_scanned,
         })
+    }
+
+    fn path_name(&self) -> &'static str {
+        if self.f32state.is_some() {
+            simd::f32_path_name()
+        } else if self.pruned.is_some() {
+            simd::pruned_path_name()
+        } else {
+            "scalar"
+        }
+    }
+
+    fn f32_counters(&self) -> F32Counters {
+        self.f32state.as_ref().map(|s| s.counters).unwrap_or_default()
     }
 
     fn finish(self: Box<Self>) -> AssignStats {
@@ -186,6 +262,40 @@ mod tests {
             let final_stats = session.finish();
             assert_eq!(final_stats.labels.len(), 5);
         }
+    }
+
+    #[test]
+    fn f32_session_matches_f64_session_bitwise() {
+        let (ds, cent) = crate::testkit::lattice_blobs(173, 4, 3);
+        let exec = SingleExecutor::new();
+        let mut f64s = exec
+            .assign_session_with(&ds, 3, Metric::Euclidean, ScorePath::F64)
+            .unwrap();
+        let mut f32s = exec
+            .assign_session_with(&ds, 3, Metric::Euclidean, ScorePath::F32Refined)
+            .unwrap();
+        assert_eq!(f32s.path_name(), "f32+refine");
+        let a = f64s.step(&cent).unwrap().clone();
+        let b = f32s.step(&cent).unwrap();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.sums, b.sums);
+        assert_eq!(a.inertia, b.inertia);
+        assert_eq!(f32s.f32_counters().scored_rows, 173);
+        assert_eq!(f64s.f32_counters(), F32Counters::default());
+    }
+
+    #[test]
+    fn f32_session_rejects_non_euclidean() {
+        let ds = square();
+        let exec = SingleExecutor::new();
+        assert!(exec
+            .assign_session_with(&ds, 2, Metric::Manhattan, ScorePath::F32Refined)
+            .is_err());
+        // F64 request passes through to the normal session.
+        assert!(exec
+            .assign_session_with(&ds, 2, Metric::Manhattan, ScorePath::F64)
+            .is_ok());
     }
 
     #[test]

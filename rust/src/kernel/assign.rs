@@ -41,7 +41,6 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::data::Dataset;
 use crate::exec::AssignStats;
-use crate::kernel::microkernel::assign_euclidean_prepped_into;
 use crate::kernel::prep::CentroidPrep;
 use crate::kernel::{tiles, ROW_TILE};
 use crate::metric::{sq_euclidean, Metric};
@@ -83,10 +82,41 @@ pub fn assign_update_range_into(
         Metric::Euclidean => {
             let mut prep = CentroidPrep::default();
             prep.prepare(centroids, k, ds.m());
-            assign_euclidean_prepped_into(ds, centroids, &prep, range, stats);
+            assign_euclidean_panel_into(ds, centroids, &prep, range, stats);
         }
         _ => assign_scalar_into(ds, centroids, k, metric, range, stats),
     }
+}
+
+/// The dense Euclidean panel sweep behind lane dispatch — the one entry
+/// point the sessions and shards call with a prepared
+/// [`CentroidPrep`]. Resolves (once per process, see
+/// [`crate::kernel::simd::simd_active`]) to the explicit AVX2 kernel or
+/// the portable register-blocked micro-kernel; the two compute
+/// bit-identical scores, so dispatch can never change labels, counts,
+/// sums or inertia.
+pub fn assign_euclidean_panel_into(
+    ds: &Dataset,
+    centroids: &[f32],
+    prep: &CentroidPrep,
+    range: std::ops::Range<usize>,
+    stats: &mut AssignStats,
+) {
+    crate::kernel::simd::assign_euclidean_simd_into(ds, centroids, prep, range, stats);
+}
+
+/// Allocating convenience over [`assign_euclidean_panel_into`] — the
+/// stateless per-shard form the multi executor fans out after building
+/// one shared prep on the leader.
+pub fn assign_euclidean_panel(
+    ds: &Dataset,
+    centroids: &[f32],
+    prep: &CentroidPrep,
+    range: std::ops::Range<usize>,
+) -> AssignStats {
+    let mut stats = AssignStats::zeros(range.len(), prep.k(), ds.m());
+    assign_euclidean_panel_into(ds, centroids, prep, range, &mut stats);
+    stats
 }
 
 static NORM_BUILDS: AtomicU64 = AtomicU64::new(0);

@@ -24,6 +24,11 @@
 //!   identical to the scalar `dot` loop, so blocking reorders work only
 //!   *across* pairs — scores, labels and tie-breaks are bit-equal to
 //!   the unblocked reference;
+//! * [`simd`] — the explicitly vectorized twin of the micro-kernel
+//!   (`core::arch` AVX2 behind runtime detection, bit-equal per the same
+//!   per-pair contract) plus the opt-in f32 score path with margin-gated
+//!   f64 refinement; [`assign`]'s dispatch points pick between the AVX2
+//!   and portable kernels per process;
 //! * [`pruned`] — the same stage with cross-iteration triangle-inequality
 //!   bounds (Hamerly-style): most rows skip the centroid sweep entirely
 //!   once the centroids settle, with labels provably identical to
@@ -43,8 +48,9 @@
 //! distance no matter which shard or tile it lands in, which is what the
 //! cross-regime equality tests rely on.
 //!
-//! Any future SIMD or batched-PJRT implementation slots in behind these
-//! entry points without touching the orchestration layer.
+//! The explicit-SIMD path ([`simd`]) already slots in behind these entry
+//! points without touching the orchestration layer; a batched-PJRT
+//! implementation would do the same.
 
 pub mod assign;
 pub mod diameter;
@@ -52,6 +58,7 @@ pub mod microkernel;
 pub mod prep;
 pub mod pruned;
 pub mod reduce;
+pub mod simd;
 
 /// Rows per cache tile. A tile of `ROW_TILE × m` f32 (m ≤ 25 in the
 /// paper's workloads → ≤ 12.8 KB) stays L1-resident while the centroid

@@ -65,6 +65,12 @@ pub struct CentroidPrep {
     /// [`CentroidPrep::c_norms`] padded to `k_pad` with `+∞`: the
     /// argmin-facing view (padding lanes score +∞, never win).
     pub score_norms: Vec<f64>,
+    /// [`CentroidPrep::score_norms`] rounded to f32 — the constant term
+    /// of the opt-in f32 score path ([`crate::kernel::simd`]). Norms
+    /// beyond f32 range become +∞, which forces that path to refine
+    /// every affected row in f64 (the sound direction). Padding lanes
+    /// stay +∞.
+    pub score_norms_f32: Vec<f32>,
     /// Transposed, zero-padded centroid panel (`k_pad × m` values in the
     /// block-feature-lane layout of the module doc).
     pub panel: Vec<f32>,
@@ -129,6 +135,9 @@ impl CentroidPrep {
         self.score_norms.clear();
         self.score_norms.extend_from_slice(&self.c_norms);
         self.score_norms.resize(k_pad, f64::INFINITY);
+        self.score_norms_f32.clear();
+        self.score_norms_f32
+            .extend(self.score_norms.iter().map(|&v| v as f32));
 
         // clear + resize re-zeroes the buffer without reallocating when
         // the shape repeats; padding lanes therefore stay 0.0.
@@ -177,6 +186,12 @@ mod tests {
         }
         assert_eq!(prep.score_norms[..5], prep.c_norms[..]);
         assert!(prep.score_norms[5..].iter().all(|v| v.is_infinite()));
+        // f32 view: rounded real lanes, +inf padding
+        assert_eq!(prep.score_norms_f32.len(), prep.k_pad());
+        for (v32, v64) in prep.score_norms_f32.iter().zip(&prep.score_norms) {
+            assert_eq!(*v32, *v64 as f32);
+        }
+        assert!(prep.score_norms_f32[5..].iter().all(|v| v.is_infinite()));
     }
 
     #[test]

@@ -51,8 +51,11 @@
 
 use crate::data::Dataset;
 use crate::exec::AssignStats;
-use crate::kernel::microkernel::scan_row;
+// The fallback scan dispatches between the AVX2 and portable one-row
+// panel sweeps — bit-identical results either way, so the pruned path's
+// label parity is unaffected by which kernel the host resolves to.
 use crate::kernel::reduce::centroid_shifts_sq_into;
+use crate::kernel::simd::scan_row_auto as scan_row;
 use crate::metric::sq_euclidean;
 
 pub use crate::kernel::prep::CentroidPrep;

@@ -1,0 +1,593 @@
+//! Explicitly vectorized dense assignment — the AVX2 lane kernel and the
+//! opt-in f32 score path, both slotted behind the dispatch points in
+//! [`crate::kernel::assign`].
+//!
+//! # Why explicit lanes
+//!
+//! The register-blocked micro-kernel ([`crate::kernel::microkernel`])
+//! relies on LLVM autovectorizing its fixed-bound [`CEN_TILE`] inner
+//! loops. That works well under `-C target-cpu=native` but is a
+//! heuristic, not a contract: a cost-model regression or an unlucky
+//! inlining decision silently drops the hot loop back to scalar code.
+//! This module pins the lane shape by hand with `core::arch::x86_64`
+//! AVX2 intrinsics behind **runtime feature detection**
+//! ([`simd_active`]), so the same binary runs everywhere and uses the
+//! vector path exactly when the host supports it. The environment
+//! variable `PARCLUST_FORCE_PORTABLE` (any value) disables the AVX2
+//! path for A/B runs and for exercising the portable fallback on
+//! AVX2 hosts.
+//!
+//! # Bit-parity contract (f64 lanes)
+//!
+//! The AVX2 kernel vectorizes **across the [`CEN_TILE`] = 4 centroid
+//! lanes** of one `__m256d` accumulator — precisely the lane dimension
+//! the portable micro-kernel asks LLVM to vectorize. Per (row, centroid)
+//! pair the arithmetic is *identical* to the portable kernel and the
+//! scalar golden reference:
+//!
+//! * `a = row[j] as f64` — scalar cast, broadcast (`_mm256_set1_pd`);
+//! * `b = panel[j·4+lane] as f64` — `_mm256_cvtps_pd`, an exact
+//!   f32→f64 conversion;
+//! * `acc += a·b` — **separate** `_mm256_mul_pd` + `_mm256_add_pd`.
+//!   No FMA: a fused multiply-add skips the intermediate rounding and
+//!   would break bit-equality with the scalar `acc += a * b`;
+//! * `score = sn − 2·acc` — `_mm256_sub_pd(sn, _mm256_mul_pd(2.0, acc))`,
+//!   matching the scalar `sn[c] - 2.0 * acc`.
+//!
+//! IEEE-754 ops are deterministic per lane, so every score is
+//! bit-identical to the portable kernel's; the argmin is then taken
+//! *in scalar lane order with strict `<`*, reproducing the reference
+//! lowest-index tie-break exactly. Dispatch between AVX2 and portable
+//! can therefore never change labels, counts, sums or inertia — pinned
+//! by `tests/kernel_parity.rs` and fuzzed by `tests/kernel_fuzz.rs`.
+//!
+//! # The f32 score path (agreement-gated tier)
+//!
+//! [`assign_euclidean_f32_into`] is the relaxed-precision path: argmin
+//! *candidates* are computed in f32 (half the bandwidth, twice the lane
+//! width), and every row whose f32 best/runner-up margin is not safely
+//! above the worst-case f32 rounding error ([`f32_refine_margin`]) is
+//! **refined** with the exact f64 panel scan. Because refinement
+//! restores the exact argmin on every ambiguous row, and unambiguous
+//! rows provably agree with f64, the *final* labels equal the f64
+//! labels on every input the margin analysis covers — and since the
+//! fold ([`crate::exec::AssignStats::fold_row`] with the winner's
+//! [`sq_euclidean`] distance) is shared, matching labels make the
+//! entire statistics bitwise equal. This path is **opt-in**
+//! ([`ScorePath::F32Refined`], default off) and never silently active:
+//! executors without an f32 implementation reject it instead of
+//! falling back.
+
+use crate::data::Dataset;
+use crate::exec::AssignStats;
+use crate::kernel::prep::{CentroidPrep, CEN_TILE};
+use crate::metric::sq_euclidean;
+
+/// Which arithmetic the dense Euclidean assignment scores rows with.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ScorePath {
+    /// Exact f64 decomposed scores — the bit-parity tier (default).
+    #[default]
+    F64,
+    /// f32 candidate scores with margin-gated f64 refinement — the
+    /// agreement-gated tier. Opt-in; Euclidean CPU regimes only.
+    F32Refined,
+}
+
+impl ScorePath {
+    pub fn from_str(s: &str) -> Option<ScorePath> {
+        match s.to_ascii_lowercase().as_str() {
+            "f64" | "exact" => Some(ScorePath::F64),
+            "f32" | "f32-refined" | "f32_refined" => Some(ScorePath::F32Refined),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScorePath::F64 => "f64",
+            ScorePath::F32Refined => "f32-refined",
+        }
+    }
+}
+
+/// Counters of the f32 score path, surfaced in
+/// [`crate::metrics::RunMetrics`]. All zero when the f64 path ran.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct F32Counters {
+    /// Rows scored by the f32 candidate sweep.
+    pub scored_rows: u64,
+    /// Rows whose margin fell below the refinement bound and were
+    /// re-scanned in f64.
+    pub refined_rows: u64,
+    /// Refined rows whose f64 label differed from the f32 candidate —
+    /// the rows the relaxed path would have misassigned.
+    pub relabeled_rows: u64,
+}
+
+impl F32Counters {
+    pub fn add(&mut self, other: &F32Counters) {
+        self.scored_rows += other.scored_rows;
+        self.refined_rows += other.refined_rows;
+        self.relabeled_rows += other.relabeled_rows;
+    }
+
+    /// Fraction of scored rows that needed f64 refinement.
+    pub fn refine_rate(&self) -> f64 {
+        if self.scored_rows == 0 {
+            0.0
+        } else {
+            self.refined_rows as f64 / self.scored_rows as f64
+        }
+    }
+}
+
+/// True when the explicit AVX2 kernel will be dispatched: x86-64 host
+/// with AVX2, and `PARCLUST_FORCE_PORTABLE` unset. Decided once per
+/// process.
+pub fn simd_active() -> bool {
+    static ACTIVE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ACTIVE.get_or_init(detect)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> bool {
+    if std::env::var_os("PARCLUST_FORCE_PORTABLE").is_some() {
+        return false;
+    }
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect() -> bool {
+    false
+}
+
+/// Name of the dense panel kernel dispatch resolves to (for metrics).
+pub fn panel_path_name() -> &'static str {
+    if simd_active() {
+        "simd-avx2"
+    } else {
+        "micro"
+    }
+}
+
+/// Name of the pruned session's kernel path (for metrics).
+pub fn pruned_path_name() -> &'static str {
+    if simd_active() {
+        "pruned+simd-avx2"
+    } else {
+        "pruned+micro"
+    }
+}
+
+/// Name of the f32 score path (for metrics).
+pub fn f32_path_name() -> &'static str {
+    "f32+refine"
+}
+
+/// Explicitly vectorized dense Euclidean assignment over `range`: the
+/// AVX2 lane kernel when [`simd_active`], the portable micro-kernel
+/// otherwise. Same contract as
+/// [`crate::kernel::microkernel::assign_euclidean_prepped_into`], and
+/// bit-equal to it either way (see module doc).
+pub fn assign_euclidean_simd_into(
+    ds: &Dataset,
+    centroids: &[f32],
+    prep: &CentroidPrep,
+    range: std::ops::Range<usize>,
+    stats: &mut AssignStats,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX2 presence was verified at runtime by simd_active().
+        unsafe { avx2::assign_prepped(ds, centroids, prep, range, stats) };
+        return;
+    }
+    crate::kernel::microkernel::assign_euclidean_prepped_into(ds, centroids, prep, range, stats);
+}
+
+/// One-row panel scan with lane dispatch — AVX2 when active, the
+/// portable [`crate::kernel::microkernel::scan_row`] otherwise; both
+/// return bit-identical `(argmin, best score, runner-up score)`. Serves
+/// the pruned path's fallback scan and the f32 path's refinement.
+#[inline]
+pub(crate) fn scan_row_auto(row: &[f32], prep: &CentroidPrep) -> (usize, f64, f64) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX2 presence was verified at runtime by simd_active().
+        return unsafe { avx2::scan_row(row, prep) };
+    }
+    crate::kernel::microkernel::scan_row(row, prep)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! The unsafe interior: every fn carries `#[target_feature(enable =
+    //! "avx2")]` and must only be reached through a [`super::simd_active`]
+    //! check. Structure deliberately mirrors `kernel::microkernel` tile
+    //! for tile so the bit-parity argument is a per-lane diff, not a
+    //! re-derivation.
+
+    use core::arch::x86_64::{
+        __m256d, _mm256_add_pd, _mm256_cvtps_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd,
+        _mm256_setzero_pd, _mm256_storeu_pd, _mm256_sub_pd, _mm_loadu_ps,
+    };
+
+    use super::*;
+    use crate::kernel::microkernel::ROW_MICRO;
+    use crate::kernel::{tiles, ROW_TILE};
+
+    // One __m256d holds exactly the CEN_TILE f64 lanes of a panel block.
+    const _: () = assert!(CEN_TILE == 4);
+
+    /// AVX2 twin of `microkernel::assign_euclidean_prepped_into`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn assign_prepped(
+        ds: &Dataset,
+        centroids: &[f32],
+        prep: &CentroidPrep,
+        range: std::ops::Range<usize>,
+        stats: &mut AssignStats,
+    ) {
+        let m = ds.m();
+        debug_assert_eq!(prep.m(), m);
+        debug_assert_eq!(centroids.len(), prep.k() * m);
+        debug_assert_eq!(stats.labels.len(), range.len());
+        let mut best_score = [f64::INFINITY; ROW_TILE];
+        let mut best_idx = [0u32; ROW_TILE];
+        for tile in tiles(range.clone(), ROW_TILE) {
+            let t = tile.len();
+            best_score[..t].fill(f64::INFINITY);
+            best_idx[..t].fill(0);
+
+            let full = t - t % ROW_MICRO;
+            let mut li = 0;
+            while li < full {
+                let i = tile.start + li;
+                unsafe {
+                    micro_rows(
+                        ds.rows(i..i + ROW_MICRO),
+                        m,
+                        prep,
+                        &mut best_score[li..li + ROW_MICRO],
+                        &mut best_idx[li..li + ROW_MICRO],
+                    )
+                };
+                li += ROW_MICRO;
+            }
+            while li < t {
+                let (best, _, _) = unsafe { scan_row(ds.row(tile.start + li), prep) };
+                best_idx[li] = best as u32;
+                li += 1;
+            }
+
+            // Shared fold tail — identical to the portable kernel.
+            for (li, i) in tile.clone().enumerate() {
+                let row = ds.row(i);
+                let label = best_idx[li] as usize;
+                let d2 = sq_euclidean(row, &centroids[label * m..(label + 1) * m]);
+                stats.fold_row(i - range.start, row, label, d2, m);
+            }
+        }
+    }
+
+    /// ROW_MICRO × CEN_TILE register tile: each row keeps one `__m256d`
+    /// accumulator across the panel; the j-loop broadcasts one row
+    /// element against the unit-stride CEN_TILE panel load — the exact
+    /// loop the portable kernel asks the autovectorizer for, written out.
+    #[target_feature(enable = "avx2")]
+    unsafe fn micro_rows(
+        rows: &[f32],
+        m: usize,
+        prep: &CentroidPrep,
+        best_score: &mut [f64],
+        best_idx: &mut [u32],
+    ) {
+        debug_assert_eq!(rows.len(), ROW_MICRO * m);
+        for cb in 0..prep.blocks() {
+            let panel = prep.panel_block(cb);
+            let sn = &prep.score_norms[cb * CEN_TILE..(cb + 1) * CEN_TILE];
+            let mut acc = [unsafe { _mm256_setzero_pd() }; ROW_MICRO];
+            for j in 0..m {
+                // SAFETY: panel_block is m × CEN_TILE values; j < m keeps
+                // the 4-float load in bounds.
+                let b: __m256d =
+                    unsafe { _mm256_cvtps_pd(_mm_loadu_ps(panel.as_ptr().add(j * CEN_TILE))) };
+                for r in 0..ROW_MICRO {
+                    let a = unsafe { _mm256_set1_pd(rows[r * m + j] as f64) };
+                    // mul + add, NOT fma: keep the intermediate rounding
+                    // of the scalar `acc += a * b`.
+                    acc[r] = unsafe { _mm256_add_pd(acc[r], _mm256_mul_pd(a, b)) };
+                }
+            }
+            // SAFETY: score_norms slice is CEN_TILE f64s.
+            let snv = unsafe { _mm256_loadu_pd(sn.as_ptr()) };
+            let two = unsafe { _mm256_set1_pd(2.0) };
+            let c0 = cb * CEN_TILE;
+            for r in 0..ROW_MICRO {
+                let sv = unsafe { _mm256_sub_pd(snv, _mm256_mul_pd(two, acc[r])) };
+                let mut score = [0.0f64; CEN_TILE];
+                unsafe { _mm256_storeu_pd(score.as_mut_ptr(), sv) };
+                // Scalar argmin in lane order: the reference strict-`<`
+                // lowest-index tie-break, untouched by vectorization.
+                for c in 0..CEN_TILE {
+                    if score[c] < best_score[r] {
+                        best_score[r] = score[c];
+                        best_idx[r] = (c0 + c) as u32;
+                    }
+                }
+            }
+        }
+    }
+
+    /// AVX2 twin of `microkernel::scan_row` (1 × CEN_TILE degenerate
+    /// tile), including the runner-up tracking the pruned path needs.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn scan_row(row: &[f32], prep: &CentroidPrep) -> (usize, f64, f64) {
+        let m = prep.m();
+        debug_assert_eq!(row.len(), m);
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        let mut second = f64::INFINITY;
+        for cb in 0..prep.blocks() {
+            let panel = prep.panel_block(cb);
+            let sn = &prep.score_norms[cb * CEN_TILE..(cb + 1) * CEN_TILE];
+            let mut acc = unsafe { _mm256_setzero_pd() };
+            for j in 0..m {
+                // SAFETY: same bounds argument as micro_rows.
+                let b = unsafe { _mm256_cvtps_pd(_mm_loadu_ps(panel.as_ptr().add(j * CEN_TILE))) };
+                let a = unsafe { _mm256_set1_pd(row[j] as f64) };
+                acc = unsafe { _mm256_add_pd(acc, _mm256_mul_pd(a, b)) };
+            }
+            let snv = unsafe { _mm256_loadu_pd(sn.as_ptr()) };
+            let sv = unsafe { _mm256_sub_pd(snv, _mm256_mul_pd(_mm256_set1_pd(2.0), acc)) };
+            let mut score = [0.0f64; CEN_TILE];
+            unsafe { _mm256_storeu_pd(score.as_mut_ptr(), sv) };
+            for c in 0..CEN_TILE {
+                if score[c] < best_score {
+                    second = best_score;
+                    best_score = score[c];
+                    best = cb * CEN_TILE + c;
+                } else if score[c] < second {
+                    second = score[c];
+                }
+            }
+        }
+        (best, best_score, second)
+    }
+}
+
+/// Worst-case f32 rounding slack of one decomposed score, scaled to the
+/// row (`xn` = f32 ‖x‖²) and table (`max_c_norm` = max ‖c‖², f32-cast:
+/// saturates to +∞ when it exceeds f32 range). The f32 candidate label
+/// is provably the exact argmin whenever `runner-up − best > bound`.
+///
+/// Derivation sketch: per score `ŝ = fl(sn₃₂ − 2·dot₃₂(x, c))` the error
+/// against the exact f64 score is bounded by the norm-conversion term
+/// (≤ ε·C/2), the m-term dot accumulation (≤ m·ε·(X+C)/2, since
+/// |x·c| ≤ (‖x‖²+‖c‖²)/2), and the final subtract (≤ ε·(X+2C)/2) — in
+/// total under `ε·(m+3)·(X+C)` for a *pair* of scores. The returned
+/// bound `4·(m+4)·ε·(X+C+1)` keeps ≥ 4× headroom over that (and the
+/// `+1` floors it above zero for denormal-scale rows, where refinement
+/// is the correct, conservative outcome). Overflow is self-policing:
+/// any input large enough to overflow an f32 intermediate drives
+/// `X + C` itself to +∞, making the bound +∞ — every such row refines.
+pub fn f32_refine_margin(m: usize, xn: f32, max_c_norm: f32) -> f32 {
+    4.0 * (m as f32 + 4.0) * f32::EPSILON * (xn + max_c_norm + 1.0)
+}
+
+/// f32 candidate sweep for one row over the same transposed panel (read
+/// as f32) — returns `(argmin, best, runner-up, ‖row‖²)` all in f32.
+/// Structure mirrors the f64 `scan_row`; padding lanes score +∞ via
+/// [`CentroidPrep::score_norms_f32`] and never win.
+fn scan_row_f32(row: &[f32], prep: &CentroidPrep) -> (usize, f32, f32, f32) {
+    let m = prep.m();
+    debug_assert_eq!(row.len(), m);
+    let mut best = 0usize;
+    let mut best_score = f32::INFINITY;
+    let mut second = f32::INFINITY;
+    for cb in 0..prep.blocks() {
+        let panel = prep.panel_block(cb);
+        let sn = &prep.score_norms_f32[cb * CEN_TILE..(cb + 1) * CEN_TILE];
+        let mut acc = [0.0f32; CEN_TILE];
+        for j in 0..m {
+            let a = row[j];
+            let b = &panel[j * CEN_TILE..(j + 1) * CEN_TILE];
+            for c in 0..CEN_TILE {
+                acc[c] += a * b[c];
+            }
+        }
+        for c in 0..CEN_TILE {
+            let score = sn[c] - 2.0 * acc[c];
+            if score < best_score {
+                second = best_score;
+                best_score = score;
+                best = cb * CEN_TILE + c;
+            } else if score < second {
+                second = score;
+            }
+        }
+    }
+    let mut xn = 0.0f32;
+    for &v in row {
+        xn += v * v;
+    }
+    (best, best_score, second, xn)
+}
+
+/// Dense Euclidean assignment through the **f32 score path**: candidates
+/// from [`scan_row_f32`], margin-gated f64 refinement via
+/// [`scan_row_auto`], then the shared fold. Final labels equal the f64
+/// path's on every row (unambiguous rows by the margin bound, ambiguous
+/// rows by refinement), so the produced statistics are bitwise equal to
+/// the dense f64 path — the property `tests/kernel_fuzz.rs` hammers.
+/// Returns the path counters for [`crate::metrics::RunMetrics`].
+pub fn assign_euclidean_f32_into(
+    ds: &Dataset,
+    centroids: &[f32],
+    prep: &CentroidPrep,
+    range: std::ops::Range<usize>,
+    stats: &mut AssignStats,
+) -> F32Counters {
+    let m = ds.m();
+    debug_assert_eq!(prep.m(), m);
+    debug_assert_eq!(centroids.len(), prep.k() * m);
+    debug_assert_eq!(stats.labels.len(), range.len());
+    // f64→f32 cast rounds; values beyond f32 range become +∞, which
+    // forces refinement everywhere — the sound direction.
+    let c_norm32 = prep.max_c_norm as f32;
+    let mut ctr = F32Counters::default();
+    for i in range.clone() {
+        let row = ds.row(i);
+        let (cand, best_s, second_s, xn) = scan_row_f32(row, prep);
+        ctr.scored_rows += 1;
+        let bound = f32_refine_margin(m, xn, c_norm32);
+        // NaN margin (e.g. ∞ − ∞ when every f32 score overflowed) fails
+        // the `>` test and refines — never trust a poisoned candidate.
+        let label = if second_s - best_s > bound {
+            cand
+        } else {
+            ctr.refined_rows += 1;
+            let (exact, _, _) = scan_row_auto(row, prep);
+            if exact != cand {
+                ctr.relabeled_rows += 1;
+            }
+            exact
+        };
+        let d2 = sq_euclidean(row, &centroids[label * m..(label + 1) * m]);
+        stats.fold_row(i - range.start, row, label, d2, m);
+    }
+    ctr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GmmSpec};
+    use crate::kernel::microkernel::{assign_euclidean_prepped_into, scan_row};
+    use crate::testkit::lattice_blobs;
+
+    fn prepped(cent: &[f32], k: usize, m: usize) -> CentroidPrep {
+        let mut prep = CentroidPrep::default();
+        prep.prepare(cent, k, m);
+        prep
+    }
+
+    fn expect_bitwise(tag: &str, a: &AssignStats, b: &AssignStats) {
+        assert_eq!(a.labels, b.labels, "{tag}: labels");
+        assert_eq!(a.counts, b.counts, "{tag}: counts");
+        assert_eq!(a.sums, b.sums, "{tag}: sums");
+        assert_eq!(a.inertia, b.inertia, "{tag}: inertia");
+    }
+
+    #[test]
+    fn simd_dispatch_bit_equal_to_portable() {
+        // On AVX2 hosts this compares the vector kernel against the
+        // portable one; elsewhere the dispatch *is* the portable kernel
+        // and the test pins the delegation.
+        let g = generate(&GmmSpec::new(517, 7, 9).seed(31).spread(2.0));
+        let ds = &g.dataset;
+        let cent = ds.gather(&[0, 50, 111, 200, 280, 333, 401, 444, 516]);
+        let prep = prepped(&cent, 9, 7);
+        for range in [0..ds.n(), 3..517, 129..260] {
+            let mut simd = AssignStats::zeros(range.len(), 9, 7);
+            assign_euclidean_simd_into(ds, &cent, &prep, range.clone(), &mut simd);
+            let mut port = AssignStats::zeros(range.len(), 9, 7);
+            assign_euclidean_prepped_into(ds, &cent, &prep, range.clone(), &mut port);
+            expect_bitwise(&format!("{range:?}"), &simd, &port);
+        }
+    }
+
+    #[test]
+    fn scan_row_auto_matches_portable_scan() {
+        let g = generate(&GmmSpec::new(96, 5, 6).seed(8).spread(1.5));
+        let ds = &g.dataset;
+        let cent = ds.gather(&[0, 16, 32, 48, 64, 80]);
+        let prep = prepped(&cent, 6, 5);
+        for i in 0..ds.n() {
+            assert_eq!(scan_row_auto(ds.row(i), &prep), scan_row(ds.row(i), &prep), "row {i}");
+        }
+    }
+
+    #[test]
+    fn f32_path_bitwise_on_separated_blobs() {
+        let (ds, cent) = lattice_blobs(301, 6, 5);
+        let prep = prepped(&cent, 5, 6);
+        let mut f32s = AssignStats::zeros(301, 5, 6);
+        let ctr = assign_euclidean_f32_into(&ds, &cent, &prep, 0..301, &mut f32s);
+        let mut dense = AssignStats::zeros(301, 5, 6);
+        assign_euclidean_prepped_into(&ds, &cent, &prep, 0..301, &mut dense);
+        expect_bitwise("f32 vs dense", &f32s, &dense);
+        assert_eq!(ctr.scored_rows, 301);
+        assert!(ctr.refined_rows <= 301);
+    }
+
+    #[test]
+    fn f32_path_refines_near_ties_and_stays_exact() {
+        // Two centers 1e-4 apart: the f32 margin cannot clear the bound,
+        // so every row must take the f64 refinement and the labels stay
+        // bit-equal to the dense path.
+        let n = 64;
+        let m = 3;
+        let mut values = vec![0f32; n * m];
+        for (i, v) in values.iter_mut().enumerate() {
+            *v = 10.0 + (i % 7) as f32 * 1e-5;
+        }
+        let ds = Dataset::from_vec(n, m, values).unwrap();
+        let cent = vec![10.0, 10.0, 10.0, 10.0001, 10.0001, 10.0001];
+        let prep = prepped(&cent, 2, m);
+        let mut f32s = AssignStats::zeros(n, 2, m);
+        let ctr = assign_euclidean_f32_into(&ds, &cent, &prep, 0..n, &mut f32s);
+        let mut dense = AssignStats::zeros(n, 2, m);
+        assign_euclidean_prepped_into(&ds, &cent, &prep, 0..n, &mut dense);
+        expect_bitwise("near-tie", &f32s, &dense);
+        assert_eq!(ctr.refined_rows, n as u64, "near-ties must all refine");
+    }
+
+    #[test]
+    fn f32_path_overflow_forces_refinement() {
+        // 1e30-scale values overflow the f32 score domain; the bound
+        // goes to +∞, every row refines, labels stay exact.
+        let ds = Dataset::from_vec(4, 2, vec![1e30, 1e30, -1e30, 1e30, 1e30, -1e30, 2e30, 0.0])
+            .unwrap();
+        let cent = vec![1e30, 1e30, -1e30, -1e30];
+        let prep = prepped(&cent, 2, 2);
+        let mut f32s = AssignStats::zeros(4, 2, 2);
+        let ctr = assign_euclidean_f32_into(&ds, &cent, &prep, 0..4, &mut f32s);
+        let mut dense = AssignStats::zeros(4, 2, 2);
+        assign_euclidean_prepped_into(&ds, &cent, &prep, 0..4, &mut dense);
+        assert_eq!(ctr.refined_rows, 4, "overflowed scores must never be trusted");
+        expect_bitwise("overflow", &f32s, &dense);
+    }
+
+    #[test]
+    fn refine_margin_scales_and_saturates() {
+        let small = f32_refine_margin(5, 1.0, 1.0);
+        assert!(small > 0.0 && small.is_finite());
+        assert!(f32_refine_margin(50, 1.0, 1.0) > small, "grows with m");
+        assert!(f32_refine_margin(5, 100.0, 1.0) > small, "grows with ‖x‖²");
+        assert!(f32_refine_margin(5, f32::INFINITY, 1.0).is_infinite());
+        assert!(f32_refine_margin(5, 1.0, f32::INFINITY).is_infinite());
+    }
+
+    #[test]
+    fn score_path_names_round_trip() {
+        for p in [ScorePath::F64, ScorePath::F32Refined] {
+            assert_eq!(ScorePath::from_str(p.name()), Some(p));
+        }
+        assert_eq!(ScorePath::from_str("f32"), Some(ScorePath::F32Refined));
+        assert_eq!(ScorePath::from_str("nope"), None);
+        assert_eq!(ScorePath::default(), ScorePath::F64);
+    }
+
+    #[test]
+    fn f32_counters_fold() {
+        let mut a = F32Counters { scored_rows: 10, refined_rows: 4, relabeled_rows: 1 };
+        a.add(&F32Counters { scored_rows: 6, refined_rows: 0, relabeled_rows: 0 });
+        assert_eq!(a.scored_rows, 16);
+        assert_eq!(a.refined_rows, 4);
+        assert!((a.refine_rate() - 0.25).abs() < 1e-12);
+        assert_eq!(F32Counters::default().refine_rate(), 0.0);
+    }
+}

@@ -59,7 +59,11 @@ pub fn run(
     // transposed panel the register-blocked micro-kernel streams —
     // exactly once on the leader, allocation-free, before the shards
     // fan out.
-    let mut session = exec.assign_session(ds, k, cfg.metric)?;
+    // The score path (exact f64, or the opt-in f32-with-refinement of
+    // [`crate::kernel::simd`]) is resolved here: executors without an
+    // implementation of the requested path error out rather than
+    // silently substituting different arithmetic.
+    let mut session = exec.assign_session_with(ds, k, cfg.metric, cfg.score_path)?;
     let mut inertia = f64::INFINITY;
     let mut iterations = 0usize;
     let mut converged = false;
@@ -90,6 +94,8 @@ pub fn run(
     }
 
     let prune = session.prune_counters();
+    let assign_path = session.path_name().to_string();
+    let f32c = session.f32_counters();
     let labels = session.finish().labels;
 
     let metrics = RunMetrics {
@@ -103,6 +109,8 @@ pub fn run(
         wall: wall_start.elapsed(),
         stages: timer,
         prune,
+        assign_path,
+        f32: f32c,
     };
 
     Ok(FitResult {

@@ -13,7 +13,7 @@ use crate::exec::gpu::GpuExecutor;
 use crate::exec::multi::MultiExecutor;
 use crate::exec::regime::{self, Regime};
 use crate::exec::single::SingleExecutor;
-use crate::exec::{DiameterResult, ExecError, Executor};
+use crate::exec::{DiameterResult, ExecError, Executor, ScorePath};
 use crate::metric::Metric;
 use crate::metrics::RunMetrics;
 use crate::runtime::Device;
@@ -105,6 +105,12 @@ pub struct KMeansConfig {
     pub threads: usize,
     pub regime: Regime,
     pub diameter: DiameterMode,
+    /// Dense-assignment score arithmetic: exact f64 (default), or the
+    /// opt-in f32 candidate sweep with margin-gated f64 refinement
+    /// ([`crate::kernel::simd`]). Euclidean CPU regimes only — never
+    /// silently substituted ([`KMeansConfig::validate`] and the
+    /// executors both reject unsupported combinations).
+    pub score_path: ScorePath,
     /// AOT artifact directory for the gpu regime (default: `artifacts/`
     /// next to the working directory, or `PARCLUST_ARTIFACTS`).
     pub artifact_dir: Option<PathBuf>,
@@ -124,6 +130,7 @@ impl KMeansConfig {
                 .unwrap_or(1),
             regime: Regime::Auto,
             diameter: DiameterMode::Auto,
+            score_path: ScorePath::F64,
             artifact_dir: None,
         }
     }
@@ -168,6 +175,11 @@ impl KMeansConfig {
         self
     }
 
+    pub fn score_path(mut self, p: ScorePath) -> Self {
+        self.score_path = p;
+        self
+    }
+
     pub fn artifact_dir(mut self, p: PathBuf) -> Self {
         self.artifact_dir = Some(p);
         self
@@ -196,6 +208,22 @@ impl KMeansConfig {
                  (paper Eq. 2); got {}",
                 self.metric.name()
             )));
+        }
+        if self.score_path == ScorePath::F32Refined {
+            if self.metric != Metric::Euclidean {
+                return Err(KMeansError::Config(format!(
+                    "the f32 score path is defined by the euclidean \
+                     norm-decomposition kernel; got metric {}",
+                    self.metric.name()
+                )));
+            }
+            if resolved == Regime::Gpu {
+                return Err(KMeansError::Config(
+                    "the f32 score path is a CPU-regime feature; the gpu \
+                     regime runs its own compiled kernels"
+                        .into(),
+                ));
+            }
         }
         Ok(resolved)
     }
@@ -320,6 +348,31 @@ mod tests {
             .regime(Regime::Gpu)
             .metric(Metric::Cosine);
         assert!(gpu_cosine.validate(&g.dataset).is_err());
+    }
+
+    #[test]
+    fn validate_gates_the_f32_score_path() {
+        let g = generate(&GmmSpec::new(10, 2, 2).seed(0));
+        // Defined only for the euclidean norm-decomposition kernel.
+        let err = KMeansConfig::new(2)
+            .metric(Metric::Manhattan)
+            .score_path(ScorePath::F32Refined)
+            .validate(&g.dataset)
+            .unwrap_err();
+        assert!(err.to_string().contains("euclidean"), "{err}");
+        // CPU-regime feature: the gpu regime runs its own kernels.
+        let err = KMeansConfig::new(2)
+            .regime(Regime::Gpu)
+            .score_path(ScorePath::F32Refined)
+            .validate(&g.dataset)
+            .unwrap_err();
+        assert!(err.to_string().contains("gpu"), "{err}");
+        // The supported combination passes validation unchanged.
+        let r = KMeansConfig::new(2)
+            .score_path(ScorePath::F32Refined)
+            .validate(&g.dataset)
+            .unwrap();
+        assert_eq!(r, Regime::Single);
     }
 
     #[test]

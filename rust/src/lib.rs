@@ -30,7 +30,12 @@
 //!   builds once on the leader and shares read-only across shards.
 //!   Blocking reorders work only across (row, centroid) pairs — per
 //!   pair the accumulation order matches the scalar reference, so
-//!   labels stay bit-equal. The **pruned** variant ([`kernel::pruned`])
+//!   labels stay bit-equal. The same panel feeds an **explicitly
+//!   vectorized AVX2 lane** ([`kernel::simd`], runtime-dispatched,
+//!   bit-equal to the portable kernel by construction — mul/add, never
+//!   FMA) and an **opt-in f32 score path** (f32 candidate sweep +
+//!   margin-gated f64 refinement, `ScorePath::F32Refined`, default
+//!   off). The **pruned** variant ([`kernel::pruned`])
 //!   carries Hamerly-style triangle-inequality bounds across Lloyd
 //!   iterations so most rows skip the centroid sweep entirely once the
 //!   centroids settle — losslessly (labels provably identical to the
@@ -55,8 +60,39 @@
 //!   loop driving one assign-session per fit, initialization, regime
 //!   policy, metrics (including pruning-rate counters) and reporting.
 //!
-//! A future SIMD or batched-PJRT backend slots in behind the kernel
-//! entry points without touching orchestration or the driver.
+//! The explicit SIMD lane landed behind exactly the kernel entry points
+//! this seam promised — no orchestration or driver change. A batched-PJRT
+//! backend remains the next candidate to slot in the same way.
+//!
+//! ## Testing strategy: two parity tiers
+//!
+//! Every assignment path belongs to one of two correctness tiers, and
+//! new kernels must declare which one they slot into:
+//!
+//! * **Tier 1 — bit-equal.** Paths that perform the *identical per-
+//!   (row, centroid) f64 arithmetic* in the same order (portable
+//!   micro-kernel, its one-row sweep, the AVX2 lane, the pruned
+//!   session, multi-regime labels, and the f32 path's refined output)
+//!   must produce labels, counts, coordinate sums and inertia that
+//!   compare equal with `==` on **any** input — including NaN/±inf
+//!   centroids, denormals and overflow-scale data. Enforced by
+//!   `tests/kernel_parity.rs` (directed sweeps),
+//!   `tests/kernel_fuzz.rs` (seeded differential fuzzing with a
+//!   shrinker) and `tests/adversarial_float.rs` (non-finite policy).
+//! * **Tier 2 — agreement-gated.** Paths with *different* arithmetic
+//!   (the scalar subtract-square reference vs the decomposed
+//!   ‖x‖² − 2·x·c + ‖c‖² form; raw f32 candidate scores) agree only
+//!   where margins provably dwarf rounding: the fuzz oracle compares
+//!   them bit-wise solely on `testkit::lattice_blobs` data (inter-center
+//!   gaps ≥ 3.0 vs sub-ULP rounding), and the f32 score path accepts a
+//!   candidate only when its margin beats a forward-error bound,
+//!   refining in f64 otherwise — which is what promotes its *output*
+//!   back into tier 1.
+//!
+//! The oracles themselves are pinned by `tests/oracle_meta.rs`
+//! (tolerance semantics, lattice separation/duplicate guarantees,
+//! shrinker determinism), so a silently weakened test harness fails
+//! loudly too.
 //!
 //! ## Quickstart
 //!

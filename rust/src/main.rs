@@ -50,6 +50,9 @@ fn app() -> AppSpec {
                 .opt("diameter", None, Some("auto"),
                      "exact | auto | sampled:<N>")
                 .opt("max-iters", None, Some("300"), "iteration cap")
+                .opt("score-path", None, Some("f64"),
+                     "assignment score arithmetic: f64 (exact) | \
+                      f32 (f32 candidates + f64 refinement)")
                 .opt("tol", None, Some("0"),
                      "squared centroid-shift tolerance (0 = exact congruence)")
                 .opt("seed", None, Some("0"), "PRNG seed")
@@ -190,6 +193,10 @@ fn build_run_config(p: &Parsed) -> Result<RunConfig, String> {
     }
     if let Some(d) = p.get("diameter") {
         cfg.kmeans.diameter = parse_diameter_mode(d)?;
+    }
+    if let Some(s) = p.get("score-path") {
+        cfg.kmeans.score_path = parclust::exec::ScorePath::from_str(s)
+            .ok_or_else(|| format!("unknown score path '{s}' (f64 | f32)"))?;
     }
     if let Some(s) = p.get("scale") {
         if !["none", "minmax", "zscore"].contains(&s) {

@@ -11,6 +11,7 @@ use std::time::{Duration, Instant};
 
 use crate::json::Json;
 use crate::kernel::pruned::PruneCounters;
+use crate::kernel::simd::F32Counters;
 
 /// Accumulates named durations and counters for one clustering run.
 #[derive(Default, Debug, Clone)]
@@ -94,6 +95,13 @@ pub struct RunMetrics {
     /// triangle-inequality bounds (`kernel::pruned`) across all
     /// iterations; all-scanned on dense paths.
     pub prune: PruneCounters,
+    /// Which assignment kernel path the fit's session stepped through
+    /// (e.g. `pruned+simd-avx2`, `pruned+micro`, `f32+refine`,
+    /// `scalar`, `dense`) — records what dispatch actually resolved to.
+    pub assign_path: String,
+    /// f32 score-path counters (`kernel::simd`); all zero unless the
+    /// opt-in [`crate::exec::ScorePath::F32Refined`] ran.
+    pub f32: F32Counters,
 }
 
 impl RunMetrics {
@@ -110,6 +118,11 @@ impl RunMetrics {
             ("pruned_rows", Json::num(self.prune.pruned_rows as f64)),
             ("scanned_rows", Json::num(self.prune.scanned_rows as f64)),
             ("prune_rate", Json::num(self.prune.rate())),
+            ("assign_path", Json::str(self.assign_path.clone())),
+            ("f32_scored_rows", Json::num(self.f32.scored_rows as f64)),
+            ("f32_refined_rows", Json::num(self.f32.refined_rows as f64)),
+            ("f32_relabeled_rows", Json::num(self.f32.relabeled_rows as f64)),
+            ("f32_refine_rate", Json::num(self.f32.refine_rate())),
             ("stages", self.stages.to_json()),
         ])
     }
@@ -121,6 +134,18 @@ impl RunMetrics {
             self.regime, self.n, self.m, self.k, self.iterations,
             self.converged, self.inertia, self.wall
         );
+        if !self.assign_path.is_empty() {
+            s.push_str(&format!("  assign path: {}\n", self.assign_path));
+        }
+        if self.f32.scored_rows > 0 {
+            s.push_str(&format!(
+                "  f32 rows: {} scored / {} refined / {} relabeled ({:.1}% refined)\n",
+                self.f32.scored_rows,
+                self.f32.refined_rows,
+                self.f32.relabeled_rows,
+                self.f32.refine_rate() * 100.0
+            ));
+        }
         if self.prune.pruned_rows + self.prune.scanned_rows > 0 {
             s.push_str(&format!(
                 "  assign rows: {} pruned / {} scanned ({:.1}% pruned)\n",
@@ -196,6 +221,8 @@ mod tests {
             wall: Duration::from_millis(99),
             stages,
             prune: PruneCounters { pruned_rows: 750, scanned_rows: 250 },
+            assign_path: "pruned+micro".into(),
+            f32: F32Counters { scored_rows: 1000, refined_rows: 40, relabeled_rows: 3 },
         };
         assert!((m.prune.rate() - 0.75).abs() < 1e-12);
         let j = m.to_json();
@@ -204,7 +231,12 @@ mod tests {
         assert_eq!(parsed.req_str("regime").unwrap(), "multi");
         assert_eq!(parsed.get("converged").unwrap().as_bool(), Some(true));
         assert_eq!(parsed.req_usize("pruned_rows").unwrap(), 750);
+        assert_eq!(parsed.req_str("assign_path").unwrap(), "pruned+micro");
+        assert_eq!(parsed.req_usize("f32_refined_rows").unwrap(), 40);
+        assert_eq!(parsed.req_usize("f32_relabeled_rows").unwrap(), 3);
         assert!(parsed.get("stages").unwrap().get("assign").is_some());
         assert!(m.render().contains("75.0% pruned"), "{}", m.render());
+        assert!(m.render().contains("assign path: pruned+micro"), "{}", m.render());
+        assert!(m.render().contains("4.0% refined"), "{}", m.render());
     }
 }

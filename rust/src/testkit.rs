@@ -5,10 +5,12 @@
 //! coordinator invariant tests (sharding partitions, partial-reduce
 //! equivalence, mask hygiene, regime-policy monotonicity).
 //!
-//! Shrinking is deliberately simple: on failure we retry the property on
-//! a fixed sequence of "smaller" cases derived by halving sizes, and
-//! report the smallest failure found. This catches the common
-//! off-by-one/boundary cases without a full shrink tree.
+//! Shrinking is deliberately simple ([`forall_shrink`]): on failure the
+//! runner greedily retries the property on caller-supplied "smaller"
+//! candidates (typically derived by halving sizes) and reports the
+//! smallest failure found, with the replay seed and the number of
+//! shrink steps taken. This catches the common off-by-one/boundary
+//! cases without a full shrink tree.
 
 use crate::prng::Pcg32;
 
@@ -109,6 +111,79 @@ where
         cases: cfg.cases,
         failure: None,
         seed: cfg.seed,
+    }
+}
+
+/// Hard cap on greedy shrink steps — shrinkers that halve sizes
+/// converge in O(log) steps, so hitting this means a cyclic shrinker.
+const MAX_SHRINK_STEPS: usize = 200;
+
+/// [`forall`] plus greedy shrinking. On the first failing input, ask
+/// `shrink` for smaller candidates, move to the first candidate that
+/// still fails, and repeat (up to [`MAX_SHRINK_STEPS`]) until no
+/// candidate fails. The report carries the *shrunk* counterexample, the
+/// original failure, the number of shrink steps, and the replay seed —
+/// rerunning with the same seed (env `PARCLUST_TEST_SEED` for
+/// [`Config::default`]-based callers) regenerates the identical case
+/// sequence.
+pub fn forall_shrink<T, G, S, P>(cfg: Config, gen: G, shrink: S, prop: P) -> PropResult
+where
+    T: std::fmt::Debug,
+    G: Gen<T>,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Pcg32::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen.generate(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            let mut smallest = input;
+            let mut last_msg = first_msg.clone();
+            let mut steps = 0usize;
+            'shrinking: while steps < MAX_SHRINK_STEPS {
+                for cand in shrink(&smallest) {
+                    if let Err(msg) = prop(&cand) {
+                        smallest = cand;
+                        last_msg = msg;
+                        steps += 1;
+                        continue 'shrinking;
+                    }
+                }
+                break; // every candidate passes: local minimum
+            }
+            let detail = format!(
+                "case #{case}: {first_msg}\nshrunk ({steps} steps): {last_msg}\n\
+                 smallest input: {}",
+                truncate_debug(&smallest)
+            );
+            return PropResult {
+                cases: case + 1,
+                failure: Some(detail),
+                seed: cfg.seed,
+            };
+        }
+    }
+    PropResult {
+        cases: cfg.cases,
+        failure: None,
+        seed: cfg.seed,
+    }
+}
+
+/// Case count for fuzz harnesses: the `FUZZ_ITERS` environment variable
+/// when set and parseable, else `default`. CI bumps this on the
+/// native-CPU job; locally `FUZZ_ITERS=5000 cargo test` soaks.
+pub fn fuzz_cases(default: usize) -> usize {
+    fuzz_cases_from(std::env::var("FUZZ_ITERS").ok().as_deref(), default)
+}
+
+/// Pure core of [`fuzz_cases`], split out so the parsing rules are unit
+/// testable without mutating process environment (set_var is unsound
+/// under threaded tests).
+pub fn fuzz_cases_from(var: Option<&str>, default: usize) -> usize {
+    match var.and_then(|s| s.trim().parse::<usize>().ok()) {
+        Some(n) if n > 0 => n,
+        _ => default,
     }
 }
 
@@ -242,6 +317,41 @@ mod tests {
         let err = allclose(&a, &b, 1e-6, 1e-6).unwrap_err();
         assert!(err.contains("[1]"), "{err}");
         assert!(allclose(&a, &a, 0.0, 0.0).is_ok());
+    }
+
+    #[test]
+    fn forall_shrink_finds_boundary() {
+        // fails iff n >= 10; halving from any failure must land on 10
+        let res = forall_shrink(
+            Config { cases: 50, seed: 3 },
+            usize_in(0, 1000),
+            |&n| if n > 0 { vec![n / 2, n - 1] } else { vec![] },
+            |&n| if n < 10 { Ok(()) } else { Err(format!("n={n} too big")) },
+        );
+        let msg = res.failure.expect("property must fail");
+        assert!(msg.contains("n=10 too big"), "{msg}");
+        assert!(msg.contains("shrunk ("), "{msg}");
+        assert_eq!(res.seed, 3);
+    }
+
+    #[test]
+    fn forall_shrink_passes_clean_property() {
+        let res = forall_shrink(
+            Config { cases: 20, seed: 4 },
+            usize_in(0, 9),
+            |&n| vec![n / 2],
+            |&n| if n < 10 { Ok(()) } else { Err("bad".into()) },
+        );
+        assert!(res.failure.is_none());
+    }
+
+    #[test]
+    fn fuzz_cases_parsing() {
+        assert_eq!(fuzz_cases_from(None, 256), 256);
+        assert_eq!(fuzz_cases_from(Some("1000"), 256), 1000);
+        assert_eq!(fuzz_cases_from(Some(" 42 "), 256), 42);
+        assert_eq!(fuzz_cases_from(Some("0"), 256), 256);
+        assert_eq!(fuzz_cases_from(Some("lots"), 256), 256);
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Adversarial floating-point inputs through every assignment path.
+//!
+//! The crate's non-finite **policy** is pinned here: datasets reject
+//! NaN/±inf at the single ingestion choke point
+//! (`Dataset::from_vec` — CSV, binary, synthetic and tests all build
+//! through it), while *centroid tables* are plain slices at the kernel
+//! boundary, so the kernels must stay well-defined when handed
+//! non-finite centroids: a NaN or ±inf centroid may never win an argmin
+//! against any finite candidate (strict `<` is false for NaN scores,
+//! and ±inf scores are never below a finite one). Denormal
+//! (≈1e-38) and near-f32-overflow (1e30) magnitudes are *data*, not
+//! errors, and every path must agree on them bit-for-bit.
+
+use std::io::{BufReader, Cursor};
+
+use parclust::data::{csv, DataError, Dataset};
+use parclust::exec::single::SingleExecutor;
+use parclust::exec::{AssignStats, Executor, ScorePath};
+use parclust::kernel::prep::CentroidPrep;
+use parclust::kernel::{assign, reduce, simd};
+use parclust::metric::Metric;
+use parclust::prng::Pcg32;
+use parclust::testkit::lattice_blobs;
+
+fn assert_bitwise(tag: &str, a: &AssignStats, b: &AssignStats) {
+    assert_eq!(a.labels, b.labels, "{tag}: labels");
+    assert_eq!(a.counts, b.counts, "{tag}: counts");
+    assert_eq!(a.sums, b.sums, "{tag}: sums");
+    assert!(
+        a.inertia == b.inertia,
+        "{tag}: inertia {} vs {}",
+        a.inertia,
+        b.inertia
+    );
+}
+
+/// Run the full f64 battery (scalar / rowsweep / panel / f32 path) on
+/// one table and assert bitwise agreement; returns the panel stats.
+fn battery(ds: &Dataset, cent: &[f32], k: usize, scalar_too: bool) -> AssignStats {
+    let n = ds.n();
+    let panel = assign::assign_update_range(ds, cent, k, Metric::Euclidean, 0..n);
+    let sweep = assign::assign_update_range_rowsweep(ds, cent, k, 0..n);
+    assert_bitwise("rowsweep vs panel", &sweep, &panel);
+    if scalar_too {
+        let scalar = assign::assign_update_range_scalar(ds, cent, k, Metric::Euclidean, 0..n);
+        assert_bitwise("scalar vs panel", &scalar, &panel);
+    }
+    let mut prep = CentroidPrep::default();
+    prep.prepare(cent, k, ds.m());
+    let mut f32_stats = AssignStats::zeros(n, k, ds.m());
+    let ctr = simd::assign_euclidean_f32_into(ds, cent, &prep, 0..n, &mut f32_stats);
+    assert_bitwise("f32 path vs panel", &f32_stats, &panel);
+    assert_eq!(ctr.scored_rows, n as u64);
+    panel
+}
+
+#[test]
+fn ingestion_rejects_non_finite_everywhere() {
+    // The policy choke point itself…
+    for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+        assert!(matches!(
+            Dataset::from_vec(1, 2, vec![0.0, bad]),
+            Err(DataError::NonFinite { index: 1, .. })
+        ));
+    }
+    // …and an independent ingestion route flowing through it: CSV text
+    // that *parses* as NaN/inf must still be rejected, with the flat
+    // index of the offending cell.
+    for text in ["a,b\n1.0,nan\n", "a,b\n1.0,inf\n", "a,b\n1.0,-inf\n"] {
+        let err = csv::read(BufReader::new(Cursor::new(text))).unwrap_err();
+        assert!(
+            matches!(err, DataError::NonFinite { index: 1, .. }),
+            "csv {text:?} gave {err:?}"
+        );
+    }
+    // Denormal and huge-but-finite magnitudes are data, not errors.
+    assert!(Dataset::from_vec(1, 4, vec![1e-40, -1e-45, 1e30, 3.4e38]).is_ok());
+}
+
+#[test]
+fn nan_centroid_never_wins() {
+    // A NaN centroid appended to a separated table: every path must
+    // ignore it (NaN scores fail every strict-< comparison) and agree
+    // bit-for-bit, scalar reference included.
+    let (ds, mut cent) = lattice_blobs(97, 6, 3);
+    cent.extend([f32::NAN; 6]);
+    let stats = battery(&ds, &cent, 4, true);
+    assert!(stats.labels.iter().all(|&l| l < 3), "NaN centroid won a row");
+    assert_eq!(stats.counts[3], 0);
+    assert!(stats.inertia.is_finite());
+}
+
+#[test]
+fn infinite_centroid_never_wins() {
+    // ±inf centroids score +∞ (or NaN via ∞−∞) in every form — never
+    // below a finite score.
+    let (ds, cent) = lattice_blobs(83, 5, 3);
+    for sign in [f32::INFINITY, f32::NEG_INFINITY] {
+        let mut t = cent.clone();
+        t.extend([sign; 5]);
+        let stats = battery(&ds, &t, 4, true);
+        assert!(stats.labels.iter().all(|&l| l < 3), "{sign} centroid won");
+        assert!(stats.inertia.is_finite());
+    }
+}
+
+#[test]
+fn all_nan_centroids_degrade_consistently_on_labels() {
+    // With NO finite candidate, nothing ever wins the strict-< argmin:
+    // every path keeps its initial label 0 and all mass lands in
+    // cluster 0. Labels and counts are pinned; inertia is documented as
+    // path-dependent garbage (the scalar reference's untouched +∞ best
+    // vs the decomposed paths' NaN winner-distance recompute), which is
+    // exactly why the differential fuzz oracle never compares inertia
+    // when labels came from an all-non-finite table — and why
+    // `Dataset::from_vec` refuses to let such values become *data*.
+    let (ds, _) = lattice_blobs(31, 4, 2);
+    let cent = vec![f32::NAN; 2 * 4];
+    let n = ds.n();
+    let panel = assign::assign_update_range(&ds, &cent, 2, Metric::Euclidean, 0..n);
+    let scalar = assign::assign_update_range_scalar(&ds, &cent, 2, Metric::Euclidean, 0..n);
+    let sweep = assign::assign_update_range_rowsweep(&ds, &cent, 2, 0..n);
+    for (tag, s) in [("panel", &panel), ("scalar", &scalar), ("rowsweep", &sweep)] {
+        assert!(s.labels.iter().all(|&l| l == 0), "{tag} labels");
+        assert_eq!(s.counts, vec![n as u64, 0], "{tag} counts");
+    }
+    assert!(scalar.inertia.is_infinite() && scalar.inertia > 0.0);
+    assert!(panel.inertia.is_nan());
+}
+
+#[test]
+fn denormal_scale_keeps_bit_parity_and_forces_refinement() {
+    // Values around 1e-38: squared terms underflow f32 entirely (the
+    // f32 score sweep sees margins of ~0), yet the f64 paths are exact
+    // as ever. The f32 path's refinement bound is floored strictly
+    // above zero (the +1 term in its error model), so a ~0 margin can
+    // never be "confidently" accepted: every row must take the f64
+    // rescan, making the path exact by construction here.
+    let (n, m, k) = (157, 7, 5);
+    let mut rng = Pcg32::new(0xD3);
+    let values: Vec<f32> = (0..n * m).map(|_| rng.uniform(-1e-38, 1e-38)).collect();
+    let cent: Vec<f32> = (0..k * m).map(|_| rng.uniform(-1e-38, 1e-38)).collect();
+    let ds = Dataset::from_vec(n, m, values).unwrap();
+
+    let panel = assign::assign_update_range(&ds, &cent, k, Metric::Euclidean, 0..n);
+    let sweep = assign::assign_update_range_rowsweep(&ds, &cent, k, 0..n);
+    assert_bitwise("denormal rowsweep vs panel", &sweep, &panel);
+
+    let mut prep = CentroidPrep::default();
+    prep.prepare(&cent, k, m);
+    let mut f32_stats = AssignStats::zeros(n, k, m);
+    let ctr = simd::assign_euclidean_f32_into(&ds, &cent, &prep, 0..n, &mut f32_stats);
+    assert_bitwise("denormal f32 vs panel", &f32_stats, &panel);
+    assert_eq!(
+        ctr.refined_rows, ctr.scored_rows,
+        "underflowed margins must never be accepted without refinement"
+    );
+}
+
+#[test]
+fn overflow_scale_keeps_bit_parity() {
+    // Values around 1e30: f32 squared distances overflow to +∞, but
+    // they do so *identically* in every path (the winner's d² is always
+    // the same `sq_euclidean` recompute), so inertia — +∞ here — and
+    // sums stay bitwise across paths. The f32 score path sees +∞ norms
+    // (prep stores them as f32) and ∞−∞ = NaN margins, which fail the
+    // acceptance test and refine — sound, never silently wrong.
+    let (n, m, k) = (143, 6, 4);
+    let mut rng = Pcg32::new(0xB16);
+    let values: Vec<f32> = (0..n * m).map(|_| rng.uniform(-1e30, 1e30)).collect();
+    let cent: Vec<f32> = (0..k * m).map(|_| rng.uniform(-1e30, 1e30)).collect();
+    let ds = Dataset::from_vec(n, m, values).unwrap();
+    let stats = battery(&ds, &cent, k, false);
+    // magnitude sanity: this case really does drive d² past f32 range
+    assert!(stats.inertia.is_infinite() && stats.inertia > 0.0);
+}
+
+#[test]
+fn prep_norm_folds_skip_nan() {
+    // max_c_norm backs the f32 refinement error model; a NaN norm from
+    // a poisoned centroid must not poison the fold (f64::max ignores
+    // NaN), so finite rows keep a usable bound.
+    let mut prep = CentroidPrep::default();
+    let cent = [3.0f32, 4.0, f32::NAN, 1.0, 1.0, 0.0];
+    prep.prepare(&cent, 3, 2);
+    assert!(prep.c_norms[1].is_nan());
+    assert_eq!(prep.max_c_norm, 25.0);
+    // and the padded score views carry the NaN through, never 0
+    assert!(prep.score_norms[1].is_nan());
+    assert!(prep.score_norms_f32[1].is_nan());
+    assert!(prep.score_norms[3].is_infinite());
+}
+
+#[test]
+fn pruned_session_survives_nan_centroid_across_iterations() {
+    // The pruned session's digest (half-separations via f64::min,
+    // drift via f64::max) skips NaN distances, and NaN-poisoned bounds
+    // fail their comparisons, falling back to the full scan — so a NaN
+    // centroid held across iterations degrades pruning, never
+    // correctness. Walk a 3-step trajectory and demand bitwise equality
+    // with the dense panel at every step.
+    let (ds, cent) = lattice_blobs(211, 5, 3);
+    let single = SingleExecutor::new();
+    let mut session = single.assign_session(&ds, 4, Metric::Euclidean).unwrap();
+    let mut table: Vec<f32> = cent.clone();
+    table.extend([f32::NAN; 5]);
+    for it in 0..3 {
+        let dense = assign::assign_update_range(&ds, &table, 4, Metric::Euclidean, 0..ds.n());
+        let stepped = session.step(&table).unwrap();
+        assert_bitwise(&format!("pruned it{it} vs dense"), stepped, &dense);
+        assert!(stepped.labels.iter().all(|&l| l < 3));
+        let next = dense.centroids(&table, 4, 5);
+        // cluster 3 is empty, so the update keeps its previous (NaN)
+        // centroid — the poison persists across the whole trajectory
+        assert!(next[3 * 5..].iter().all(|v| v.is_nan()));
+        table = next;
+    }
+}
+
+#[test]
+fn f32_session_rejects_nothing_it_should_not() {
+    // The opt-in f32 session at extreme-but-finite magnitudes must
+    // still match its own executor's f64 session bitwise (the session
+    // form is what the Lloyd driver actually runs).
+    let (n, m, k) = (119, 5, 4);
+    let mut rng = Pcg32::new(7);
+    let values: Vec<f32> = (0..n * m).map(|_| rng.uniform(-1e18, 1e18)).collect();
+    let ds = Dataset::from_vec(n, m, values).unwrap();
+    let cent: Vec<f32> = (0..k * m).map(|_| rng.uniform(-1e18, 1e18)).collect();
+    let single = SingleExecutor::new();
+    let mut f64s = single.assign_session(&ds, k, Metric::Euclidean).unwrap();
+    let mut f32s = single
+        .assign_session_with(&ds, k, Metric::Euclidean, ScorePath::F32Refined)
+        .unwrap();
+    let mut table = cent;
+    for it in 0..3 {
+        let a = f64s.step(&table).unwrap().clone();
+        let b = f32s.step(&table).unwrap();
+        assert_bitwise(&format!("f32 session it{it}"), b, &a);
+        table = a.centroids(&table, k, m);
+    }
+}
+
+#[test]
+fn reduce_sums_are_exact_where_f64_is() {
+    // coordinate_sums accumulates in f64. Identical-magnitude rows sum
+    // exactly (x + x doubles the exponent, no rounding), and paired
+    // opposite signs cancel to exactly 0.0 — even at 1e30 where the f32
+    // values themselves are near the top of their range.
+    let ds = Dataset::from_vec(
+        4,
+        2,
+        vec![1e30, -1e30, 1e30, 1e30, -1e30, -1e30, -1e30, 1e30],
+    )
+    .unwrap();
+    let sums = reduce::coordinate_sums(&ds, 0..4);
+    assert_eq!(sums, vec![0.0, 0.0]);
+    let sums = reduce::coordinate_sums(&ds, 0..2);
+    assert_eq!(sums, vec![2.0 * (1e30f32 as f64), 0.0]);
+}

@@ -1,0 +1,361 @@
+//! Seeded differential fuzzing of every CPU assignment path.
+//!
+//! One generated case drives the scalar reference, the row sweep, the
+//! dispatched panel kernel (AVX2 or portable micro-kernel), the pruned
+//! session, the f32 score path, and both CPU executors down the same
+//! 3-table Lloyd trajectory, under a **tiered oracle**:
+//!
+//! * **bit-equal tier** (any data): paths sharing the per-pair f64
+//!   arithmetic — row sweep, panel kernel, pruned session, and the f32
+//!   path's *final* output — must agree on labels, counts, sums and
+//!   inertia to the last bit;
+//! * **separated tier** (lattice cases only): the f32 subtract-square
+//!   scalar reference joins the bit-equal set — its argmin provably
+//!   matches the decomposed form only when margins dwarf f32 rounding,
+//!   so asserting it on adversarial near-ties would fuzz the *oracle*,
+//!   not the kernels (see `tests/oracle_meta.rs`);
+//! * **shard tier**: the multi executor matches single on labels and
+//!   counts bitwise; sums and inertia only to summation-order tolerance
+//!   (shards absorb in a different order than one global pass).
+//!
+//! Adversarial cases mix magnitudes from denormal (1e-38) to
+//! f32-overflow (1e30) scale, duplicate rows, duplicate centers and
+//! rows copied verbatim as centroids (exact zero distances and exact
+//! ties). Every run is reproducible from the printed seed
+//! (`PARCLUST_TEST_SEED` to replay); failures shrink greedily toward a
+//! minimal shape. Case count scales with `FUZZ_ITERS` (CI bumps it on
+//! the native-CPU job).
+
+use parclust::data::Dataset;
+use parclust::exec::multi::MultiExecutor;
+use parclust::exec::single::SingleExecutor;
+use parclust::exec::{AssignStats, Executor, ScorePath};
+use parclust::kernel::assign;
+use parclust::kernel::prep::CentroidPrep;
+use parclust::kernel::simd;
+use parclust::metric::Metric;
+use parclust::prng::Pcg32;
+use parclust::testkit::{forall_shrink, fuzz_cases, lattice_blobs, Config};
+
+const MAX_N: usize = 160;
+const MAX_M: usize = 27;
+const MAX_K: usize = 18;
+/// Centroid tables per case: the initial one plus two Lloyd updates.
+const TABLES: usize = 3;
+/// Adversarial magnitude ladder: denormal, small, unit, large,
+/// near-f32-norm-overflow, and past it (f32 squared norms become +∞).
+const SCALES: [f32; 6] = [1e-38, 1e-3, 1.0, 1e4, 1e18, 1e30];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Flavor {
+    /// lattice_blobs geometry: argmin margins provably dwarf f32 noise.
+    Separated,
+    /// Random magnitudes + duplicates + row-centroids: near-ties galore.
+    Adversarial,
+}
+
+#[derive(Clone, Debug)]
+struct Case {
+    flavor: Flavor,
+    n: usize,
+    m: usize,
+    k: usize,
+    values: Vec<f32>,
+    cent: Vec<f32>,
+}
+
+impl Case {
+    fn separated(n: usize, m: usize, k: usize, rng: &mut Pcg32) -> Case {
+        let (ds, cent) = lattice_blobs(n, m, k);
+        let mut values = ds.values().to_vec();
+        // extra byte-identical duplicate rows on top of the lattice's own
+        for _ in 0..n / 16 + 1 {
+            if n >= 2 {
+                let a = rng.next_below(n as u32) as usize;
+                let b = rng.next_below(n as u32) as usize;
+                let row: Vec<f32> = values[a * m..(a + 1) * m].to_vec();
+                values[b * m..(b + 1) * m].copy_from_slice(&row);
+            }
+        }
+        Case { flavor: Flavor::Separated, n, m, k, values, cent }
+    }
+
+    fn adversarial(n: usize, m: usize, k: usize, rng: &mut Pcg32) -> Case {
+        let scale = SCALES[rng.next_below(SCALES.len() as u32) as usize];
+        let mut values: Vec<f32> = (0..n * m).map(|_| rng.uniform(-scale, scale)).collect();
+        for _ in 0..n / 8 + 1 {
+            if n >= 2 {
+                let a = rng.next_below(n as u32) as usize;
+                let b = rng.next_below(n as u32) as usize;
+                let row: Vec<f32> = values[a * m..(a + 1) * m].to_vec();
+                values[b * m..(b + 1) * m].copy_from_slice(&row);
+            }
+        }
+        let mut cent = vec![0f32; k * m];
+        for c in 0..k {
+            match rng.next_below(3) {
+                // a row copied verbatim: exact zero distance to it
+                0 => {
+                    let a = rng.next_below(n as u32) as usize;
+                    let row: Vec<f32> = values[a * m..(a + 1) * m].to_vec();
+                    cent[c * m..(c + 1) * m].copy_from_slice(&row);
+                }
+                // a duplicate of an earlier center: exact score ties
+                1 if c > 0 => {
+                    let o = rng.next_below(c as u32) as usize;
+                    let dup: Vec<f32> = cent[o * m..(o + 1) * m].to_vec();
+                    cent[c * m..(c + 1) * m].copy_from_slice(&dup);
+                }
+                _ => {
+                    for j in 0..m {
+                        cent[c * m + j] = rng.uniform(-scale, scale);
+                    }
+                }
+            }
+        }
+        Case { flavor: Flavor::Adversarial, n, m, k, values, cent }
+    }
+
+    /// Shrink candidates: halve each dimension. Separated cases are
+    /// *regenerated* at the smaller shape (truncating the centroid table
+    /// would orphan rows of removed blobs and void the margin guarantee
+    /// the separated oracle tier relies on); adversarial cases truncate
+    /// in place, preserving the failing data.
+    fn shrink(&self) -> Vec<Case> {
+        let mut out = Vec::new();
+        let (n, m, k) = (self.n, self.m, self.k);
+        match self.flavor {
+            Flavor::Separated => {
+                let mut rng = Pcg32::new(0);
+                for (n2, m2, k2) in [(n / 2, m, k), (n, m / 2, k), (n, m, k / 2)] {
+                    if n2 >= 1 && m2 >= 1 && k2 >= 1 && (n2, m2, k2) != (n, m, k) {
+                        out.push(Case::separated(n2, m2, k2, &mut rng));
+                    }
+                }
+            }
+            Flavor::Adversarial => {
+                if n > 1 {
+                    let mut c = self.clone();
+                    c.n = n / 2;
+                    c.values.truncate(c.n * m);
+                    out.push(c);
+                }
+                if k > 1 {
+                    let mut c = self.clone();
+                    c.k = k / 2;
+                    c.cent.truncate(c.k * m);
+                    out.push(c);
+                }
+                if m > 1 {
+                    let m2 = m / 2;
+                    let take = |buf: &[f32], rows: usize| -> Vec<f32> {
+                        (0..rows).flat_map(|r| buf[r * m..r * m + m2].to_vec()).collect()
+                    };
+                    out.push(Case {
+                        flavor: self.flavor,
+                        n,
+                        m: m2,
+                        k,
+                        values: take(&self.values, n),
+                        cent: take(&self.cent, k),
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+fn gen_case(rng: &mut Pcg32) -> Case {
+    let n = 1 + rng.next_below(MAX_N as u32) as usize;
+    let m = 1 + rng.next_below(MAX_M as u32) as usize;
+    let k = 1 + rng.next_below(MAX_K as u32) as usize;
+    if rng.next_below(2) == 0 {
+        Case::separated(n, m, k, rng)
+    } else {
+        Case::adversarial(n, m, k, rng)
+    }
+}
+
+fn bitwise(tag: &str, a: &AssignStats, b: &AssignStats) -> Result<(), String> {
+    if a.labels != b.labels {
+        return Err(format!("{tag}: labels differ: {:?} vs {:?}", a.labels, b.labels));
+    }
+    if a.counts != b.counts {
+        return Err(format!("{tag}: counts differ: {:?} vs {:?}", a.counts, b.counts));
+    }
+    if a.sums != b.sums {
+        return Err(format!("{tag}: sums differ (first mismatch hidden in {} elems)", a.sums.len()));
+    }
+    // f64 ==: NaN never occurs (finite data), +∞ == +∞ passes (f32
+    // overflow in the shared sq_euclidean recompute is path-independent)
+    if a.inertia != b.inertia {
+        return Err(format!("{tag}: inertia {} vs {}", a.inertia, b.inertia));
+    }
+    Ok(())
+}
+
+/// Shard tier: labels/counts bitwise, sums/inertia to summation-order
+/// tolerance (`a == b` first so +∞ == +∞ passes before the NaN-yielding
+/// subtraction).
+fn shard_close(tag: &str, a: &AssignStats, b: &AssignStats) -> Result<(), String> {
+    if a.labels != b.labels {
+        return Err(format!("{tag}: labels differ across shard geometry"));
+    }
+    if a.counts != b.counts {
+        return Err(format!("{tag}: counts differ across shard geometry"));
+    }
+    let close = |x: f64, y: f64| x == y || (x - y).abs() <= 1e-9 * x.abs().max(y.abs());
+    for (i, (&x, &y)) in a.sums.iter().zip(&b.sums).enumerate() {
+        if !close(x, y) {
+            return Err(format!("{tag}: sums[{i}] {x} vs {y}"));
+        }
+    }
+    if !close(a.inertia, b.inertia) {
+        return Err(format!("{tag}: inertia {} vs {}", a.inertia, b.inertia));
+    }
+    Ok(())
+}
+
+/// The differential property: one case, every CPU path, the tiered
+/// oracle, down a 3-table Lloyd trajectory.
+fn differential(case: &Case, multi: &MultiExecutor) -> Result<(), String> {
+    let (n, m, k) = (case.n, case.m, case.k);
+    let ds = Dataset::from_vec(n, m, case.values.clone())
+        .map_err(|e| format!("generator produced invalid data: {e}"))?;
+    let single = SingleExecutor::new();
+
+    // The trajectory is defined by the dense kernel's own updates.
+    let mut tables = vec![case.cent.clone()];
+    for _ in 1..TABLES {
+        let last = tables.last().unwrap();
+        let stats = assign::assign_update_range(&ds, last, k, Metric::Euclidean, 0..n);
+        tables.push(stats.centroids(last, k, m));
+    }
+
+    // Session-carried paths walk the same trajectory.
+    let mut pruned = single
+        .assign_session(&ds, k, Metric::Euclidean)
+        .map_err(|e| e.to_string())?;
+    let mut f32_single = single
+        .assign_session_with(&ds, k, Metric::Euclidean, ScorePath::F32Refined)
+        .map_err(|e| e.to_string())?;
+    let mut multi_f64 = multi
+        .assign_session(&ds, k, Metric::Euclidean)
+        .map_err(|e| e.to_string())?;
+    let mut multi_f32 = multi
+        .assign_session_with(&ds, k, Metric::Euclidean, ScorePath::F32Refined)
+        .map_err(|e| e.to_string())?;
+
+    let mut prep = CentroidPrep::default();
+    for (it, cent) in tables.iter().enumerate() {
+        let dense = assign::assign_update_range(&ds, cent, k, Metric::Euclidean, 0..n);
+
+        // Bit-equal tier — identical per-pair arithmetic on ANY data.
+        let sweep = assign::assign_update_range_rowsweep(&ds, cent, k, 0..n);
+        bitwise(&format!("it{it} rowsweep vs panel"), &sweep, &dense)?;
+
+        prep.prepare(cent, k, m);
+        let mut f32_stats = AssignStats::zeros(n, k, m);
+        let ctr = simd::assign_euclidean_f32_into(&ds, cent, &prep, 0..n, &mut f32_stats);
+        bitwise(&format!("it{it} f32 path vs panel"), &f32_stats, &dense)?;
+        if ctr.scored_rows != n as u64 {
+            return Err(format!("it{it}: f32 scored {} of {n} rows", ctr.scored_rows));
+        }
+
+        let stepped = pruned.step(cent).map_err(|e| e.to_string())?;
+        bitwise(&format!("it{it} pruned session vs panel"), stepped, &dense)?;
+
+        let stepped = f32_single.step(cent).map_err(|e| e.to_string())?;
+        bitwise(&format!("it{it} f32 session vs panel"), stepped, &dense)?;
+
+        // Separated tier — the subtract-square scalar reference joins.
+        if case.flavor == Flavor::Separated {
+            let scalar =
+                assign::assign_update_range_scalar(&ds, cent, k, Metric::Euclidean, 0..n);
+            bitwise(&format!("it{it} scalar vs panel"), &scalar, &dense)?;
+        }
+
+        // Shard tier — multi absorbs partials in shard order.
+        let m64 = multi_f64.step(cent).map_err(|e| e.to_string())?.clone();
+        shard_close(&format!("it{it} multi f64 vs single"), &m64, &dense)?;
+        // Same shard geometry + same per-shard arithmetic ⇒ the two
+        // multi paths are fully bitwise against each other.
+        let m32 = multi_f32.step(cent).map_err(|e| e.to_string())?;
+        bitwise(&format!("it{it} multi f32 vs multi f64"), m32, &m64)?;
+    }
+    Ok(())
+}
+
+#[test]
+fn fuzz_all_cpu_paths_differentially() {
+    let base = Config::default();
+    let cfg = Config { cases: fuzz_cases(256), seed: base.seed };
+    // Shown on failure (or --nocapture): everything needed to replay.
+    println!(
+        "kernel_fuzz: seed={} cases={} simd_active={} (replay: PARCLUST_TEST_SEED={})",
+        cfg.seed,
+        cfg.cases,
+        simd::simd_active(),
+        cfg.seed
+    );
+    let multi = MultiExecutor::new(3);
+    forall_shrink(cfg, gen_case, Case::shrink, |case| differential(case, &multi)).unwrap();
+}
+
+#[test]
+fn fuzz_trajectories_reach_exact_ties_and_duplicates() {
+    // Sanity on the generator itself (the harness is only as strong as
+    // its inputs): across a small sample, both flavors appear, some
+    // adversarial case carries a duplicated center, and some case copies
+    // a row as a centroid (exact zero distance).
+    let mut rng = Pcg32::new(Config::default().seed);
+    let mut seen_sep = false;
+    let mut seen_adv = false;
+    let mut seen_dup_center = false;
+    let mut seen_row_centroid = false;
+    for _ in 0..64 {
+        let c = gen_case(&mut rng);
+        match c.flavor {
+            Flavor::Separated => seen_sep = true,
+            Flavor::Adversarial => seen_adv = true,
+        }
+        let m = c.m;
+        for a in 0..c.k {
+            for b in a + 1..c.k {
+                if c.cent[a * m..(a + 1) * m] == c.cent[b * m..(b + 1) * m] {
+                    seen_dup_center = true;
+                }
+            }
+        }
+        for r in 0..c.n {
+            for cc in 0..c.k {
+                if c.values[r * m..(r + 1) * m] == c.cent[cc * m..(cc + 1) * m] {
+                    seen_row_centroid = true;
+                }
+            }
+        }
+    }
+    assert!(seen_sep && seen_adv, "both flavors must be generated");
+    assert!(seen_dup_center, "duplicate centers must occur");
+    assert!(seen_row_centroid, "row-as-centroid must occur");
+}
+
+#[test]
+fn shrinker_preserves_case_validity() {
+    let mut rng = Pcg32::new(1234);
+    for _ in 0..32 {
+        let c = gen_case(&mut rng);
+        for s in c.shrink() {
+            assert_eq!(s.values.len(), s.n * s.m, "shrunk values shape");
+            assert_eq!(s.cent.len(), s.k * s.m, "shrunk centroid shape");
+            assert!(s.n >= 1 && s.m >= 1 && s.k >= 1);
+            assert!(
+                s.n < c.n || s.m < c.m || s.k < c.k,
+                "every candidate is strictly smaller in some dimension"
+            );
+            // shrunk cases must still be constructible (finite data)
+            Dataset::from_vec(s.n, s.m, s.values.clone()).unwrap();
+        }
+    }
+}

@@ -17,12 +17,19 @@
 //! by construction, so equality must hold on *any* data including
 //! near-ties.
 
+//! The explicit SIMD lane (PR 6) adds a third: the AVX2 kernel and the
+//! portable micro-kernel behind the same dispatcher must be bit-equal
+//! on any data — the dispatcher may never change results — and the
+//! opt-in f32 score path must reproduce the f64 stats bit-for-bit via
+//! its margin-gated refinement.
+
 use parclust::data::synthetic::{generate, GmmSpec};
 use parclust::data::Dataset;
 use parclust::exec::multi::MultiExecutor;
 use parclust::exec::single::SingleExecutor;
-use parclust::exec::Executor;
-use parclust::kernel::{assign, diameter};
+use parclust::exec::{AssignStats, Executor};
+use parclust::kernel::prep::CentroidPrep;
+use parclust::kernel::{assign, diameter, microkernel, simd};
 use parclust::metric::{sq_euclidean, Metric};
 use parclust::testkit::lattice_blobs;
 
@@ -327,6 +334,98 @@ fn microkernel_parity_through_executors_on_lattice() {
     assert_eq!(single.counts, scalar.counts);
     assert_eq!(multi.counts, scalar.counts);
     assert_eq!(single.inertia, scalar.inertia);
+}
+
+#[test]
+fn simd_lane_bit_equal_to_portable_microkernel_on_any_data() {
+    // The dispatch contract: whatever lane `simd_active()` resolved to,
+    // its output equals the portable micro-kernel's bit-for-bit — on
+    // overlapping blobs full of genuine near-ties, across ragged shapes
+    // and misaligned sub-ranges. On AVX2 hosts this pits the intrinsics
+    // kernel against the scalar-blocked one (the real cross-lane
+    // check); elsewhere both names are the same code and the test
+    // degenerates to a smoke pass — CI runs it on both kinds of runner.
+    println!("simd_active = {}", simd::simd_active());
+    let g = generate(&GmmSpec::new(2_003, 11, 25).seed(77).spread(3.0));
+    let ds = &g.dataset;
+    let cent = ds.gather(&(0..25).map(|i| i * 80).collect::<Vec<_>>());
+    let mut prep = CentroidPrep::default();
+    prep.prepare(&cent, 25, ds.m());
+    for range in [0..ds.n(), 0..129, 128..2_003, 1..2_002] {
+        let mut via_simd = AssignStats::zeros(range.len(), 25, ds.m());
+        simd::assign_euclidean_simd_into(ds, &cent, &prep, range.clone(), &mut via_simd);
+        let mut portable = AssignStats::zeros(range.len(), 25, ds.m());
+        microkernel::assign_euclidean_prepped_into(
+            ds, &cent, &prep, range.clone(), &mut portable,
+        );
+        assert_eq!(via_simd.labels, portable.labels, "{range:?}: labels");
+        assert_eq!(via_simd.counts, portable.counts, "{range:?}: counts");
+        assert_eq!(via_simd.sums, portable.sums, "{range:?}: sums");
+        assert_eq!(via_simd.inertia, portable.inertia, "{range:?}: inertia");
+    }
+}
+
+#[test]
+fn simd_lane_shape_sweep_vs_scalar() {
+    // The dispatched panel path (SIMD or portable) against the scalar
+    // golden reference over the same ragged shapes as the micro-kernel
+    // sweep: m crossing the 4-lane vector width's remainder classes,
+    // k crossing the centroid-tile width, padded panel blocks included.
+    for m in [1usize, 2, 3, 4, 5, 8, 11, 25] {
+        let (ds, cent) = lattice_blobs(403, m, 6);
+        assert_micro_vs_scalar_bitwise(&ds, &cent, 6, 0..403, &format!("simd m={m}"));
+    }
+    for k in [1usize, 3, 4, 5, 8, 17] {
+        let (ds, cent) = lattice_blobs(403, 5, k);
+        assert_micro_vs_scalar_bitwise(&ds, &cent, k, 0..403, &format!("simd k={k}"));
+    }
+}
+
+#[test]
+fn f32_score_path_bit_equal_to_dense_on_near_ties() {
+    // The refinement guarantee end-to-end: even when blobs overlap and
+    // f32 candidate margins are routinely ambiguous, the refined f32
+    // path's final labels/sums/counts/inertia equal the f64 panel's
+    // bit-for-bit — refinement exists precisely so near-ties never ship
+    // an f32 answer. Counters must show the path really ran (every row
+    // scored) and really refined some rows on this workload.
+    let g = generate(&GmmSpec::new(2_003, 9, 12).seed(5).spread(3.0));
+    let ds = &g.dataset;
+    let cent = ds.gather(&(0..12).map(|i| i * 160).collect::<Vec<_>>());
+    let mut prep = CentroidPrep::default();
+    prep.prepare(&cent, 12, ds.m());
+    for range in [0..ds.n(), 3..1_900] {
+        let dense = assign::assign_update_range(ds, &cent, 12, Metric::Euclidean, range.clone());
+        let mut f32_stats = AssignStats::zeros(range.len(), 12, ds.m());
+        let ctr = simd::assign_euclidean_f32_into(ds, &cent, &prep, range.clone(), &mut f32_stats);
+        assert_eq!(f32_stats.labels, dense.labels, "{range:?}: labels");
+        assert_eq!(f32_stats.counts, dense.counts, "{range:?}: counts");
+        assert_eq!(f32_stats.sums, dense.sums, "{range:?}: sums");
+        assert_eq!(f32_stats.inertia, dense.inertia, "{range:?}: inertia");
+        assert_eq!(ctr.scored_rows, range.len() as u64);
+        assert!(
+            ctr.relabeled_rows <= ctr.refined_rows && ctr.refined_rows <= ctr.scored_rows,
+            "counter ordering: {ctr:?}"
+        );
+    }
+}
+
+#[test]
+fn f32_score_path_rarely_refines_on_separated_data() {
+    // The other half of the f32 contract: on separated data the margins
+    // are wide, so the fast accept branch must carry nearly all rows —
+    // otherwise the path is pointless. (Exactness is already pinned
+    // above; this pins that the *bound* is not absurdly conservative.)
+    let (ds, cent) = lattice_blobs(2_000, 8, 6);
+    let mut prep = CentroidPrep::default();
+    prep.prepare(&cent, 6, 8);
+    let mut stats = AssignStats::zeros(2_000, 6, 8);
+    let ctr = simd::assign_euclidean_f32_into(&ds, &cent, &prep, 0..2_000, &mut stats);
+    assert_eq!(ctr.scored_rows, 2_000);
+    assert!(
+        ctr.refined_rows < 200,
+        "separated data should hardly ever refine: {ctr:?}"
+    );
 }
 
 #[test]

@@ -1,0 +1,193 @@
+//! Tests *for the test oracles* — the fuzz harness and the parity
+//! sweeps are only as trustworthy as `testkit`'s comparators, the
+//! lattice geometry's separation guarantee, and the shrinker. Each is
+//! pinned here independently of the kernels it judges.
+
+use parclust::kernel::assign;
+use parclust::metric::Metric;
+use parclust::testkit::{allclose, forall_shrink, lattice_blobs, usize_in, Config};
+
+// ---------------------------------------------------------------- allclose
+
+#[test]
+fn allclose_length_mismatch_is_an_error() {
+    let err = allclose(&[1.0], &[1.0, 2.0], 1e-6, 1e-6).unwrap_err();
+    assert!(err.contains("length mismatch"), "{err}");
+}
+
+#[test]
+fn allclose_tolerance_boundary_is_inclusive() {
+    // |Δ| == tol passes (the comparison is strictly-greater); the next
+    // representable step fails.
+    let tol = 0.5f32;
+    assert!(allclose(&[1.0], &[1.5], 0.0, tol).is_ok());
+    assert!(allclose(&[1.0], &[1.5 + 1e-6], 0.0, tol).is_err());
+    // rtol scales with the larger magnitude
+    assert!(allclose(&[100.0], &[101.0], 0.011, 0.0).is_ok());
+    assert!(allclose(&[100.0], &[101.0], 0.009, 0.0).is_err());
+}
+
+#[test]
+fn allclose_non_finite_semantics() {
+    // NaN compares equal to NaN (both sides agree the value is
+    // poisoned), but NaN vs a number is always a mismatch — |Δ| = NaN
+    // fails the > test, so the explicit is_nan() disagreement check is
+    // what catches it. ∞ vs ∞ passes (∞−∞ = NaN again); ∞ vs finite
+    // fails on magnitude.
+    let nan = f32::NAN;
+    let inf = f32::INFINITY;
+    assert!(allclose(&[nan], &[nan], 0.0, 0.0).is_ok());
+    assert!(allclose(&[nan], &[1.0], 1e9, 1e9).is_err());
+    assert!(allclose(&[1.0], &[nan], 1e9, 1e9).is_err());
+    assert!(allclose(&[inf], &[inf], 0.0, 0.0).is_ok());
+    assert!(allclose(&[inf], &[1.0], 1e9, 1e9).is_err());
+    assert!(allclose(&[inf], &[-inf], 1e9, 1e9).is_err());
+}
+
+// ------------------------------------------------------------ lattice_blobs
+
+/// The property the separated oracle tier leans on: two lattice centers
+/// are either bit-identical duplicates or differ by ≥ 3.0 in some
+/// coordinate — no third case, no near-ties. Checked beyond the k = 13
+/// pattern period so the duplicate branch is actually exercised.
+#[test]
+fn lattice_centers_are_duplicates_or_far_apart() {
+    let (_, cent) = lattice_blobs(1, 9, 20);
+    let m = 9;
+    let mut dup_pairs = 0;
+    for a in 0..20 {
+        for b in a + 1..20 {
+            let ca = &cent[a * m..(a + 1) * m];
+            let cb = &cent[b * m..(b + 1) * m];
+            if ca == cb {
+                dup_pairs += 1;
+            } else {
+                let max_gap = ca
+                    .iter()
+                    .zip(cb)
+                    .map(|(x, y)| (x - y).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(
+                    max_gap >= 3.0,
+                    "centers {a},{b} are distinct but only {max_gap} apart"
+                );
+            }
+        }
+    }
+    // centers 13..20 duplicate centers 0..7 (period-13 pattern)
+    assert_eq!(dup_pairs, 7, "expected exactly the period-13 duplicates");
+}
+
+#[test]
+fn lattice_rows_hug_their_center_with_positive_offsets() {
+    let (ds, cent) = lattice_blobs(137, 6, 5);
+    let m = 6;
+    for i in 0..ds.n() {
+        let c = i % 5;
+        for j in 0..m {
+            // the addition happens in f32, so allow rounding slack
+            // around the {0.005 … 0.045} offset grid — what matters is
+            // strictly positive and well under the 3.0 center gap
+            let off = ds.row(i)[j] - cent[c * m + j];
+            assert!(
+                (0.004..0.046).contains(&off),
+                "row {i} feature {j}: offset {off} outside (0, 0.05)"
+            );
+        }
+    }
+}
+
+#[test]
+fn lattice_contains_byte_identical_duplicate_rows() {
+    // offsets cycle with period 5 in i/k, so rows i and i + 5k in the
+    // same blob are byte-identical — the row-side tie-break exercise the
+    // module doc promises.
+    let (ds, _) = lattice_blobs(40, 3, 4);
+    assert_eq!(ds.row(0), ds.row(20));
+    assert_eq!(ds.row(7), ds.row(27));
+}
+
+// ------------------------------------------------------------- tie-breaks
+
+/// The documented tie-break contract: every argmin form resolves exact
+/// score ties to the LOWEST centroid index, so a duplicated center can
+/// never attract a single row. This is load-bearing for the whole
+/// bit-parity scheme — if any path broke it, labels (and with them
+/// sums/counts) would diverge on duplicate centers while both answers
+/// remained "correct" by distance.
+#[test]
+fn duplicate_centers_always_lose_to_their_lower_index_twin() {
+    // k = 14 lattice: center 13 is bit-identical to center 0.
+    let (ds, cent) = lattice_blobs(211, 4, 14);
+    let n = ds.n();
+    let panel = assign::assign_update_range(&ds, &cent, 14, Metric::Euclidean, 0..n);
+    let scalar = assign::assign_update_range_scalar(&ds, &cent, 14, Metric::Euclidean, 0..n);
+    let sweep = assign::assign_update_range_rowsweep(&ds, &cent, 14, 0..n);
+    for (tag, s) in [("panel", &panel), ("scalar", &scalar), ("rowsweep", &sweep)] {
+        assert!(
+            s.labels.iter().all(|&l| l != 13),
+            "{tag}: the duplicate center at index 13 won a row"
+        );
+        assert_eq!(s.counts[13], 0, "{tag}");
+    }
+    assert_eq!(panel.labels, scalar.labels);
+    assert_eq!(panel.labels, sweep.labels);
+}
+
+// -------------------------------------------------------------- shrinker
+
+#[test]
+fn shrinker_reports_minimal_counterexample_and_replay_seed() {
+    // A planted bug with a known boundary: the harness must (a) find
+    // it, (b) shrink to the exact boundary value, (c) report both the
+    // original and shrunk failures plus the replay seed.
+    let cfg = Config { cases: 80, seed: 0xFEED };
+    let res = forall_shrink(
+        cfg,
+        usize_in(0, 5000),
+        |&n| if n > 0 { vec![n / 2, n - 1] } else { vec![] },
+        |&n| {
+            if n < 137 {
+                Ok(())
+            } else {
+                Err(format!("boundary violated at n={n}"))
+            }
+        },
+    );
+    assert_eq!(res.seed, 0xFEED);
+    let msg = res.failure.expect("the planted bug must be found");
+    assert!(msg.contains("case #"), "{msg}");
+    assert!(msg.contains("shrunk ("), "{msg}");
+    assert!(
+        msg.contains("boundary violated at n=137"),
+        "greedy halving + decrement must land exactly on the boundary: {msg}"
+    );
+    assert!(msg.contains("smallest input: 137"), "{msg}");
+}
+
+#[test]
+fn shrinker_is_deterministic_for_a_seed() {
+    let run = || {
+        forall_shrink(
+            Config { cases: 40, seed: 99 },
+            usize_in(0, 1000),
+            |&n| if n > 0 { vec![n / 2] } else { vec![] },
+            |&n| if n % 7 != 0 || n == 0 { Ok(()) } else { Err(format!("n={n}")) },
+        )
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.failure, b.failure, "same seed must replay identically");
+    assert_eq!(a.cases, b.cases);
+}
+
+#[test]
+fn shrinker_with_no_candidates_keeps_original_failure() {
+    let res = forall_shrink(
+        Config { cases: 10, seed: 1 },
+        usize_in(100, 200),
+        |_| vec![], // nothing smaller to offer
+        |&n| Err(format!("always fails (n={n})")),
+    );
+    let msg = res.failure.unwrap();
+    assert!(msg.contains("shrunk (0 steps)"), "{msg}");
+}
