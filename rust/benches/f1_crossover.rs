@@ -5,14 +5,16 @@
 //!
 //! Fine n-sweep around the crossover on the 2014-testbed model, plus real
 //! per-stage offload overhead measured against this host's PJRT device.
+//! With `BENCH_JSON_DIR` set, the numbers land in `BENCH_f1.json`.
 
 mod common;
 
-use parclust::benchkit::{fmt_duration, Bencher, Table};
+use parclust::benchkit::{fmt_duration, write_bench_json, Bencher, Table};
 use parclust::exec::gpu::GpuExecutor;
 use parclust::exec::regime::Regime;
 use parclust::exec::single::SingleExecutor;
 use parclust::exec::Executor;
+use parclust::json::Json;
 use parclust::metric::Metric;
 use parclust::simulate::{predict, Testbed, WorkloadSpec};
 
@@ -26,6 +28,7 @@ fn main() {
         &["n", "multi model", "gpu model", "gpu/multi", "winner"],
     );
     let mut crossover: Option<usize> = None;
+    let mut model_rows: Vec<Json> = Vec::new();
     for exp in 10..=21u32 {
         let n = 2usize.pow(exp);
         let spec = WorkloadSpec {
@@ -48,6 +51,11 @@ fn main() {
             format!("{:.2}", pg / pm),
             if pg < pm { "gpu" } else { "multi" }.into(),
         ]);
+        model_rows.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("multi_model_s", Json::num(pm)),
+            ("gpu_model_s", Json::num(pg)),
+        ]));
     }
     println!("{}", table.render());
     let crossover = crossover.expect("gpu never wins — model broken");
@@ -58,6 +66,7 @@ fn main() {
     );
 
     // ---- real offload overhead on this host's PJRT device ------------------
+    let mut real_rows: Vec<Json> = Vec::new();
     if let Some(dev) = common::try_device() {
         let bencher = Bencher::quick().from_env();
         let mut table = Table::new(
@@ -86,6 +95,11 @@ fn main() {
                 fmt_duration(gc.mean),
                 format!("{:.1}", gc.mean.as_secs_f64() / sc.mean.as_secs_f64()),
             ]);
+            real_rows.push(Json::obj(vec![
+                ("n", Json::num(n as f64)),
+                ("cpu_single_stage", sc.to_json()),
+                ("pjrt_offload_stage", gc.to_json()),
+            ]));
         }
         println!("{}", table.render());
         println!(
@@ -94,4 +108,17 @@ fn main() {
              visible at small n, the same effect the paper reports.)"
         );
     }
+
+    write_bench_json(
+        "f1",
+        &Json::obj(vec![
+            ("bench", Json::str("f1_crossover")),
+            ("testbed", Json::str("paper2014")),
+            ("m", Json::num(m as f64)),
+            ("k", Json::num(k as f64)),
+            ("crossover_n", Json::num(crossover as f64)),
+            ("model_rows", Json::arr(model_rows)),
+            ("real_rows", Json::arr(real_rows)),
+        ]),
+    );
 }

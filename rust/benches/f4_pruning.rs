@@ -10,14 +10,16 @@
 //! on the same centroid table (legal comparison: pruning is label-exact,
 //! so both paths see the identical trajectory — asserted at the end).
 //!
-//! Record the numbers in EXPERIMENTS.md §Perf (F4).
+//! Record the numbers in EXPERIMENTS.md §Perf (F4); with
+//! `BENCH_JSON_DIR` set, the same numbers land in `BENCH_f4.json`.
 
 mod common;
 
-use parclust::benchkit::{fmt_duration, smoke_mode, Bencher, Table};
+use parclust::benchkit::{fmt_duration, smoke_mode, write_bench_json, Bencher, Table};
 use parclust::exec::multi::MultiExecutor;
 use parclust::exec::single::SingleExecutor;
 use parclust::exec::{Executor, PruneCounters};
+use parclust::json::Json;
 use parclust::metric::Metric;
 use std::time::Instant;
 
@@ -60,6 +62,7 @@ fn main() {
     let mut m_sess = multi.assign_session(ds, k, Metric::Euclidean).unwrap();
     let mut last_counters = PruneCounters::default();
     let mut final_pruned_labels = Vec::new();
+    let mut json_rows: Vec<Json> = Vec::new();
     for (it, cent) in tables.iter().enumerate() {
         let t = Instant::now();
         let stats = s_sess.step(cent).unwrap();
@@ -99,6 +102,14 @@ fn main() {
             fmt_duration(mp),
             fmt_duration(md),
         ]);
+        json_rows.push(Json::obj(vec![
+            ("iter", Json::num(it as f64)),
+            ("prune_rate", Json::num(rate)),
+            ("single_pruned_s", Json::num(sp.as_secs_f64())),
+            ("single_dense_s", Json::num(sd.as_secs_f64())),
+            ("multi_pruned_s", Json::num(mp.as_secs_f64())),
+            ("multi_dense_s", Json::num(md.as_secs_f64())),
+        ]));
     }
     println!("{}", table.render());
 
@@ -132,5 +143,21 @@ fn main() {
         fmt_duration(dense_stat.mean),
         fmt_duration(sess_stat.mean),
         sess_stat.speedup_vs(&dense_stat)
+    );
+
+    write_bench_json(
+        "f4",
+        &Json::obj(vec![
+            ("bench", Json::str("f4_pruning")),
+            ("n", Json::num(n as f64)),
+            ("m", Json::num(m as f64)),
+            ("k", Json::num(k as f64)),
+            ("smoke", Json::Bool(smoke_mode())),
+            ("rows", Json::arr(json_rows)),
+            ("total_pruned_rows", Json::num(total.pruned_rows as f64)),
+            ("total_scanned_rows", Json::num(total.scanned_rows as f64)),
+            ("steady_dense", dense_stat.to_json()),
+            ("steady_pruned", sess_stat.to_json()),
+        ]),
     );
 }

@@ -1,0 +1,241 @@
+//! F7 — the out-of-core streaming engine: a `.pcb` several times the
+//! resident-buffer budget streams through the prefetch-pipelined
+//! engine at near in-core throughput, with resident dataset buffers
+//! bounded by the budget — asserted under a counting global allocator
+//! (the `tests/alloc_discipline.rs` harness).
+//!
+//! Three measurements:
+//! * one full streamed assignment pass vs the in-core multi executor's
+//!   pass over the identical data and centroids (labels asserted equal
+//!   first — full bitwise parity with matched chunk boundaries is
+//!   pinned by `tests/stream_parity.rs`);
+//! * the prefetch-stall fraction — the read time the compute wave
+//!   failed to hide behind kernel work;
+//! * two end-to-end fits through `kmeans::fit_pcb` (full-pass and
+//!   mini-batch), exercising the driver-level wiring at bench scale.
+//!
+//! Record the numbers in EXPERIMENTS.md §Perf (F7); with
+//! `BENCH_JSON_DIR` set, the same numbers land in `BENCH_f7.json`.
+
+mod common;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use parclust::benchkit::{
+    fmt_duration, fmt_throughput, smoke_mode, write_bench_json, Bencher, Table,
+};
+use parclust::data::binfmt;
+use parclust::data::shard::DiskShardSource;
+use parclust::exec::multi::MultiExecutor;
+use parclust::exec::stream::StreamEngine;
+use parclust::exec::Executor;
+use parclust::json::Json;
+use parclust::kmeans::{fit_pcb, Engine, InitMethod, KMeansConfig};
+use parclust::metric::Metric;
+
+/// Counting global allocator (same pattern as
+/// `tests/alloc_discipline.rs`): the byte-counter delta across the
+/// engine's open + build + first pass bounds its peak resident growth
+/// from above, so the assertion below proves the dataset itself was
+/// never materialized.
+struct CountingAlloc;
+
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn alloc_bytes() -> u64 {
+    ALLOC_BYTES.load(Ordering::SeqCst)
+}
+
+fn main() {
+    common::banner(
+        "F7",
+        "data larger than memory streams through the pipeline at near in-core speed",
+    );
+    let (n, m, k, budget) = if smoke_mode() {
+        (65_536usize, 16usize, 8usize, 1usize << 20)
+    } else {
+        (1_400_000, 25, 10, 32 << 20)
+    };
+    let threads = 4usize;
+    let bencher = Bencher::quick().from_env();
+
+    let g = common::workload(n, m, k, 7);
+    let ds = &g.dataset;
+    let dir = std::env::temp_dir().join("parclust_f7");
+    std::fs::create_dir_all(&dir).expect("create bench temp dir");
+    let path = dir.join(format!("f7_{n}x{m}.pcb"));
+    binfmt::write_path(ds, &path).expect("write bench .pcb");
+    let file_bytes = std::fs::metadata(&path).expect("stat bench .pcb").len();
+    let data_bytes = (n * m * 4) as u64;
+    assert!(
+        data_bytes >= 4 * budget as u64,
+        "F7 needs a dataset at least 4x the budget (data {data_bytes}, budget {budget})"
+    );
+    println!(
+        "dataset {n}x{m}: {file_bytes} bytes on disk ({:.1}x the {budget}-byte budget)",
+        data_bytes as f64 / budget as f64
+    );
+    let cent = ds.gather(&(0..k).map(|i| i * n / k).collect::<Vec<_>>());
+
+    // ---- resident-growth bound: open + build + one full pass ------------
+    let before = alloc_bytes();
+    let src = DiskShardSource::open(&path).expect("open bench .pcb");
+    let mut eng = StreamEngine::new(&src, k, Metric::Euclidean, threads, budget);
+    let _ = eng.step(&cent).expect("streamed pass");
+    let delta = alloc_bytes() - before;
+    assert!(
+        eng.buffer_bytes() <= budget,
+        "chunk rings {} exceed the {budget}-byte budget",
+        eng.buffer_bytes()
+    );
+    // Budget-scale rings plus n-scale *output* (labels, 4 B/row) —
+    // never the m×4 B/row dataset itself.
+    assert!(
+        delta < (2 * budget + 16 * n) as u64,
+        "engine allocated {delta} bytes over open+build+pass — dataset materialized?"
+    );
+    assert!(
+        delta < data_bytes,
+        "resident growth {delta} not below the {data_bytes}-byte dataset"
+    );
+    println!(
+        "alloc delta over open+build+first pass: {delta} bytes \
+         ({:.2}x budget; the dataset is {data_bytes})",
+        delta as f64 / budget as f64
+    );
+
+    // Labels are chunk-geometry-independent (per-row argmin), so they
+    // must match the in-core multi executor under any budget; assert
+    // before timing anything.
+    let multi = MultiExecutor::new(threads);
+    let reference = multi.assign_update(ds, &cent, k, Metric::Euclidean).unwrap();
+    {
+        let streamed = eng.step(&cent).expect("streamed pass");
+        assert_eq!(streamed.labels, reference.labels, "streamed labels vs in-core multi");
+    }
+
+    // ---- throughput: streamed pass vs in-core multi pass ----------------
+    let st = bencher.bench(|| {
+        let _ = eng.step(&cent).unwrap();
+    });
+    let ic = bencher.bench(|| {
+        let _ = multi.assign_update(ds, &cent, k, Metric::Euclidean).unwrap();
+    });
+
+    // Stall fraction over one more instrumented pass.
+    let io0 = eng.io();
+    let t = Instant::now();
+    let _ = eng.step(&cent).unwrap();
+    let pass_wall = t.elapsed();
+    let io1 = eng.io();
+    let stall = io1.prefetch_stall - io0.prefetch_stall;
+    let stall_frac = stall.as_secs_f64() / pass_wall.as_secs_f64().max(1e-9);
+
+    let mut table = Table::new(
+        &format!("F7 one full assignment pass (n={n}, m={m}, k={k}, {threads} threads)"),
+        &["path", "mean", "rows/s", "vs in-core"],
+    );
+    table.row(vec![
+        "in-core multi".into(),
+        fmt_duration(ic.mean),
+        fmt_throughput(n as u64, ic.mean),
+        "1.00x".into(),
+    ]);
+    table.row(vec![
+        format!("streamed ({} MiB budget)", budget >> 20),
+        fmt_duration(st.mean),
+        fmt_throughput(n as u64, st.mean),
+        format!("{:.2}x", st.speedup_vs(&ic)),
+    ]);
+    println!("{}", table.render());
+    println!(
+        "prefetch stall: {} of a {} pass ({:.1}%); {} chunks prefetched, {} bytes read",
+        fmt_duration(stall),
+        fmt_duration(pass_wall),
+        stall_frac * 100.0,
+        io1.chunks_prefetched,
+        io1.bytes_read
+    );
+    drop(eng);
+
+    // ---- end-to-end fits through the CLI entry point --------------------
+    let iters = if smoke_mode() { 6 } else { 12 };
+    let base = KMeansConfig::new(k)
+        .engine(Engine::Stream)
+        .init_method(InitMethod::Random)
+        .seed(7)
+        .threads(threads)
+        .memory_budget(budget)
+        .max_iters(iters)
+        .tol(1e-3);
+    let t = Instant::now();
+    let full = fit_pcb(&path, &base).expect("streamed full-pass fit");
+    let full_wall = t.elapsed();
+    let mb = (n / 16).max(k);
+    let t = Instant::now();
+    let mini = fit_pcb(&path, &base.clone().mini_batch(mb)).expect("streamed mini-batch fit");
+    let mini_wall = t.elapsed();
+    println!(
+        "full-pass fit: {} iterations in {} ({}), inertia {:.4e}",
+        full.iterations,
+        fmt_duration(full_wall),
+        full.metrics.assign_path,
+        full.inertia
+    );
+    println!(
+        "mini-batch fit (B={mb}): {} iterations in {} ({}), inertia {:.4e} \
+         ({:.3}x the full-pass objective)",
+        mini.iterations,
+        fmt_duration(mini_wall),
+        mini.metrics.assign_path,
+        mini.inertia,
+        mini.inertia / full.inertia
+    );
+
+    write_bench_json(
+        "f7",
+        &Json::obj(vec![
+            ("bench", Json::str("f7_outofcore")),
+            ("n", Json::num(n as f64)),
+            ("m", Json::num(m as f64)),
+            ("k", Json::num(k as f64)),
+            ("smoke", Json::Bool(smoke_mode())),
+            ("budget_bytes", Json::num(budget as f64)),
+            ("file_bytes", Json::num(file_bytes as f64)),
+            ("alloc_delta_bytes", Json::num(delta as f64)),
+            ("streamed", st.to_json()),
+            ("incore_multi", ic.to_json()),
+            ("prefetch_stall_frac", Json::num(stall_frac)),
+            ("fit_full_iters", Json::num(full.iterations as f64)),
+            ("fit_full_wall_s", Json::num(full_wall.as_secs_f64())),
+            ("fit_full_inertia", Json::num(full.inertia)),
+            ("fit_mini_batch", Json::num(mb as f64)),
+            ("fit_mini_iters", Json::num(mini.iterations as f64)),
+            ("fit_mini_wall_s", Json::num(mini_wall.as_secs_f64())),
+            ("fit_mini_inertia", Json::num(mini.inertia)),
+        ]),
+    );
+
+    std::fs::remove_file(&path).ok();
+}

@@ -10,13 +10,15 @@ use std::path::{Path, PathBuf};
 use crate::exec::regime::Regime;
 use crate::exec::ScorePath;
 use crate::json::Json;
-use crate::kmeans::{DiameterMode, InitMethod, KMeansConfig};
+use crate::kmeans::{DiameterMode, Engine, InitMethod, KMeansConfig};
 use crate::metric::Metric;
 
 /// Where the samples come from.
 #[derive(Clone, Debug, PartialEq)]
 pub enum DataSource {
     Csv(PathBuf),
+    /// Binary `.pcb` dataset (streamable via `--engine stream`).
+    Pcb(PathBuf),
     /// Synthetic Gaussian mixture: (n, m, k_true).
     Synthetic { n: usize, m: usize, k: usize },
 }
@@ -57,9 +59,10 @@ impl RunConfig {
     pub fn from_json_text(text: &str) -> Result<RunConfig, String> {
         let root = Json::parse(text).map_err(|e| format!("config: {e}"))?;
         let known = [
-            "csv", "synthetic", "k", "max_iters", "tol", "metric", "init",
-            "seed", "threads", "regime", "diameter", "score_path", "scaling",
-            "report", "labels", "artifact_dir",
+            "csv", "pcb", "synthetic", "k", "max_iters", "tol", "metric",
+            "init", "seed", "threads", "regime", "diameter", "score_path",
+            "scaling", "report", "labels", "artifact_dir", "engine",
+            "mini_batch", "memory_budget",
         ];
         if let Json::Obj(pairs) = &root {
             for (key, _) in pairs {
@@ -80,6 +83,12 @@ impl RunConfig {
                 .as_str()
                 .ok_or_else(|| "config: 'csv' must be a string".to_string())?;
             cfg.source = DataSource::Csv(PathBuf::from(p));
+        }
+        if let Some(p) = root.get("pcb") {
+            let p = p
+                .as_str()
+                .ok_or_else(|| "config: 'pcb' must be a string".to_string())?;
+            cfg.source = DataSource::Pcb(PathBuf::from(p));
         }
         if let Some(s) = root.get("synthetic") {
             cfg.source = DataSource::Synthetic {
@@ -150,6 +159,25 @@ impl RunConfig {
             cfg.kmeans.score_path = ScorePath::from_str(s)
                 .ok_or_else(|| format!("config: unknown score_path '{s}' (f64 | f32)"))?;
         }
+        if let Some(v) = root.get("engine") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| "config: 'engine' must be a string".to_string())?;
+            cfg.kmeans.engine = Engine::from_str(s)
+                .ok_or_else(|| format!("config: unknown engine '{s}' (incore | stream)"))?;
+        }
+        if let Some(v) = root.get("mini_batch") {
+            cfg.kmeans.mini_batch = Some(
+                v.as_usize()
+                    .ok_or_else(|| "config: 'mini_batch' must be an integer".to_string())?,
+            );
+        }
+        if let Some(v) = root.get("memory_budget") {
+            cfg.kmeans.memory_budget = Some(
+                v.as_usize()
+                    .ok_or_else(|| "config: 'memory_budget' must be an integer".to_string())?,
+            );
+        }
         if let Some(v) = root.get("scaling") {
             let s = v
                 .as_str()
@@ -187,6 +215,10 @@ impl RunConfig {
                 "csv",
                 Json::str(p.display().to_string()),
             )]),
+            DataSource::Pcb(p) => Json::obj(vec![(
+                "pcb",
+                Json::str(p.display().to_string()),
+            )]),
             DataSource::Synthetic { n, m, k } => Json::obj(vec![(
                 "synthetic",
                 Json::obj(vec![
@@ -207,6 +239,15 @@ impl RunConfig {
             ("threads", Json::num(self.kmeans.threads as f64)),
             ("regime", Json::str(self.kmeans.regime.name())),
             ("score_path", Json::str(self.kmeans.score_path.name())),
+            ("engine", Json::str(self.kmeans.engine.name())),
+            (
+                "mini_batch",
+                Json::num(self.kmeans.mini_batch.unwrap_or(0) as f64),
+            ),
+            (
+                "memory_budget",
+                Json::num(self.kmeans.memory_budget.unwrap_or(0) as f64),
+            ),
             ("scaling", Json::str(self.scaling.clone())),
         ])
     }
@@ -259,6 +300,26 @@ mod tests {
         assert_eq!(cfg.kmeans.score_path, ScorePath::F32Refined);
         assert_eq!(cfg.scaling, "zscore");
         assert_eq!(cfg.report_path, Some(PathBuf::from("out.json")));
+    }
+
+    #[test]
+    fn parses_streaming_fields() {
+        let cfg = RunConfig::from_json_text(
+            r#"{
+              "pcb": "data/big.pcb", "k": 8, "init": "random",
+              "engine": "stream", "mini_batch": 4096,
+              "memory_budget": 1048576
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.source, DataSource::Pcb(PathBuf::from("data/big.pcb")));
+        assert_eq!(cfg.kmeans.engine, Engine::Stream);
+        assert_eq!(cfg.kmeans.mini_batch, Some(4096));
+        assert_eq!(cfg.kmeans.memory_budget, Some(1_048_576));
+        let echo = Json::parse(&cfg.to_json().to_pretty()).unwrap();
+        assert_eq!(echo.req_str("engine").unwrap(), "stream");
+        assert_eq!(echo.req_usize("mini_batch").unwrap(), 4096);
+        assert!(RunConfig::from_json_text(r#"{"engine": "warp"}"#).is_err());
     }
 
     #[test]

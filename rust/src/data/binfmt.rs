@@ -22,32 +22,27 @@ use crate::data::{DataError, Dataset};
 const MAGIC: &[u8; 8] = b"PARCLUST";
 const VERSION: u32 = 1;
 
-/// Write a dataset to the binary format.
-pub fn write_path(ds: &Dataset, path: &Path) -> Result<(), DataError> {
-    let file = std::fs::File::create(path)?;
-    let mut w = BufWriter::new(file);
-    w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&(ds.n() as u64).to_le_bytes())?;
-    w.write_all(&(ds.m() as u32).to_le_bytes())?;
-    let names = ds.feature_names.join("\n");
-    w.write_all(&(names.len() as u32).to_le_bytes())?;
-    w.write_all(names.as_bytes())?;
-    let mut crc = Crc32::new();
-    for &v in ds.values() {
-        let bytes = v.to_le_bytes();
-        crc.update(&bytes);
-        w.write_all(&bytes)?;
-    }
-    w.write_all(&crc.finish().to_le_bytes())?;
-    w.flush()?;
-    Ok(())
+/// Size of the fixed header fields before the names blob: magic (8) +
+/// version (4) + n (8) + m (4) + names length (4).
+const FIXED_HEADER_BYTES: u64 = 28;
+
+/// Block size for the buffered data-section passes (both directions).
+const IO_BLOCK_BYTES: usize = 1 << 16;
+
+/// Parsed `.pcb` header: shape, names, and the byte offset where the
+/// f32 data section starts — enough for a streaming reader to `seek`
+/// straight to any row without re-parsing.
+pub(crate) struct PcbHeader {
+    pub n: usize,
+    pub m: usize,
+    pub names: Vec<String>,
+    pub data_start: u64,
 }
 
-/// Read a dataset from the binary format, verifying the checksum.
-pub fn read_path(path: &Path) -> Result<Dataset, DataError> {
-    let file = std::fs::File::open(path)?;
-    let mut r = BufReader::new(file);
+/// Parse the `.pcb` header from any reader positioned at byte 0.
+/// Shared by the one-shot [`read_path`] loader and the streaming
+/// [`crate::data::shard::DiskShardSource`].
+pub(crate) fn read_header<R: Read>(r: &mut R) -> Result<PcbHeader, DataError> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
@@ -56,22 +51,22 @@ pub fn read_path(path: &Path) -> Result<Dataset, DataError> {
             msg: "not a parclust binary dataset (bad magic)".into(),
         });
     }
-    let version = read_u32(&mut r)?;
+    let version = read_u32(r)?;
     if version != VERSION {
         return Err(DataError::Parse {
             line: 0,
             msg: format!("unsupported binary version {version}"),
         });
     }
-    let n = read_u64(&mut r)? as usize;
-    let m = read_u32(&mut r)? as usize;
+    let n = read_u64(r)? as usize;
+    let m = read_u32(r)? as usize;
     if m == 0 || n.checked_mul(m).is_none() {
         return Err(DataError::Parse {
             line: 0,
             msg: format!("implausible shape {n}×{m}"),
         });
     }
-    let names_len = read_u32(&mut r)? as usize;
+    let names_len = read_u32(r)? as usize;
     let mut names_buf = vec![0u8; names_len];
     r.read_exact(&mut names_buf)?;
     let names: Vec<String> = if names_len == 0 {
@@ -92,10 +87,53 @@ pub fn read_path(path: &Path) -> Result<Dataset, DataError> {
             msg: format!("{} names for {m} features", names.len()),
         });
     }
+    Ok(PcbHeader {
+        n,
+        m,
+        names,
+        data_start: FIXED_HEADER_BYTES + names_len as u64,
+    })
+}
+
+/// Write a dataset to the binary format. The data section goes out in
+/// [`IO_BLOCK_BYTES`] buffered blocks with block-wise CRC updates —
+/// mirroring the read path — instead of one 4-byte
+/// `write_all`/`crc.update` pair per value.
+pub fn write_path(ds: &Dataset, path: &Path) -> Result<(), DataError> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(ds.n() as u64).to_le_bytes())?;
+    w.write_all(&(ds.m() as u32).to_le_bytes())?;
+    let names = ds.feature_names.join("\n");
+    w.write_all(&(names.len() as u32).to_le_bytes())?;
+    w.write_all(names.as_bytes())?;
+    let mut crc = Crc32::new();
+    let mut block = Vec::with_capacity(IO_BLOCK_BYTES);
+    for vals in ds.values().chunks(IO_BLOCK_BYTES / 4) {
+        block.clear();
+        for &v in vals {
+            block.extend_from_slice(&v.to_le_bytes());
+        }
+        crc.update(&block);
+        w.write_all(&block)?;
+    }
+    w.write_all(&crc.finish().to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a dataset from the binary format, verifying the checksum.
+pub fn read_path(path: &Path) -> Result<Dataset, DataError> {
+    let file = std::fs::File::open(path)?;
+    let mut r = BufReader::new(file);
+    let hdr = read_header(&mut r)?;
+    let (n, m) = (hdr.n, hdr.m);
 
     let mut data = vec![0f32; n * m];
     let mut crc = Crc32::new();
-    let mut buf = vec![0u8; 1 << 16];
+    let mut buf = vec![0u8; IO_BLOCK_BYTES];
     let mut filled = 0usize;
     let total_bytes = n * m * 4;
     while filled < total_bytes {
@@ -115,7 +153,7 @@ pub fn read_path(path: &Path) -> Result<Dataset, DataError> {
             msg: "checksum mismatch — file corrupt".into(),
         });
     }
-    Dataset::from_vec(n, m, data)?.with_feature_names(names)
+    Dataset::from_vec(n, m, data)?.with_feature_names(hdr.names)
 }
 
 fn read_u32<R: Read>(r: &mut R) -> Result<u32, std::io::Error> {
@@ -131,13 +169,15 @@ fn read_u64<R: Read>(r: &mut R) -> Result<u64, std::io::Error> {
 }
 
 /// CRC-32 (IEEE 802.3), table-driven — no external crates offline.
-struct Crc32 {
+/// Crate-visible so the streaming shard reader
+/// ([`crate::data::shard`]) can verify the same checksum block-wise.
+pub(crate) struct Crc32 {
     state: u32,
     table: [u32; 256],
 }
 
 impl Crc32 {
-    fn new() -> Crc32 {
+    pub(crate) fn new() -> Crc32 {
         let mut table = [0u32; 256];
         for (i, entry) in table.iter_mut().enumerate() {
             let mut c = i as u32;
@@ -152,14 +192,14 @@ impl Crc32 {
         }
     }
 
-    fn update(&mut self, bytes: &[u8]) {
+    pub(crate) fn update(&mut self, bytes: &[u8]) {
         for &b in bytes {
             self.state =
                 self.table[((self.state ^ b as u32) & 0xFF) as usize] ^ (self.state >> 8);
         }
     }
 
-    fn finish(&self) -> u32 {
+    pub(crate) fn finish(&self) -> u32 {
         self.state ^ 0xFFFF_FFFF
     }
 }

@@ -9,6 +9,7 @@
 pub mod binfmt;
 pub mod csv;
 pub mod scale;
+pub mod shard;
 pub mod synthetic;
 
 use std::fmt;

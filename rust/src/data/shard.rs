@@ -1,0 +1,316 @@
+//! Shard sources — the out-of-core seam under the streaming engine.
+//!
+//! A [`ShardSource`] hands out contiguous row chunks of a dataset on
+//! demand without promising the whole matrix is resident. Two
+//! implementations:
+//!
+//! * [`MemShardSource`] — wraps an in-memory [`Dataset`]; `load_rows`
+//!   is a `memcpy`. This is what makes the streaming engine testable
+//!   against the in-core executors bit-for-bit: same chunks, same
+//!   kernel calls, zero I/O variance.
+//! * [`DiskShardSource`] — reads row ranges straight out of the `.pcb`
+//!   data section (`File` + `seek` + `read_exact`, stdlib only). The
+//!   file's CRC and the crate's finite-samples policy are verified
+//!   **once, eagerly, at open** by a streaming pass that never holds
+//!   more than one 64 KiB block — so per-chunk loads afterwards can
+//!   decode without re-hashing the whole file, and a corrupt or
+//!   non-finite file fails before any clustering work starts.
+//!
+//! Loads report the backing-store bytes they moved so the engine's
+//! [`crate::exec::stream::IoCounters`] can surface I/O volume in
+//! `RunMetrics`.
+
+use std::fs::File;
+use std::io::{BufReader, Read, Seek, SeekFrom};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::data::binfmt::{self, Crc32};
+use crate::data::{DataError, Dataset};
+
+/// A source of contiguous row chunks from an (n × m) f32 matrix.
+///
+/// `Sync` because the streaming engine's prefetch worker reads the next
+/// chunk from a pool thread while compute workers run on the current
+/// one.
+pub trait ShardSource: Sync {
+    /// Total rows.
+    fn n(&self) -> usize;
+    /// Features per row.
+    fn m(&self) -> usize;
+    /// Short tag for metrics/logs ("mem" / "pcb").
+    fn kind(&self) -> &'static str;
+    /// Copy rows `range` (row-major) into `out`, which must hold exactly
+    /// `range.len() * m` values. Returns backing-store bytes read.
+    fn load_rows(&self, range: Range<usize>, out: &mut [f32]) -> Result<u64, DataError>;
+    /// Gather the rows at `idx` (in the given order — callers replaying
+    /// `random_init` depend on it) into `out`, which must hold exactly
+    /// `idx.len() * m` values. Returns backing-store bytes read.
+    fn gather_rows(&self, idx: &[usize], out: &mut [f32]) -> Result<u64, DataError>;
+}
+
+/// In-memory shard source over a borrowed [`Dataset`].
+pub struct MemShardSource<'a> {
+    ds: &'a Dataset,
+}
+
+impl<'a> MemShardSource<'a> {
+    pub fn new(ds: &'a Dataset) -> Self {
+        MemShardSource { ds }
+    }
+}
+
+impl ShardSource for MemShardSource<'_> {
+    fn n(&self) -> usize {
+        self.ds.n()
+    }
+
+    fn m(&self) -> usize {
+        self.ds.m()
+    }
+
+    fn kind(&self) -> &'static str {
+        "mem"
+    }
+
+    fn load_rows(&self, range: Range<usize>, out: &mut [f32]) -> Result<u64, DataError> {
+        let src = self.ds.rows(range);
+        debug_assert_eq!(src.len(), out.len());
+        out.copy_from_slice(src);
+        // The Dataset invariant already guarantees finiteness.
+        Ok((src.len() * 4) as u64)
+    }
+
+    fn gather_rows(&self, idx: &[usize], out: &mut [f32]) -> Result<u64, DataError> {
+        let m = self.ds.m();
+        debug_assert_eq!(out.len(), idx.len() * m);
+        for (slot, &i) in idx.iter().enumerate() {
+            out[slot * m..(slot + 1) * m].copy_from_slice(self.ds.row(i));
+        }
+        Ok((idx.len() * m * 4) as u64)
+    }
+}
+
+/// On-disk shard source over the `.pcb` data section.
+///
+/// The file handle and its decode scratch live behind one mutex: loads
+/// are serialized (one spindle / one page cache anyway), while the
+/// metadata stays lock-free for concurrent `n()`/`m()` calls.
+pub struct DiskShardSource {
+    path: PathBuf,
+    n: usize,
+    m: usize,
+    names: Vec<String>,
+    data_start: u64,
+    io: Mutex<DiskIo>,
+}
+
+struct DiskIo {
+    file: File,
+    scratch: Vec<u8>,
+}
+
+/// Block size for the chunked decode passes (matches `binfmt`'s read
+/// blocks).
+const SCRATCH_BYTES: usize = 1 << 16;
+
+impl DiskShardSource {
+    /// Open a `.pcb` file for streaming: parse the header, then verify
+    /// the data-section CRC **and** the finite-samples policy in one
+    /// streaming pass (peak memory: one 64 KiB block). Truncated files
+    /// surface as [`DataError::Io`] (`UnexpectedEof`), corruption as
+    /// the same "checksum mismatch" [`DataError::Parse`] the one-shot
+    /// loader returns, non-finite values as [`DataError::NonFinite`].
+    pub fn open(path: &Path) -> Result<DiskShardSource, DataError> {
+        let file = File::open(path)?;
+        let mut r = BufReader::new(file);
+        let hdr = binfmt::read_header(&mut r)?;
+
+        let mut crc = Crc32::new();
+        let mut buf = vec![0u8; SCRATCH_BYTES];
+        let total_bytes = hdr.n * hdr.m * 4;
+        let mut filled = 0usize;
+        while filled < total_bytes {
+            let take = buf.len().min(total_bytes - filled);
+            r.read_exact(&mut buf[..take])?;
+            crc.update(&buf[..take]);
+            for (i, chunk) in buf[..take].chunks_exact(4).enumerate() {
+                let v = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+                if !v.is_finite() {
+                    return Err(DataError::NonFinite {
+                        index: (filled / 4) + i,
+                        value: v,
+                    });
+                }
+            }
+            filled += take;
+        }
+        let mut crc_bytes = [0u8; 4];
+        r.read_exact(&mut crc_bytes)?;
+        if u32::from_le_bytes(crc_bytes) != crc.finish() {
+            return Err(DataError::Parse {
+                line: 0,
+                msg: "checksum mismatch — file corrupt".into(),
+            });
+        }
+
+        let file = r.into_inner();
+        Ok(DiskShardSource {
+            path: path.to_path_buf(),
+            n: hdr.n,
+            m: hdr.m,
+            names: hdr.names,
+            data_start: hdr.data_start,
+            io: Mutex::new(DiskIo {
+                file,
+                scratch: buf,
+            }),
+        })
+    }
+
+    /// Feature names from the header.
+    pub fn feature_names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// The backing file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn decode_at(
+        io: &mut DiskIo,
+        data_start: u64,
+        value_offset: usize,
+        out: &mut [f32],
+    ) -> Result<u64, DataError> {
+        io.file
+            .seek(SeekFrom::Start(data_start + (value_offset * 4) as u64))?;
+        let total_bytes = out.len() * 4;
+        let mut filled = 0usize;
+        while filled < total_bytes {
+            let take = io.scratch.len().min(total_bytes - filled);
+            io.file.read_exact(&mut io.scratch[..take])?;
+            for (i, chunk) in io.scratch[..take].chunks_exact(4).enumerate() {
+                out[(filled / 4) + i] =
+                    f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            filled += take;
+        }
+        Ok(total_bytes as u64)
+    }
+}
+
+impl ShardSource for DiskShardSource {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn kind(&self) -> &'static str {
+        "pcb"
+    }
+
+    fn load_rows(&self, range: Range<usize>, out: &mut [f32]) -> Result<u64, DataError> {
+        debug_assert!(range.end <= self.n);
+        debug_assert_eq!(out.len(), range.len() * self.m);
+        let mut io = self.io.lock().unwrap_or_else(|e| e.into_inner());
+        Self::decode_at(&mut io, self.data_start, range.start * self.m, out)
+    }
+
+    fn gather_rows(&self, idx: &[usize], out: &mut [f32]) -> Result<u64, DataError> {
+        let m = self.m;
+        debug_assert_eq!(out.len(), idx.len() * m);
+        let mut io = self.io.lock().unwrap_or_else(|e| e.into_inner());
+        let mut bytes = 0u64;
+        for (slot, &i) in idx.iter().enumerate() {
+            debug_assert!(i < self.n);
+            bytes += Self::decode_at(
+                &mut io,
+                self.data_start,
+                i * m,
+                &mut out[slot * m..(slot + 1) * m],
+            )?;
+        }
+        Ok(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GmmSpec};
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("parclust_shard");
+        let _ = std::fs::create_dir_all(&dir);
+        dir.join(name)
+    }
+
+    #[test]
+    fn mem_source_loads_and_gathers() {
+        let g = generate(&GmmSpec::new(100, 5, 3).seed(3));
+        let ds = &g.dataset;
+        let src = MemShardSource::new(ds);
+        assert_eq!(src.n(), 100);
+        assert_eq!(src.m(), 5);
+        let mut buf = vec![0.0f32; 30 * 5];
+        let bytes = src.load_rows(10..40, &mut buf).unwrap();
+        assert_eq!(bytes, 30 * 5 * 4);
+        assert_eq!(&buf[..], ds.rows(10..40));
+        let mut g2 = vec![0.0f32; 2 * 5];
+        src.gather_rows(&[42, 7], &mut g2).unwrap();
+        assert_eq!(&g2[..5], ds.row(42));
+        assert_eq!(&g2[5..], ds.row(7), "gather preserves caller order");
+    }
+
+    #[test]
+    fn disk_source_matches_in_core_bitwise() {
+        let g = generate(&GmmSpec::new(257, 7, 4).seed(4));
+        let path = tmp("disk_match.pcb");
+        binfmt::write_path(&g.dataset, &path).unwrap();
+        let src = DiskShardSource::open(&path).unwrap();
+        assert_eq!(src.n(), 257);
+        assert_eq!(src.m(), 7);
+        assert_eq!(src.kind(), "pcb");
+        assert_eq!(src.feature_names(), g.dataset.feature_names.as_slice());
+        // ranges chosen to cross the 64 KiB scratch boundary and hit
+        // the ragged tail
+        for range in [0..257, 0..1, 100..101, 250..257, 31..200] {
+            let mut buf = vec![0.0f32; range.len() * 7];
+            let bytes = src.load_rows(range.clone(), &mut buf).unwrap();
+            assert_eq!(bytes, (range.len() * 7 * 4) as u64);
+            assert_eq!(&buf[..], g.dataset.rows(range.clone()), "{range:?}");
+        }
+        let mut picked = vec![0.0f32; 3 * 7];
+        src.gather_rows(&[200, 0, 56], &mut picked).unwrap();
+        assert_eq!(&picked[..7], g.dataset.row(200));
+        assert_eq!(&picked[7..14], g.dataset.row(0));
+        assert_eq!(&picked[14..], g.dataset.row(56));
+    }
+
+    #[test]
+    fn disk_source_rejects_non_finite_at_open() {
+        let g = generate(&GmmSpec::new(50, 3, 2).seed(5));
+        let path = tmp("nonfinite.pcb");
+        binfmt::write_path(&g.dataset, &path).unwrap();
+        // Patch one data value to +inf and re-stamp the CRC so only the
+        // finiteness policy can object.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let data_start = bytes.len() - 50 * 3 * 4 - 4;
+        bytes[data_start + 40..data_start + 44].copy_from_slice(&f32::INFINITY.to_le_bytes());
+        let mut crc = Crc32::new();
+        crc.update(&bytes[data_start..bytes.len() - 4]);
+        let crc_at = bytes.len() - 4;
+        bytes[crc_at..].copy_from_slice(&crc.finish().to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        match DiskShardSource::open(&path).map(|_| ()) {
+            Err(DataError::NonFinite { index, .. }) => assert_eq!(index, 10),
+            other => panic!("expected NonFinite, got {other:?}"),
+        }
+    }
+}

@@ -21,6 +21,7 @@ pub mod gpu;
 pub mod multi;
 pub mod regime;
 pub mod single;
+pub mod stream;
 
 use crate::data::Dataset;
 use crate::metric::Metric;

@@ -1,0 +1,445 @@
+//! Out-of-core streaming engine — the Lloyd loop's assignment stage
+//! over a [`ShardSource`] that never fully materializes in memory.
+//!
+//! The paper caps at 2M×25 because its pipeline is RAM-resident end to
+//! end; its companion paper (arXiv 1402.3789) sketches the fix as a
+//! three-level pipeline where host threads *prepare the next chunk
+//! while the current one computes*. This module is that pipeline on
+//! the CPU:
+//!
+//! * the dataset is cut into contiguous row **chunks**
+//!   ([`crate::pool::split_ranges`] geometry, so chunk boundaries can
+//!   match the in-core multi executor's shard boundaries exactly);
+//! * chunks are processed in **waves** of `group = threads − 1` on the
+//!   engine's persistent [`ThreadPool`]: one worker reads wave *t+1*
+//!   into the back ring of pooled [`ChunkBuf`]s while the other
+//!   workers run the existing micro-kernel/SIMD assignment on wave *t*
+//!   against the shared per-iteration [`CentroidPrep`] (double
+//!   buffering — front computes, back loads, swap);
+//! * per-chunk [`AssignStats`] fold into the totals in ascending chunk
+//!   order — exactly the absorption order of
+//!   [`crate::exec::multi::MultiExecutor`] — so labels, counts,
+//!   coordinate sums and inertia are **bit-equal to the in-core multi
+//!   executor** whenever chunk boundaries match its shard boundaries
+//!   (each chunk is one sequential kernel call; the kernel's tile
+//!   walker steps relative to the range start, so arithmetic on a
+//!   relocated chunk buffer is bit-identical to the same rows in
+//!   place). `tests/stream_parity.rs` pins this.
+//!
+//! Resident dataset memory is bounded by the two buffer rings
+//! (`2 × group × chunk_rows × m × 4` bytes ≤ the configured budget),
+//! not by n — `benches/f7_outofcore.rs` asserts the bound with the
+//! counting-allocator harness while fitting a `.pcb` several times the
+//! budget. [`IoCounters`] makes the overlap observable: bytes read,
+//! chunks prefetched, and the wall time the compute wave actually
+//! stalled waiting for its data.
+
+use std::ops::Range;
+use std::time::{Duration, Instant};
+
+use crate::data::shard::ShardSource;
+use crate::data::{DataError, Dataset};
+use crate::exec::{AssignStats, ExecError};
+use crate::kernel::prep::CentroidPrep;
+use crate::kernel::{assign, reduce};
+use crate::metric::Metric;
+use crate::pool::{split_ranges, ThreadPool};
+
+/// Default resident-buffer budget: 256 MiB (≈ the paper's full 2M×25
+/// dataset plus headroom — streaming only kicks in above it).
+pub const DEFAULT_MEMORY_BUDGET: usize = 256 << 20;
+
+/// Floor on rows per chunk: below this the per-wave orchestration cost
+/// dominates the kernel work.
+pub const MIN_CHUNK_ROWS: usize = 256;
+
+/// I/O counters for one streamed fit — surfaced through
+/// [`crate::metrics::RunMetrics`] so the prefetch overlap is
+/// observable, not an article of faith.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IoCounters {
+    /// Backing-store bytes read (all loads: prefetched and leader-side).
+    pub bytes_read: u64,
+    /// Chunks loaded by the overlapped prefetch worker (wave-0 fills
+    /// and init-stage loads are leader-side and excluded).
+    pub chunks_prefetched: u64,
+    /// Wall time the pipeline spent waiting on I/O: the first wave's
+    /// leader fill plus, per overlapped wave, the read time not hidden
+    /// behind compute.
+    pub prefetch_stall: Duration,
+}
+
+/// One pooled chunk buffer: a fixed-capacity [`Dataset`] the kernels
+/// run over (range `0..rows`), plus the absolute row range it holds.
+struct ChunkBuf {
+    ds: Dataset,
+    range: Range<usize>,
+}
+
+impl ChunkBuf {
+    fn new(cap_rows: usize, m: usize) -> ChunkBuf {
+        ChunkBuf {
+            ds: Dataset::from_vec(cap_rows, m, vec![0.0; cap_rows * m])
+                .expect("zero-filled chunk buffer is finite"),
+            range: 0..0,
+        }
+    }
+
+    /// Fill the first `r.len()` rows from `source`; rows beyond are
+    /// stale and never visible (kernel calls use `0..r.len()`).
+    fn load_from(&mut self, source: &dyn ShardSource, r: Range<usize>) -> Result<u64, DataError> {
+        let m = self.ds.m();
+        let len = r.len();
+        debug_assert!(len <= self.ds.n());
+        let bytes = source.load_rows(r.clone(), &mut self.ds.values_mut()[..len * m])?;
+        self.range = r;
+        Ok(bytes)
+    }
+}
+
+/// Per-wave job results (read vs compute), collected in submission
+/// order by [`ThreadPool::scope_run_all`].
+enum WaveOut {
+    Read {
+        bytes: u64,
+        chunks: u64,
+        dur: Duration,
+        err: Option<DataError>,
+    },
+    Compute {
+        dur: Duration,
+    },
+}
+
+/// The streaming assignment engine: chunk geometry, double-buffer
+/// rings, per-chunk stat slots and fit-wide totals, all allocated once
+/// at construction — iterating allocates nothing per pass, same as the
+/// in-core sessions.
+pub struct StreamEngine<'a> {
+    source: &'a dyn ShardSource,
+    pool: ThreadPool,
+    metric: Metric,
+    k: usize,
+    chunks: Vec<Range<usize>>,
+    /// Chunks per wave (`threads − 1` compute workers, one reader).
+    group: usize,
+    front: Vec<ChunkBuf>,
+    back: Vec<ChunkBuf>,
+    slots: Vec<AssignStats>,
+    total: AssignStats,
+    prep: CentroidPrep,
+    io: IoCounters,
+}
+
+impl<'a> StreamEngine<'a> {
+    /// Build with chunk geometry derived from a resident-buffer byte
+    /// budget: `2 × group` buffers of `chunk_rows × m × 4` bytes fit
+    /// inside `memory_budget` (floored at [`MIN_CHUNK_ROWS`] rows).
+    pub fn new(
+        source: &'a dyn ShardSource,
+        k: usize,
+        metric: Metric,
+        threads: usize,
+        memory_budget: usize,
+    ) -> StreamEngine<'a> {
+        let n = source.n();
+        let m = source.m();
+        let threads = threads.max(1);
+        let group = threads.saturating_sub(1).max(1);
+        let per_row_bytes = 2 * group * m * 4;
+        let chunk_rows = (memory_budget / per_row_bytes.max(1))
+            .max(MIN_CHUNK_ROWS)
+            .min(n.max(1));
+        let num_chunks = n.div_ceil(chunk_rows.max(1)).max(1);
+        Self::with_chunks(source, k, metric, threads, split_ranges(n, num_chunks))
+    }
+
+    /// Build with explicit chunk geometry. `chunks` must partition
+    /// `0..source.n()` contiguously — this is how the parity tests and
+    /// benches pin chunk boundaries to the in-core multi executor's
+    /// `split_ranges(n, threads)` shards.
+    pub fn with_chunks(
+        source: &'a dyn ShardSource,
+        k: usize,
+        metric: Metric,
+        threads: usize,
+        chunks: Vec<Range<usize>>,
+    ) -> StreamEngine<'a> {
+        let n = source.n();
+        let m = source.m();
+        let mut at = 0usize;
+        for r in &chunks {
+            assert_eq!(r.start, at, "chunks must be contiguous from row 0");
+            assert!(r.end > r.start, "empty chunk");
+            at = r.end;
+        }
+        assert_eq!(at, n, "chunks must cover all {n} rows");
+
+        let threads = threads.max(1);
+        let group = threads.saturating_sub(1).max(1).min(chunks.len().max(1));
+        let cap_rows = chunks.iter().map(|r| r.len()).max().unwrap_or(0);
+        StreamEngine {
+            source,
+            pool: ThreadPool::new(threads),
+            metric,
+            k,
+            chunks,
+            group,
+            front: (0..group).map(|_| ChunkBuf::new(cap_rows, m)).collect(),
+            back: (0..group).map(|_| ChunkBuf::new(cap_rows, m)).collect(),
+            slots: (0..group).map(|_| AssignStats::zeros(cap_rows, k, m)).collect(),
+            total: AssignStats::zeros(n, k, m),
+            prep: CentroidPrep::default(),
+            io: IoCounters::default(),
+        }
+    }
+
+    /// The chunk geometry in use.
+    pub fn chunks(&self) -> &[Range<usize>] {
+        &self.chunks
+    }
+
+    /// Resident dataset-buffer bytes (both rings) — the quantity the
+    /// memory budget bounds.
+    pub fn buffer_bytes(&self) -> usize {
+        let cap = self.front.first().map(|b| b.ds.n()).unwrap_or(0);
+        2 * self.group * cap * self.source.m() * 4
+    }
+
+    /// Accumulated I/O counters.
+    pub fn io(&self) -> IoCounters {
+        self.io
+    }
+
+    /// One full assignment pass over the source against `centroids`:
+    /// the streamed equivalent of one in-core
+    /// [`crate::exec::AssignSession::step`]. Waves overlap the next
+    /// wave's reads with the current wave's kernels; totals absorb in
+    /// ascending chunk order.
+    pub fn step(&mut self, centroids: &[f32]) -> Result<&AssignStats, ExecError> {
+        let n = self.source.n();
+        let m = self.source.m();
+        let k = self.k;
+        debug_assert_eq!(centroids.len(), k * m);
+        if self.metric == Metric::Euclidean {
+            // Once per iteration on the leader, shared read-only by
+            // every chunk job — same discipline as the in-core
+            // sessions (tests/prep_discipline.rs).
+            self.prep.prepare(centroids, k, m);
+        }
+        self.total.reset(n, k, m);
+        if self.chunks.is_empty() {
+            return Ok(&self.total);
+        }
+
+        let group = self.group;
+        let num_waves = self.chunks.len().div_ceil(group);
+
+        // Wave 0 has nothing to overlap with: leader fill, all stall.
+        {
+            let t = Instant::now();
+            let first = &self.chunks[..group.min(self.chunks.len())];
+            for (buf, r) in self.front.iter_mut().zip(first.iter()) {
+                self.io.bytes_read += buf
+                    .load_from(self.source, r.clone())
+                    .map_err(|e| ExecError(format!("stream read: {e}")))?;
+            }
+            self.io.prefetch_stall += t.elapsed();
+        }
+
+        for wave in 0..num_waves {
+            let cur_lo = wave * group;
+            let cur_hi = (cur_lo + group).min(self.chunks.len());
+            let next_hi = (cur_hi + group).min(self.chunks.len());
+            let cur = &self.chunks[cur_lo..cur_hi];
+            let next: Vec<Range<usize>> = self.chunks[cur_hi..next_hi].to_vec();
+
+            let source = self.source;
+            let metric = self.metric;
+            let prep = &self.prep;
+            let front = &self.front;
+            let back = &mut self.back;
+            let slots = &mut self.slots;
+
+            let mut jobs: Vec<Box<dyn FnOnce() -> WaveOut + Send + '_>> =
+                Vec::with_capacity(cur.len() + 1);
+            if !next.is_empty() {
+                let backs = &mut back[..next.len()];
+                jobs.push(Box::new(move || {
+                    let t = Instant::now();
+                    let (mut bytes, mut loaded, mut err) = (0u64, 0u64, None);
+                    for (buf, r) in backs.iter_mut().zip(next.iter()) {
+                        match buf.load_from(source, r.clone()) {
+                            Ok(b) => {
+                                bytes += b;
+                                loaded += 1;
+                            }
+                            Err(e) => {
+                                err = Some(e);
+                                break;
+                            }
+                        }
+                    }
+                    WaveOut::Read {
+                        bytes,
+                        chunks: loaded,
+                        dur: t.elapsed(),
+                        err,
+                    }
+                }));
+            }
+            for ((buf, slot), r) in front[..cur.len()]
+                .iter()
+                .zip(slots.iter_mut())
+                .zip(cur.iter())
+            {
+                debug_assert_eq!(buf.range, *r, "front ring out of phase");
+                let rows = r.len();
+                jobs.push(Box::new(move || {
+                    let t = Instant::now();
+                    slot.reset(rows, k, m);
+                    let ds = &buf.ds;
+                    if metric == Metric::Euclidean {
+                        assign::assign_euclidean_panel_into(ds, centroids, prep, 0..rows, slot);
+                    } else {
+                        assign::assign_update_range_into(ds, centroids, k, metric, 0..rows, slot);
+                    }
+                    WaveOut::Compute { dur: t.elapsed() }
+                }));
+            }
+
+            let t_wave = Instant::now();
+            let outs = self.pool.scope_run_all(jobs);
+            let wave_wall = t_wave.elapsed();
+
+            let mut max_compute = Duration::ZERO;
+            let mut read: Option<(u64, u64, Duration, Option<DataError>)> = None;
+            for out in outs {
+                match out {
+                    WaveOut::Read { bytes, chunks, dur, err } => {
+                        read = Some((bytes, chunks, dur, err));
+                    }
+                    WaveOut::Compute { dur } => max_compute = max_compute.max(dur),
+                }
+            }
+            if let Some((bytes, loaded, dur, err)) = read {
+                if let Some(e) = err {
+                    return Err(ExecError(format!("stream read: {e}")));
+                }
+                self.io.bytes_read += bytes;
+                self.io.chunks_prefetched += loaded;
+                // Stall = read time the compute wave failed to hide.
+                self.io.prefetch_stall += wave_wall.saturating_sub(max_compute).min(dur);
+            }
+
+            // Leader combine, ascending chunk order — the multi
+            // executor's absorption order, bit for bit.
+            for (i, r) in cur.iter().enumerate() {
+                self.total.absorb(r.start, &self.slots[i]);
+            }
+            std::mem::swap(&mut self.front, &mut self.back);
+        }
+        Ok(&self.total)
+    }
+
+    /// Streamed center of gravity (paper step 2): per-chunk
+    /// [`reduce::coordinate_sums`] folded in chunk order — bit-equal to
+    /// the in-core multi executor's reduction when chunk boundaries
+    /// match its shards (the reduce tiles also step relative to the
+    /// range start). Leader-side sequential I/O (init runs once);
+    /// bytes are counted, stall is not — it measures the Lloyd loop's
+    /// overlap, not init.
+    pub fn center_of_gravity(&mut self) -> Result<Vec<f32>, ExecError> {
+        let n = self.source.n();
+        let m = self.source.m();
+        let mut total = vec![0f64; m];
+        for i in 0..self.chunks.len() {
+            let r = self.chunks[i].clone();
+            let buf = &mut self.front[0];
+            self.io.bytes_read += buf
+                .load_from(self.source, r.clone())
+                .map_err(|e| ExecError(format!("stream read: {e}")))?;
+            let part = reduce::coordinate_sums(&buf.ds, 0..r.len());
+            reduce::fold_sums(&mut total, &part);
+        }
+        Ok(reduce::mean_from_sums(&total, n))
+    }
+
+    /// Consume the engine, returning the last pass's statistics (the
+    /// labels move out — no final n-length copy) and the I/O counters.
+    pub fn finish(self) -> (AssignStats, IoCounters) {
+        (self.total, self.io)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shard::MemShardSource;
+    use crate::data::synthetic::{generate, GmmSpec};
+    use crate::exec::multi::MultiExecutor;
+    use crate::exec::Executor;
+
+    #[test]
+    fn budget_bounds_buffer_rings() {
+        let g = generate(&GmmSpec::new(10_000, 8, 4).seed(1));
+        let src = MemShardSource::new(&g.dataset);
+        let budget = 64 * 1024;
+        let eng = StreamEngine::new(&src, 4, Metric::Euclidean, 4, budget);
+        assert!(eng.chunks().len() > 1, "budget must force multiple chunks");
+        assert!(
+            eng.buffer_bytes() <= budget.max(2 * 3 * MIN_CHUNK_ROWS * 8 * 4),
+            "buffers {} exceed budget {budget}",
+            eng.buffer_bytes()
+        );
+        let total = eng.chunks().iter().map(|r| r.len()).sum::<usize>();
+        assert_eq!(total, 10_000);
+    }
+
+    #[test]
+    fn matches_multi_executor_bitwise_with_matched_chunks() {
+        let (ds, cent) = crate::testkit::lattice_blobs(2_003, 6, 5);
+        let src = MemShardSource::new(&ds);
+        let threads = 4;
+        let multi = MultiExecutor::new(threads);
+        let reference = multi.assign_update(&ds, &cent, 5, Metric::Euclidean).unwrap();
+
+        let chunks = split_ranges(ds.n(), threads);
+        let mut eng = StreamEngine::with_chunks(&src, 5, Metric::Euclidean, threads, chunks);
+        let streamed = eng.step(&cent).unwrap();
+        assert_eq!(streamed.labels, reference.labels);
+        assert_eq!(streamed.counts, reference.counts);
+        assert_eq!(streamed.sums, reference.sums);
+        assert_eq!(streamed.inertia, reference.inertia);
+        let io = eng.io();
+        assert_eq!(io.bytes_read, (ds.n() * ds.m() * 4) as u64);
+    }
+
+    #[test]
+    fn streamed_cog_matches_multi_bitwise() {
+        let g = generate(&GmmSpec::new(1_777, 5, 3).seed(7));
+        let src = MemShardSource::new(&g.dataset);
+        let threads = 3;
+        let multi = MultiExecutor::new(threads);
+        let reference = multi.center_of_gravity(&g.dataset).unwrap();
+        let chunks = split_ranges(g.dataset.n(), threads);
+        let mut eng = StreamEngine::with_chunks(&src, 3, Metric::Euclidean, threads, chunks);
+        assert_eq!(eng.center_of_gravity().unwrap(), reference);
+    }
+
+    #[test]
+    fn many_small_chunks_still_label_correctly() {
+        // Misaligned chunk geometry: labels and counts must still match
+        // (per-row argmin is chunk-independent); sums/inertia fold in a
+        // different order, so only set-level equality is asserted.
+        let (ds, cent) = crate::testkit::lattice_blobs(999, 4, 3);
+        let src = MemShardSource::new(&ds);
+        let multi = MultiExecutor::new(2);
+        let reference = multi.assign_update(&ds, &cent, 3, Metric::Euclidean).unwrap();
+        let chunks = split_ranges(ds.n(), 13);
+        let mut eng = StreamEngine::with_chunks(&src, 3, Metric::Euclidean, 2, chunks);
+        let streamed = eng.step(&cent).unwrap();
+        assert_eq!(streamed.labels, reference.labels);
+        assert_eq!(streamed.counts, reference.counts);
+    }
+}

@@ -111,6 +111,7 @@ pub fn run(
         prune,
         assign_path,
         f32: f32c,
+        io: crate::exec::stream::IoCounters::default(),
     };
 
     Ok(FitResult {

@@ -5,9 +5,12 @@
 pub mod init;
 pub mod lloyd;
 pub mod select_k;
+pub mod stream;
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
+use crate::data::binfmt;
+use crate::data::shard::{DiskShardSource, MemShardSource};
 use crate::data::Dataset;
 use crate::exec::gpu::GpuExecutor;
 use crate::exec::multi::MultiExecutor;
@@ -90,6 +93,35 @@ impl InitMethod {
     }
 }
 
+/// How the fit moves data through the pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// The whole dataset resident in memory (the paper's setting); the
+    /// three execution regimes of [`crate::exec`] apply.
+    InCore,
+    /// The out-of-core streaming engine ([`crate::exec::stream`]):
+    /// prefetch-pipelined chunks under a memory budget, optional
+    /// mini-batch iterations.
+    Stream,
+}
+
+impl Engine {
+    pub fn from_str(s: &str) -> Option<Engine> {
+        match s.to_ascii_lowercase().as_str() {
+            "incore" | "in-core" | "core" => Some(Engine::InCore),
+            "stream" | "ooc" | "out-of-core" => Some(Engine::Stream),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::InCore => "incore",
+            Engine::Stream => "stream",
+        }
+    }
+}
+
 /// Configuration of one clustering run (builder-style).
 #[derive(Clone, Debug)]
 pub struct KMeansConfig {
@@ -114,6 +146,15 @@ pub struct KMeansConfig {
     /// AOT artifact directory for the gpu regime (default: `artifacts/`
     /// next to the working directory, or `PARCLUST_ARTIFACTS`).
     pub artifact_dir: Option<PathBuf>,
+    /// Data-movement engine: in-core (default) or the out-of-core
+    /// streaming engine.
+    pub engine: Engine,
+    /// Streaming engine only: mini-batch size B (one deterministic
+    /// sample of B rows per iteration instead of a full pass).
+    pub mini_batch: Option<usize>,
+    /// Streaming engine only: resident chunk-buffer byte budget
+    /// (default [`crate::exec::stream::DEFAULT_MEMORY_BUDGET`]).
+    pub memory_budget: Option<usize>,
 }
 
 impl KMeansConfig {
@@ -132,6 +173,9 @@ impl KMeansConfig {
             diameter: DiameterMode::Auto,
             score_path: ScorePath::F64,
             artifact_dir: None,
+            engine: Engine::InCore,
+            mini_batch: None,
+            memory_budget: None,
         }
     }
 
@@ -185,6 +229,21 @@ impl KMeansConfig {
         self
     }
 
+    pub fn engine(mut self, e: Engine) -> Self {
+        self.engine = e;
+        self
+    }
+
+    pub fn mini_batch(mut self, b: usize) -> Self {
+        self.mini_batch = Some(b);
+        self
+    }
+
+    pub fn memory_budget(mut self, bytes: usize) -> Self {
+        self.memory_budget = Some(bytes);
+        self
+    }
+
     /// Validate against dataset shape; returns the resolved concrete
     /// regime.
     pub fn validate(&self, ds: &Dataset) -> Result<Regime, KMeansError> {
@@ -200,6 +259,13 @@ impl KMeansConfig {
         }
         if self.max_iters == 0 {
             return Err(KMeansError::Config("max_iters must be >= 1".into()));
+        }
+        if self.mini_batch.is_some() && self.engine != Engine::Stream {
+            return Err(KMeansError::Config(
+                "mini-batch iterations are a streaming-engine mode \
+                 (use --engine stream)"
+                    .into(),
+            ));
         }
         let resolved = regime::resolve(self.regime, ds.n());
         if resolved == Regime::Gpu && self.metric != Metric::Euclidean {
@@ -287,6 +353,10 @@ pub struct FitResult {
 /// Cluster `ds` per `cfg`: builds the regime executor and runs the
 /// pipeline. This is the library's main entry point.
 pub fn fit(ds: &Dataset, cfg: &KMeansConfig) -> Result<FitResult, KMeansError> {
+    if cfg.engine == Engine::Stream {
+        let src = MemShardSource::new(ds);
+        return stream::run_stream(&src, cfg);
+    }
     let resolved = cfg.validate(ds)?;
     if let Some(msg) = regime::advice(cfg.regime, ds.n()) {
         crate::log_warn!("{msg}");
@@ -307,6 +377,25 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig) -> Result<FitResult, KMeansError> {
             out
         }
         Regime::Auto => unreachable!("resolve() returns a concrete regime"),
+    }
+}
+
+/// Cluster a `.pcb` file per `cfg`. Under [`Engine::Stream`] the file
+/// is opened as a [`DiskShardSource`] and never fully materializes —
+/// resident dataset buffers stay within `cfg.memory_budget`. Under
+/// [`Engine::InCore`] the file is loaded whole and handed to [`fit`].
+pub fn fit_pcb(path: &Path, cfg: &KMeansConfig) -> Result<FitResult, KMeansError> {
+    match cfg.engine {
+        Engine::Stream => {
+            let src = DiskShardSource::open(path)
+                .map_err(|e| KMeansError::Config(format!("open {}: {e}", path.display())))?;
+            stream::run_stream(&src, cfg)
+        }
+        Engine::InCore => {
+            let ds = binfmt::read_path(path)
+                .map_err(|e| KMeansError::Config(format!("open {}: {e}", path.display())))?;
+            fit(&ds, cfg)
+        }
     }
 }
 
@@ -396,6 +485,29 @@ mod tests {
         let c = DiameterMode::Sampled(100).candidates(1_000_000);
         assert!(c.windows(2).all(|w| w[0] < w[1]));
         assert!(*c.last().unwrap() < 1_000_000);
+    }
+
+    #[test]
+    fn engine_names_roundtrip() {
+        for e in [Engine::InCore, Engine::Stream] {
+            assert_eq!(Engine::from_str(e.name()), Some(e));
+        }
+        assert_eq!(Engine::from_str("ooc"), Some(Engine::Stream));
+        assert_eq!(Engine::from_str("nope"), None);
+        let cfg = KMeansConfig::new(2);
+        assert_eq!(cfg.engine, Engine::InCore);
+        assert_eq!(cfg.mini_batch, None);
+        assert_eq!(cfg.memory_budget, None);
+    }
+
+    #[test]
+    fn validate_rejects_in_core_mini_batch() {
+        let g = generate(&GmmSpec::new(10, 2, 2).seed(0));
+        let err = KMeansConfig::new(2)
+            .mini_batch(5)
+            .validate(&g.dataset)
+            .unwrap_err();
+        assert!(err.to_string().contains("stream"), "{err}");
     }
 
     #[test]

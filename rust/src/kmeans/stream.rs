@@ -1,0 +1,325 @@
+//! The streaming Lloyd driver — the in-core pipeline of
+//! [`crate::kmeans::lloyd`] re-run over a [`ShardSource`] through
+//! [`StreamEngine`], so a `.pcb` file several times larger than the
+//! memory budget fits without ever materializing.
+//!
+//! Two modes:
+//!
+//! * **Full-pass** (default): every iteration streams all n rows
+//!   through the prefetch-pipelined engine. The arithmetic is the
+//!   in-core driver's, statement for statement — same stage order,
+//!   same `AssignStats::centroids` update, same congruence test — so
+//!   with chunk boundaries matching the multi executor's shards the
+//!   whole fit (labels, counts, sums, inertia, centroid trajectory,
+//!   iteration count) is **bit-equal** to [`crate::kmeans::fit`] under
+//!   the multi regime with random init (`tests/stream_parity.rs`).
+//! * **Mini-batch** (`KMeansConfig::mini_batch`): per iteration, a
+//!   deterministic [`Pcg32`] sample of B rows is gathered (indices
+//!   sorted for seek locality) and assigned, and centroids move by the
+//!   count-weighted running-mean update `c += (b_c / v_c)(mean − c)`
+//!   of Sculley's web-scale k-means — `v_c` accumulates each
+//!   centroid's total batch membership, so step sizes decay per
+//!   centroid. After convergence (or `max_iters`), one exact streamed
+//!   full pass produces all-n labels and the exact inertia under the
+//!   [`FINAL_ASSIGN`] stage. With `tol = 0` (the paper's exact
+//!   congruence) sampled iterations rarely reach bit-stillness, so a
+//!   small positive tolerance is the natural pairing.
+//!
+//! Initialization is random only (the diameter and k-means++ inits are
+//! in-core candidate scans by construction) and replays
+//! [`crate::kmeans::init::random_init`] bit-for-bit: the same
+//! `Pcg32` stream, the same sampled index order, rows gathered through
+//! the source instead of the resident matrix.
+
+use std::ops::Range;
+use std::time::Instant;
+
+use crate::data::shard::ShardSource;
+use crate::data::{DataError, Dataset};
+use crate::exec::stream::{StreamEngine, DEFAULT_MEMORY_BUDGET};
+use crate::exec::{AssignStats, ExecError, ScorePath};
+use crate::kernel::pruned::PruneCounters;
+use crate::kernel::{assign, simd};
+use crate::kmeans::lloyd::{max_centroid_shift, stage};
+use crate::kmeans::{FitResult, InitMethod, KMeansConfig, KMeansError};
+use crate::metric::Metric;
+use crate::metrics::{RunMetrics, StageTimer};
+use crate::prng::Pcg32;
+
+/// Stage name for mini-batch mode's one exact full pass after the
+/// sampled iterations (all-n labels + exact inertia).
+pub const FINAL_ASSIGN: &str = "final.kernel.assign";
+
+/// Streaming-specific config validation (the in-core
+/// [`KMeansConfig::validate`] needs a resident [`Dataset`]).
+pub(crate) fn validate_stream(cfg: &KMeansConfig, n: usize) -> Result<(), KMeansError> {
+    if cfg.k == 0 {
+        return Err(KMeansError::Config("k must be >= 1".into()));
+    }
+    if n < cfg.k {
+        return Err(KMeansError::Config(format!(
+            "k={} exceeds n={n} samples",
+            cfg.k
+        )));
+    }
+    if cfg.max_iters == 0 {
+        return Err(KMeansError::Config("max_iters must be >= 1".into()));
+    }
+    if cfg.init != InitMethod::Random {
+        return Err(KMeansError::Config(format!(
+            "the streaming engine initializes with the random method (the \
+             diameter / k-means++ inits are in-core candidate scans); got {}",
+            cfg.init.name()
+        )));
+    }
+    if cfg.score_path != ScorePath::F64 {
+        return Err(KMeansError::Config(
+            "the streaming engine runs the exact f64 score path only".into(),
+        ));
+    }
+    if let Some(b) = cfg.mini_batch {
+        if b < cfg.k || b > n {
+            return Err(KMeansError::Config(format!(
+                "mini-batch size {b} must satisfy k={} <= B <= n={n}",
+                cfg.k
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Fit over a shard source with chunk geometry derived from
+/// `KMeansConfig::memory_budget` (default
+/// [`DEFAULT_MEMORY_BUDGET`]). The streaming entry point behind
+/// `--engine stream`.
+pub fn run_stream(source: &dyn ShardSource, cfg: &KMeansConfig) -> Result<FitResult, KMeansError> {
+    validate_stream(cfg, source.n())?;
+    let budget = cfg.memory_budget.unwrap_or(DEFAULT_MEMORY_BUDGET);
+    let engine = StreamEngine::new(source, cfg.k, cfg.metric, cfg.threads, budget);
+    drive(source, cfg, engine)
+}
+
+/// [`run_stream`] with explicit chunk geometry — how the parity tests
+/// pin chunk boundaries to the in-core multi executor's
+/// `split_ranges(n, threads)` shards.
+pub fn run_stream_chunked(
+    source: &dyn ShardSource,
+    cfg: &KMeansConfig,
+    chunks: Vec<Range<usize>>,
+) -> Result<FitResult, KMeansError> {
+    validate_stream(cfg, source.n())?;
+    let engine = StreamEngine::with_chunks(source, cfg.k, cfg.metric, cfg.threads, chunks);
+    drive(source, cfg, engine)
+}
+
+fn read_err(e: DataError) -> KMeansError {
+    KMeansError::Exec(ExecError(format!("stream read: {e}")))
+}
+
+fn drive<'a>(
+    source: &'a dyn ShardSource,
+    cfg: &KMeansConfig,
+    mut engine: StreamEngine<'a>,
+) -> Result<FitResult, KMeansError> {
+    let wall_start = Instant::now();
+    let mut timer = StageTimer::new();
+    let k = cfg.k;
+    let m = source.m();
+    let n = source.n();
+
+    // ----- init: streamed center of gravity + random centroids -----------
+    // (bit-equal replay of the in-core init: same cog fold order, same
+    // Pcg32 stream and sampled index order as `init::random_init`.)
+    let t = Instant::now();
+    let cog = engine.center_of_gravity().map_err(KMeansError::Exec)?;
+    let mut rng = Pcg32::with_stream(cfg.seed, 0x1217);
+    let idx = rng.sample_indices(n, k);
+    let mut centroids = vec![0f32; k * m];
+    let mut init_bytes = source.gather_rows(&idx, &mut centroids).map_err(read_err)?;
+    timer.add(stage::INIT_COG, t.elapsed());
+
+    let mut inertia;
+    let mut iterations = 0usize;
+    let mut converged = false;
+    let mut scanned = 0u64;
+
+    if let Some(b) = cfg.mini_batch {
+        // ----- mini-batch iterations -------------------------------------
+        let mut batch = Dataset::from_vec(b, m, vec![0.0; b * m])
+            .expect("zero-filled batch buffer is finite");
+        let mut stats = AssignStats::zeros(b, k, m);
+        let mut vc = vec![0u64; k];
+        while iterations < cfg.max_iters {
+            let t = Instant::now();
+            let mut idx = rng.sample_indices(n, b);
+            idx.sort_unstable();
+            init_bytes += source.gather_rows(&idx, batch.values_mut()).map_err(read_err)?;
+            assign::assign_update_range_into(&batch, &centroids, k, cfg.metric, 0..b, &mut stats);
+            timer.add(stage::ASSIGN_UPDATE, t.elapsed());
+            scanned += b as u64;
+
+            let t = Instant::now();
+            let mut new_centroids = centroids.clone();
+            for c in 0..k {
+                let bc = stats.counts[c];
+                if bc == 0 {
+                    continue;
+                }
+                vc[c] += bc;
+                let eta = bc as f64 / vc[c] as f64;
+                for j in 0..m {
+                    let mean = stats.sums[c * m + j] / bc as f64;
+                    let old = centroids[c * m + j] as f64;
+                    new_centroids[c * m + j] = (old + eta * (mean - old)) as f32;
+                }
+            }
+            timer.add(stage::FORM_CENTROIDS, t.elapsed());
+
+            let t = Instant::now();
+            let shift = max_centroid_shift(&centroids, &new_centroids, k, m);
+            timer.add(stage::CONVERGENCE, t.elapsed());
+
+            centroids = new_centroids;
+            iterations += 1;
+            if shift <= cfg.tol {
+                converged = true;
+                break;
+            }
+        }
+        // One exact full pass: all-n labels and the exact objective.
+        let t = Instant::now();
+        let full = engine.step(&centroids).map_err(KMeansError::Exec)?;
+        inertia = full.inertia;
+        timer.add(FINAL_ASSIGN, t.elapsed());
+        scanned += n as u64;
+    } else {
+        // ----- full-pass iterations: lloyd::run over the engine ----------
+        inertia = f64::INFINITY;
+        while iterations < cfg.max_iters {
+            let t = Instant::now();
+            let stats = engine.step(&centroids).map_err(KMeansError::Exec)?;
+            timer.add(stage::ASSIGN_UPDATE, t.elapsed());
+            scanned += n as u64;
+
+            let t = Instant::now();
+            let new_centroids = stats.centroids(&centroids, k, m);
+            inertia = stats.inertia;
+            timer.add(stage::FORM_CENTROIDS, t.elapsed());
+
+            let t = Instant::now();
+            let shift = max_centroid_shift(&centroids, &new_centroids, k, m);
+            timer.add(stage::CONVERGENCE, t.elapsed());
+
+            centroids = new_centroids;
+            iterations += 1;
+
+            if shift <= cfg.tol {
+                converged = true;
+                break;
+            }
+        }
+    }
+
+    let (stats, mut io) = engine.finish();
+    io.bytes_read += init_bytes;
+
+    let base = if cfg.metric == Metric::Euclidean {
+        simd::panel_path_name()
+    } else {
+        "scalar"
+    };
+    let assign_path = if cfg.mini_batch.is_some() {
+        format!("stream+mb+{base}")
+    } else {
+        format!("stream+{base}")
+    };
+
+    let metrics = RunMetrics {
+        regime: "stream".to_string(),
+        n,
+        m,
+        k,
+        iterations,
+        inertia,
+        converged,
+        wall: wall_start.elapsed(),
+        stages: timer,
+        prune: PruneCounters {
+            pruned_rows: 0,
+            scanned_rows: scanned,
+        },
+        assign_path,
+        f32: simd::F32Counters::default(),
+        io,
+    };
+
+    Ok(FitResult {
+        labels: stats.labels,
+        centroids,
+        inertia,
+        iterations,
+        converged,
+        diameter: None,
+        center_of_gravity: cog,
+        metrics,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shard::MemShardSource;
+    use crate::data::synthetic::{generate, GmmSpec};
+
+    fn base_cfg(k: usize) -> KMeansConfig {
+        KMeansConfig::new(k)
+            .init_method(InitMethod::Random)
+            .seed(11)
+            .threads(3)
+    }
+
+    #[test]
+    fn validate_gates_init_and_scores_and_batch() {
+        let err = validate_stream(&KMeansConfig::new(3).seed(1), 100).unwrap_err();
+        assert!(err.to_string().contains("random"), "{err}");
+        let err =
+            validate_stream(&base_cfg(3).score_path(ScorePath::F32Refined), 100).unwrap_err();
+        assert!(err.to_string().contains("f64"), "{err}");
+        let err = validate_stream(&base_cfg(5).mini_batch(3), 100).unwrap_err();
+        assert!(err.to_string().contains("mini-batch"), "{err}");
+        let err = validate_stream(&base_cfg(5).mini_batch(200), 100).unwrap_err();
+        assert!(err.to_string().contains("mini-batch"), "{err}");
+        assert!(validate_stream(&base_cfg(5).mini_batch(50), 100).is_ok());
+        assert!(validate_stream(&base_cfg(5), 100).is_ok());
+    }
+
+    #[test]
+    fn full_pass_stream_fit_converges() {
+        let g = generate(&GmmSpec::new(900, 6, 4).seed(2).spread(0.05).center_scale(25.0));
+        let src = MemShardSource::new(&g.dataset);
+        let res = run_stream(&src, &base_cfg(4)).unwrap();
+        assert!(res.converged);
+        assert_eq!(res.labels.len(), 900);
+        assert_eq!(res.metrics.regime, "stream");
+        assert!(res.metrics.assign_path.starts_with("stream+"), "{}", res.metrics.assign_path);
+        assert!(res.metrics.io.bytes_read > 0);
+        // full-pass scan accounting: n rows per iteration
+        assert_eq!(res.metrics.prune.scanned_rows, (900 * res.iterations) as u64);
+    }
+
+    #[test]
+    fn mini_batch_runs_and_reports_final_pass() {
+        let g = generate(&GmmSpec::new(600, 5, 3).seed(3).spread(0.05).center_scale(25.0));
+        let src = MemShardSource::new(&g.dataset);
+        let cfg = base_cfg(3).mini_batch(128).max_iters(30).tol(1e-4);
+        let res = run_stream(&src, &cfg).unwrap();
+        assert_eq!(res.labels.len(), 600, "final pass labels every row");
+        assert!(res.metrics.assign_path.starts_with("stream+mb+"));
+        assert_eq!(
+            res.metrics.stages.count(FINAL_ASSIGN),
+            1,
+            "exactly one exact full pass"
+        );
+        assert!(res.inertia.is_finite());
+    }
+}

@@ -19,7 +19,11 @@
 //!
 //! * **data** ([`data`]) — the dataset pipeline: one contiguous row-major
 //!   f32 matrix, synthetic generation, CSV/binary I/O, feature scaling.
-//!   Shards are zero-copy row ranges over this buffer.
+//!   Shards are zero-copy row ranges over this buffer. For data that
+//!   must not materialize, [`data::shard::ShardSource`] abstracts
+//!   "contiguous row chunks on demand": an in-memory impl wraps
+//!   `Dataset`, an on-disk impl seeks straight into the `.pcb` data
+//!   section (CRC and the finite-samples policy verified once at open).
 //! * **kernel** ([`kernel`]) — the single home of every hot CPU loop:
 //!   block-tiled, metric-monomorphized stage math. Dense Euclidean
 //!   assignment is a **register-blocked GEMM-style micro-kernel**
@@ -55,7 +59,16 @@
 //!   shard; gpu ships shards to the PJRT artifacts and keeps the dense
 //!   per-iteration sweep (pruning is per-row divergent — the wrong shape
 //!   for the wide device kernels). No distance/argmin/reduction loop
-//!   lives here.
+//!   lives here. The **out-of-core streaming engine**
+//!   ([`exec::stream`]) is the fourth data-movement shape: chunks from
+//!   a [`data::shard::ShardSource`] cycle through a double-buffered
+//!   ring bounded by a memory budget — one pool worker prefetches
+//!   chunk *t+1* while the rest run the same micro-kernel/SIMD
+//!   assignment on chunk *t* — and per-chunk statistics fold in
+//!   deterministic chunk order, so a full streamed pass is bit-equal
+//!   to the in-core multi executor whenever chunk boundaries match its
+//!   shards. The driver layer adds an opt-in mini-batch mode
+//!   ([`kmeans::stream`]) on the same source.
 //! * **driver** ([`kmeans`], [`hier`], CLI) — the regime-agnostic Lloyd
 //!   loop driving one assign-session per fit, initialization, regime
 //!   policy, metrics (including pruning-rate counters) and reporting.

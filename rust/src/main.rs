@@ -1,7 +1,8 @@
 //! parclust CLI — the launcher of the clustering package.
 //!
 //! Subcommands:
-//! * `run`      — cluster a CSV or synthetic dataset under a regime
+//! * `run`      — cluster a CSV, .pcb, or synthetic dataset under a
+//!   regime (add `--engine stream` to fit a .pcb out of core)
 //! * `generate` — emit synthetic datasets (gmm / survey / expression)
 //! * `bench`    — quick three-regime comparison on one workload
 //! * `simulate` — predicted timings on the paper's 2014 testbed model
@@ -20,8 +21,10 @@ use parclust::config::{parse_diameter_mode, DataSource, RunConfig};
 use parclust::data::scale::Scaler;
 use parclust::data::synthetic::{expression, generate, survey, GmmSpec};
 use parclust::data::{csv, Dataset};
+use parclust::cliargs::parse_human_int;
+use parclust::data::binfmt;
 use parclust::exec::regime::{allowed_for, Regime};
-use parclust::kmeans::{fit, InitMethod, KMeansConfig};
+use parclust::kmeans::{fit, fit_pcb, Engine, InitMethod, KMeansConfig};
 use parclust::metric::Metric;
 use parclust::report;
 use parclust::simulate::{predict, Testbed, WorkloadSpec};
@@ -35,7 +38,7 @@ fn app() -> AppSpec {
         commands: vec![
             CommandSpec::new("run", "cluster a dataset")
                 .opt("config", Some('c'), None, "JSON run-config file")
-                .opt("input", Some('i'), None, "input CSV path")
+                .opt("input", Some('i'), None, "input path (.csv or .pcb)")
                 .opt("n", None, Some("100k"), "synthetic sample count")
                 .opt("m", None, Some("25"), "synthetic feature count")
                 .opt("true-k", None, Some("10"), "synthetic mixture components")
@@ -56,6 +59,13 @@ fn app() -> AppSpec {
                 .opt("tol", None, Some("0"),
                      "squared centroid-shift tolerance (0 = exact congruence)")
                 .opt("seed", None, Some("0"), "PRNG seed")
+                .opt("engine", None, Some("incore"),
+                     "incore | stream (out-of-core over a .pcb)")
+                .opt("mini-batch", None, None,
+                     "streaming engine: sampled rows per iteration")
+                .opt("memory-budget", None, None,
+                     "streaming engine: resident chunk-buffer bytes \
+                      (e.g. 64m; default 256 MiB)")
                 .opt("scale", None, Some("none"), "none | minmax | zscore")
                 .opt("labels", None, None, "write per-row labels to this path")
                 .opt("report", None, None, "write JSON run report to this path")
@@ -157,7 +167,11 @@ fn build_run_config(p: &Parsed) -> Result<RunConfig, String> {
         None => RunConfig::default_synthetic(),
     };
     if let Some(input) = p.get("input") {
-        cfg.source = DataSource::Csv(PathBuf::from(input));
+        cfg.source = if input.ends_with(".pcb") {
+            DataSource::Pcb(PathBuf::from(input))
+        } else {
+            DataSource::Csv(PathBuf::from(input))
+        };
     } else if p.get("config").is_none() {
         cfg.source = DataSource::Synthetic {
             n: p.usize_or("n", 100_000).map_err(|e| e.to_string())?,
@@ -198,6 +212,17 @@ fn build_run_config(p: &Parsed) -> Result<RunConfig, String> {
         cfg.kmeans.score_path = parclust::exec::ScorePath::from_str(s)
             .ok_or_else(|| format!("unknown score path '{s}' (f64 | f32)"))?;
     }
+    if let Some(e) = p.get("engine") {
+        cfg.kmeans.engine =
+            Engine::from_str(e).ok_or_else(|| format!("unknown engine '{e}'"))?;
+    }
+    if let Some(b) = p.get_usize("mini-batch").map_err(|e| e.to_string())? {
+        cfg.kmeans.mini_batch = Some(b);
+    }
+    if let Some(mb) = p.get("memory-budget") {
+        cfg.kmeans.memory_budget =
+            Some(parse_human_int(mb).map_err(|e| format!("memory budget: {e}"))?);
+    }
     if let Some(s) = p.get("scale") {
         if !["none", "minmax", "zscore"].contains(&s) {
             return Err(format!("unknown scaling '{s}'"));
@@ -221,6 +246,9 @@ fn load_dataset(cfg: &RunConfig) -> Result<Dataset, String> {
         DataSource::Csv(path) => {
             csv::read_path(path).map_err(|e| format!("{}: {e}", path.display()))
         }
+        DataSource::Pcb(path) => {
+            binfmt::read_path(path).map_err(|e| format!("{}: {e}", path.display()))
+        }
         DataSource::Synthetic { n, m, k } => {
             log_info!("generating synthetic gmm: n={n} m={m} k={k}");
             Ok(generate(&GmmSpec::new(*n, *m, *k).seed(cfg.kmeans.seed)).dataset)
@@ -230,23 +258,41 @@ fn load_dataset(cfg: &RunConfig) -> Result<Dataset, String> {
 
 fn cmd_run(p: &Parsed) -> Result<(), String> {
     let cfg = build_run_config(p)?;
-    let mut ds = load_dataset(&cfg)?;
-    match cfg.scaling.as_str() {
-        "minmax" => Scaler::fit_min_max(&ds).transform(&mut ds),
-        "zscore" => Scaler::fit_z_score(&ds).transform(&mut ds),
-        _ => {}
-    }
-    let allowed = allowed_for(ds.n());
-    let allowed_str = if allowed.gpu {
-        "single, multi, gpu"
-    } else if allowed.multi {
-        "single, multi"
-    } else {
-        "single"
-    };
-    log_info!("n={} m={} — policy allows: {allowed_str}", ds.n(), ds.m());
     let t0 = Instant::now();
-    let result = fit(&ds, &cfg.kmeans).map_err(|e| e.to_string())?;
+    let result = match (cfg.kmeans.engine, &cfg.source) {
+        (Engine::Stream, DataSource::Pcb(path)) => {
+            // Out of core: rows go straight from the .pcb data section
+            // into the streaming engine's chunk buffers — the matrix
+            // never materializes.
+            if cfg.scaling != "none" {
+                return Err(
+                    "feature scaling rewrites every sample, which needs the \
+                     in-core engine; stream a pre-scaled .pcb instead"
+                        .into(),
+                );
+            }
+            log_info!("streaming {} out of core", path.display());
+            fit_pcb(path, &cfg.kmeans).map_err(|e| e.to_string())?
+        }
+        _ => {
+            let mut ds = load_dataset(&cfg)?;
+            match cfg.scaling.as_str() {
+                "minmax" => Scaler::fit_min_max(&ds).transform(&mut ds),
+                "zscore" => Scaler::fit_z_score(&ds).transform(&mut ds),
+                _ => {}
+            }
+            let allowed = allowed_for(ds.n());
+            let allowed_str = if allowed.gpu {
+                "single, multi, gpu"
+            } else if allowed.multi {
+                "single, multi"
+            } else {
+                "single"
+            };
+            log_info!("n={} m={} — policy allows: {allowed_str}", ds.n(), ds.m());
+            fit(&ds, &cfg.kmeans).map_err(|e| e.to_string())?
+        }
+    };
     println!("{}", result.metrics.render());
     log_info!("total wall: {}", fmt_duration(t0.elapsed()));
     if let Some(path) = &cfg.labels_path {
@@ -473,7 +519,6 @@ fn cmd_selectk(p: &Parsed) -> Result<(), String> {
 }
 
 fn cmd_convert(p: &Parsed) -> Result<(), String> {
-    use parclust::data::binfmt;
     let input = p.positionals.first().ok_or("convert needs <input>")?;
     let output = p.positionals.get(1).ok_or("convert needs <output>")?;
     let in_path = PathBuf::from(input);

@@ -9,6 +9,7 @@
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
+use crate::exec::stream::IoCounters;
 use crate::json::Json;
 use crate::kernel::pruned::PruneCounters;
 use crate::kernel::simd::F32Counters;
@@ -102,6 +103,9 @@ pub struct RunMetrics {
     /// f32 score-path counters (`kernel::simd`); all zero unless the
     /// opt-in [`crate::exec::ScorePath::F32Refined`] ran.
     pub f32: F32Counters,
+    /// Streaming-engine I/O counters (`exec::stream`); all zero for the
+    /// in-core regimes.
+    pub io: IoCounters,
 }
 
 impl RunMetrics {
@@ -123,6 +127,15 @@ impl RunMetrics {
             ("f32_refined_rows", Json::num(self.f32.refined_rows as f64)),
             ("f32_relabeled_rows", Json::num(self.f32.relabeled_rows as f64)),
             ("f32_refine_rate", Json::num(self.f32.refine_rate())),
+            ("io_bytes_read", Json::num(self.io.bytes_read as f64)),
+            (
+                "io_chunks_prefetched",
+                Json::num(self.io.chunks_prefetched as f64),
+            ),
+            (
+                "io_prefetch_stall_s",
+                Json::num(self.io.prefetch_stall.as_secs_f64()),
+            ),
             ("stages", self.stages.to_json()),
         ])
     }
@@ -144,6 +157,12 @@ impl RunMetrics {
                 self.f32.refined_rows,
                 self.f32.relabeled_rows,
                 self.f32.refine_rate() * 100.0
+            ));
+        }
+        if self.io.bytes_read > 0 {
+            s.push_str(&format!(
+                "  io: {} bytes read / {} chunks prefetched / {:?} stalled\n",
+                self.io.bytes_read, self.io.chunks_prefetched, self.io.prefetch_stall
             ));
         }
         if self.prune.pruned_rows + self.prune.scanned_rows > 0 {
@@ -223,6 +242,11 @@ mod tests {
             prune: PruneCounters { pruned_rows: 750, scanned_rows: 250 },
             assign_path: "pruned+micro".into(),
             f32: F32Counters { scored_rows: 1000, refined_rows: 40, relabeled_rows: 3 },
+            io: IoCounters {
+                bytes_read: 4096,
+                chunks_prefetched: 7,
+                prefetch_stall: Duration::from_millis(3),
+            },
         };
         assert!((m.prune.rate() - 0.75).abs() < 1e-12);
         let j = m.to_json();
@@ -234,8 +258,12 @@ mod tests {
         assert_eq!(parsed.req_str("assign_path").unwrap(), "pruned+micro");
         assert_eq!(parsed.req_usize("f32_refined_rows").unwrap(), 40);
         assert_eq!(parsed.req_usize("f32_relabeled_rows").unwrap(), 3);
+        assert_eq!(parsed.req_usize("io_bytes_read").unwrap(), 4096);
+        assert_eq!(parsed.req_usize("io_chunks_prefetched").unwrap(), 7);
+        assert!(parsed.get("io_prefetch_stall_s").is_some());
         assert!(parsed.get("stages").unwrap().get("assign").is_some());
         assert!(m.render().contains("75.0% pruned"), "{}", m.render());
+        assert!(m.render().contains("4096 bytes read"), "{}", m.render());
         assert!(m.render().contains("assign path: pruned+micro"), "{}", m.render());
         assert!(m.render().contains("4.0% refined"), "{}", m.render());
     }

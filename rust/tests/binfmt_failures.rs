@@ -1,0 +1,132 @@
+//! `.pcb` failure paths: every way a file can be damaged must surface
+//! as a typed [`DataError`] — never a panic, never silent garbage —
+//! from **both** readers: the one-shot [`binfmt::read_path`] loader and
+//! the streaming [`DiskShardSource::open`] used by the out-of-core
+//! engine. The streaming reader validates eagerly at open, so a fit
+//! over a damaged file fails before any clustering work starts.
+
+use parclust::data::binfmt;
+use parclust::data::shard::DiskShardSource;
+use parclust::data::synthetic::{generate, GmmSpec};
+use parclust::data::DataError;
+use std::path::PathBuf;
+
+const N: usize = 64;
+const M: usize = 3;
+
+/// Header layout (binfmt module doc): magic 8 + version 4 + n 8 + m 4 +
+/// names length 4 = 28 fixed bytes, then the names blob, then data.
+const M_FIELD_OFFSET: usize = 20;
+const NAMES_LEN_OFFSET: usize = 24;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("parclust_binfmt_failures");
+    let _ = std::fs::create_dir_all(&dir);
+    dir.join(name)
+}
+
+/// Write a valid `.pcb` and return its bytes for surgical damage.
+fn valid_bytes() -> Vec<u8> {
+    let g = generate(&GmmSpec::new(N, M, 2).seed(9));
+    let path = tmp("pristine.pcb");
+    binfmt::write_path(&g.dataset, &path).unwrap();
+    std::fs::read(&path).unwrap()
+}
+
+fn names_len(bytes: &[u8]) -> usize {
+    u32::from_le_bytes([
+        bytes[NAMES_LEN_OFFSET],
+        bytes[NAMES_LEN_OFFSET + 1],
+        bytes[NAMES_LEN_OFFSET + 2],
+        bytes[NAMES_LEN_OFFSET + 3],
+    ]) as usize
+}
+
+/// Both readers over the same damaged file; each must return `Err`,
+/// and the errors are handed to the caller for kind assertions.
+fn both_readers(name: &str, bytes: &[u8]) -> (DataError, DataError) {
+    let path = tmp(name);
+    std::fs::write(&path, bytes).unwrap();
+    let one_shot = binfmt::read_path(&path).expect_err("read_path must reject");
+    let streaming = DiskShardSource::open(&path)
+        .map(|_| ())
+        .expect_err("DiskShardSource::open must reject");
+    (one_shot, streaming)
+}
+
+#[test]
+fn truncated_mid_data_is_io_error() {
+    let bytes = valid_bytes();
+    let data_start = 28 + names_len(&bytes);
+    let cut = data_start + (N * M * 4) / 2;
+    let (a, b) = both_readers("trunc_data.pcb", &bytes[..cut]);
+    for err in [a, b] {
+        assert!(matches!(err, DataError::Io(_)), "expected Io, got {err}");
+    }
+}
+
+#[test]
+fn truncated_crc_is_io_error() {
+    let bytes = valid_bytes();
+    let cut = bytes.len() - 2; // half the trailing CRC survives
+    let (a, b) = both_readers("trunc_crc.pcb", &bytes[..cut]);
+    for err in [a, b] {
+        assert!(matches!(err, DataError::Io(_)), "expected Io, got {err}");
+    }
+}
+
+#[test]
+fn flipped_data_byte_is_checksum_mismatch() {
+    let mut bytes = valid_bytes();
+    let data_start = 28 + names_len(&bytes);
+    bytes[data_start + 5] ^= 0x40;
+    let (a, b) = both_readers("flip_data.pcb", &bytes);
+    for err in [a, b] {
+        assert!(
+            matches!(&err, DataError::Parse { msg, .. } if msg.contains("checksum")),
+            "expected checksum mismatch, got {err}"
+        );
+    }
+}
+
+#[test]
+fn flipped_crc_byte_is_checksum_mismatch() {
+    let mut bytes = valid_bytes();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xFF;
+    let (a, b) = both_readers("flip_crc.pcb", &bytes);
+    for err in [a, b] {
+        assert!(
+            matches!(&err, DataError::Parse { msg, .. } if msg.contains("checksum")),
+            "expected checksum mismatch, got {err}"
+        );
+    }
+}
+
+#[test]
+fn names_shape_mismatch_is_parse_error() {
+    // Bump the m field so the names blob no longer matches the shape;
+    // the header check fires before any data is read.
+    let mut bytes = valid_bytes();
+    bytes[M_FIELD_OFFSET] = (M + 1) as u8;
+    let (a, b) = both_readers("m_mismatch.pcb", &bytes);
+    for err in [a, b] {
+        assert!(
+            matches!(&err, DataError::Parse { msg, .. } if msg.contains("names")),
+            "expected names/shape mismatch, got {err}"
+        );
+    }
+}
+
+#[test]
+fn zero_features_is_implausible_shape() {
+    let mut bytes = valid_bytes();
+    bytes[M_FIELD_OFFSET..M_FIELD_OFFSET + 4].copy_from_slice(&0u32.to_le_bytes());
+    let (a, b) = both_readers("m_zero.pcb", &bytes);
+    for err in [a, b] {
+        assert!(
+            matches!(&err, DataError::Parse { msg, .. } if msg.contains("shape")),
+            "expected implausible shape, got {err}"
+        );
+    }
+}

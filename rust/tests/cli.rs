@@ -192,6 +192,53 @@ fn convert_roundtrips_csv_and_binary() {
 }
 
 #[test]
+fn run_stream_engine_over_pcb() {
+    // generate → convert → fit the .pcb out of core: the end-to-end
+    // path CI smokes (engine=stream, random init, tiny memory budget).
+    let dir = tmpdir("stream");
+    let csv_path = dir.join("d.csv");
+    let pcb_path = dir.join("d.pcb");
+    let out = bin()
+        .args(["generate", "--n", "600", "--m", "5", "--k", "3", "--seed", "7"])
+        .arg(csv_path.to_str().unwrap())
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let out = bin()
+        .args(["convert", csv_path.to_str().unwrap(), pcb_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let out = bin()
+        .args([
+            "run", "--input", pcb_path.to_str().unwrap(), "--k", "3",
+            "--engine", "stream", "--init", "random", "--memory-budget", "64k",
+            "--seed", "7",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("regime=stream"), "{stdout}");
+    assert!(stdout.contains("bytes read"), "{stdout}");
+}
+
+#[test]
+fn mini_batch_requires_stream_engine() {
+    let out = bin()
+        .args(["run", "--n", "1000", "--m", "4", "--k", "2", "--mini-batch", "64",
+               "--regime", "single"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("stream"));
+}
+
+#[test]
 fn hcluster_cli_runs() {
     let out = bin()
         .args(["hcluster", "--n", "300", "--m", "5", "--true-k", "3",

@@ -1,0 +1,150 @@
+//! The streaming engine's signature contract: with chunk boundaries
+//! matching the in-core multi executor's `split_ranges(n, threads)`
+//! shards, a streamed pass — and a whole streamed fit — is **bit-equal**
+//! to the in-core path: labels, counts, coordinate sums, inertia,
+//! centroid trajectory, iteration count, convergence flag, center of
+//! gravity. Also pins that the on-disk `.pcb` source produces the
+//! identical fit to the in-memory source, and that mini-batch mode is
+//! deterministic under a fixed seed and sane on separated blobs.
+
+use parclust::data::binfmt;
+use parclust::data::shard::{DiskShardSource, MemShardSource};
+use parclust::data::synthetic::{generate, GmmSpec};
+use parclust::exec::multi::MultiExecutor;
+use parclust::exec::regime::Regime;
+use parclust::exec::stream::StreamEngine;
+use parclust::exec::Executor;
+use parclust::kmeans::stream::{run_stream, run_stream_chunked};
+use parclust::kmeans::{fit, InitMethod, KMeansConfig};
+use parclust::metric::Metric;
+use parclust::pool::split_ranges;
+use parclust::testkit::lattice_blobs;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("parclust_stream_parity");
+    let _ = std::fs::create_dir_all(&dir);
+    dir.join(name)
+}
+
+fn multi_cfg(k: usize, seed: u64, threads: usize) -> KMeansConfig {
+    KMeansConfig::new(k)
+        .regime(Regime::Multi)
+        .init_method(InitMethod::Random)
+        .seed(seed)
+        .threads(threads)
+}
+
+/// Step-level parity along an evolving centroid trajectory: every
+/// iteration's statistics from the streamed pass compare `==` to the
+/// in-core multi executor's on the same centroid table.
+#[test]
+fn step_trajectory_bitwise_parity() {
+    let (ds, init) = lattice_blobs(1_503, 7, 5);
+    let threads = 4;
+    let multi = MultiExecutor::new(threads);
+    let src = MemShardSource::new(&ds);
+    let chunks = split_ranges(ds.n(), threads);
+    let mut eng = StreamEngine::with_chunks(&src, 5, Metric::Euclidean, threads, chunks);
+    let mut cent = init;
+    for it in 0..4 {
+        let reference = multi.assign_update(&ds, &cent, 5, Metric::Euclidean).unwrap();
+        let streamed = eng.step(&cent).unwrap();
+        assert_eq!(streamed.labels, reference.labels, "iter {it}: labels");
+        assert_eq!(streamed.counts, reference.counts, "iter {it}: counts");
+        assert_eq!(streamed.sums, reference.sums, "iter {it}: sums");
+        assert_eq!(streamed.inertia, reference.inertia, "iter {it}: inertia");
+        cent = reference.centroids(&cent, 5, ds.m());
+    }
+}
+
+/// Whole-fit parity: `run_stream_chunked` with matched chunks vs the
+/// in-core `fit` under the multi regime with random init — the same
+/// seed replays the same initialization, so every derived quantity
+/// must compare `==`.
+#[test]
+fn full_fit_bitwise_parity_with_matched_chunks() {
+    let g = generate(&GmmSpec::new(1_201, 6, 4).seed(2).spread(0.05).center_scale(25.0));
+    let ds = &g.dataset;
+    let threads = 3;
+    let cfg = multi_cfg(4, 17, threads).max_iters(25);
+    let incore = fit(ds, &cfg).unwrap();
+    let src = MemShardSource::new(ds);
+    let streamed = run_stream_chunked(&src, &cfg, split_ranges(ds.n(), threads)).unwrap();
+    assert_eq!(streamed.labels, incore.labels, "labels");
+    assert_eq!(streamed.centroids, incore.centroids, "centroid trajectory endpoint");
+    assert_eq!(streamed.inertia, incore.inertia, "inertia");
+    assert_eq!(streamed.iterations, incore.iterations, "iteration count");
+    assert_eq!(streamed.converged, incore.converged, "convergence flag");
+    assert_eq!(
+        streamed.center_of_gravity, incore.center_of_gravity,
+        "center of gravity"
+    );
+    assert_eq!(streamed.metrics.regime, "stream");
+}
+
+/// The on-disk source decodes the identical f32 rows the in-memory
+/// source hands out, so the whole fit is identical — and both match
+/// the in-core path.
+#[test]
+fn disk_source_fit_identical_to_mem_source() {
+    let g = generate(&GmmSpec::new(777, 5, 3).seed(3).spread(0.1).center_scale(20.0));
+    let ds = &g.dataset;
+    let path = tmp("disk_parity.pcb");
+    binfmt::write_path(ds, &path).unwrap();
+    let threads = 2;
+    let cfg = multi_cfg(3, 23, threads).max_iters(20);
+    let chunks = split_ranges(ds.n(), threads);
+
+    let mem_src = MemShardSource::new(ds);
+    let mem = run_stream_chunked(&mem_src, &cfg, chunks.clone()).unwrap();
+    let disk_src = DiskShardSource::open(&path).unwrap();
+    let disk = run_stream_chunked(&disk_src, &cfg, chunks).unwrap();
+
+    assert_eq!(disk.labels, mem.labels, "labels");
+    assert_eq!(disk.centroids, mem.centroids, "centroids");
+    assert_eq!(disk.inertia, mem.inertia, "inertia");
+    assert_eq!(disk.iterations, mem.iterations, "iterations");
+    assert_eq!(disk.center_of_gravity, mem.center_of_gravity, "cog");
+
+    let incore = fit(ds, &cfg).unwrap();
+    assert_eq!(disk.labels, incore.labels, "disk vs in-core labels");
+    assert_eq!(disk.inertia, incore.inertia, "disk vs in-core inertia");
+}
+
+/// Mini-batch iterations sample through a seeded `Pcg32`: the same
+/// config must reproduce the identical fit, run to run.
+#[test]
+fn mini_batch_deterministic_under_fixed_seed() {
+    let g = generate(&GmmSpec::new(1_000, 6, 4).seed(4).spread(0.05).center_scale(25.0));
+    let src = MemShardSource::new(&g.dataset);
+    let cfg = multi_cfg(4, 31, 3).mini_batch(128).max_iters(40).tol(1e-4);
+    let a = run_stream(&src, &cfg).unwrap();
+    let b = run_stream(&src, &cfg).unwrap();
+    assert_eq!(a.labels, b.labels, "labels");
+    assert_eq!(a.centroids, b.centroids, "centroids");
+    assert_eq!(a.inertia, b.inertia, "inertia");
+    assert_eq!(a.iterations, b.iterations, "iterations");
+}
+
+/// On well-separated blobs with the same random init, mini-batch must
+/// converge (the per-centroid steps decay) and land near the full-pass
+/// objective.
+#[test]
+fn mini_batch_converges_near_full_fit_on_separated_blobs() {
+    let g = generate(&GmmSpec::new(1_600, 5, 4).seed(6).spread(0.05).center_scale(25.0));
+    let ds = &g.dataset;
+    let cfg = multi_cfg(4, 41, 3).max_iters(60).tol(1e-3);
+    let incore = fit(ds, &cfg).unwrap();
+    let src = MemShardSource::new(ds);
+    let mini = run_stream(&src, &cfg.clone().mini_batch(256)).unwrap();
+    assert_eq!(mini.labels.len(), ds.n(), "final pass labels every row");
+    assert!(mini.converged, "decaying steps must reach tol within 60 iterations");
+    assert!(mini.inertia.is_finite() && mini.inertia > 0.0);
+    assert!(
+        mini.inertia <= 2.0 * incore.inertia,
+        "mini-batch inertia {} far off the full-pass objective {}",
+        mini.inertia,
+        incore.inertia
+    );
+}
