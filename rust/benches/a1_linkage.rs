@@ -9,9 +9,10 @@
 
 mod common;
 
-use parclust::benchkit::{fmt_duration, Bencher, Table};
+use parclust::benchkit::{fmt_duration, write_bench_json, Bencher, Table};
 use parclust::exec::single::SingleExecutor;
 use parclust::hier::{agglomerate, matrix::Builder, Linkage};
+use parclust::json::Json;
 use parclust::kmeans::{fit_with, DiameterMode, KMeansConfig};
 use parclust::quality::adjusted_rand_index;
 
@@ -36,11 +37,17 @@ fn main() {
         let _ = fit_with(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
     });
     let km_res = fit_with(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+    let km_ari = adjusted_rand_index(&km_res.labels, &g.labels);
     table.row(vec![
         "k-means (paper)".into(),
         fmt_duration(km.mean),
-        format!("{:.3}", adjusted_rand_index(&km_res.labels, &g.labels)),
+        format!("{km_ari:.3}"),
     ]);
+    let mut method_rows: Vec<Json> = vec![Json::obj(vec![
+        ("method", Json::str("k-means")),
+        ("wall", km.to_json()),
+        ("ari", Json::num(km_ari)),
+    ])];
 
     let kmeans_wall = km.mean.as_secs_f64();
     let mut complete_wall = 0.0f64;
@@ -58,13 +65,19 @@ fn main() {
         });
         let dm = builder.build(&g.dataset, squared).unwrap();
         let labels = agglomerate(dm, linkage).cut(k);
+        let ari = adjusted_rand_index(&labels, &g.labels);
         if linkage == Linkage::Complete {
             complete_wall = st.mean.as_secs_f64();
         }
+        method_rows.push(Json::obj(vec![
+            ("method", Json::str(format!("{}-linkage", linkage.name()))),
+            ("wall", st.to_json()),
+            ("ari", Json::num(ari)),
+        ]));
         table.row(vec![
             format!("{} linkage", linkage.name()),
             fmt_duration(st.mean),
-            format!("{:.3}", adjusted_rand_index(&labels, &g.labels)),
+            format!("{ari:.3}"),
         ]);
     }
     println!("{}", table.render());
@@ -81,6 +94,7 @@ fn main() {
         &["n", "single", "multi(8)", "gpu (pdist artifact)"],
     );
     let device = common::try_device();
+    let mut matrix_rows: Vec<Json> = Vec::new();
     for nn in [500usize, 1_000, 2_000] {
         let gg = common::workload(nn, m, k, 7);
         let s = bencher.bench(|| {
@@ -95,6 +109,15 @@ fn main() {
                 let _ = b.build(&gg.dataset, false).unwrap();
             })
         });
+        matrix_rows.push(Json::obj(vec![
+            ("n", Json::num(nn as f64)),
+            ("single", s.to_json()),
+            ("multi", mt.to_json()),
+            (
+                "gpu",
+                gp.as_ref().map(|g| g.to_json()).unwrap_or(Json::Null),
+            ),
+        ]));
         table.row(vec![
             nn.to_string(),
             fmt_duration(s.mean),
@@ -103,4 +126,17 @@ fn main() {
         ]);
     }
     println!("{}", table.render());
+
+    write_bench_json(
+        "a1",
+        &Json::obj(vec![
+            ("bench", Json::str("a1_linkage")),
+            ("n", Json::num(n as f64)),
+            ("m", Json::num(m as f64)),
+            ("k", Json::num(k as f64)),
+            ("complete_over_kmeans_factor", Json::num(factor)),
+            ("method_rows", Json::arr(method_rows)),
+            ("matrix_rows", Json::arr(matrix_rows)),
+        ]),
+    );
 }

@@ -13,10 +13,13 @@ use parclust::benchkit::{fmt_duration, write_bench_json, Bencher, Table};
 use parclust::exec::gpu::GpuExecutor;
 use parclust::exec::regime::Regime;
 use parclust::exec::single::SingleExecutor;
-use parclust::exec::Executor;
+use parclust::exec::{AssignSession, Executor};
 use parclust::json::Json;
 use parclust::metric::Metric;
-use parclust::simulate::{predict, Testbed, WorkloadSpec};
+use parclust::simulate::{
+    modelled_crossover, overlap_report, predict, predict_gpu_pipelined, Testbed,
+    WorkloadSpec,
+};
 
 fn main() {
     common::banner("F1", "GPU offload loses below the compute-sufficiency crossover");
@@ -65,8 +68,77 @@ fn main() {
         "crossover {crossover} outside plausible band"
     );
 
+    // ---- F8: the async pipeline's modelled overlap at the headline shape ---
+    let headline = WorkloadSpec {
+        n: 2_000_000,
+        m,
+        k,
+        iterations: 20,
+        diameter_candidates: 4096,
+        threads: 8,
+    };
+    let rep = overlap_report(&headline, &bed);
+    let single_total = predict(&headline, &bed, Regime::Single).total;
+    let pipelined_total = predict_gpu_pipelined(&headline, &bed).total;
+    let gain = single_total / pipelined_total;
+    let pipe_crossover = modelled_crossover(&bed, m, k, 20, 8)
+        .expect("pipelined gpu never beats multi — model broken");
+
+    let mut overlap_table = Table::new(
+        "F8 modelled overlap (n=2e6, m=25, k=10, pipelined assignment iteration)",
+        &["quantity", "value"],
+    );
+    overlap_table
+        .row(vec!["chunks / iteration".into(), rep.chunks.to_string()])
+        .row(vec![
+            "synchronous iteration".into(),
+            format!("{:.4} s", rep.sync_seconds),
+        ])
+        .row(vec![
+            "pipelined iteration".into(),
+            format!("{:.4} s", rep.pipelined_seconds),
+        ])
+        .row(vec![
+            "device busy".into(),
+            format!("{:.4} s", rep.device_busy_seconds),
+        ])
+        .row(vec![
+            "device idle fraction".into(),
+            format!("{:.1} %", rep.device_idle_fraction * 100.0),
+        ])
+        .row(vec![
+            "single-thread fit / pipelined gpu fit".into(),
+            format!("{gain:.2}x"),
+        ])
+        .row(vec![
+            "pipelined crossover n".into(),
+            pipe_crossover.to_string(),
+        ]);
+    println!("{}", overlap_table.render());
+
+    assert!(
+        rep.device_idle_fraction < 0.5,
+        "pipeline leaves the device idle {:.0}% of the iteration",
+        rep.device_idle_fraction * 100.0
+    );
+    assert!(
+        rep.pipelined_seconds <= rep.sync_seconds * (1.0 + 1e-9),
+        "pipelined schedule slower than synchronous: {} vs {}",
+        rep.pipelined_seconds,
+        rep.sync_seconds
+    );
+    assert!(
+        (3.5..10.0).contains(&gain),
+        "gpu-vs-single gain {gain:.2} outside the paper's ~5x band"
+    );
+    assert!(
+        (4_096..=2_097_152).contains(&pipe_crossover),
+        "pipelined crossover {pipe_crossover} outside plausible band"
+    );
+
     // ---- real offload overhead on this host's PJRT device ------------------
     let mut real_rows: Vec<Json> = Vec::new();
+    let mut session_counters = Json::Null;
     if let Some(dev) = common::try_device() {
         let bencher = Bencher::quick().from_env();
         let mut table = Table::new(
@@ -107,6 +179,39 @@ fn main() {
              offload always costs more — the point is the fixed per-call floor \
              visible at small n, the same effect the paper reports.)"
         );
+
+        // A real pipelined session run: three iterations over a pinned
+        // dataset, reporting the overlap counters (unasserted — they are
+        // host-dependent; the modelled numbers above carry the claim).
+        let g = common::workload(64_000, m, k, 4);
+        let cent = g.dataset.gather(&(0..k).collect::<Vec<_>>());
+        let gpu = GpuExecutor::new(dev.clone(), 2);
+        let mut sess = gpu
+            .assign_session(&g.dataset, k, Metric::Euclidean)
+            .expect("gpu session");
+        for _ in 0..3 {
+            sess.step(&cent).expect("session step");
+        }
+        let dc = sess.device_counters();
+        println!(
+            "pipelined session (n=64k, 3 iterations, sim device): \
+             {} tasks, queue depth <= {}, {:.1} MB up / {:.1} MB down, \
+             device idle {:.1} ms, host stall {:.1} ms",
+            dc.submissions,
+            dc.max_queue_depth,
+            dc.h2d_bytes as f64 / 1e6,
+            dc.d2h_bytes as f64 / 1e6,
+            dc.device_idle_nanos as f64 / 1e6,
+            dc.host_stall_nanos as f64 / 1e6,
+        );
+        session_counters = Json::obj(vec![
+            ("submissions", Json::num(dc.submissions as f64)),
+            ("max_queue_depth", Json::num(dc.max_queue_depth as f64)),
+            ("h2d_bytes", Json::num(dc.h2d_bytes as f64)),
+            ("d2h_bytes", Json::num(dc.d2h_bytes as f64)),
+            ("device_idle_s", Json::num(dc.device_idle_nanos as f64 * 1e-9)),
+            ("host_stall_s", Json::num(dc.host_stall_nanos as f64 * 1e-9)),
+        ]);
     }
 
     write_bench_json(
@@ -117,6 +222,19 @@ fn main() {
             ("m", Json::num(m as f64)),
             ("k", Json::num(k as f64)),
             ("crossover_n", Json::num(crossover as f64)),
+            (
+                "overlap",
+                Json::obj(vec![
+                    ("chunks", Json::num(rep.chunks as f64)),
+                    ("sync_s", Json::num(rep.sync_seconds)),
+                    ("pipelined_s", Json::num(rep.pipelined_seconds)),
+                    ("device_busy_s", Json::num(rep.device_busy_seconds)),
+                    ("device_idle_fraction", Json::num(rep.device_idle_fraction)),
+                ]),
+            ),
+            ("pipelined_gain_vs_single", Json::num(gain)),
+            ("pipelined_crossover_n", Json::num(pipe_crossover as f64)),
+            ("session_device_counters", session_counters),
             ("model_rows", Json::arr(model_rows)),
             ("real_rows", Json::arr(real_rows)),
         ]),

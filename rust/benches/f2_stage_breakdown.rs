@@ -15,11 +15,12 @@
 
 mod common;
 
-use parclust::benchkit::{fmt_duration, Bencher, Table};
+use parclust::benchkit::{fmt_duration, write_bench_json, Bencher, Table};
 use parclust::exec::gpu::GpuExecutor;
 use parclust::exec::multi::MultiExecutor;
 use parclust::exec::single::SingleExecutor;
 use parclust::exec::Executor;
+use parclust::json::Json;
 use parclust::kernel::assign::assign_update_range_scalar;
 use parclust::metric::Metric;
 use parclust::simulate::{predict, Testbed, WorkloadSpec};
@@ -42,6 +43,21 @@ fn main() {
         &format!("F2 real stage timings (n={n}, m={m}, k={k}, diameter over 2048 candidates)"),
         &["stage", "single", "multi(8)", "gpu (pjrt)"],
     );
+    let mut stage_rows: Vec<Json> = Vec::new();
+    let mut stage_json = |name: &str,
+                          s: &parclust::benchkit::Stats,
+                          mt: &parclust::benchkit::Stats,
+                          gp: &Option<parclust::benchkit::Stats>| {
+        stage_rows.push(Json::obj(vec![
+            ("stage", Json::str(name)),
+            ("single", s.to_json()),
+            ("multi", mt.to_json()),
+            (
+                "gpu",
+                gp.as_ref().map(|g| g.to_json()).unwrap_or(Json::Null),
+            ),
+        ]));
+    };
 
     // diameter — kernel::diameter::farthest_pair
     let s = bencher.bench(|| {
@@ -56,6 +72,7 @@ fn main() {
             let _ = gpu.diameter(ds, &candidates).unwrap();
         })
     });
+    stage_json("kernel.diameter", &s, &mt, &gp);
     table.row(vec![
         "kernel.diameter (step 1)".into(),
         fmt_duration(s.mean),
@@ -76,6 +93,7 @@ fn main() {
             let _ = gpu.center_of_gravity(ds).unwrap();
         })
     });
+    stage_json("kernel.reduce.cog", &s, &mt, &gp);
     table.row(vec![
         "kernel.reduce: cog (step 2)".into(),
         fmt_duration(s.mean),
@@ -97,6 +115,7 @@ fn main() {
             let _ = gpu.assign_update(ds, &cent, k, Metric::Euclidean).unwrap();
         })
     });
+    stage_json("kernel.assign", &s, &mt, &gp);
     table.row(vec![
         "kernel.assign (steps 4-7)".into(),
         fmt_duration(s.mean),
@@ -125,6 +144,7 @@ fn main() {
         "F2 modelled stage split at n=2e6 (2014 testbed, 20 iterations)",
         &["regime", "init.diameter", "init.cog", "iterate", "total"],
     );
+    let mut model_rows: Vec<Json> = Vec::new();
     for regime in [
         parclust::exec::regime::Regime::Single,
         parclust::exec::regime::Regime::Multi,
@@ -138,6 +158,13 @@ fn main() {
                 .map(|s| s.seconds)
                 .sum::<f64>()
         };
+        model_rows.push(Json::obj(vec![
+            ("regime", Json::str(regime.name())),
+            ("init_diameter_s", Json::num(find("init.diameter"))),
+            ("init_cog_s", Json::num(find("init.cog"))),
+            ("iterate_s", Json::num(find("iterate"))),
+            ("total_s", Json::num(p.total)),
+        ]));
         table.row(vec![
             regime.name().into(),
             format!("{:.3} s", find("init.diameter")),
@@ -147,4 +174,18 @@ fn main() {
         ]);
     }
     println!("{}", table.render());
+
+    write_bench_json(
+        "f2",
+        &Json::obj(vec![
+            ("bench", Json::str("f2_stage_breakdown")),
+            ("n", Json::num(n as f64)),
+            ("m", Json::num(m as f64)),
+            ("k", Json::num(k as f64)),
+            ("scalar_ref", sr.to_json()),
+            ("tiled_speedup_vs_scalar", Json::num(speedup)),
+            ("stage_rows", Json::arr(stage_rows)),
+            ("model_rows", Json::arr(model_rows)),
+        ]),
+    );
 }

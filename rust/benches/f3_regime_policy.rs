@@ -10,8 +10,9 @@
 
 mod common;
 
-use parclust::benchkit::Table;
+use parclust::benchkit::{write_bench_json, Table};
 use parclust::exec::regime::{allowed_for, resolve, Regime};
+use parclust::json::Json;
 use parclust::simulate::{predict, Testbed, WorkloadSpec};
 
 fn main() {
@@ -27,6 +28,7 @@ fn main() {
     );
     let mut worst_slowdown = 1.0f64; // for n >= 1e4 (where time matters)
     let mut worst_abs_penalty = 0.0f64; // absolute seconds lost below 1e4
+    let mut policy_rows: Vec<Json> = Vec::new();
     for n in [
         1_000usize, 5_000, 9_999, 10_000, 50_000, 99_999, 100_000, 500_000,
         2_000_000,
@@ -66,6 +68,14 @@ fn main() {
             // expenses" — the relevant cost is the absolute penalty.
             worst_abs_penalty = worst_abs_penalty.max(auto_t - best_t);
         }
+        policy_rows.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("allowed", Json::str(allowed)),
+            ("auto_picks", Json::str(auto.name())),
+            ("modelled_best", Json::str(best_regime.name())),
+            ("auto_s", Json::num(auto_t)),
+            ("best_s", Json::num(best_t)),
+        ]));
         table.row(vec![
             n.to_string(),
             allowed.into(),
@@ -96,4 +106,16 @@ fn main() {
     assert!(!allowed_for(9_999).multi && allowed_for(10_000).multi);
     assert!(!allowed_for(99_999).gpu && allowed_for(100_000).gpu);
     println!("thresholds match paper §4 (1e4, 1e5) ✓");
+
+    write_bench_json(
+        "f3",
+        &Json::obj(vec![
+            ("bench", Json::str("f3_regime_policy")),
+            ("m", Json::num(m as f64)),
+            ("k", Json::num(k as f64)),
+            ("worst_slowdown_above_1e4", Json::num(worst_slowdown)),
+            ("worst_abs_penalty_below_1e4_s", Json::num(worst_abs_penalty)),
+            ("policy_rows", Json::arr(policy_rows)),
+        ]),
+    );
 }

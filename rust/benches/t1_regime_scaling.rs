@@ -8,13 +8,18 @@
 
 mod common;
 
-use parclust::benchkit::{fmt_duration, Bencher, Table};
+use parclust::benchkit::{fmt_duration, write_bench_json, Bencher, Stats, Table};
 use parclust::exec::gpu::GpuExecutor;
 use parclust::exec::multi::MultiExecutor;
 use parclust::exec::regime::Regime;
 use parclust::exec::single::SingleExecutor;
+use parclust::json::Json;
 use parclust::kmeans::{fit_with, DiameterMode, KMeansConfig};
 use parclust::simulate::{predict, Testbed, WorkloadSpec};
+
+fn opt_stats(s: &Option<Stats>) -> Json {
+    s.as_ref().map(|v| v.to_json()).unwrap_or(Json::Null)
+}
 
 fn main() {
     common::banner("T1", "gain factor ~5 for gpu at n=2e6, m=25");
@@ -34,10 +39,14 @@ fn main() {
     // CI smoke (BENCH_QUICK=1) proves the bench runs without paying for
     // the large real rows; model rows are free either way.
     let real_cap = if parclust::benchkit::smoke_mode() { 10_000 } else { 100_000 };
+    let mut rows: Vec<Json> = Vec::new();
     for n in [10_000usize, 50_000, 100_000, 500_000, 1_000_000, 2_000_000] {
         let real = n <= real_cap;
-        let (mut sr, mut mr, mut gr) =
-            ("-".to_string(), "-".to_string(), "-".to_string());
+        let (mut s_stat, mut m_stat, mut g_stat): (
+            Option<Stats>,
+            Option<Stats>,
+            Option<Stats>,
+        ) = (None, None, None);
         if real {
             let g = common::workload(n, m, k, 1);
             // fixed 10 iterations (tol -1 never converges): pure throughput
@@ -46,21 +55,18 @@ fn main() {
                 .max_iters(10)
                 .tol(-1.0)
                 .diameter_mode(DiameterMode::Sampled(512));
-            let s = bencher.bench(|| {
+            s_stat = Some(bencher.bench(|| {
                 let _ = fit_with(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
-            });
-            sr = fmt_duration(s.mean);
-            let st = bencher.bench(|| {
+            }));
+            m_stat = Some(bencher.bench(|| {
                 let _ = fit_with(&g.dataset, &cfg, &MultiExecutor::new(8)).unwrap();
-            });
-            mr = fmt_duration(st.mean);
+            }));
             if let Some(dev) = &device {
                 let exec = GpuExecutor::new(dev.clone(), 2);
                 let _ = exec.warmup(n, m, k);
-                let gt = bencher.bench(|| {
+                g_stat = Some(bencher.bench(|| {
                     let _ = fit_with(&g.dataset, &cfg, &exec).unwrap();
-                });
-                gr = fmt_duration(gt.mean);
+                }));
             }
         }
         let spec = WorkloadSpec {
@@ -74,11 +80,25 @@ fn main() {
         let ps = predict(&spec, &bed, Regime::Single).total;
         let pm = predict(&spec, &bed, Regime::Multi).total;
         let pg = predict(&spec, &bed, Regime::Gpu).total;
+        rows.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("single_real", opt_stats(&s_stat)),
+            ("multi_real", opt_stats(&m_stat)),
+            ("gpu_real", opt_stats(&g_stat)),
+            ("single_model_s", Json::num(ps)),
+            ("multi_model_s", Json::num(pm)),
+            ("gpu_model_s", Json::num(pg)),
+        ]));
+        let fmt_opt = |s: &Option<Stats>| {
+            s.as_ref()
+                .map(|v| fmt_duration(v.mean))
+                .unwrap_or_else(|| "-".into())
+        };
         table.row(vec![
             n.to_string(),
-            sr,
-            mr,
-            gr,
+            fmt_opt(&s_stat),
+            fmt_opt(&m_stat),
+            fmt_opt(&g_stat),
             format!("{ps:.3} s"),
             format!("{pm:.3} s"),
             format!("{pg:.3} s"),
@@ -96,4 +116,15 @@ fn main() {
         "headline gain {gain} left the paper band"
     );
     println!("headline (2e6 × 25): modelled gpu gain = {gain:.2}x (paper: ~5x) ✓");
+
+    write_bench_json(
+        "t1",
+        &Json::obj(vec![
+            ("bench", Json::str("t1_regime_scaling")),
+            ("m", Json::num(m as f64)),
+            ("k", Json::num(k as f64)),
+            ("headline_model_gain", Json::num(gain)),
+            ("rows", Json::arr(rows)),
+        ]),
+    );
 }

@@ -6,11 +6,12 @@
 
 mod common;
 
-use parclust::benchkit::{fmt_duration, Bencher, Table};
+use parclust::benchkit::{fmt_duration, write_bench_json, Bencher, Table};
 use parclust::exec::gpu::GpuExecutor;
 use parclust::exec::multi::MultiExecutor;
 use parclust::exec::regime::Regime;
 use parclust::exec::single::SingleExecutor;
+use parclust::json::Json;
 use parclust::kmeans::{fit_with, DiameterMode, KMeansConfig};
 use parclust::simulate::{predict, Testbed, WorkloadSpec};
 
@@ -32,6 +33,7 @@ fn main() {
     );
 
     let mut single_real_times = Vec::new();
+    let mut rows: Vec<Json> = Vec::new();
     for m in [2usize, 5, 10, 25] {
         let g = common::workload(n_real, m, k, 2);
         let cfg = KMeansConfig::new(k)
@@ -46,16 +48,17 @@ fn main() {
         let mt = bencher.bench(|| {
             let _ = fit_with(&g.dataset, &cfg, &MultiExecutor::new(8)).unwrap();
         });
-        let gr = if let Some(dev) = &device {
+        let g_stat = device.as_ref().map(|dev| {
             let exec = GpuExecutor::new(dev.clone(), 2);
             let _ = exec.warmup(n_real, m, k);
-            let gt = bencher.bench(|| {
+            bencher.bench(|| {
                 let _ = fit_with(&g.dataset, &cfg, &exec).unwrap();
-            });
-            fmt_duration(gt.mean)
-        } else {
-            "-".into()
-        };
+            })
+        });
+        let gr = g_stat
+            .as_ref()
+            .map(|gt| fmt_duration(gt.mean))
+            .unwrap_or_else(|| "-".into());
 
         let spec = WorkloadSpec {
             n: n_model,
@@ -67,6 +70,17 @@ fn main() {
         };
         let ps = predict(&spec, &bed, Regime::Single).total;
         let pg = predict(&spec, &bed, Regime::Gpu).total;
+        rows.push(Json::obj(vec![
+            ("m", Json::num(m as f64)),
+            ("single_real", s.to_json()),
+            ("multi_real", mt.to_json()),
+            (
+                "gpu_real",
+                g_stat.as_ref().map(|v| v.to_json()).unwrap_or(Json::Null),
+            ),
+            ("single_model_s", Json::num(ps)),
+            ("gpu_model_s", Json::num(pg)),
+        ]));
         table.row(vec![
             m.to_string(),
             fmt_duration(s.mean),
@@ -89,4 +103,16 @@ fn main() {
         "M-scaling ratio {ratio} wildly non-linear"
     );
     println!("real single-threaded M=25 / M=5 cost ratio: {ratio:.2} (linear ⇒ ~5) ✓");
+
+    write_bench_json(
+        "t2",
+        &Json::obj(vec![
+            ("bench", Json::str("t2_features")),
+            ("k", Json::num(k as f64)),
+            ("n_real", Json::num(n_real as f64)),
+            ("n_model", Json::num(n_model as f64)),
+            ("m25_over_m5_ratio", Json::num(ratio)),
+            ("rows", Json::arr(rows)),
+        ]),
+    );
 }

@@ -9,10 +9,11 @@
 
 mod common;
 
-use parclust::benchkit::{fmt_duration, Bencher, Table};
+use parclust::benchkit::{fmt_duration, write_bench_json, Bencher, Table};
 use parclust::exec::multi::MultiExecutor;
 use parclust::exec::regime::Regime;
 use parclust::exec::single::SingleExecutor;
+use parclust::json::Json;
 use parclust::kmeans::{fit_with, DiameterMode, InitMethod, KMeansConfig};
 use parclust::simulate::{predict, Testbed, WorkloadSpec};
 
@@ -31,6 +32,7 @@ fn main() {
         &format!("T3a per-iteration cost vs K (n={n}, m={m}, 10 iterations)"),
         &["K", "single real", "multi real", "single model (n=1e6)", "gpu model (n=1e6)"],
     );
+    let mut cost_rows: Vec<Json> = Vec::new();
     for k in [2usize, 5, 10, 20] {
         let g = common::workload(n, m, k, 3);
         let cfg = KMeansConfig::new(k)
@@ -52,12 +54,21 @@ fn main() {
             diameter_candidates: 4096,
             threads: 8,
         };
+        let ps = predict(&spec, &bed, Regime::Single).total;
+        let pg = predict(&spec, &bed, Regime::Gpu).total;
+        cost_rows.push(Json::obj(vec![
+            ("k", Json::num(k as f64)),
+            ("single_real", s.to_json()),
+            ("multi_real", mt.to_json()),
+            ("single_model_s", Json::num(ps)),
+            ("gpu_model_s", Json::num(pg)),
+        ]));
         table.row(vec![
             k.to_string(),
             fmt_duration(s.mean),
             fmt_duration(mt.mean),
-            format!("{:.3} s", predict(&spec, &bed, Regime::Single).total),
-            format!("{:.3} s", predict(&spec, &bed, Regime::Gpu).total),
+            format!("{ps:.3} s"),
+            format!("{pg:.3} s"),
         ]);
     }
     println!("{}", table.render());
@@ -72,6 +83,7 @@ fn main() {
         ),
         &["init", "mean iterations", "max iterations", "mean inertia", "converged"],
     );
+    let mut ablation_rows: Vec<Json> = Vec::new();
     for init in [InitMethod::PaperDiameter, InitMethod::Random, InitMethod::KMeansPlusPlus] {
         let mut iters = Vec::new();
         let mut inertias = Vec::new();
@@ -91,6 +103,14 @@ fn main() {
         let mean_it = iters.iter().sum::<f64>() / iters.len() as f64;
         let max_it = iters.iter().cloned().fold(0.0, f64::max);
         let mean_in = inertias.iter().sum::<f64>() / inertias.len() as f64;
+        ablation_rows.push(Json::obj(vec![
+            ("init", Json::str(init.name())),
+            ("mean_iterations", Json::num(mean_it)),
+            ("max_iterations", Json::num(max_it)),
+            ("mean_inertia", Json::num(mean_in)),
+            ("converged", Json::num(conv as f64)),
+            ("seeds", Json::num(seeds.len() as f64)),
+        ]));
         table.row(vec![
             init.name().into(),
             format!("{mean_it:.1}"),
@@ -103,5 +123,16 @@ fn main() {
     println!(
         "Paper's remark verified: the choice of initial objects \"influences \
          on the number of iterations and the computing time\"."
+    );
+
+    write_bench_json(
+        "t3",
+        &Json::obj(vec![
+            ("bench", Json::str("t3_clusters")),
+            ("n_real", Json::num(n as f64)),
+            ("m", Json::num(m as f64)),
+            ("cost_rows", Json::arr(cost_rows)),
+            ("init_ablation_rows", Json::arr(ablation_rows)),
+        ]),
     );
 }

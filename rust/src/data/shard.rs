@@ -9,22 +9,26 @@
 //!   against the in-core executors bit-for-bit: same chunks, same
 //!   kernel calls, zero I/O variance.
 //! * [`DiskShardSource`] — reads row ranges straight out of the `.pcb`
-//!   data section (`File` + `seek` + `read_exact`, stdlib only). The
-//!   file's CRC and the crate's finite-samples policy are verified
-//!   **once, eagerly, at open** by a streaming pass that never holds
-//!   more than one 64 KiB block — so per-chunk loads afterwards can
-//!   decode without re-hashing the whole file, and a corrupt or
-//!   non-finite file fails before any clustering work starts.
+//!   data section with **positioned reads** (`read_at`/`seek_read`,
+//!   stdlib only): no shared file cursor, so the streaming engine's
+//!   prefetch wave, the final-pass gather and the GPU session's staging
+//!   ring can all pull chunks concurrently without serializing on a
+//!   handle lock. The file's CRC and the crate's finite-samples policy
+//!   are verified **once, eagerly, at open** by a streaming pass that
+//!   never holds more than one 64 KiB block — so per-chunk loads
+//!   afterwards can decode without re-hashing the whole file, and a
+//!   corrupt or non-finite file fails before any clustering work
+//!   starts.
 //!
 //! Loads report the backing-store bytes they moved so the engine's
 //! [`crate::exec::stream::IoCounters`] can surface I/O volume in
 //! `RunMetrics`.
 
+use std::cell::RefCell;
 use std::fs::File;
-use std::io::{BufReader, Read, Seek, SeekFrom};
+use std::io::{BufReader, Read};
 use std::ops::Range;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
 use crate::data::binfmt::{self, Crc32};
 use crate::data::{DataError, Dataset};
@@ -94,26 +98,68 @@ impl ShardSource for MemShardSource<'_> {
 
 /// On-disk shard source over the `.pcb` data section.
 ///
-/// The file handle and its decode scratch live behind one mutex: loads
-/// are serialized (one spindle / one page cache anyway), while the
-/// metadata stays lock-free for concurrent `n()`/`m()` calls.
+/// Loads use positioned reads against a shared handle — concurrent
+/// callers never contend on a cursor or a lock (the page cache handles
+/// the rest). Decode scratch is per-thread, so steady-state loads
+/// allocate nothing.
 pub struct DiskShardSource {
     path: PathBuf,
     n: usize,
     m: usize,
     names: Vec<String>,
     data_start: u64,
-    io: Mutex<DiskIo>,
-}
-
-struct DiskIo {
     file: File,
-    scratch: Vec<u8>,
 }
 
 /// Block size for the chunked decode passes (matches `binfmt`'s read
 /// blocks).
 const SCRATCH_BYTES: usize = 1 << 16;
+
+thread_local! {
+    /// Per-thread decode scratch (byte block → f32), grown once.
+    static SCRATCH: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Read exactly `buf.len()` bytes at absolute `off` without touching the
+/// handle's seek cursor.
+#[cfg(unix)]
+fn read_exact_at(file: &File, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.read_exact_at(buf, off)
+}
+
+#[cfg(windows)]
+fn read_exact_at(
+    file: &File,
+    mut buf: &mut [u8],
+    mut off: u64,
+) -> std::io::Result<()> {
+    use std::os::windows::fs::FileExt;
+    while !buf.is_empty() {
+        match file.seek_read(buf, off) {
+            Ok(0) => return Err(std::io::ErrorKind::UnexpectedEof.into()),
+            Ok(k) => {
+                buf = &mut buf[k..];
+                off += k as u64;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(not(any(unix, windows)))]
+fn read_exact_at(file: &File, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+    // No positioned-read API: serialize seek+read so concurrent loads
+    // can't interleave on the shared cursor.
+    use std::io::{Seek, SeekFrom};
+    static CURSOR: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    let _guard = CURSOR.lock().unwrap_or_else(|e| e.into_inner());
+    let mut f = file;
+    f.seek(SeekFrom::Start(off))?;
+    f.read_exact(buf)
+}
 
 impl DiskShardSource {
     /// Open a `.pcb` file for streaming: parse the header, then verify
@@ -162,10 +208,7 @@ impl DiskShardSource {
             m: hdr.m,
             names: hdr.names,
             data_start: hdr.data_start,
-            io: Mutex::new(DiskIo {
-                file,
-                scratch: buf,
-            }),
+            file,
         })
     }
 
@@ -179,26 +222,29 @@ impl DiskShardSource {
         &self.path
     }
 
-    fn decode_at(
-        io: &mut DiskIo,
-        data_start: u64,
-        value_offset: usize,
-        out: &mut [f32],
-    ) -> Result<u64, DataError> {
-        io.file
-            .seek(SeekFrom::Start(data_start + (value_offset * 4) as u64))?;
+    fn decode_at(&self, value_offset: usize, out: &mut [f32]) -> Result<u64, DataError> {
         let total_bytes = out.len() * 4;
-        let mut filled = 0usize;
-        while filled < total_bytes {
-            let take = io.scratch.len().min(total_bytes - filled);
-            io.file.read_exact(&mut io.scratch[..take])?;
-            for (i, chunk) in io.scratch[..take].chunks_exact(4).enumerate() {
-                out[(filled / 4) + i] =
-                    f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        SCRATCH.with(|s| {
+            let mut scratch = s.borrow_mut();
+            if scratch.len() < SCRATCH_BYTES {
+                scratch.resize(SCRATCH_BYTES, 0);
             }
-            filled += take;
-        }
-        Ok(total_bytes as u64)
+            let mut filled = 0usize;
+            while filled < total_bytes {
+                let take = SCRATCH_BYTES.min(total_bytes - filled);
+                read_exact_at(
+                    &self.file,
+                    &mut scratch[..take],
+                    self.data_start + (value_offset * 4 + filled) as u64,
+                )?;
+                for (i, chunk) in scratch[..take].chunks_exact(4).enumerate() {
+                    out[(filled / 4) + i] =
+                        f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+                }
+                filled += take;
+            }
+            Ok(total_bytes as u64)
+        })
     }
 }
 
@@ -218,23 +264,16 @@ impl ShardSource for DiskShardSource {
     fn load_rows(&self, range: Range<usize>, out: &mut [f32]) -> Result<u64, DataError> {
         debug_assert!(range.end <= self.n);
         debug_assert_eq!(out.len(), range.len() * self.m);
-        let mut io = self.io.lock().unwrap_or_else(|e| e.into_inner());
-        Self::decode_at(&mut io, self.data_start, range.start * self.m, out)
+        self.decode_at(range.start * self.m, out)
     }
 
     fn gather_rows(&self, idx: &[usize], out: &mut [f32]) -> Result<u64, DataError> {
         let m = self.m;
         debug_assert_eq!(out.len(), idx.len() * m);
-        let mut io = self.io.lock().unwrap_or_else(|e| e.into_inner());
         let mut bytes = 0u64;
         for (slot, &i) in idx.iter().enumerate() {
             debug_assert!(i < self.n);
-            bytes += Self::decode_at(
-                &mut io,
-                self.data_start,
-                i * m,
-                &mut out[slot * m..(slot + 1) * m],
-            )?;
+            bytes += self.decode_at(i * m, &mut out[slot * m..(slot + 1) * m])?;
         }
         Ok(bytes)
     }
@@ -291,6 +330,36 @@ mod tests {
         assert_eq!(&picked[..7], g.dataset.row(200));
         assert_eq!(&picked[7..14], g.dataset.row(0));
         assert_eq!(&picked[14..], g.dataset.row(56));
+    }
+
+    #[test]
+    fn disk_source_concurrent_loads_are_bitwise_correct() {
+        // Positioned reads share no cursor: interleaved loads and
+        // gathers from several threads must all decode exactly.
+        let g = generate(&GmmSpec::new(1024, 6, 4).seed(6));
+        let path = tmp("concurrent.pcb");
+        binfmt::write_path(&g.dataset, &path).unwrap();
+        let src = DiskShardSource::open(&path).unwrap();
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let src = &src;
+                let ds = &g.dataset;
+                s.spawn(move || {
+                    let mut buf = vec![0.0f32; 100 * 6];
+                    let mut picked = vec![0.0f32; 2 * 6];
+                    for round in 0..16usize {
+                        let start = (t * 257 + round * 31) % 900;
+                        let range = start..start + 100;
+                        src.load_rows(range.clone(), &mut buf).unwrap();
+                        assert_eq!(&buf[..], ds.rows(range), "t={t} r={round}");
+                        let idx = [(t * 13 + round) % 1024, 1023 - t];
+                        src.gather_rows(&idx, &mut picked).unwrap();
+                        assert_eq!(&picked[..6], ds.row(idx[0]));
+                        assert_eq!(&picked[6..], ds.row(idx[1]));
+                    }
+                });
+            }
+        });
     }
 
     #[test]

@@ -1,24 +1,54 @@
 //! GPU-offload executor — paper Algorithm 4.
 //!
 //! "Each thread prepares the task for the GPU, sends this task for
-//! execution and receives the results": host worker threads cut the
-//! dataset into chunks sized to the compiled artifact, pad/mask them
+//! execution and receives the results": host workers cut the dataset
+//! into chunks sized to the compiled artifact, pad/mask them
 //! (runtime::pad), submit to the device thread (which, like a single
 //! CUDA stream, executes kernels in order), and the leader absorbs the
 //! returned partials.
 //!
-//! The kernels are the Layer-1 Pallas modules, AOT-lowered to HLO and
-//! executed through PJRT — the same dataflow as the paper's CUDA path
-//! (host shards → device kernel → tiny partial results back), with the
-//! transfer and launch overheads that the paper's "intermediate
-//! conclusion" is about tracked in [`crate::runtime::DeviceStats`].
+//! The iterated assignment stage runs through [`GpuAssignSession`], an
+//! **asynchronous double-buffered chunk pipeline** over
+//! [`crate::runtime::Device::submit`]: while the device executes kernel
+//! t, the host pads/masks chunk t+1 into a bounded ring of reusable
+//! staging buffers (the same ring shape as [`crate::exec::stream`], and
+//! the double-buffer pattern of the Pallas DMA guides), so transfer,
+//! prep and kernel time overlap instead of adding. Two feeds:
+//!
+//! * **resident** — the dataset is pinned on the device once per fit
+//!   ([`GpuExecutor::preload`]); every iteration ships only the padded
+//!   centroid table, stored **once** under [`CENTROIDS_KEY`] and
+//!   referenced by all chunks.
+//! * **streaming** — any [`crate::data::shard::ShardSource`] (including
+//!   the on-disk `.pcb` source) feeds the staging ring directly, so
+//!   out-of-core fits reach the device path.
+//!
+//! One-shot stages (diameter, center of gravity, stateless
+//! `assign_update`) fan out on the persistent [`crate::pool::ThreadPool`]
+//! — no OS-thread spawns after the pool is warm, matching the CPU
+//! regimes. The transfer/launch overheads the paper's "intermediate
+//! conclusion" is about are tracked in [`crate::runtime::DeviceStats`],
+//! including the pipeline's queue-depth / device-idle / host-stall
+//! counters surfaced through [`crate::exec::DeviceCounters`].
 
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::data::shard::ShardSource;
 use crate::data::Dataset;
-use crate::exec::{AssignSession, AssignStats, DenseSession, DiameterResult, ExecError, Executor};
+use crate::exec::{
+    AssignSession, AssignStats, DeviceCounters, DiameterResult, ExecError, Executor,
+    PruneCounters,
+};
 use crate::metric::Metric;
-use crate::runtime::{pad, ArtifactKind, Device, HostTensor, InputRef};
+use crate::pool::ThreadPool;
+use crate::runtime::{pad, ArtifactKind, ArtifactMeta, Device, HostTensor, InputRef, Ticket};
+
+/// Device-store key for the per-iteration padded centroid table: stored
+/// once per Lloyd step, referenced by every chunk of that step instead
+/// of re-shipping k×m values inline with each task.
+pub const CENTROIDS_KEY: &str = "resident:centroids";
 
 /// Identity of a dataset pinned on the device (see
 /// [`GpuExecutor::preload`]): buffer address + length is enough because
@@ -31,12 +61,13 @@ struct ResidentSet {
     cap: usize,
 }
 
-/// Executor that offloads every stage to PJRT-compiled artifacts.
+/// Executor that offloads every stage to the device artifacts.
 #[derive(Clone)]
 pub struct GpuExecutor {
     device: Device,
     threads: usize,
     resident: Arc<Mutex<Option<ResidentSet>>>,
+    pool: Arc<OnceLock<ThreadPool>>,
 }
 
 impl GpuExecutor {
@@ -47,7 +78,16 @@ impl GpuExecutor {
             device,
             threads: threads.max(1),
             resident: Arc::new(Mutex::new(None)),
+            pool: Arc::new(OnceLock::new()),
         }
+    }
+
+    /// The persistent host-prep worker pool, built on first use (the
+    /// executor's warm-up). Every fan-out stage runs on these same
+    /// threads — zero OS-thread spawns afterwards, like the multi
+    /// regime.
+    pub fn pool(&self) -> &ThreadPool {
+        self.pool.get_or_init(|| ThreadPool::new(self.threads))
     }
 
     /// Pin `ds`'s padded shards on the device so the iterated assignment
@@ -137,9 +177,27 @@ impl GpuExecutor {
         Ok(())
     }
 
-    /// Process chunks of `total` rows, `chunk_cap` at a time, on up to
-    /// `self.threads` scoped workers. `work(chunk_range) -> T` runs on
-    /// the worker; results come back in chunk order.
+    /// Open a pipelined assignment session fed by a [`ShardSource`]
+    /// (e.g. [`crate::data::shard::DiskShardSource`]) — the out-of-core
+    /// GPU path. Staging-ring depth is derived from `memory_budget`
+    /// bytes (≥ 2 buffers always).
+    pub fn assign_session_streaming<'a>(
+        &'a self,
+        source: &'a dyn ShardSource,
+        k: usize,
+        memory_budget: usize,
+    ) -> Result<Box<dyn AssignSession + 'a>, ExecError> {
+        Ok(Box::new(GpuAssignSession::streaming(
+            self,
+            source,
+            k,
+            memory_budget,
+        )?))
+    }
+
+    /// Process chunks of `total` rows, `chunk_cap` at a time, on the
+    /// persistent pool. `work(chunk_range) -> T` runs on a worker;
+    /// results come back in chunk order.
     fn parallel_chunks<T, F>(&self, total: usize, chunk_cap: usize, work: F) -> Vec<T>
     where
         T: Send,
@@ -152,25 +210,9 @@ impl GpuExecutor {
             chunks.push(start..end);
             start = end;
         }
-        let n_workers = self.threads.min(chunks.len()).max(1);
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        let mut out: Vec<Option<T>> = (0..chunks.len()).map(|_| None).collect();
-        let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
-            out.iter_mut().map(std::sync::Mutex::new).collect();
-        std::thread::scope(|s| {
-            for _ in 0..n_workers {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-                    if i >= chunks.len() {
-                        return;
-                    }
-                    let r = chunks[i].clone();
-                    let val = work(r);
-                    **slots[i].lock().unwrap() = Some(val);
-                });
-            }
-        });
-        out.into_iter().map(|v| v.expect("chunk not processed")).collect()
+        let work = &work;
+        self.pool()
+            .scope_run_all(chunks.into_iter().map(|r| move || work(r)).collect())
     }
 }
 
@@ -327,18 +369,23 @@ impl Executor for GpuExecutor {
             )));
         }
         let (cap, am, ak) = (art.n, art.m, art.k);
+        // The padded centroid table goes up **once**, stored under
+        // CENTROIDS_KEY, and every chunk references it — not re-shipped
+        // inline with each task.
         let padded_centroids = pad::pad_centroids(centroids, k, m, ak, am);
+        self.device
+            .store(
+                CENTROIDS_KEY,
+                HostTensor::f32(&[ak as i64, am as i64], padded_centroids),
+            )
+            .map_err(ExecError)?;
         let device = &self.device;
         let art_name = art.name.clone();
-        let pc = &padded_centroids;
         let resident = &resident;
 
         let partials = self.parallel_chunks(ds.n(), cap, |r| {
             let rows = r.len();
-            let centroid_in = InputRef::Inline(HostTensor::f32(
-                &[ak as i64, am as i64],
-                pc.clone(),
-            ));
+            let centroid_in = InputRef::Stored(CENTROIDS_KEY.to_string());
             let inputs = if resident.is_some() {
                 vec![
                     InputRef::Stored(format!("resident:pts:{}", r.start)),
@@ -358,24 +405,8 @@ impl Executor for GpuExecutor {
             let out = device
                 .execute_refs(&art_name, inputs)
                 .map_err(ExecError)?;
-            let labels = out[0].as_i32();
-            let sums = out[1].as_f32();
-            let counts = out[2].as_f32();
-            let inertia = out[3].as_f32()[0];
-
             let mut shard = AssignStats::zeros(rows, k, m);
-            for (dst, &src) in shard.labels.iter_mut().zip(labels.iter().take(rows)) {
-                debug_assert!((0..k as i32).contains(&src), "label out of range");
-                *dst = src as u32;
-            }
-            let trimmed = pad::unpad_matrix(sums, ak, am, k, m);
-            for (a, &b) in shard.sums.iter_mut().zip(&trimmed) {
-                *a = b as f64;
-            }
-            for (a, &b) in shard.counts.iter_mut().zip(counts.iter().take(k)) {
-                *a = b as u64;
-            }
-            shard.inertia = inertia as f64;
+            absorb_chunk(&mut shard, 0, rows, k, m, am, &out)?;
             Ok::<(usize, AssignStats), ExecError>((r.start, shard))
         });
 
@@ -393,9 +424,9 @@ impl Executor for GpuExecutor {
     /// scan), which is the wrong shape for the wide device kernels —
     /// and with the dataset pinned on the device
     /// ([`GpuExecutor::preload`]) the dense sweep only ships the k×m
-    /// centroid table per chunk anyway. This mirrors the paper's
-    /// per-stage offload logic: stages keep their regime-appropriate
-    /// algorithm rather than sharing one shape.
+    /// centroid table per iteration anyway. The session pins the
+    /// dataset on creation and runs the asynchronous in-order chunk
+    /// pipeline every step.
     fn assign_session<'a>(
         &'a self,
         ds: &'a Dataset,
@@ -408,6 +439,387 @@ impl Executor for GpuExecutor {
                 metric.name()
             )));
         }
-        Ok(Box::new(DenseSession::new(self, ds, k, metric)))
+        Ok(Box::new(GpuAssignSession::resident(self, ds, k)?))
+    }
+}
+
+/// Fold one chunk's device outputs `(labels, padded sums, counts,
+/// inertia)` directly into `total` at row `start` — no intermediate
+/// unpadded copies (the session's steady state allocates nothing on the
+/// host beyond what the device hands back).
+fn absorb_chunk(
+    total: &mut AssignStats,
+    start: usize,
+    rows: usize,
+    k: usize,
+    m: usize,
+    am: usize,
+    outs: &[HostTensor],
+) -> Result<(), ExecError> {
+    if outs.len() != 4 {
+        return Err(ExecError(format!(
+            "assign artifact returned {} outputs, expected 4",
+            outs.len()
+        )));
+    }
+    let labels = outs[0].as_i32();
+    let sums = outs[1].as_f32();
+    let counts = outs[2].as_f32();
+    let inertia = outs[3].as_f32()[0];
+    for (dst, &src) in total.labels[start..start + rows]
+        .iter_mut()
+        .zip(labels.iter().take(rows))
+    {
+        debug_assert!((0..k as i32).contains(&src), "label out of range");
+        *dst = src as u32;
+    }
+    for c in 0..k {
+        let src = &sums[c * am..c * am + m];
+        let dst = &mut total.sums[c * m..(c + 1) * m];
+        for (a, &b) in dst.iter_mut().zip(src) {
+            *a += b as f64;
+        }
+    }
+    for (a, &b) in total.counts.iter_mut().zip(counts.iter().take(k)) {
+        *a += b as u64;
+    }
+    total.inertia += inertia as f64;
+    Ok(())
+}
+
+/// Baseline [`crate::runtime::DeviceStats`] readings at session open;
+/// [`AssignSession::device_counters`] reports deltas against these.
+struct StatsBase {
+    h2d: u64,
+    d2h: u64,
+    subs: u64,
+    idle: u64,
+    stall: u64,
+}
+
+impl StatsBase {
+    fn now(device: &Device) -> StatsBase {
+        let s = device.stats();
+        StatsBase {
+            h2d: s.h2d_bytes.load(Ordering::Relaxed),
+            d2h: s.d2h_bytes.load(Ordering::Relaxed),
+            subs: s.submissions.load(Ordering::Relaxed),
+            idle: s.device_idle_nanos.load(Ordering::Relaxed),
+            stall: s.host_stall_nanos.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// How chunks reach the device each step.
+enum Feed<'a> {
+    /// Dataset pinned on the device; chunks are `Stored` references and
+    /// the only per-iteration upload is the centroid table.
+    Resident(#[allow(dead_code)] &'a Dataset),
+    /// Chunks read from a [`ShardSource`] through the staging ring.
+    Stream {
+        source: &'a dyn ShardSource,
+        /// Row-major load scratch (cap × m). Reused every chunk: the
+        /// pad into the staging buffer frees it before the submit.
+        raw: Vec<f32>,
+        /// Free staging pairs `(padded points, mask)`. Buffers cycle:
+        /// pop → fill → submit inline → come back via
+        /// [`crate::runtime::Completed::recycled`] → push.
+        free: Vec<(Vec<f32>, Vec<f32>)>,
+    },
+}
+
+/// Stateful GPU assignment session — the asynchronous double-buffered
+/// chunk pipeline (see module docs). Owns all per-fit scratch: the
+/// accumulated [`AssignStats`] and (in streaming mode) the staging
+/// ring; `step` uploads the padded centroid table once and keeps up to
+/// ring-depth kernels in flight, waiting for tickets **in submission
+/// order** so the absorb order — and therefore every sum — is
+/// deterministic regardless of ring depth.
+pub struct GpuAssignSession<'a> {
+    exec: &'a GpuExecutor,
+    feed: Feed<'a>,
+    art_name: String,
+    cap: usize,
+    am: usize,
+    ak: usize,
+    n: usize,
+    m: usize,
+    k: usize,
+    depth: usize,
+    total: AssignStats,
+    counters: PruneCounters,
+    base: StatsBase,
+}
+
+impl<'a> GpuAssignSession<'a> {
+    /// Session over an in-memory dataset, pinned on the device for the
+    /// whole fit (preloads if the executor hasn't already).
+    pub fn resident(
+        exec: &'a GpuExecutor,
+        ds: &'a Dataset,
+        k: usize,
+    ) -> Result<Self, ExecError> {
+        let m = ds.m();
+        let fits = |art: Option<&ArtifactMeta>| {
+            art.map(|a| a.k >= k && a.m >= m).unwrap_or(false)
+        };
+        let current = exec.resident_for(ds);
+        let needs_preload = match &current {
+            None => true,
+            Some(r) => !fits(
+                exec.device
+                    .manifest()
+                    .artifacts
+                    .iter()
+                    .find(|a| a.name == r.artifact),
+            ),
+        };
+        if needs_preload {
+            exec.preload(ds, k)?;
+        }
+        let r = exec
+            .resident_for(ds)
+            .ok_or_else(|| ExecError("preload did not pin the dataset".into()))?;
+        let art = exec
+            .device
+            .manifest()
+            .artifacts
+            .iter()
+            .find(|a| a.name == r.artifact)
+            .ok_or_else(|| ExecError("resident artifact vanished".into()))?
+            .clone();
+        Ok(GpuAssignSession {
+            exec,
+            feed: Feed::Resident(ds),
+            art_name: art.name,
+            cap: r.cap,
+            am: art.m,
+            ak: art.k,
+            n: ds.n(),
+            m,
+            k,
+            // resident chunks need no staging, so the in-flight window
+            // is just the submission queue; keep every chunk queued.
+            depth: usize::MAX,
+            total: AssignStats::zeros(ds.n(), k, m),
+            counters: PruneCounters::default(),
+            base: StatsBase::now(&exec.device),
+        })
+    }
+
+    /// Session over a [`ShardSource`] with ring depth derived from a
+    /// byte budget: `depth = budget / staging-slot bytes`, clamped to
+    /// [2, 4] (double at minimum, the same bound shape as the streaming
+    /// engine's `--memory-budget`).
+    pub fn streaming(
+        exec: &'a GpuExecutor,
+        source: &'a dyn ShardSource,
+        k: usize,
+        memory_budget: usize,
+    ) -> Result<Self, ExecError> {
+        let m = source.m();
+        let art = exec
+            .device
+            .manifest()
+            .select(ArtifactKind::Assign, source.n(), m, k)
+            .map_err(ExecError)?
+            .clone();
+        let slot_bytes = (art.n * art.m + art.n + art.n * m) * 4;
+        let depth = (memory_budget / slot_bytes.max(1)).clamp(2, 4);
+        Self::streaming_with_depth(exec, source, k, depth)
+    }
+
+    /// [`GpuAssignSession::streaming`] with an explicit ring depth
+    /// (tests pin depth ∈ {2, 3} to prove depth-independence).
+    pub fn streaming_with_depth(
+        exec: &'a GpuExecutor,
+        source: &'a dyn ShardSource,
+        k: usize,
+        depth: usize,
+    ) -> Result<Self, ExecError> {
+        let m = source.m();
+        let n = source.n();
+        let art = exec
+            .device
+            .manifest()
+            .select(ArtifactKind::Assign, n, m, k)
+            .map_err(ExecError)?
+            .clone();
+        if art.k < k || art.m < m {
+            return Err(ExecError(format!(
+                "artifact {} capacity (m={}, k={}) below logical (m={m}, k={k})",
+                art.name, art.m, art.k
+            )));
+        }
+        let depth = depth.max(2);
+        Ok(GpuAssignSession {
+            exec,
+            feed: Feed::Stream {
+                source,
+                raw: Vec::new(),
+                // buffers start empty and grow to capacity on first use
+                // (the warm-up); afterwards they only cycle.
+                free: (0..depth).map(|_| (Vec::new(), Vec::new())).collect(),
+            },
+            art_name: art.name.clone(),
+            cap: art.n,
+            am: art.m,
+            ak: art.k,
+            n,
+            m,
+            k,
+            depth,
+            total: AssignStats::zeros(n, k, m),
+            counters: PruneCounters::default(),
+            base: StatsBase::now(&exec.device),
+        })
+    }
+
+    /// Ring depth (streaming mode; `usize::MAX` marks the resident
+    /// feed's unbounded submission window).
+    pub fn ring_depth(&self) -> usize {
+        self.depth
+    }
+}
+
+impl AssignSession for GpuAssignSession<'_> {
+    fn step(&mut self, centroids: &[f32]) -> Result<&AssignStats, ExecError> {
+        let device = &self.exec.device;
+        // Centroid table: padded and uploaded once per iteration.
+        let pc = pad::pad_centroids(centroids, self.k, self.m, self.ak, self.am);
+        device
+            .store(
+                CENTROIDS_KEY,
+                HostTensor::f32(&[self.ak as i64, self.am as i64], pc),
+            )
+            .map_err(ExecError)?;
+        self.total.reset(self.n, self.k, self.m);
+        let (cap, am, k, m, n) = (self.cap, self.am, self.k, self.m, self.n);
+        let mut pending: VecDeque<(usize, usize, Ticket)> = VecDeque::new();
+
+        match &mut self.feed {
+            Feed::Resident(_) => {
+                let mut start = 0;
+                while start < n {
+                    let end = (start + cap).min(n);
+                    let t = device
+                        .submit(
+                            &self.art_name,
+                            vec![
+                                InputRef::Stored(format!("resident:pts:{start}")),
+                                InputRef::Stored(format!("resident:mask:{start}")),
+                                InputRef::Stored(CENTROIDS_KEY.to_string()),
+                            ],
+                        )
+                        .map_err(ExecError)?;
+                    pending.push_back((start, end - start, t));
+                    start = end;
+                }
+            }
+            Feed::Stream { source, raw, free } => {
+                raw.resize(cap * m, 0.0);
+                let mut start = 0;
+                while start < n {
+                    let end = (start + cap).min(n);
+                    let rows = end - start;
+                    // Reuse a staging pair; when the ring is exhausted,
+                    // retire the oldest in-flight chunk first (this wait
+                    // is where host prep overlaps device execution).
+                    let (mut pts, mut mask) = match free.pop() {
+                        Some(pair) => pair,
+                        None => {
+                            let (s0, r0, t) =
+                                pending.pop_front().expect("ring empty, none in flight");
+                            let done = t.wait().map_err(ExecError)?;
+                            absorb_chunk(&mut self.total, s0, r0, k, m, am, &done.outputs)?;
+                            let mut it = done.recycled.into_iter();
+                            let p = it
+                                .next()
+                                .ok_or_else(|| ExecError("points buffer lost".into()))?
+                                .into_f32();
+                            let mk = it
+                                .next()
+                                .ok_or_else(|| ExecError("mask buffer lost".into()))?
+                                .into_f32();
+                            (p, mk)
+                        }
+                    };
+                    source
+                        .load_rows(start..end, &mut raw[..rows * m])
+                        .map_err(|e| ExecError(format!("shard read: {e:?}")))?;
+                    pad::pad_points_into(&raw[..rows * m], rows, m, cap, am, &mut pts);
+                    pad::make_mask_into(rows, cap, &mut mask);
+                    let t = device
+                        .submit(
+                            &self.art_name,
+                            vec![
+                                InputRef::Inline(HostTensor::f32(
+                                    &[cap as i64, am as i64],
+                                    pts,
+                                )),
+                                InputRef::Inline(HostTensor::f32(&[cap as i64], mask)),
+                                InputRef::Stored(CENTROIDS_KEY.to_string()),
+                            ],
+                        )
+                        .map_err(ExecError)?;
+                    pending.push_back((start, rows, t));
+                    start = end;
+                }
+            }
+        }
+
+        // Drain the tail in submission order; recycle staging buffers.
+        while let Some((s0, r0, t)) = pending.pop_front() {
+            let done = t.wait().map_err(ExecError)?;
+            absorb_chunk(&mut self.total, s0, r0, k, m, am, &done.outputs)?;
+            if let Feed::Stream { free, .. } = &mut self.feed {
+                let mut it = done.recycled.into_iter();
+                if let (Some(p), Some(mk)) = (it.next(), it.next()) {
+                    free.push((p.into_f32(), mk.into_f32()));
+                }
+            }
+        }
+
+        self.counters.scanned_rows += n as u64;
+        Ok(&self.total)
+    }
+
+    fn prune_counters(&self) -> PruneCounters {
+        self.counters
+    }
+
+    fn path_name(&self) -> &'static str {
+        "gpu-pipeline"
+    }
+
+    fn device_counters(&self) -> DeviceCounters {
+        let s = self.exec.device.stats();
+        DeviceCounters {
+            submissions: s
+                .submissions
+                .load(Ordering::Relaxed)
+                .saturating_sub(self.base.subs),
+            max_queue_depth: s.max_queue_depth.load(Ordering::Relaxed),
+            h2d_bytes: s
+                .h2d_bytes
+                .load(Ordering::Relaxed)
+                .saturating_sub(self.base.h2d),
+            d2h_bytes: s
+                .d2h_bytes
+                .load(Ordering::Relaxed)
+                .saturating_sub(self.base.d2h),
+            device_idle_nanos: s
+                .device_idle_nanos
+                .load(Ordering::Relaxed)
+                .saturating_sub(self.base.idle),
+            host_stall_nanos: s
+                .host_stall_nanos
+                .load(Ordering::Relaxed)
+                .saturating_sub(self.base.stall),
+        }
+    }
+
+    fn finish(self: Box<Self>) -> AssignStats {
+        self.total
     }
 }

@@ -130,6 +130,29 @@ impl AssignStats {
     }
 }
 
+/// Device-pipeline counters for one assignment session, derived from
+/// [`crate::runtime::DeviceStats`] deltas: how much the asynchronous
+/// chunk pipeline actually overlapped host preparation with device
+/// execution. All zero for CPU sessions (the
+/// [`AssignSession::device_counters`] default).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DeviceCounters {
+    /// Kernel tasks submitted to the in-order device queue.
+    pub submissions: u64,
+    /// Deepest the submission queue got (≥ 2 means the host had the
+    /// next chunk staged before the device finished the current one).
+    pub max_queue_depth: u64,
+    /// Host-to-device bytes shipped (uploads + inline task inputs).
+    pub h2d_bytes: u64,
+    /// Device-to-host bytes returned (task outputs).
+    pub d2h_bytes: u64,
+    /// Time the device spent waiting for work — the overlap residue the
+    /// paper's Algorithm 4 is designed to hide.
+    pub device_idle_nanos: u64,
+    /// Time host threads spent blocked in `Ticket::wait` for results.
+    pub host_stall_nanos: u64,
+}
+
 /// Errors from stage execution (artifact selection, device failures…).
 #[derive(Debug)]
 pub struct ExecError(pub String);
@@ -184,10 +207,10 @@ pub trait Executor {
     /// Euclidean sessions also own the per-iteration
     /// [`crate::kernel::prep::CentroidPrep`] (centroid norms + the
     /// micro-kernel's transposed panel): built once per `step` on the
-    /// leader, shared read-only by every shard. The GPU regime returns a
-    /// [`DenseSession`] (pruning is per-row divergent — the wrong shape
-    /// for the wide device kernels, matching the paper's per-stage
-    /// offload logic).
+    /// leader, shared read-only by every shard. The GPU regime returns
+    /// the asynchronous chunk pipeline of [`gpu::GpuAssignSession`]
+    /// (dense sweep — pruning is per-row divergent, the wrong shape for
+    /// the wide device kernels — over device-resident shards).
     fn assign_session<'a>(
         &'a self,
         ds: &'a Dataset,
@@ -241,6 +264,13 @@ pub trait AssignSession {
         F32Counters::default()
     }
 
+    /// Device-pipeline counters accumulated over the session; all zero
+    /// for CPU sessions (the default). The GPU session reports
+    /// [`crate::runtime::DeviceStats`] deltas since it opened.
+    fn device_counters(&self) -> DeviceCounters {
+        DeviceCounters::default()
+    }
+
     /// Consume the session, returning the last pass's statistics (the
     /// labels move out — no final n-length copy).
     fn finish(self: Box<Self>) -> AssignStats;
@@ -248,10 +278,9 @@ pub trait AssignSession {
 
 /// Fallback [`AssignSession`] that re-runs the executor's stateless
 /// [`Executor::assign_update`] every pass: no cross-iteration bounds, no
-/// buffer reuse beyond what the executor does internally. Used by the
-/// GPU regime, which keeps the dense path (device-resident shards make
-/// the dense sweep cheap to re-run, and bound bookkeeping would be
-/// per-row divergent on the device).
+/// buffer reuse beyond what the executor does internally. Kept as the
+/// generic adapter for executors without a stateful session (the GPU
+/// regime now runs [`gpu::GpuAssignSession`] instead).
 pub struct DenseSession<'a> {
     exec: &'a dyn Executor,
     ds: &'a Dataset,

@@ -96,6 +96,7 @@ pub fn run(
     let prune = session.prune_counters();
     let assign_path = session.path_name().to_string();
     let f32c = session.f32_counters();
+    let device = session.device_counters();
     let labels = session.finish().labels;
 
     let metrics = RunMetrics {
@@ -112,6 +113,7 @@ pub fn run(
         assign_path,
         f32: f32c,
         io: crate::exec::stream::IoCounters::default(),
+        device,
     };
 
     Ok(FitResult {

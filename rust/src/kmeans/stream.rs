@@ -251,6 +251,7 @@ fn drive<'a>(
         assign_path,
         f32: simd::F32Counters::default(),
         io,
+        device: crate::exec::DeviceCounters::default(),
     };
 
     Ok(FitResult {

@@ -56,10 +56,21 @@
 //!   The multi regime runs every stage on a lazily-built **persistent
 //!   thread pool** ([`pool`]) — zero OS-thread spawns inside the Lloyd
 //!   loop after warm-up. Single and multi call the CPU kernels per
-//!   shard; gpu ships shards to the PJRT artifacts and keeps the dense
-//!   per-iteration sweep (pruning is per-row divergent — the wrong shape
-//!   for the wide device kernels). No distance/argmin/reduction loop
-//!   lives here. The **out-of-core streaming engine**
+//!   shard; the gpu regime drives the device through an **asynchronous
+//!   double-buffered chunk pipeline** ([`exec::gpu::GpuAssignSession`]
+//!   over [`runtime::Device::submit`]'s ticketed in-order stream): the
+//!   dataset is pinned device-resident once per fit, each iteration
+//!   uploads only the padded centroid table (stored once under a device
+//!   key and referenced by every chunk), and in streaming mode host
+//!   pad/prep of chunk *t+1* overlaps the kernel for chunk *t* through
+//!   a bounded staging ring sized from the memory budget — tickets
+//!   retire in submission order, so accumulated statistics are bitwise
+//!   independent of ring depth. The gpu regime keeps the dense
+//!   per-iteration sweep (pruning is per-row divergent — the wrong
+//!   shape for the wide device kernels), and overlap health (queue
+//!   depth, device idle, host stall) surfaces as
+//!   [`exec::DeviceCounters`] in `RunMetrics`. No
+//!   distance/argmin/reduction loop lives here. The **out-of-core streaming engine**
 //!   ([`exec::stream`]) is the fourth data-movement shape: chunks from
 //!   a [`data::shard::ShardSource`] cycle through a double-buffered
 //!   ring bounded by a memory budget — one pool worker prefetches
@@ -73,9 +84,10 @@
 //!   loop driving one assign-session per fit, initialization, regime
 //!   policy, metrics (including pruning-rate counters) and reporting.
 //!
-//! The explicit SIMD lane landed behind exactly the kernel entry points
-//! this seam promised — no orchestration or driver change. A batched-PJRT
-//! backend remains the next candidate to slot in the same way.
+//! The explicit SIMD lane and the asynchronous device pipeline both
+//! landed behind exactly the seams this architecture promised — kernel
+//! entry points for the former, `Executor::assign_session` for the
+//! latter — with no driver change either time.
 //!
 //! ## Testing strategy: two parity tiers
 //!

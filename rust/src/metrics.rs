@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use crate::exec::stream::IoCounters;
+use crate::exec::DeviceCounters;
 use crate::json::Json;
 use crate::kernel::pruned::PruneCounters;
 use crate::kernel::simd::F32Counters;
@@ -106,6 +107,9 @@ pub struct RunMetrics {
     /// Streaming-engine I/O counters (`exec::stream`); all zero for the
     /// in-core regimes.
     pub io: IoCounters,
+    /// Device-pipeline counters (`exec::gpu` sessions); all zero for
+    /// CPU regimes.
+    pub device: DeviceCounters,
 }
 
 impl RunMetrics {
@@ -136,6 +140,24 @@ impl RunMetrics {
                 "io_prefetch_stall_s",
                 Json::num(self.io.prefetch_stall.as_secs_f64()),
             ),
+            (
+                "device_submissions",
+                Json::num(self.device.submissions as f64),
+            ),
+            (
+                "device_max_queue_depth",
+                Json::num(self.device.max_queue_depth as f64),
+            ),
+            ("device_h2d_bytes", Json::num(self.device.h2d_bytes as f64)),
+            ("device_d2h_bytes", Json::num(self.device.d2h_bytes as f64)),
+            (
+                "device_idle_s",
+                Json::num(self.device.device_idle_nanos as f64 * 1e-9),
+            ),
+            (
+                "device_host_stall_s",
+                Json::num(self.device.host_stall_nanos as f64 * 1e-9),
+            ),
             ("stages", self.stages.to_json()),
         ])
     }
@@ -163,6 +185,17 @@ impl RunMetrics {
             s.push_str(&format!(
                 "  io: {} bytes read / {} chunks prefetched / {:?} stalled\n",
                 self.io.bytes_read, self.io.chunks_prefetched, self.io.prefetch_stall
+            ));
+        }
+        if self.device.submissions > 0 {
+            s.push_str(&format!(
+                "  device: {} tasks / depth≤{} / {:.1} MB up / {:.1} MB down / idle {:.1}ms / stall {:.1}ms\n",
+                self.device.submissions,
+                self.device.max_queue_depth,
+                self.device.h2d_bytes as f64 / 1e6,
+                self.device.d2h_bytes as f64 / 1e6,
+                self.device.device_idle_nanos as f64 * 1e-6,
+                self.device.host_stall_nanos as f64 * 1e-6,
             ));
         }
         if self.prune.pruned_rows + self.prune.scanned_rows > 0 {
@@ -247,6 +280,14 @@ mod tests {
                 chunks_prefetched: 7,
                 prefetch_stall: Duration::from_millis(3),
             },
+            device: DeviceCounters {
+                submissions: 31,
+                max_queue_depth: 3,
+                h2d_bytes: 1_000_000,
+                d2h_bytes: 50_000,
+                device_idle_nanos: 2_000_000,
+                host_stall_nanos: 5_000_000,
+            },
         };
         assert!((m.prune.rate() - 0.75).abs() < 1e-12);
         let j = m.to_json();
@@ -261,10 +302,17 @@ mod tests {
         assert_eq!(parsed.req_usize("io_bytes_read").unwrap(), 4096);
         assert_eq!(parsed.req_usize("io_chunks_prefetched").unwrap(), 7);
         assert!(parsed.get("io_prefetch_stall_s").is_some());
+        assert_eq!(parsed.req_usize("device_submissions").unwrap(), 31);
+        assert_eq!(parsed.req_usize("device_max_queue_depth").unwrap(), 3);
+        assert_eq!(parsed.req_usize("device_h2d_bytes").unwrap(), 1_000_000);
+        assert!(parsed.get("device_idle_s").is_some());
+        assert!(parsed.get("device_host_stall_s").is_some());
         assert!(parsed.get("stages").unwrap().get("assign").is_some());
         assert!(m.render().contains("75.0% pruned"), "{}", m.render());
         assert!(m.render().contains("4096 bytes read"), "{}", m.render());
         assert!(m.render().contains("assign path: pruned+micro"), "{}", m.render());
         assert!(m.render().contains("4.0% refined"), "{}", m.render());
+        assert!(m.render().contains("31 tasks"), "{}", m.render());
+        assert!(m.render().contains("depth≤3"), "{}", m.render());
     }
 }

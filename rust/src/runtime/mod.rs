@@ -1,23 +1,36 @@
-//! PJRT runtime: load AOT artifacts and execute them from the hot path.
+//! Device runtime: the in-order accelerator model behind the GPU regime.
 //!
-//! The `xla` crate's PJRT handles are raw-pointer wrappers (not `Send`),
-//! so all device objects live on one dedicated **device thread** — which
-//! is also the honest model of the paper's hardware: a GTX 660 executes
-//! kernels from one CUDA stream in order, while host threads prepare and
-//! enqueue work (paper Algorithm 4: "each thread prepares the task for
-//! the GPU, sends this task for execution and receives the results").
+//! All device state lives on one dedicated **device thread** — which is
+//! the honest model of the paper's hardware: a GTX 660 executes kernels
+//! from one CUDA stream in order, while host threads prepare and enqueue
+//! work (paper Algorithm 4: "each thread prepares the task for the GPU,
+//! sends this task for execution and receives the results"). Two request
+//! paths share that stream:
 //!
-//! [`Device::execute`] is the request path: host tensors in, host tensors
-//! out, with transfer/exec accounting for the performance model. The
-//! executable cache compiles each artifact once per process.
+//! * [`Device::execute`] / [`Device::execute_refs`] — synchronous
+//!   request/response: host tensors in, host tensors out.
+//! * [`Device::submit`] → [`Ticket::wait`] — the asynchronous path under
+//!   the double-buffered chunk pipeline: the host enqueues kernel t+1
+//!   while the device runs kernel t, and the completed ticket hands the
+//!   inline input buffers back so staging rings can reuse them without
+//!   reallocating.
+//!
+//! The backend interprets the AOT artifact *contracts* (kind + compiled
+//! shapes from `manifest.json`) with a scalar f64 reference
+//! implementation — a simulated device faithful to the Pallas kernels'
+//! padding/masking semantics (zero-padded rows, masked reductions,
+//! `PAD_CENTROID` rows that never win the argmin). Transfer, execution,
+//! queue-depth, device-idle and host-stall accounting all flow through
+//! [`DeviceStats`] so the performance model and the overlap metrics stay
+//! meaningful on machines without a real accelerator.
 
 pub mod artifact;
 pub mod pad;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -75,10 +88,19 @@ impl HostTensor {
             TensorData::I32(v) => v.len(),
         }
     }
+
+    /// Take the f32 buffer out (for staging-ring recycling). Panics on
+    /// i32 tensors, like [`HostTensor::as_f32`].
+    pub fn into_f32(self) -> Vec<f32> {
+        match self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
 }
 
 /// Cumulative device counters (thread-safe), used by the perf model
-/// calibration and the stage reports.
+/// calibration, the stage reports, and the pipeline overlap metrics.
 #[derive(Debug, Default)]
 pub struct DeviceStats {
     pub h2d_bytes: AtomicU64,
@@ -86,6 +108,18 @@ pub struct DeviceStats {
     pub executions: AtomicU64,
     pub exec_nanos: AtomicU64,
     pub compilations: AtomicU64,
+    /// Execute requests enqueued (sync and async both count).
+    pub submissions: AtomicU64,
+    /// Execute requests currently enqueued or running.
+    pub queue_depth: AtomicU64,
+    /// High-water mark of [`DeviceStats::queue_depth`].
+    pub max_queue_depth: AtomicU64,
+    /// Time the device thread sat idle between requests (after its
+    /// first request — pipeline bubbles, not process startup).
+    pub device_idle_nanos: AtomicU64,
+    /// Cumulative time host threads spent blocked in [`Ticket::wait`]
+    /// (summed across threads for concurrent waiters).
+    pub host_stall_nanos: AtomicU64,
 }
 
 impl DeviceStats {
@@ -100,19 +134,66 @@ impl DeviceStats {
     }
 }
 
-/// An input to [`Device::execute_refs`]: either sent fresh from the host
-/// or referencing a tensor previously pinned with [`Device::store`].
+/// An input to [`Device::execute_refs`] / [`Device::submit`]: either
+/// sent fresh from the host or referencing a tensor previously pinned
+/// with [`Device::store`].
 #[derive(Clone, Debug)]
 pub enum InputRef {
     Inline(HostTensor),
     Stored(String),
 }
 
+/// What the device thread sends back for an Execute request: the
+/// outputs (or error), plus the inline input tensors moved back out so
+/// the submitter can reuse their buffers.
+struct ExecDone {
+    result: Result<Vec<HostTensor>, String>,
+    recycled: Vec<HostTensor>,
+}
+
+/// A completed asynchronous execution (see [`Ticket::wait`]).
+pub struct Completed {
+    /// Kernel outputs, in the artifact's output order.
+    pub outputs: Vec<HostTensor>,
+    /// The [`InputRef::Inline`] tensors from the submission, returned
+    /// in submission order for buffer reuse.
+    pub recycled: Vec<HostTensor>,
+}
+
+/// Handle to one in-flight asynchronous execution. Waits resolve in
+/// submission order because the device thread is a single in-order
+/// stream.
+pub struct Ticket {
+    rx: Receiver<ExecDone>,
+    stats: Arc<DeviceStats>,
+}
+
+impl Ticket {
+    /// Block until the execution finishes. Time spent blocked is
+    /// recorded as host-stall (the pipeline's "host waited on device"
+    /// component).
+    pub fn wait(self) -> Result<Completed, String> {
+        let t0 = Instant::now();
+        let done = self
+            .rx
+            .recv()
+            .map_err(|_| "device thread dropped reply".to_string());
+        self.stats
+            .host_stall_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let done = done?;
+        done.result.map(|outputs| Completed {
+            outputs,
+            recycled: done.recycled,
+        })
+    }
+}
+
 enum Request {
     Execute {
         artifact: String,
         inputs: Vec<InputRef>,
-        reply: Sender<Result<Vec<HostTensor>, String>>,
+        reply: Sender<ExecDone>,
     },
     Store {
         key: String,
@@ -154,23 +235,62 @@ impl Drop for DeviceInner {
     }
 }
 
+/// The built-in manifest behind [`Device::sim`]: the same shape
+/// variants `python -m compile.aot` emits (minus `step`, which the
+/// simulated backend does not execute). Paths are nominal — the
+/// interpreter works from the shape contract alone.
+const SIM_MANIFEST: &str = r#"{
+  "version": 2,
+  "artifacts": [
+    {"kind":"assign","name":"assign_n1024_m32_k16","path":"assign_n1024_m32_k16.hlo.txt","n":1024,"m":32,"k":16},
+    {"kind":"assign","name":"assign_n4096_m32_k16","path":"assign_n4096_m32_k16.hlo.txt","n":4096,"m":32,"k":16},
+    {"kind":"assign","name":"assign_n16384_m32_k16","path":"assign_n16384_m32_k16.hlo.txt","n":16384,"m":32,"k":16},
+    {"kind":"assign","name":"assign_n65536_m32_k16","path":"assign_n65536_m32_k16.hlo.txt","n":65536,"m":32,"k":16},
+    {"kind":"assign","name":"assign_n65536_m32_k32","path":"assign_n65536_m32_k32.hlo.txt","n":65536,"m":32,"k":32},
+    {"kind":"assign","name":"assign_n4096_m8_k8","path":"assign_n4096_m8_k8.hlo.txt","n":4096,"m":8,"k":8},
+    {"kind":"sum","name":"sum_n16384_m32","path":"sum_n16384_m32.hlo.txt","n":16384,"m":32},
+    {"kind":"sum","name":"sum_n65536_m32","path":"sum_n65536_m32.hlo.txt","n":65536,"m":32},
+    {"kind":"diameter","name":"diameter_a2048_b2048_m32","path":"diameter_a2048_b2048_m32.hlo.txt","an":2048,"bn":2048,"m":32},
+    {"kind":"diameter","name":"diameter_a512_b512_m32","path":"diameter_a512_b512_m32.hlo.txt","an":512,"bn":512,"m":32},
+    {"kind":"pdist","name":"pdist_a1024_b1024_m32","path":"pdist_a1024_b1024_m32.hlo.txt","an":1024,"bn":1024,"m":32}
+  ]
+}"#;
+
 impl Device {
     /// Start the device thread over an artifact directory (reads
-    /// `manifest.json`, compiles artifacts lazily on first use).
+    /// `manifest.json`; per-artifact HLO text is validated at first
+    /// compile, like a real AOT load path).
     pub fn open(artifact_dir: &Path) -> Result<Device, String> {
-        let manifest = Manifest::load(artifact_dir)?;
+        Self::start(Manifest::load(artifact_dir)?, Some(artifact_dir.to_path_buf()))
+    }
+
+    /// Start the device thread over the built-in manifest — the
+    /// simulated testbed, available on every machine.
+    pub fn sim() -> Device {
+        let manifest =
+            Manifest::parse(SIM_MANIFEST).expect("built-in manifest parses");
+        Self::from_manifest(manifest).expect("device thread spawns")
+    }
+
+    /// Start the device thread over an already-parsed manifest (tests
+    /// use this to pick custom chunk capacities). No backing files —
+    /// compilation validates the shape contract only.
+    pub fn from_manifest(manifest: Manifest) -> Result<Device, String> {
+        Self::start(manifest, None)
+    }
+
+    fn start(manifest: Manifest, dir: Option<PathBuf>) -> Result<Device, String> {
         let stats = Arc::new(DeviceStats::default());
         let (tx, rx) = channel::<Request>();
-        let dir = artifact_dir.to_path_buf();
         let thread_stats = Arc::clone(&stats);
-        let paths: HashMap<String, PathBuf> = manifest
+        let metas: HashMap<String, ArtifactMeta> = manifest
             .artifacts
             .iter()
-            .map(|a| (a.name.clone(), dir.join(&a.path)))
+            .map(|a| (a.name.clone(), a.clone()))
             .collect();
         let handle = std::thread::Builder::new()
             .name("parclust-device".into())
-            .spawn(move || device_loop(rx, paths, thread_stats))
+            .spawn(move || device_loop(rx, metas, dir, thread_stats))
             .map_err(|e| format!("spawn device thread: {e}"))?;
         Ok(Device {
             inner: Arc::new(DeviceInner {
@@ -209,20 +329,41 @@ impl Device {
         artifact: &str,
         inputs: Vec<InputRef>,
     ) -> Result<Vec<HostTensor>, String> {
+        self.submit(artifact, inputs)?.wait().map(|c| c.outputs)
+    }
+
+    /// Enqueue an execution without waiting: the async path. The device
+    /// runs requests in submission order; the returned [`Ticket`]
+    /// resolves when this one finishes. Queue depth and submission
+    /// counters feed the overlap metrics.
+    pub fn submit(
+        &self,
+        artifact: &str,
+        inputs: Vec<InputRef>,
+    ) -> Result<Ticket, String> {
         let (tx, rx) = channel();
-        self.inner
+        let stats = Arc::clone(&self.inner.stats);
+        stats.submissions.fetch_add(1, Ordering::Relaxed);
+        let depth = stats.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        stats.max_queue_depth.fetch_max(depth, Ordering::Relaxed);
+        if self
+            .inner
             .sender
             .send(Request::Execute {
                 artifact: artifact.to_string(),
                 inputs,
                 reply: tx,
             })
-            .map_err(|_| "device thread gone".to_string())?;
-        rx.recv().map_err(|_| "device thread dropped reply".to_string())?
+            .is_err()
+        {
+            stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            return Err("device thread gone".to_string());
+        }
+        Ok(Ticket { rx, stats })
     }
 
     /// Pin a tensor on the device under `key` (overwrites). Subsequent
-    /// [`Device::execute_refs`] calls may reference it without re-upload.
+    /// executions may reference it without re-upload.
     pub fn store(&self, key: &str, tensor: HostTensor) -> Result<(), String> {
         let (tx, rx) = channel();
         self.inner
@@ -269,85 +410,79 @@ impl Device {
     }
 }
 
+fn compile_artifact(
+    name: &str,
+    metas: &HashMap<String, ArtifactMeta>,
+    dir: &Option<PathBuf>,
+    compiled: &mut HashSet<String>,
+    stats: &DeviceStats,
+) -> Result<(), String> {
+    if compiled.contains(name) {
+        return Ok(());
+    }
+    let Some(meta) = metas.get(name) else {
+        return Err(format!("unknown artifact '{name}'"));
+    };
+    // File-backed devices validate the HLO text at compile time (a
+    // manifest-only device skips this — the interpreter works from the
+    // shape contract). A failed compile leaves the device serving.
+    if let Some(dir) = dir {
+        let path = dir.join(&meta.path);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("artifact '{name}': read {}: {e}", path.display()))?;
+        if !text.starts_with("HloModule") || !text.contains("ENTRY") {
+            return Err(format!(
+                "artifact '{name}': parse error: {} is not HLO text (missing \
+                 HloModule header or ENTRY computation)",
+                path.display()
+            ));
+        }
+    }
+    stats.compilations.fetch_add(1, Ordering::Relaxed);
+    compiled.insert(name.to_string());
+    Ok(())
+}
+
 fn device_loop(
-    rx: std::sync::mpsc::Receiver<Request>,
-    paths: HashMap<String, PathBuf>,
+    rx: Receiver<Request>,
+    metas: HashMap<String, ArtifactMeta>,
+    dir: Option<PathBuf>,
     stats: Arc<DeviceStats>,
 ) {
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => c,
-        Err(e) => {
-            // Every request will fail with this message.
-            let msg = format!("PJRT client init failed: {e}");
-            for req in rx {
-                match req {
-                    Request::Execute { reply, .. } => {
-                        let _ = reply.send(Err(msg.clone()));
-                    }
-                    Request::Store { reply, .. } => {
-                        let _ = reply.send(Err(msg.clone()));
-                    }
-                    Request::ClearStore { reply, .. } => {
-                        let _ = reply.send(0);
-                    }
-                    Request::Warmup { reply, .. } => {
-                        let _ = reply.send(Err(msg.clone()));
-                    }
-                    Request::Shutdown => return,
-                }
-            }
-            return;
-        }
-    };
-    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    let mut compiled: HashSet<String> = HashSet::new();
     // Device-resident tensors (paper §7 future work: data stays on the
     // accelerator across iterated stages).
-    let mut store: HashMap<String, xla::Literal> = HashMap::new();
-
-    let compile = |name: &str,
-                   cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
-                   client: &xla::PjRtClient|
-     -> Result<(), String> {
-        if cache.contains_key(name) {
-            return Ok(());
-        }
-        let path = paths
-            .get(name)
-            .ok_or_else(|| format!("unknown artifact '{name}'"))?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or("non-utf8 path")?,
-        )
-        .map_err(|e| format!("parse {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| format!("compile {name}: {e}"))?;
-        stats.compilations.fetch_add(1, Ordering::Relaxed);
-        cache.insert(name.to_string(), exe);
-        Ok(())
-    };
-
-    let make_literal = |t: &HostTensor| -> Result<xla::Literal, String> {
-        let lit = match &t.data {
-            TensorData::F32(v) => xla::Literal::vec1(v),
-            TensorData::I32(v) => xla::Literal::vec1(v),
+    let mut store: HashMap<String, HostTensor> = HashMap::new();
+    let mut served_any = false;
+    loop {
+        let idle_t = Instant::now();
+        let req = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return,
         };
-        lit.reshape(&t.dims).map_err(|e| format!("reshape input: {e}"))
-    };
-
-    for req in rx {
+        if served_any {
+            stats
+                .device_idle_nanos
+                .fetch_add(idle_t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        served_any = true;
         match req {
             Request::Shutdown => return,
             Request::Warmup { artifact, reply } => {
-                let _ = reply.send(compile(&artifact, &mut cache, &client));
+                let _ = reply.send(compile_artifact(
+                    &artifact,
+                    &metas,
+                    &dir,
+                    &mut compiled,
+                    &stats,
+                ));
             }
             Request::Store { key, tensor, reply } => {
                 stats
                     .h2d_bytes
                     .fetch_add(tensor.byte_len() as u64, Ordering::Relaxed);
-                let _ = reply.send(make_literal(&tensor).map(|lit| {
-                    store.insert(key, lit);
-                }));
+                store.insert(key, tensor);
+                let _ = reply.send(Ok(()));
             }
             Request::ClearStore { prefix, reply } => {
                 let before = store.len();
@@ -360,28 +495,21 @@ fn device_loop(
                 reply,
             } => {
                 let result = (|| -> Result<Vec<HostTensor>, String> {
-                    compile(&artifact, &mut cache, &client)?;
-                    let exe = cache.get(&artifact).unwrap();
-                    // Fresh inputs become literals (counted as H2D
-                    // traffic); stored inputs are referenced in place.
-                    let mut fresh: Vec<xla::Literal> = Vec::new();
-                    for r in &inputs {
-                        if let InputRef::Inline(t) = r {
-                            stats
-                                .h2d_bytes
-                                .fetch_add(t.byte_len() as u64, Ordering::Relaxed);
-                            fresh.push(make_literal(t)?);
-                        }
-                    }
-                    let mut fresh_iter = fresh.iter();
-                    let mut literals: Vec<&xla::Literal> =
+                    compile_artifact(&artifact, &metas, &dir, &mut compiled, &stats)?;
+                    let meta = &metas[&artifact];
+                    // Fresh inputs count as H2D traffic; stored inputs
+                    // are referenced in place.
+                    let mut resolved: Vec<&HostTensor> =
                         Vec::with_capacity(inputs.len());
                     for r in &inputs {
                         match r {
-                            InputRef::Inline(_) => {
-                                literals.push(fresh_iter.next().unwrap())
+                            InputRef::Inline(t) => {
+                                stats
+                                    .h2d_bytes
+                                    .fetch_add(t.byte_len() as u64, Ordering::Relaxed);
+                                resolved.push(t);
                             }
-                            InputRef::Stored(key) => literals.push(
+                            InputRef::Stored(key) => resolved.push(
                                 store.get(key).ok_or_else(|| {
                                     format!("no stored tensor '{key}'")
                                 })?,
@@ -389,53 +517,243 @@ fn device_loop(
                         }
                     }
                     let t0 = Instant::now();
-                    let out = exe
-                        .execute::<&xla::Literal>(&literals)
-                        .map_err(|e| format!("execute {artifact}: {e}"))?;
-                    let root = out[0][0]
-                        .to_literal_sync()
-                        .map_err(|e| format!("fetch result: {e}"))?;
-                    stats
-                        .exec_nanos
-                        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    let outs = interpret(meta, &resolved)?;
+                    stats.exec_nanos.fetch_add(
+                        (t0.elapsed().as_nanos() as u64).max(1),
+                        Ordering::Relaxed,
+                    );
                     stats.executions.fetch_add(1, Ordering::Relaxed);
-                    let parts = root
-                        .to_tuple()
-                        .map_err(|e| format!("untuple result: {e}"))?;
-                    let mut outs = Vec::with_capacity(parts.len());
-                    for p in parts {
-                        let shape = p
-                            .array_shape()
-                            .map_err(|e| format!("result shape: {e}"))?;
-                        let dims: Vec<i64> = shape.dims().to_vec();
-                        let t = match shape.ty() {
-                            xla::ElementType::F32 => HostTensor::f32(
-                                &dims,
-                                p.to_vec::<f32>()
-                                    .map_err(|e| format!("read f32: {e}"))?,
-                            ),
-                            xla::ElementType::S32 => HostTensor::i32(
-                                &dims,
-                                p.to_vec::<i32>()
-                                    .map_err(|e| format!("read i32: {e}"))?,
-                            ),
-                            other => {
-                                return Err(format!(
-                                    "unsupported output dtype {other:?}"
-                                ))
-                            }
-                        };
+                    for t in &outs {
                         stats
                             .d2h_bytes
                             .fetch_add(t.byte_len() as u64, Ordering::Relaxed);
-                        outs.push(t);
                     }
                     Ok(outs)
                 })();
-                let _ = reply.send(result);
+                let recycled: Vec<HostTensor> = inputs
+                    .into_iter()
+                    .filter_map(|r| match r {
+                        InputRef::Inline(t) => Some(t),
+                        InputRef::Stored(_) => None,
+                    })
+                    .collect();
+                stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                let _ = reply.send(ExecDone { result, recycled });
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Artifact interpreter — the simulated device's ALU. Scalar f64 inner
+// loops over padded f32 buffers, matching the Pallas kernel contracts:
+// every row gets a label (even masked padding), only mask > 0 rows
+// contribute to the reductions, and the f64 accumulation keeps labels
+// exactly equal to the CPU f64 reference on the same data.
+// ---------------------------------------------------------------------
+
+fn want_f32<'a>(
+    meta: &ArtifactMeta,
+    t: &'a HostTensor,
+    idx: usize,
+    len: usize,
+) -> Result<&'a [f32], String> {
+    let v = match &t.data {
+        TensorData::F32(v) => v,
+        _ => {
+            return Err(format!(
+                "{}: input {idx} must be f32",
+                meta.name
+            ))
+        }
+    };
+    if v.len() != len {
+        return Err(format!(
+            "{}: input {idx} has {} values, expected {len}",
+            meta.name,
+            v.len()
+        ));
+    }
+    Ok(v)
+}
+
+fn want_arity(meta: &ArtifactMeta, inputs: &[&HostTensor], n: usize) -> Result<(), String> {
+    if inputs.len() != n {
+        return Err(format!(
+            "{}: got {} inputs, expected {n}",
+            meta.name,
+            inputs.len()
+        ));
+    }
+    Ok(())
+}
+
+fn interpret(
+    meta: &ArtifactMeta,
+    inputs: &[&HostTensor],
+) -> Result<Vec<HostTensor>, String> {
+    match meta.kind {
+        ArtifactKind::Assign => run_assign(meta, inputs),
+        ArtifactKind::Sum => run_sum(meta, inputs),
+        ArtifactKind::Diameter => run_diameter(meta, inputs),
+        ArtifactKind::Pdist => run_pdist(meta, inputs),
+        ArtifactKind::Step => Err(format!(
+            "step artifact '{}' not supported by the simulated device",
+            meta.name
+        )),
+    }
+}
+
+/// `(points [n,m], mask [n], centroids [k,m])` →
+/// `(labels i32 [n], sums f32 [k,m], counts f32 [k], inertia f32 [1])`.
+fn run_assign(
+    meta: &ArtifactMeta,
+    inputs: &[&HostTensor],
+) -> Result<Vec<HostTensor>, String> {
+    want_arity(meta, inputs, 3)?;
+    let (n, m, k) = (meta.n, meta.m, meta.k);
+    let pts = want_f32(meta, inputs[0], 0, n * m)?;
+    let mask = want_f32(meta, inputs[1], 1, n)?;
+    let cents = want_f32(meta, inputs[2], 2, k * m)?;
+
+    let mut labels = vec![0i32; n];
+    let mut sums = vec![0f64; k * m];
+    let mut counts = vec![0f64; k];
+    let mut inertia = 0f64;
+    for i in 0..n {
+        let row = &pts[i * m..(i + 1) * m];
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for c in 0..k {
+            let cr = &cents[c * m..(c + 1) * m];
+            let mut d = 0f64;
+            for j in 0..m {
+                let diff = row[j] as f64 - cr[j] as f64;
+                d += diff * diff;
+            }
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        labels[i] = best as i32;
+        if mask[i] > 0.0 {
+            counts[best] += 1.0;
+            inertia += best_d;
+            let s = &mut sums[best * m..(best + 1) * m];
+            for j in 0..m {
+                s[j] += row[j] as f64;
+            }
+        }
+    }
+    Ok(vec![
+        HostTensor::i32(&[n as i64], labels),
+        HostTensor::f32(
+            &[k as i64, m as i64],
+            sums.iter().map(|&s| s as f32).collect(),
+        ),
+        HostTensor::f32(&[k as i64], counts.iter().map(|&c| c as f32).collect()),
+        HostTensor::f32(&[1], vec![inertia as f32]),
+    ])
+}
+
+/// `(points [n,m], mask [n])` → `(sums f32 [m], count f32 [1])`.
+fn run_sum(
+    meta: &ArtifactMeta,
+    inputs: &[&HostTensor],
+) -> Result<Vec<HostTensor>, String> {
+    want_arity(meta, inputs, 2)?;
+    let (n, m) = (meta.n, meta.m);
+    let pts = want_f32(meta, inputs[0], 0, n * m)?;
+    let mask = want_f32(meta, inputs[1], 1, n)?;
+
+    let mut sums = vec![0f64; m];
+    let mut count = 0f64;
+    for i in 0..n {
+        if mask[i] > 0.0 {
+            count += 1.0;
+            let row = &pts[i * m..(i + 1) * m];
+            for j in 0..m {
+                sums[j] += row[j] as f64;
+            }
+        }
+    }
+    Ok(vec![
+        HostTensor::f32(&[m as i64], sums.iter().map(|&s| s as f32).collect()),
+        HostTensor::f32(&[1], vec![count as f32]),
+    ])
+}
+
+/// `(block_a [an,m], block_b [bn,m], mask_a [an], mask_b [bn])` →
+/// `(max_d2 f32 [1], arg_i i32 [1], arg_j i32 [1])` with block-local
+/// argmax indices; `(-2, -1, -1)` when no pair is valid.
+fn run_diameter(
+    meta: &ArtifactMeta,
+    inputs: &[&HostTensor],
+) -> Result<Vec<HostTensor>, String> {
+    want_arity(meta, inputs, 4)?;
+    let (an, bn, m) = (meta.n, meta.bn, meta.m);
+    let a = want_f32(meta, inputs[0], 0, an * m)?;
+    let b = want_f32(meta, inputs[1], 1, bn * m)?;
+    let mask_a = want_f32(meta, inputs[2], 2, an)?;
+    let mask_b = want_f32(meta, inputs[3], 3, bn)?;
+
+    let mut best = -2f64;
+    let mut arg_i = -1i32;
+    let mut arg_j = -1i32;
+    for i in 0..an {
+        if mask_a[i] <= 0.0 {
+            continue;
+        }
+        let ra = &a[i * m..(i + 1) * m];
+        for j in 0..bn {
+            if mask_b[j] <= 0.0 {
+                continue;
+            }
+            let rb = &b[j * m..(j + 1) * m];
+            let mut d = 0f64;
+            for x in 0..m {
+                let diff = ra[x] as f64 - rb[x] as f64;
+                d += diff * diff;
+            }
+            if d > best {
+                best = d;
+                arg_i = i as i32;
+                arg_j = j as i32;
+            }
+        }
+    }
+    Ok(vec![
+        HostTensor::f32(&[1], vec![best as f32]),
+        HostTensor::i32(&[1], vec![arg_i]),
+        HostTensor::i32(&[1], vec![arg_j]),
+    ])
+}
+
+/// `(block_a [an,m], block_b [bn,m])` → `(d2 f32 [an,bn])`.
+fn run_pdist(
+    meta: &ArtifactMeta,
+    inputs: &[&HostTensor],
+) -> Result<Vec<HostTensor>, String> {
+    want_arity(meta, inputs, 2)?;
+    let (an, bn, m) = (meta.n, meta.bn, meta.m);
+    let a = want_f32(meta, inputs[0], 0, an * m)?;
+    let b = want_f32(meta, inputs[1], 1, bn * m)?;
+
+    let mut out = vec![0f32; an * bn];
+    for i in 0..an {
+        let ra = &a[i * m..(i + 1) * m];
+        for j in 0..bn {
+            let rb = &b[j * m..(j + 1) * m];
+            let mut d = 0f64;
+            for x in 0..m {
+                let diff = ra[x] as f64 - rb[x] as f64;
+                d += diff * diff;
+            }
+            out[i * bn + j] = d as f32;
+        }
+    }
+    Ok(vec![HostTensor::f32(&[an as i64, bn as i64], out)])
 }
 
 #[cfg(test)]
@@ -463,5 +781,138 @@ mod tests {
             Ok(_) => panic!("open of missing dir must fail"),
             Err(err) => assert!(err.contains("manifest"), "{err}"),
         }
+    }
+
+    fn tiny_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+              "version": 2,
+              "artifacts": [
+                {"kind":"assign","name":"asg","path":"a.hlo.txt","n":4,"m":2,"k":2},
+                {"kind":"sum","name":"sum","path":"u.hlo.txt","n":4,"m":2},
+                {"kind":"diameter","name":"dia","path":"d.hlo.txt","an":4,"bn":4,"m":2},
+                {"kind":"step","name":"stp","path":"s.hlo.txt","n":4,"m":2,"k":2}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn assign_interpreter_hand_checked() {
+        let dev = Device::from_manifest(tiny_manifest()).unwrap();
+        // rows: (0,0) (1,1) (5,5) + one masked-off padding row
+        let pts = vec![0., 0., 1., 1., 5., 5., 0., 0.];
+        let mask = vec![1., 1., 1., 0.];
+        let cents = vec![0., 0., 4., 4.];
+        let out = dev
+            .execute(
+                "asg",
+                vec![
+                    HostTensor::f32(&[4, 2], pts),
+                    HostTensor::f32(&[4], mask),
+                    HostTensor::f32(&[2, 2], cents),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out[0].as_i32(), &[0, 0, 1, 0]);
+        assert_eq!(out[1].as_f32(), &[1., 1., 5., 5.]);
+        assert_eq!(out[2].as_f32(), &[2., 1.]);
+        assert_eq!(out[3].as_f32(), &[4.0]); // 0 + 2 + 2
+    }
+
+    #[test]
+    fn diameter_interpreter_honors_masks() {
+        let dev = Device::from_manifest(tiny_manifest()).unwrap();
+        // valid rows (0,0) and (3,4): d² = 25; rows 2-3 masked off with
+        // coordinates that would otherwise win
+        let pts = vec![0., 0., 3., 4., 100., 100., 0., 0.];
+        let mask = vec![1., 1., 0., 0.];
+        let out = dev
+            .execute(
+                "dia",
+                vec![
+                    HostTensor::f32(&[4, 2], pts.clone()),
+                    HostTensor::f32(&[4, 2], pts),
+                    HostTensor::f32(&[4], mask.clone()),
+                    HostTensor::f32(&[4], mask),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out[0].as_f32(), &[25.0]);
+        let (ai, aj) = (out[1].as_i32()[0], out[2].as_i32()[0]);
+        assert!(ai >= 0 && aj >= 0 && ai < 2 && aj < 2, "{ai} {aj}");
+    }
+
+    #[test]
+    fn step_artifacts_are_rejected_by_the_sim_backend() {
+        let dev = Device::from_manifest(tiny_manifest()).unwrap();
+        dev.warmup("stp").unwrap(); // compiles fine…
+        let err = dev.execute("stp", vec![]).unwrap_err();
+        assert!(err.contains("not supported"), "{err}"); // …never runs
+    }
+
+    #[test]
+    fn sim_device_ships_the_aot_shape_set() {
+        let dev = Device::sim();
+        assert!(dev.manifest().of_kind(ArtifactKind::Assign).count() >= 4);
+        assert!(dev.manifest().of_kind(ArtifactKind::Sum).count() >= 2);
+        assert!(dev.manifest().of_kind(ArtifactKind::Diameter).count() >= 1);
+        assert!(dev.manifest().of_kind(ArtifactKind::Pdist).count() >= 1);
+        assert!(dev.manifest().of_kind(ArtifactKind::Step).count() == 0);
+    }
+
+    #[test]
+    fn tickets_resolve_in_order_and_recycle_inline_buffers() {
+        let dev = Device::from_manifest(tiny_manifest()).unwrap();
+        let mk = |v: f32| {
+            vec![
+                InputRef::Inline(HostTensor::f32(&[4, 2], vec![v; 8])),
+                InputRef::Inline(HostTensor::f32(&[4], vec![1.; 4])),
+            ]
+        };
+        let t1 = dev.submit("sum", mk(1.0)).unwrap();
+        let t2 = dev.submit("sum", mk(2.0)).unwrap();
+        let c1 = t1.wait().unwrap();
+        let c2 = t2.wait().unwrap();
+        assert_eq!(c1.outputs[0].as_f32(), &[4.0, 4.0]);
+        assert_eq!(c2.outputs[0].as_f32(), &[8.0, 8.0]);
+        // inline buffers come back for staging-ring reuse, in order
+        assert_eq!(c1.recycled.len(), 2);
+        assert_eq!(c1.recycled[0].as_f32(), &[1.0f32; 8][..]);
+        assert_eq!(c1.recycled[1].as_f32(), &[1.0f32; 4][..]);
+        let stats = dev.stats();
+        assert!(stats.submissions.load(Ordering::Relaxed) >= 2);
+        assert!(stats.max_queue_depth.load(Ordering::Relaxed) >= 1);
+        assert_eq!(stats.queue_depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn stored_inputs_are_free_of_h2d_on_execute() {
+        let dev = Device::from_manifest(tiny_manifest()).unwrap();
+        dev.store("cents", HostTensor::f32(&[2, 2], vec![0., 0., 4., 4.]))
+            .unwrap();
+        let (h2d0, ..) = dev.stats().snapshot();
+        let out = dev
+            .execute_refs(
+                "asg",
+                vec![
+                    InputRef::Inline(HostTensor::f32(&[4, 2], vec![0.5; 8])),
+                    InputRef::Inline(HostTensor::f32(&[4], vec![1.; 4])),
+                    InputRef::Stored("cents".into()),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out[0].as_i32(), &[0, 0, 0, 0]);
+        let (h2d, ..) = dev.stats().snapshot();
+        assert_eq!(h2d - h2d0, (8 + 4) as u64 * 4, "only inline inputs ship");
+        assert!(dev.stats().host_stall_nanos.load(Ordering::Relaxed) > 0);
+        // missing store key is a clean error
+        let err = dev
+            .execute_refs("asg", vec![InputRef::Stored("nope".into())])
+            .unwrap_err();
+        assert!(err.contains("no stored tensor"), "{err}");
+        // clear_store removes by prefix
+        assert_eq!(dev.clear_store("ce"), 1);
     }
 }

@@ -36,12 +36,45 @@ pub fn pad_points(
     out
 }
 
+/// [`pad_points`] into a caller-owned buffer — the staging-ring variant:
+/// `out` is resized to `cap_rows * m_dst` (a no-op re-fill once the ring
+/// is warm) and overwritten, so steady-state iterations allocate nothing.
+pub fn pad_points_into(
+    src: &[f32],
+    rows: usize,
+    m_src: usize,
+    cap_rows: usize,
+    m_dst: usize,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(src.len(), rows * m_src, "source shape mismatch");
+    assert!(rows <= cap_rows && m_src <= m_dst, "shard exceeds capacity");
+    out.clear();
+    out.resize(cap_rows * m_dst, 0.0);
+    if m_src == m_dst {
+        out[..rows * m_src].copy_from_slice(src);
+    } else {
+        for r in 0..rows {
+            out[r * m_dst..r * m_dst + m_src]
+                .copy_from_slice(&src[r * m_src..(r + 1) * m_src]);
+        }
+    }
+}
+
 /// Validity mask: `rows` ones then zeros up to `cap_rows`.
 pub fn make_mask(rows: usize, cap_rows: usize) -> Vec<f32> {
     assert!(rows <= cap_rows);
     let mut mask = vec![0f32; cap_rows];
     mask[..rows].fill(1.0);
     mask
+}
+
+/// [`make_mask`] into a caller-owned buffer (see [`pad_points_into`]).
+pub fn make_mask_into(rows: usize, cap_rows: usize, out: &mut Vec<f32>) {
+    assert!(rows <= cap_rows);
+    out.clear();
+    out.resize(cap_rows, 0.0);
+    out[..rows].fill(1.0);
 }
 
 /// Pad a `(k_src × m_src)` centroid table into `(k_dst × m_dst)`:
@@ -132,5 +165,23 @@ mod tests {
     #[should_panic(expected = "exceeds capacity")]
     fn over_capacity_panics() {
         pad_points(&[0.0; 4], 2, 2, 1, 2);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ones_and_reuse_capacity() {
+        let src: Vec<f32> = (0..6).map(|x| x as f32).collect(); // 2×3
+        let mut buf = Vec::new();
+        pad_points_into(&src, 2, 3, 4, 5, &mut buf);
+        assert_eq!(buf, pad_points(&src, 2, 3, 4, 5));
+        let cap = buf.capacity();
+        // refill with stale contents present: same result, no regrowth
+        pad_points_into(&src[..3], 1, 3, 4, 5, &mut buf);
+        assert_eq!(buf, pad_points(&src[..3], 1, 3, 4, 5));
+        assert_eq!(buf.capacity(), cap);
+        let mut mask = Vec::new();
+        make_mask_into(2, 4, &mut mask);
+        assert_eq!(mask, make_mask(2, 4));
+        make_mask_into(4, 4, &mut mask);
+        assert_eq!(mask, make_mask(4, 4));
     }
 }

@@ -25,5 +25,8 @@ pub mod event;
 pub mod predict;
 pub mod testbed;
 
-pub use predict::{predict, StagePrediction, WorkloadSpec};
+pub use predict::{
+    modelled_crossover, overlap_report, predict, predict_gpu_pipelined,
+    OverlapReport, StagePrediction, WorkloadSpec,
+};
 pub use testbed::Testbed;

@@ -239,6 +239,134 @@ fn pipeline_makespan(
     sim.run().makespan
 }
 
+// ---- the overlapped session pipeline ------------------------------------
+
+/// Overlap analysis of ONE steady-state iteration of the GPU assignment
+/// session (`exec::gpu::GpuAssignSession`, resident feed): the dataset
+/// is pinned on the device, the padded centroid table is stored once,
+/// and chunk kernels queue back-to-back on the in-order stream while
+/// the host absorbs each chunk's partials as its ticket resolves.
+#[derive(Clone, Copy, Debug)]
+pub struct OverlapReport {
+    /// Chunks per iteration at [`GPU_CHUNK`] capacity.
+    pub chunks: usize,
+    /// Same work executed synchronously: every chunk waits for its
+    /// kernel, readback and absorb before the next starts.
+    pub sync_seconds: f64,
+    /// Makespan of the pipelined schedule on the event engine.
+    pub pipelined_seconds: f64,
+    /// Seconds the device spent executing kernels.
+    pub device_busy_seconds: f64,
+    /// 1 − busy/makespan: the pipeline-bubble fraction the async
+    /// submission path is meant to shrink.
+    pub device_idle_fraction: f64,
+}
+
+/// Model one pipelined assignment iteration of `spec` on `bed` (see
+/// [`OverlapReport`]).
+pub fn overlap_report(spec: &WorkloadSpec, bed: &Testbed) -> OverlapReport {
+    let m = spec.m as f64;
+    let k = spec.k as f64;
+    let chunks = spec.n.div_ceil(GPU_CHUNK).max(1);
+    let rows = (spec.n as f64 / chunks as f64).ceil();
+    // Resident feed: no per-chunk H2D — points and mask live on the
+    // device; the kernel reads the stored centroid table.
+    let kernel =
+        bed.task_overhead + bed.gpu_kernel(rows * (3.0 * m * k + m + 2.0 * k));
+    let d2h = bed.transfer(rows * 4.0 + (k * m + k + 1.0) * 4.0);
+    let absorb = (rows * 4.0 + k * m * 8.0) / bed.host_bw;
+    let centroid_up = bed.transfer(k * m * 4.0);
+
+    let mut sim = Sim::new();
+    let cores =
+        sim.resource("host-cores", spec.threads.clamp(1, bed.cpu_threads));
+    let link = sim.resource("pcie", 1);
+    let gpu = sim.resource("gpu", 1);
+    let up = sim.task(
+        vec![Step { resource: link, duration: centroid_up }],
+        vec![],
+    );
+    for _ in 0..chunks {
+        sim.task(
+            vec![
+                Step { resource: gpu, duration: kernel },
+                Step { resource: link, duration: d2h },
+                Step { resource: cores, duration: absorb },
+            ],
+            vec![up],
+        );
+    }
+    let r = sim.run();
+    let busy = r.busy[gpu];
+    OverlapReport {
+        chunks,
+        sync_seconds: centroid_up + chunks as f64 * (kernel + d2h + absorb),
+        pipelined_seconds: r.makespan,
+        device_busy_seconds: busy,
+        device_idle_fraction: if r.makespan > 0.0 {
+            (1.0 - busy / r.makespan).max(0.0)
+        } else {
+            0.0
+        },
+    }
+}
+
+/// [`predict`] for the GPU regime under the **session pipeline**:
+/// dataset preloaded once (an explicit `preload` stage), centroid table
+/// stored per iteration, async double-buffered chunk submissions —
+/// instead of Algorithm 4's per-task re-ship of the points. This is the
+/// model of what `exec::gpu::GpuAssignSession` actually runs.
+pub fn predict_gpu_pipelined(spec: &WorkloadSpec, bed: &Testbed) -> Prediction {
+    let mut p = predict_gpu(spec, bed);
+    let rep = overlap_report(spec, bed);
+    let leader = bed.cpu_stage(
+        4.0 * (spec.k * spec.m) as f64,
+        (spec.k * spec.m) as f64 * 4.0,
+        1,
+    );
+    let dataset_bytes = (spec.n * spec.m) as f64 * 4.0;
+    // one-time pin: host pad pass + H2D of the whole padded set
+    let preload = dataset_bytes / bed.host_bw + bed.transfer(dataset_bytes);
+    for s in p.stages.iter_mut() {
+        if s.name == "iterate.assign_update" {
+            s.seconds =
+                spec.iterations as f64 * (rep.pipelined_seconds + leader);
+        }
+    }
+    p.stages.push(StagePrediction { name: "preload", seconds: preload });
+    p.total = p.stages.iter().map(|s| s.seconds).sum();
+    p
+}
+
+/// Smallest power-of-two `n` (1 Ki … 2 Mi sweep) where the modelled
+/// pipelined GPU run beats the multi-thread CPU run — the CPU/GPU
+/// crossover of the paper's §5 intermediate conclusion.
+pub fn modelled_crossover(
+    bed: &Testbed,
+    m: usize,
+    k: usize,
+    iterations: usize,
+    threads: usize,
+) -> Option<usize> {
+    for exp in 10..22u32 {
+        let n = 2usize.pow(exp);
+        let spec = WorkloadSpec {
+            n,
+            m,
+            k,
+            iterations,
+            diameter_candidates: n.min(4096),
+            threads,
+        };
+        let multi = predict(&spec, bed, Regime::Multi).total;
+        let gpu = predict_gpu_pipelined(&spec, bed).total;
+        if gpu < multi {
+            return Some(n);
+        }
+    }
+    None
+}
+
 /// Convenience: predictions for all three regimes (the benches' rows).
 pub fn predict_all(spec: &WorkloadSpec, bed: &Testbed) -> Vec<Prediction> {
     vec![
@@ -362,6 +490,65 @@ mod tests {
             assert!((sum - p.total).abs() < 1e-9);
             assert!(p.stages.iter().all(|s| s.seconds >= 0.0));
         }
+    }
+
+    #[test]
+    fn headline_overlap_hides_most_device_idle() {
+        // Acceptance: at n=2M, m=25 the pipelined schedule keeps the
+        // device busy — idle fraction well under 50%.
+        let (spec, bed) = headline();
+        let rep = overlap_report(&spec, &bed);
+        assert_eq!(rep.chunks, 31);
+        assert!(
+            rep.device_idle_fraction < 0.5,
+            "device idle {:.1}%",
+            rep.device_idle_fraction * 100.0
+        );
+        assert!(rep.device_busy_seconds > 0.0);
+    }
+
+    #[test]
+    fn pipelined_schedule_never_slower_than_sync() {
+        let bed = Testbed::paper2014();
+        for n in [4_096usize, 65_536, 500_000, 2_000_000] {
+            let spec = WorkloadSpec {
+                n,
+                m: 25,
+                k: 10,
+                iterations: 20,
+                diameter_candidates: 4096,
+                threads: 8,
+            };
+            let rep = overlap_report(&spec, &bed);
+            assert!(
+                rep.pipelined_seconds <= rep.sync_seconds * (1.0 + 1e-9),
+                "n={n}: pipelined {} > sync {}",
+                rep.pipelined_seconds,
+                rep.sync_seconds
+            );
+        }
+    }
+
+    #[test]
+    fn pipelined_session_keeps_the_paper_5x_shape() {
+        // The session pipeline must not break the headline gain: still
+        // ~5x over one CPU thread at 2M×25 (same 3.5-10 band).
+        let (spec, bed) = headline();
+        let single = predict(&spec, &bed, Regime::Single).total;
+        let gpu = predict_gpu_pipelined(&spec, &bed).total;
+        let gain = single / gpu;
+        assert!(gain > 3.5 && gain < 10.0, "pipelined gpu gain {gain}");
+    }
+
+    #[test]
+    fn modelled_crossover_in_plausible_band() {
+        let bed = Testbed::paper2014();
+        let n = modelled_crossover(&bed, 25, 10, 20, 8)
+            .expect("pipelined gpu never overtakes multi");
+        assert!(
+            (4_096..=2_097_152).contains(&n),
+            "crossover at n={n} is implausible"
+        );
     }
 
     #[test]

@@ -1,0 +1,291 @@
+//! The asynchronous GPU chunk pipeline (`exec::gpu::GpuAssignSession`):
+//! agreement with the CPU reference, ticket-ordering determinism across
+//! ring depths, the staging-ring allocation discipline, and the
+//! zero-OS-thread-spawn property of the pipelined Lloyd loop.
+//!
+//! Everything runs inside ONE `#[test]` (and this file holds nothing
+//! else): the suite leans on two process-global counters — the counting
+//! global allocator below and `pool::worker_spawn_count()` — and
+//! concurrent sibling tests would bleed into both. Sequential
+//! sub-checks keep every measurement deterministic. The allocator
+//! counts **per thread** so device-thread output allocations (a real
+//! GPU would DMA those into pre-pinned buffers) do not drown the
+//! leader-thread staging behaviour under test.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use parclust::data::binfmt;
+use parclust::data::shard::{DiskShardSource, MemShardSource};
+use parclust::exec::gpu::{GpuAssignSession, GpuExecutor};
+use parclust::exec::multi::MultiExecutor;
+use parclust::exec::{AssignSession, DeviceCounters, Executor};
+use parclust::kmeans::{fit_with, KMeansConfig};
+use parclust::metric::Metric;
+use parclust::pool::worker_spawn_count;
+use parclust::runtime::{ArtifactKind, ArtifactMeta, Device, Manifest};
+use parclust::testkit::{assert_allclose, lattice_blobs};
+
+thread_local! {
+    // const-init + no Drop: accessing this inside `alloc` cannot
+    // recurse into the allocator or touch TLS destructor machinery.
+    static THREAD_ALLOC_BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Pass-through allocator that counts bytes requested **by the calling
+/// thread** — the test thread drives the session, so its counter sees
+/// exactly the pipeline's host-side staging traffic.
+struct ThreadCountingAlloc;
+
+unsafe impl GlobalAlloc for ThreadCountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = THREAD_ALLOC_BYTES.try_with(|b| b.set(b.get() + layout.size() as u64));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let grown = new_size.saturating_sub(layout.size()) as u64;
+        let _ = THREAD_ALLOC_BYTES.try_with(|b| b.set(b.get() + grown));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: ThreadCountingAlloc = ThreadCountingAlloc;
+
+fn leader_alloc_bytes() -> u64 {
+    THREAD_ALLOC_BYTES.try_with(|b| b.get()).unwrap_or(0)
+}
+
+/// A device whose only artifact is a small-capacity assign kernel, so
+/// modest datasets split into many chunks and actually exercise the
+/// ring (the shipped sim manifest's smallest assign capacity is 1024).
+fn tiny_assign_device(cap: usize, m: usize, k: usize) -> Device {
+    Device::from_manifest(Manifest {
+        version: 2,
+        artifacts: vec![ArtifactMeta {
+            name: format!("assign_n{cap}_m{m}_k{k}"),
+            path: String::new(),
+            kind: ArtifactKind::Assign,
+            n: cap,
+            m,
+            k,
+            bn: 0,
+        }],
+    })
+    .expect("tiny manifest device")
+}
+
+#[test]
+fn gpu_pipeline_suite() {
+    check_session_agrees_with_multi_executor();
+    check_ticket_order_is_depth_independent();
+    check_disk_shard_source_feeds_the_ring();
+    check_staging_ring_alloc_discipline_and_zero_spawns();
+    check_full_fit_spawns_no_threads_after_pool_warmup();
+}
+
+/// The pipelined session and the in-core multi executor are the same
+/// K-means step: exact labels/counts on provably-separated blobs,
+/// float-tolerance sums/inertia (device partials are f32), across a
+/// multi-iteration centroid trajectory. Also pins satellite 1: the only
+/// per-iteration upload for a resident dataset is the padded k×m
+/// centroid table, stored once — not once per chunk.
+fn check_session_agrees_with_multi_executor() {
+    let (ds, init) = lattice_blobs(3000, 7, 5);
+    let dev = tiny_assign_device(512, 8, 8);
+    let exec = GpuExecutor::new(dev, 2);
+    let multi = MultiExecutor::new(2);
+    let chunks = 3000usize.div_ceil(512) as u64; // 6
+
+    let mut gs = exec.assign_session(&ds, 5, Metric::Euclidean).unwrap();
+    let mut ms = multi.assign_session(&ds, 5, Metric::Euclidean).unwrap();
+    assert_eq!(gs.path_name(), "gpu-pipeline");
+    assert_eq!(
+        ms.device_counters(),
+        DeviceCounters::default(),
+        "CPU sessions report zeroed device counters"
+    );
+
+    let steps = 4u64;
+    let mut cent = init;
+    for step in 0..steps {
+        let mref = ms.step(&cent).unwrap();
+        let gref = gs.step(&cent).unwrap();
+        assert_eq!(mref.labels, gref.labels, "step {step}: labels");
+        assert_eq!(mref.counts, gref.counts, "step {step}: counts");
+        let a: Vec<f32> = mref.sums.iter().map(|&v| v as f32).collect();
+        let b: Vec<f32> = gref.sums.iter().map(|&v| v as f32).collect();
+        assert_allclose(&a, &b, 1e-4, 1e-2);
+        assert!(
+            (mref.inertia - gref.inertia).abs() <= 1e-3 * mref.inertia.max(1.0),
+            "step {step}: inertia {} vs {}",
+            mref.inertia,
+            gref.inertia
+        );
+        cent = mref.centroids(&cent, 5, 7);
+    }
+
+    let dc = gs.device_counters();
+    assert_eq!(dc.submissions, steps * chunks, "one task per chunk per step");
+    // Padded centroid table: ak × am × 4 bytes, once per step. The
+    // dataset itself went up during preload (before the session's
+    // baseline) and is referenced as stored tensors afterwards.
+    assert_eq!(
+        dc.h2d_bytes,
+        steps * (8 * 8 * 4),
+        "resident feed uploads only the centroid table each iteration"
+    );
+    // labels[cap] i32 + sums[ak*am] f32 + counts[ak] f32 + inertia f32.
+    let per_chunk_down = (512 * 4 + 8 * 8 * 4 + 8 * 4 + 4) as u64;
+    assert_eq!(dc.d2h_bytes, steps * chunks * per_chunk_down);
+    assert!(
+        dc.max_queue_depth >= 2,
+        "pipeline keeps multiple kernels in flight, saw depth {}",
+        dc.max_queue_depth
+    );
+    let stats = gs.finish();
+    assert_eq!(stats.labels.len(), 3000);
+}
+
+/// Tickets are waited in submission order, so the absorb order — and
+/// therefore every f64 accumulation — is identical at any ring depth:
+/// depth-2, depth-3 and the resident (unbounded-window) feed must
+/// produce **bitwise** identical statistics.
+fn check_ticket_order_is_depth_independent() {
+    let (ds, init) = lattice_blobs(2600, 7, 4);
+    let dev = tiny_assign_device(512, 8, 8);
+    let exec = GpuExecutor::new(dev, 2);
+    let src = MemShardSource::new(&ds);
+
+    // Fixed two-step centroid sequence from the exact CPU path.
+    let multi = MultiExecutor::new(2);
+    let s1 = multi.assign_update(&ds, &init, 4, Metric::Euclidean).unwrap();
+    let seq = [init.clone(), s1.centroids(&init, 4, 7)];
+
+    type Snap = Vec<(Vec<u32>, Vec<u64>, Vec<u64>, u64)>;
+    let snap = |sess: &mut dyn AssignSession| -> Snap {
+        seq.iter()
+            .map(|c| {
+                let st = sess.step(c).unwrap();
+                let sums_bits: Vec<u64> = st.sums.iter().map(|v| v.to_bits()).collect();
+                (st.labels.clone(), sums_bits, st.counts.clone(), st.inertia.to_bits())
+            })
+            .collect()
+    };
+
+    let mut runs: Vec<(String, Snap)> = Vec::new();
+    for depth in [2usize, 3] {
+        let mut sess =
+            GpuAssignSession::streaming_with_depth(&exec, &src, 4, depth).unwrap();
+        assert_eq!(sess.ring_depth(), depth);
+        runs.push((format!("stream depth {depth}"), snap(&mut sess)));
+    }
+    let mut resident = exec.assign_session(&ds, 4, Metric::Euclidean).unwrap();
+    runs.push(("resident".into(), snap(resident.as_mut())));
+
+    let (base_name, base) = &runs[0];
+    for (name, run) in &runs[1..] {
+        assert_eq!(run, base, "{name} diverged from {base_name}");
+    }
+}
+
+/// The on-disk `.pcb` shard source can feed the staging ring directly —
+/// the out-of-core GPU path — and matches the in-core reference. Also
+/// pins the streaming-feed upload accounting: each chunk ships padded
+/// points + mask inline exactly once, plus one centroid table per step.
+fn check_disk_shard_source_feeds_the_ring() {
+    let (ds, init) = lattice_blobs(1500, 7, 4);
+    let path = std::env::temp_dir()
+        .join(format!("parclust_gpu_pipeline_{}.pcb", std::process::id()));
+    binfmt::write_path(&ds, &path).unwrap();
+
+    {
+        let src = DiskShardSource::open(&path).unwrap();
+        let dev = tiny_assign_device(512, 8, 8);
+        let exec = GpuExecutor::new(dev, 2);
+        let mut sess = exec.assign_session_streaming(&src, 4, 1 << 20).unwrap();
+        let st = sess.step(&init).unwrap();
+
+        let reference = MultiExecutor::new(2)
+            .assign_update(&ds, &init, 4, Metric::Euclidean)
+            .unwrap();
+        assert_eq!(st.labels, reference.labels);
+        assert_eq!(st.counts, reference.counts);
+        let a: Vec<f32> = reference.sums.iter().map(|&v| v as f32).collect();
+        let b: Vec<f32> = st.sums.iter().map(|&v| v as f32).collect();
+        assert_allclose(&a, &b, 1e-4, 1e-2);
+
+        let dc = sess.device_counters();
+        let chunks = 1500u64.div_ceil(512); // 3
+        let per_chunk_up = (512 * 8 * 4 + 512 * 4) as u64; // points + mask
+        assert_eq!(dc.submissions, chunks);
+        assert_eq!(dc.h2d_bytes, 8 * 8 * 4 + chunks * per_chunk_up);
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Steady-state iterations cycle the bounded staging ring instead of
+/// allocating fresh pad buffers per chunk, and retire tickets without
+/// spawning OS threads. Measured on the leader thread after two warm-up
+/// steps: per-step allocation must be under half of what re-allocating
+/// the padded points buffer for every chunk would cost.
+fn check_staging_ring_alloc_discipline_and_zero_spawns() {
+    let (ds, init) = lattice_blobs(8192, 7, 5);
+    let dev = tiny_assign_device(512, 8, 8);
+    let exec = GpuExecutor::new(dev, 2);
+    let src = MemShardSource::new(&ds);
+    let mut sess = GpuAssignSession::streaming_with_depth(&exec, &src, 5, 2).unwrap();
+    assert_eq!(sess.ring_depth(), 2);
+
+    // Warm-up: ring buffers and the load scratch grow to capacity here.
+    for _ in 0..2 {
+        sess.step(&init).unwrap();
+    }
+
+    let spawns_before = worker_spawn_count();
+    let bytes_before = leader_alloc_bytes();
+    const STEADY_STEPS: u64 = 3;
+    for _ in 0..STEADY_STEPS {
+        sess.step(&init).unwrap();
+    }
+    let per_step = (leader_alloc_bytes() - bytes_before) / STEADY_STEPS;
+
+    let chunks = 8192 / 512; // 16
+    let padded_points_bytes = 512 * 8 * 4; // one staging slot
+    let budget = (chunks * padded_points_bytes / 2) as u64;
+    assert!(
+        per_step < budget,
+        "staging ring not reused: {per_step} B/step allocated on the \
+         leader thread, budget {budget} B (= chunks × slot / 2)"
+    );
+    assert_eq!(
+        worker_spawn_count(),
+        spawns_before,
+        "pipelined steps must not spawn OS threads"
+    );
+}
+
+/// Acceptance: with the executor's persistent pool warm, an entire fit
+/// — init stages fanned out on the pool plus the pipelined Lloyd loop —
+/// performs zero OS-thread spawns.
+fn check_full_fit_spawns_no_threads_after_pool_warmup() {
+    let (ds, _) = lattice_blobs(3000, 7, 4);
+    let exec = GpuExecutor::new(Device::sim(), 2);
+    exec.pool(); // warm-up: build the persistent host-prep pool
+    let before = worker_spawn_count();
+
+    let fit = fit_with(&ds, &KMeansConfig::new(4).max_iters(5).seed(7), &exec).unwrap();
+    assert!(fit.iterations >= 1);
+    assert_eq!(fit.labels.len(), 3000);
+
+    assert_eq!(
+        worker_spawn_count(),
+        before,
+        "gpu regime fit spawned OS threads after pool warm-up"
+    );
+}
