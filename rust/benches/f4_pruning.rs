@@ -18,7 +18,7 @@ mod common;
 use parclust::benchkit::{fmt_duration, smoke_mode, write_bench_json, Bencher, Table};
 use parclust::exec::multi::MultiExecutor;
 use parclust::exec::single::SingleExecutor;
-use parclust::exec::{Executor, PruneCounters};
+use parclust::exec::{BoundsPolicy, Executor, PruneCounters, ScorePath};
 use parclust::json::Json;
 use parclust::metric::Metric;
 use std::time::Instant;
@@ -90,6 +90,7 @@ fn main() {
         let rate = PruneCounters {
             pruned_rows: c.pruned_rows - last_counters.pruned_rows,
             scanned_rows: c.scanned_rows - last_counters.scanned_rows,
+            ..PruneCounters::default()
         }
         .rate();
         last_counters = c;
@@ -145,6 +146,123 @@ fn main() {
         sess_stat.speedup_vs(&dense_stat)
     );
 
+    // ---- F9: three-policy grid — dense vs hamerly vs yinyang vs auto ----
+    // Per (k, m) cell, every policy walks the same dense-defined Lloyd
+    // trajectory through a fresh single session: wall time, distance
+    // evaluations, and the prune/filter counters, with label exactness
+    // asserted on every cell (lossless is the contract, not a tendency).
+    // Record in EXPERIMENTS.md §F9.
+    let grid: Vec<(usize, usize)> = if smoke_mode() {
+        vec![(8, 10), (32, 10)]
+    } else {
+        vec![
+            (8, 10), (8, 25), (32, 10), (32, 25),
+            (128, 10), (128, 25), (256, 10), (256, 25),
+        ]
+    };
+    let gn = if smoke_mode() { 10_000usize } else { 50_000 };
+    let giters = 6usize;
+    let mut table9 = Table::new(
+        &format!("F9 bounds-policy grid (n={gn}, {giters} iterations per cell)"),
+        &["k", "m", "policy", "wall", "dist evals", "evals/dense", "prune rate"],
+    );
+    let mut policy_rows: Vec<Json> = Vec::new();
+    for &(gk, gm) in &grid {
+        let gw = common::workload(gn, gm, 16, 8);
+        let gds = &gw.dataset;
+        let ginit = gds.gather(&(0..gk).map(|i| i * gn / gk).collect::<Vec<_>>());
+        let mut gtables = vec![ginit.clone()];
+        for _ in 0..giters - 1 {
+            let last = gtables.last().unwrap();
+            let stats = single.assign_update(gds, last, gk, Metric::Euclidean).unwrap();
+            gtables.push(stats.centroids(last, gk, gm));
+        }
+        let dense_ref = single
+            .assign_update(gds, gtables.last().unwrap(), gk, Metric::Euclidean)
+            .unwrap();
+
+        let mut cell: Vec<(String, f64, PruneCounters)> = Vec::new();
+        for policy in [
+            BoundsPolicy::None,
+            BoundsPolicy::Hamerly,
+            BoundsPolicy::Yinyang,
+            BoundsPolicy::Auto,
+        ] {
+            let mut sess = single
+                .assign_session_opts(gds, gk, Metric::Euclidean, ScorePath::F64, policy)
+                .unwrap();
+            let t = Instant::now();
+            let mut last_labels = Vec::new();
+            for cent in &gtables {
+                let stats = sess.step(cent).unwrap();
+                last_labels.clear();
+                last_labels.extend_from_slice(&stats.labels);
+            }
+            let wall = t.elapsed().as_secs_f64();
+            assert_eq!(
+                last_labels, dense_ref.labels,
+                "policy {:?} not label-exact at k={gk} m={gm}",
+                policy
+            );
+            let c = sess.prune_counters();
+            let name = if policy == BoundsPolicy::Auto {
+                format!("auto→{}", sess.bounds_policy())
+            } else {
+                policy.name().to_string()
+            };
+            cell.push((name, wall, c));
+        }
+
+        let dense_evals = cell[0].2.dist_evals.max(1);
+        for (name, wall, c) in &cell {
+            table9.row(vec![
+                gk.to_string(),
+                gm.to_string(),
+                name.clone(),
+                fmt_duration(std::time::Duration::from_secs_f64(*wall)),
+                c.dist_evals.to_string(),
+                format!("{:.3}", c.dist_evals as f64 / dense_evals as f64),
+                format!("{:.1}%", c.rate() * 100.0),
+            ]);
+            policy_rows.push(Json::obj(vec![
+                ("k", Json::num(gk as f64)),
+                ("m", Json::num(gm as f64)),
+                ("policy", Json::str(name.clone())),
+                ("wall_s", Json::num(*wall)),
+                ("dist_evals", Json::num(c.dist_evals as f64)),
+                ("pruned_rows", Json::num(c.pruned_rows as f64)),
+                ("scanned_rows", Json::num(c.scanned_rows as f64)),
+                ("group_filtered", Json::num(c.group_filtered as f64)),
+                ("group_scanned", Json::num(c.group_scanned as f64)),
+            ]));
+        }
+
+        if !smoke_mode() {
+            // The tentpole claims, asserted where the grid makes them
+            // falsifiable (deterministic counters; wall clock gets a 10%
+            // noise allowance).
+            let hamerly = &cell[1];
+            let yinyang = &cell[2];
+            let auto = &cell[3];
+            if gk >= 128 {
+                assert!(
+                    (yinyang.2.dist_evals as f64) < 0.5 * hamerly.2.dist_evals as f64,
+                    "k={gk} m={gm}: yinyang {} evals vs hamerly {} — group bounds \
+                     must cut distance work below half of the single bound's",
+                    yinyang.2.dist_evals,
+                    hamerly.2.dist_evals
+                );
+            }
+            assert!(
+                auto.1 <= cell[0].1 * 1.10,
+                "k={gk} m={gm}: auto ({:.3}s) slower than dense ({:.3}s)",
+                auto.1,
+                cell[0].1
+            );
+        }
+    }
+    println!("{}", table9.render());
+
     write_bench_json(
         "f4",
         &Json::obj(vec![
@@ -158,6 +276,7 @@ fn main() {
             ("total_scanned_rows", Json::num(total.scanned_rows as f64)),
             ("steady_dense", dense_stat.to_json()),
             ("steady_pruned", sess_stat.to_json()),
+            ("policies", Json::arr(policy_rows)),
         ]),
     );
 }

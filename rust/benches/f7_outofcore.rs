@@ -170,12 +170,14 @@ fn main() {
     ]);
     println!("{}", table.render());
     println!(
-        "prefetch stall: {} of a {} pass ({:.1}%); {} chunks prefetched, {} bytes read",
+        "prefetch stall: {} of a {} pass ({:.1}%); {} chunks prefetched, {} bytes read, \
+         ring depth {}",
         fmt_duration(stall),
         fmt_duration(pass_wall),
         stall_frac * 100.0,
         io1.chunks_prefetched,
-        io1.bytes_read
+        io1.bytes_read,
+        io1.ring_depth
     );
     drop(eng);
 
@@ -224,6 +226,7 @@ fn main() {
             ("budget_bytes", Json::num(budget as f64)),
             ("file_bytes", Json::num(file_bytes as f64)),
             ("alloc_delta_bytes", Json::num(delta as f64)),
+            ("ring_depth", Json::num(io1.ring_depth as f64)),
             ("streamed", st.to_json()),
             ("incore_multi", ic.to_json()),
             ("prefetch_stall_frac", Json::num(stall_frac)),

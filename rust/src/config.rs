@@ -8,7 +8,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::exec::regime::Regime;
-use crate::exec::ScorePath;
+use crate::exec::{BoundsPolicy, ScorePath};
 use crate::json::Json;
 use crate::kmeans::{DiameterMode, Engine, InitMethod, KMeansConfig};
 use crate::metric::Metric;
@@ -61,7 +61,7 @@ impl RunConfig {
         let known = [
             "csv", "pcb", "synthetic", "k", "max_iters", "tol", "metric",
             "init", "seed", "threads", "regime", "diameter", "score_path",
-            "scaling", "report", "labels", "artifact_dir", "engine",
+            "bounds", "scaling", "report", "labels", "artifact_dir", "engine",
             "mini_batch", "memory_budget",
         ];
         if let Json::Obj(pairs) = &root {
@@ -159,6 +159,14 @@ impl RunConfig {
             cfg.kmeans.score_path = ScorePath::from_str(s)
                 .ok_or_else(|| format!("config: unknown score_path '{s}' (f64 | f32)"))?;
         }
+        if let Some(v) = root.get("bounds") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| "config: 'bounds' must be a string".to_string())?;
+            cfg.kmeans.bounds = BoundsPolicy::from_str(s).ok_or_else(|| {
+                format!("config: unknown bounds '{s}' (none | hamerly | yinyang | auto)")
+            })?;
+        }
         if let Some(v) = root.get("engine") {
             let s = v
                 .as_str()
@@ -239,6 +247,7 @@ impl RunConfig {
             ("threads", Json::num(self.kmeans.threads as f64)),
             ("regime", Json::str(self.kmeans.regime.name())),
             ("score_path", Json::str(self.kmeans.score_path.name())),
+            ("bounds", Json::str(self.kmeans.bounds.name())),
             ("engine", Json::str(self.kmeans.engine.name())),
             (
                 "mini_batch",
@@ -284,7 +293,8 @@ mod tests {
               "k": 4, "max_iters": 50, "tol": 0.001,
               "metric": "manhattan", "init": "random", "seed": 9,
               "threads": 4, "regime": "multi", "diameter": "sampled:1k",
-              "score_path": "f32", "scaling": "zscore", "report": "out.json"
+              "score_path": "f32", "bounds": "yinyang", "scaling": "zscore",
+              "report": "out.json"
             }"#,
         )
         .unwrap();
@@ -298,6 +308,7 @@ mod tests {
         assert_eq!(cfg.kmeans.regime, Regime::Multi);
         assert_eq!(cfg.kmeans.diameter, DiameterMode::Sampled(1000));
         assert_eq!(cfg.kmeans.score_path, ScorePath::F32Refined);
+        assert_eq!(cfg.kmeans.bounds, BoundsPolicy::Yinyang);
         assert_eq!(cfg.scaling, "zscore");
         assert_eq!(cfg.report_path, Some(PathBuf::from("out.json")));
     }
@@ -327,6 +338,7 @@ mod tests {
         assert!(RunConfig::from_json_text(r#"{"bogus": 1}"#).is_err());
         assert!(RunConfig::from_json_text(r#"{"metric": "wat"}"#).is_err());
         assert!(RunConfig::from_json_text(r#"{"score_path": "f16"}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"bounds": "elkan"}"#).is_err());
         assert!(RunConfig::from_json_text(r#"{"regime": 7}"#).is_err());
         assert!(RunConfig::from_json_text(r#"[1,2]"#).is_err());
     }
@@ -351,5 +363,6 @@ mod tests {
         assert_eq!(parsed.req_usize("k").unwrap(), 10);
         assert_eq!(parsed.req_str("regime").unwrap(), "auto");
         assert_eq!(parsed.req_str("score_path").unwrap(), "f64");
+        assert_eq!(parsed.req_str("bounds").unwrap(), "auto");
     }
 }

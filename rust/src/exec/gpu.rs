@@ -781,6 +781,7 @@ impl AssignSession for GpuAssignSession<'_> {
         }
 
         self.counters.scanned_rows += n as u64;
+        self.counters.dist_evals += n as u64 * k as u64;
         Ok(&self.total)
     }
 

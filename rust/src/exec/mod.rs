@@ -28,6 +28,7 @@ use crate::metric::Metric;
 
 pub use crate::kernel::pruned::PruneCounters;
 pub use crate::kernel::simd::{F32Counters, ScorePath};
+pub use crate::kernel::yinyang::BoundsPolicy;
 
 /// Result of the diameter stage (paper Eq. 3): the max-distance pair.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -239,6 +240,30 @@ pub trait Executor {
             ))),
         }
     }
+
+    /// [`Executor::assign_session_with`] plus an explicit bounds policy.
+    /// The default implementation serves [`BoundsPolicy::Auto`] (the
+    /// executor picks its own pruning structure, which may be none) and
+    /// **rejects** every explicit policy — like the f32 score path, a
+    /// requested bound structure must never be silently substituted.
+    /// The CPU regimes override this with real policy selection.
+    fn assign_session_opts<'a>(
+        &'a self,
+        ds: &'a Dataset,
+        k: usize,
+        metric: Metric,
+        path: ScorePath,
+        bounds: BoundsPolicy,
+    ) -> Result<Box<dyn AssignSession + 'a>, ExecError> {
+        match bounds {
+            BoundsPolicy::Auto => self.assign_session_with(ds, k, metric, path),
+            p => Err(ExecError(format!(
+                "executor '{}' has no selectable bounds policy (asked for '{}')",
+                self.name(),
+                p.name()
+            ))),
+        }
+    }
 }
 
 /// Cross-iteration assignment state for one fit (see
@@ -256,6 +281,14 @@ pub trait AssignSession {
     /// (surfaced as `RunMetrics::assign_path`).
     fn path_name(&self) -> &'static str {
         "dense"
+    }
+
+    /// Name of the bounds policy actually active in this session
+    /// (surfaced as `RunMetrics::bounds_policy`): `"none"` for dense
+    /// sessions (the default), `"hamerly"` / `"yinyang"` for the pruned
+    /// CPU sessions.
+    fn bounds_policy(&self) -> &'static str {
+        "none"
     }
 
     /// f32-score-path counters accumulated over the session; all zero
@@ -309,6 +342,7 @@ impl AssignSession for DenseSession<'_> {
             .exec
             .assign_update(self.ds, centroids, self.k, self.metric)?;
         self.counters.scanned_rows += self.ds.n() as u64;
+        self.counters.dist_evals += (self.ds.n() * self.k) as u64;
         Ok(&self.stats)
     }
 

@@ -29,13 +29,14 @@
 use std::sync::{Arc, OnceLock};
 
 use crate::data::Dataset;
-use crate::exec::single::F32State;
+use crate::exec::single::{check_bounds_request, F32State};
 use crate::exec::{
-    AssignSession, AssignStats, DiameterResult, ExecError, Executor, F32Counters, PruneCounters,
-    ScorePath,
+    AssignSession, AssignStats, BoundsPolicy, DiameterResult, ExecError, Executor, F32Counters,
+    PruneCounters, ScorePath,
 };
 use crate::kernel::prep::CentroidPrep;
 use crate::kernel::pruned::{assign_pruned_range, PrunedState};
+use crate::kernel::yinyang::{assign_yinyang_range, YinyangState};
 use crate::kernel::{assign, diameter, reduce, simd};
 use crate::metric::Metric;
 use crate::pool::{split_ranges, ThreadPool};
@@ -182,24 +183,7 @@ impl Executor for MultiExecutor {
         k: usize,
         metric: Metric,
     ) -> Result<Box<dyn AssignSession + 'a>, ExecError> {
-        let ranges = split_ranges(ds.n(), self.threads);
-        let shards = ranges
-            .iter()
-            .map(|r| AssignStats::zeros(r.len(), k, ds.m()))
-            .collect();
-        Ok(Box::new(MultiSession {
-            exec: self,
-            ds,
-            k,
-            metric,
-            ranges,
-            shards,
-            total: AssignStats::zeros(ds.n(), k, ds.m()),
-            pruned: (metric == Metric::Euclidean)
-                .then(|| PrunedState::new(ds.n(), k, ds.m())),
-            f32state: None,
-            dense_scanned: 0,
-        }))
+        self.assign_session_opts(ds, k, metric, ScorePath::F64, BoundsPolicy::Auto)
     }
 
     fn assign_session_with<'a>(
@@ -209,35 +193,52 @@ impl Executor for MultiExecutor {
         metric: Metric,
         path: ScorePath,
     ) -> Result<Box<dyn AssignSession + 'a>, ExecError> {
-        match path {
-            ScorePath::F64 => self.assign_session(ds, k, metric),
-            ScorePath::F32Refined => {
-                if metric != Metric::Euclidean {
-                    return Err(ExecError(format!(
-                        "the f32 score path is defined by the euclidean \
-                         norm-decomposition kernel; got metric {}",
-                        metric.name()
-                    )));
-                }
-                let ranges = split_ranges(ds.n(), self.threads);
-                let shards = ranges
-                    .iter()
-                    .map(|r| AssignStats::zeros(r.len(), k, ds.m()))
-                    .collect();
-                Ok(Box::new(MultiSession {
-                    exec: self,
-                    ds,
-                    k,
-                    metric,
-                    ranges,
-                    shards,
-                    total: AssignStats::zeros(ds.n(), k, ds.m()),
-                    pruned: None,
-                    f32state: Some(F32State::new()),
-                    dense_scanned: 0,
-                }))
-            }
+        self.assign_session_opts(ds, k, metric, path, BoundsPolicy::Auto)
+    }
+
+    fn assign_session_opts<'a>(
+        &'a self,
+        ds: &'a Dataset,
+        k: usize,
+        metric: Metric,
+        path: ScorePath,
+        bounds: BoundsPolicy,
+    ) -> Result<Box<dyn AssignSession + 'a>, ExecError> {
+        check_bounds_request(bounds, metric, path)?;
+        if path == ScorePath::F32Refined && metric != Metric::Euclidean {
+            return Err(ExecError(format!(
+                "the f32 score path is defined by the euclidean \
+                 norm-decomposition kernel; got metric {}",
+                metric.name()
+            )));
         }
+        let ranges = split_ranges(ds.n(), self.threads);
+        let shards = ranges
+            .iter()
+            .map(|r| AssignStats::zeros(r.len(), k, ds.m()))
+            .collect();
+        // The f32 path replaces the bound sessions (bounds require
+        // exact f64 scores — explicit policies were rejected above);
+        // non-Euclidean metrics keep the dense scalar walk.
+        let policy = if path == ScorePath::F32Refined || metric != Metric::Euclidean {
+            BoundsPolicy::None
+        } else {
+            bounds.effective(k, ds.m())
+        };
+        Ok(Box::new(MultiSession {
+            exec: self,
+            ds,
+            k,
+            metric,
+            ranges,
+            shards,
+            total: AssignStats::zeros(ds.n(), k, ds.m()),
+            pruned: (policy == BoundsPolicy::Hamerly).then(|| PrunedState::new(ds.n(), k, ds.m())),
+            yinyang: (policy == BoundsPolicy::Yinyang)
+                .then(|| YinyangState::new(ds.n(), k, ds.m())),
+            f32state: (path == ScorePath::F32Refined).then(F32State::new),
+            dense_scanned: 0,
+        }))
     }
 }
 
@@ -255,6 +256,10 @@ struct MultiSession<'a> {
     shards: Vec<AssignStats>,
     total: AssignStats,
     pruned: Option<PrunedState>,
+    /// Yinyang group-bound state (fit-wide label + G-per-row lower-bound
+    /// buffers, split per shard like `pruned`); mutually exclusive with
+    /// the other path states.
+    yinyang: Option<YinyangState>,
     /// The opt-in f32 score path (leader-built prep, per-shard f32
     /// sweeps); mutually exclusive with `pruned`.
     f32state: Option<F32State>,
@@ -283,6 +288,36 @@ impl AssignSession for MultiSession<'_> {
                 f32s.counters.add(&c);
             }
             self.dense_scanned += ds.n() as u64;
+            self.total.reset(ds.n(), k, m);
+            for (r, shard) in self.ranges.iter().zip(&self.shards) {
+                self.total.absorb(r.start, shard);
+            }
+            return Ok(&self.total);
+        }
+        if let Some(state) = &mut self.yinyang {
+            // Leader: per-iteration digest (norms, panel, per-group
+            // drifts, half-separations; centroid groups built once on
+            // the first pass), then one group-bound pass per shard.
+            // Labels split at shard length, lower bounds at shard
+            // length × G — both slices of the fit-wide buffers.
+            state.prepare(centroids);
+            let gc = state.group_count();
+            let (mut labels_rest, mut lower_rest, prep, groups, counters) = state.parts();
+            let mut jobs = Vec::with_capacity(self.ranges.len());
+            for (r, shard) in self.ranges.iter().zip(self.shards.iter_mut()) {
+                let (lab, rest) = std::mem::take(&mut labels_rest).split_at_mut(r.len());
+                labels_rest = rest;
+                let (low, rest) = std::mem::take(&mut lower_rest).split_at_mut(r.len() * gc);
+                lower_rest = rest;
+                let range = r.clone();
+                jobs.push(move || {
+                    shard.reset(range.len(), k, m);
+                    assign_yinyang_range(ds, centroids, k, prep, groups, range, lab, low, shard)
+                });
+            }
+            for c in self.exec.pool().scope_run_all(jobs) {
+                counters.add(c);
+            }
             self.total.reset(ds.n(), k, m);
             for (r, shard) in self.ranges.iter().zip(&self.shards) {
                 self.total.absorb(r.start, shard);
@@ -334,19 +369,39 @@ impl AssignSession for MultiSession<'_> {
     }
 
     fn prune_counters(&self) -> PruneCounters {
-        self.pruned.as_ref().map(|s| s.counters).unwrap_or(PruneCounters {
-            pruned_rows: 0,
-            scanned_rows: self.dense_scanned,
-        })
+        if let Some(s) = &self.pruned {
+            s.counters
+        } else if let Some(s) = &self.yinyang {
+            s.counters
+        } else {
+            PruneCounters {
+                pruned_rows: 0,
+                scanned_rows: self.dense_scanned,
+                dist_evals: self.dense_scanned * self.k as u64,
+                ..Default::default()
+            }
+        }
     }
 
     fn path_name(&self) -> &'static str {
         if self.f32state.is_some() {
             simd::f32_path_name()
+        } else if self.yinyang.is_some() {
+            simd::yinyang_path_name()
         } else if self.pruned.is_some() {
             simd::pruned_path_name()
         } else {
             "scalar"
+        }
+    }
+
+    fn bounds_policy(&self) -> &'static str {
+        if self.yinyang.is_some() {
+            "yinyang"
+        } else if self.pruned.is_some() {
+            "hamerly"
+        } else {
+            "none"
         }
     }
 
@@ -500,5 +555,38 @@ mod tests {
         let c = session.prune_counters();
         assert_eq!(c.pruned_rows + c.scanned_rows, 4 * 701);
         assert!(c.pruned_rows > 0, "later iterations must prune: {c:?}");
+    }
+
+    #[test]
+    fn yinyang_session_matches_stateless_over_iterations() {
+        // k = 21 ⇒ G = 2 real groups; shard split must slice the
+        // G-per-row bound buffer consistently with the label buffer.
+        let g = generate(&GmmSpec::new(1003, 8, 21).seed(17).spread(0.3));
+        let ds = &g.dataset;
+        let multi = MultiExecutor::new(3);
+        let idx: Vec<usize> = (0..21).map(|c| c * 47).collect();
+        let mut cent = ds.gather(&idx);
+        let mut session = multi
+            .assign_session_opts(ds, 21, Metric::Euclidean, ScorePath::F64, BoundsPolicy::Yinyang)
+            .unwrap();
+        assert_eq!(session.bounds_policy(), "yinyang");
+        for _ in 0..4 {
+            let stateless = multi.assign_update(ds, &cent, 21, Metric::Euclidean).unwrap();
+            let stepped = session.step(&cent).unwrap();
+            assert_eq!(stepped.labels, stateless.labels);
+            assert_eq!(stepped.counts, stateless.counts);
+            assert_eq!(stepped.sums, stateless.sums);
+            assert_eq!(stepped.inertia, stateless.inertia);
+            cent = stateless.centroids(&cent, 21, ds.m());
+        }
+        let c = session.prune_counters();
+        assert_eq!(c.pruned_rows + c.scanned_rows, 4 * 1003);
+        assert!(c.pruned_rows > 0, "settled rows must prune: {c:?}");
+        assert_eq!(
+            c.group_filtered + c.group_scanned,
+            2 * c.scanned_rows,
+            "per-group filter must account every (row, group) pair: {c:?}"
+        );
+        assert!(c.dist_evals > 0);
     }
 }

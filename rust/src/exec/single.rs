@@ -9,13 +9,44 @@
 
 use crate::data::Dataset;
 use crate::exec::{
-    AssignSession, AssignStats, DiameterResult, ExecError, Executor, F32Counters, PruneCounters,
-    ScorePath,
+    AssignSession, AssignStats, BoundsPolicy, DiameterResult, ExecError, Executor, F32Counters,
+    PruneCounters, ScorePath,
 };
 use crate::kernel::prep::CentroidPrep;
 use crate::kernel::pruned::{assign_pruned_range, PrunedState};
+use crate::kernel::yinyang::{assign_yinyang_range, YinyangState};
 use crate::kernel::{assign, diameter, reduce, simd};
 use crate::metric::Metric;
+
+/// Reject an explicit bounds policy that the session cannot honour —
+/// shared by the single and multi regimes (identical rules: bounds are
+/// triangle-inequality structures over exact f64 Euclidean scores).
+pub(crate) fn check_bounds_request(
+    bounds: BoundsPolicy,
+    metric: Metric,
+    path: ScorePath,
+) -> Result<(), ExecError> {
+    if bounds == BoundsPolicy::Auto {
+        return Ok(());
+    }
+    if metric != Metric::Euclidean {
+        return Err(ExecError(format!(
+            "bounds policy '{}' is defined by the euclidean triangle \
+             inequality; got metric {}",
+            bounds.name(),
+            metric.name()
+        )));
+    }
+    if path == ScorePath::F32Refined && bounds != BoundsPolicy::None {
+        return Err(ExecError(format!(
+            "bounds policy '{}' maintains bounds from exact f64 scores; \
+             the f32 candidate sweep cannot feed them (use the f64 score \
+             path or drop --bounds)",
+            bounds.name()
+        )));
+    }
+    Ok(())
+}
 
 /// Scalar executor. Stateless; `Default` constructible.
 #[derive(Default, Clone, Debug)]
@@ -61,20 +92,7 @@ impl Executor for SingleExecutor {
         k: usize,
         metric: Metric,
     ) -> Result<Box<dyn AssignSession + 'a>, ExecError> {
-        Ok(Box::new(SingleSession {
-            ds,
-            k,
-            metric,
-            stats: AssignStats::zeros(ds.n(), k, ds.m()),
-            // Pruning is lossless only where the triangle inequality
-            // backs the bounds in the exact dense arithmetic — the
-            // Euclidean path. Other metrics keep the dense scalar walk
-            // (still into the reused scratch).
-            pruned: (metric == Metric::Euclidean)
-                .then(|| PrunedState::new(ds.n(), k, ds.m())),
-            f32state: None,
-            dense_scanned: 0,
-        }))
+        self.assign_session_opts(ds, k, metric, ScorePath::F64, BoundsPolicy::Auto)
     }
 
     fn assign_session_with<'a>(
@@ -84,30 +102,62 @@ impl Executor for SingleExecutor {
         metric: Metric,
         path: ScorePath,
     ) -> Result<Box<dyn AssignSession + 'a>, ExecError> {
-        match path {
-            ScorePath::F64 => self.assign_session(ds, k, metric),
-            ScorePath::F32Refined => {
-                if metric != Metric::Euclidean {
-                    return Err(ExecError(format!(
-                        "the f32 score path is defined by the euclidean \
-                         norm-decomposition kernel; got metric {}",
-                        metric.name()
-                    )));
-                }
-                // The f32 path replaces the pruned session: candidates
-                // come from the dense f32 sweep, ambiguity falls back to
-                // the exact f64 scan per row (not per iteration).
-                Ok(Box::new(SingleSession {
-                    ds,
-                    k,
-                    metric,
-                    stats: AssignStats::zeros(ds.n(), k, ds.m()),
-                    pruned: None,
-                    f32state: Some(F32State::new()),
-                    dense_scanned: 0,
-                }))
+        self.assign_session_opts(ds, k, metric, path, BoundsPolicy::Auto)
+    }
+
+    fn assign_session_opts<'a>(
+        &'a self,
+        ds: &'a Dataset,
+        k: usize,
+        metric: Metric,
+        path: ScorePath,
+        bounds: BoundsPolicy,
+    ) -> Result<Box<dyn AssignSession + 'a>, ExecError> {
+        check_bounds_request(bounds, metric, path)?;
+        if path == ScorePath::F32Refined {
+            if metric != Metric::Euclidean {
+                return Err(ExecError(format!(
+                    "the f32 score path is defined by the euclidean \
+                     norm-decomposition kernel; got metric {}",
+                    metric.name()
+                )));
             }
+            // The f32 path replaces the pruned sessions: candidates come
+            // from the dense f32 sweep, ambiguity falls back to the
+            // exact f64 scan per row (not per iteration). Bound
+            // maintenance needs exact f64 scores, so explicit pruning
+            // policies were rejected above.
+            return Ok(Box::new(SingleSession {
+                ds,
+                k,
+                metric,
+                stats: AssignStats::zeros(ds.n(), k, ds.m()),
+                pruned: None,
+                yinyang: None,
+                f32state: Some(F32State::new()),
+                dense_scanned: 0,
+            }));
         }
+        // Pruning is lossless only where the triangle inequality backs
+        // the bounds in the exact dense arithmetic — the Euclidean
+        // path. Other metrics keep the dense scalar walk (still into
+        // the reused scratch).
+        let policy = if metric == Metric::Euclidean {
+            bounds.effective(k, ds.m())
+        } else {
+            BoundsPolicy::None
+        };
+        Ok(Box::new(SingleSession {
+            ds,
+            k,
+            metric,
+            stats: AssignStats::zeros(ds.n(), k, ds.m()),
+            pruned: (policy == BoundsPolicy::Hamerly).then(|| PrunedState::new(ds.n(), k, ds.m())),
+            yinyang: (policy == BoundsPolicy::Yinyang)
+                .then(|| YinyangState::new(ds.n(), k, ds.m())),
+            f32state: None,
+            dense_scanned: 0,
+        }))
     }
 }
 
@@ -139,10 +189,14 @@ struct SingleSession<'a> {
     metric: Metric,
     stats: AssignStats,
     pruned: Option<PrunedState>,
-    /// The opt-in f32 score path; mutually exclusive with `pruned`.
+    /// The group-bound pruning policy; mutually exclusive with `pruned`
+    /// and `f32state`.
+    yinyang: Option<YinyangState>,
+    /// The opt-in f32 score path; mutually exclusive with the bound
+    /// states (bounds require exact f64 scores).
     f32state: Option<F32State>,
-    /// Rows processed by the dense (non-Euclidean or f32) path — every
-    /// one a full scan.
+    /// Rows processed by the dense (non-Euclidean, policy-none or f32)
+    /// path — every one a full scan.
     dense_scanned: u64,
 }
 
@@ -157,6 +211,16 @@ impl AssignSession for SingleSession<'_> {
             );
             f32s.counters.add(&c);
             self.dense_scanned += n as u64;
+            return Ok(&self.stats);
+        }
+        if let Some(state) = &mut self.yinyang {
+            state.prepare(centroids);
+            self.stats.reset(n, self.k, m);
+            let (labels, lower, prep, groups, counters) = state.parts();
+            let c = assign_yinyang_range(
+                self.ds, centroids, self.k, prep, groups, 0..n, labels, lower, &mut self.stats,
+            );
+            counters.add(c);
             return Ok(&self.stats);
         }
         match &mut self.pruned {
@@ -180,19 +244,39 @@ impl AssignSession for SingleSession<'_> {
     }
 
     fn prune_counters(&self) -> PruneCounters {
-        self.pruned.as_ref().map(|s| s.counters).unwrap_or(PruneCounters {
-            pruned_rows: 0,
-            scanned_rows: self.dense_scanned,
-        })
+        if let Some(s) = &self.pruned {
+            s.counters
+        } else if let Some(s) = &self.yinyang {
+            s.counters
+        } else {
+            PruneCounters {
+                pruned_rows: 0,
+                scanned_rows: self.dense_scanned,
+                dist_evals: self.dense_scanned * self.k as u64,
+                ..Default::default()
+            }
+        }
     }
 
     fn path_name(&self) -> &'static str {
         if self.f32state.is_some() {
             simd::f32_path_name()
+        } else if self.yinyang.is_some() {
+            simd::yinyang_path_name()
         } else if self.pruned.is_some() {
             simd::pruned_path_name()
         } else {
             "scalar"
+        }
+    }
+
+    fn bounds_policy(&self) -> &'static str {
+        if self.yinyang.is_some() {
+            BoundsPolicy::Yinyang.name()
+        } else if self.pruned.is_some() {
+            BoundsPolicy::Hamerly.name()
+        } else {
+            BoundsPolicy::None.name()
         }
     }
 
@@ -283,6 +367,60 @@ mod tests {
         assert_eq!(a.inertia, b.inertia);
         assert_eq!(f32s.f32_counters().scored_rows, 173);
         assert_eq!(f64s.f32_counters(), F32Counters::default());
+    }
+
+    #[test]
+    fn yinyang_session_matches_dense_session_bitwise() {
+        let (ds, mut cent) = crate::testkit::lattice_blobs(400, 4, 12);
+        let exec = SingleExecutor::new();
+        let mut yy = exec
+            .assign_session_opts(&ds, 12, Metric::Euclidean, ScorePath::F64, BoundsPolicy::Yinyang)
+            .unwrap();
+        let mut none = exec
+            .assign_session_opts(&ds, 12, Metric::Euclidean, ScorePath::F64, BoundsPolicy::None)
+            .unwrap();
+        assert_eq!(yy.bounds_policy(), "yinyang");
+        assert_eq!(none.bounds_policy(), "none");
+        for _ in 0..3 {
+            let a = none.step(&cent).unwrap().clone();
+            let b = yy.step(&cent).unwrap();
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.counts, b.counts);
+            assert_eq!(a.sums, b.sums);
+            assert_eq!(a.inertia, b.inertia);
+            cent = a.centroids(&cent, 12, 4);
+        }
+        let c = yy.prune_counters();
+        assert_eq!(c.pruned_rows + c.scanned_rows, 3 * 400);
+        assert_eq!(none.prune_counters().dist_evals, 3 * 400 * 12);
+    }
+
+    #[test]
+    fn explicit_bounds_reject_f32_and_non_euclidean() {
+        let ds = square();
+        let exec = SingleExecutor::new();
+        assert!(exec
+            .assign_session_opts(&ds, 2, Metric::Manhattan, ScorePath::F64, BoundsPolicy::Hamerly)
+            .is_err());
+        // Bound maintenance needs exact f64 scores: the f32 candidate
+        // sweep cannot feed a bound structure.
+        assert!(exec
+            .assign_session_opts(
+                &ds, 2, Metric::Euclidean, ScorePath::F32Refined, BoundsPolicy::Yinyang,
+            )
+            .is_err());
+        // f32 with explicitly *no* bounds is the one compatible pairing.
+        assert!(exec
+            .assign_session_opts(
+                &ds, 2, Metric::Euclidean, ScorePath::F32Refined, BoundsPolicy::None,
+            )
+            .is_ok());
+        // Explicit policies are honoured even where Auto would pick
+        // dense (k = 2).
+        let s = exec
+            .assign_session_opts(&ds, 2, Metric::Euclidean, ScorePath::F64, BoundsPolicy::Hamerly)
+            .unwrap();
+        assert_eq!(s.bounds_policy(), "hamerly");
     }
 
     #[test]

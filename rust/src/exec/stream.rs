@@ -11,11 +11,16 @@
 //!   ([`crate::pool::split_ranges`] geometry, so chunk boundaries can
 //!   match the in-core multi executor's shard boundaries exactly);
 //! * chunks are processed in **waves** of `group = threads − 1` on the
-//!   engine's persistent [`ThreadPool`]: one worker reads wave *t+1*
-//!   into the back ring of pooled [`ChunkBuf`]s while the other
-//!   workers run the existing micro-kernel/SIMD assignment on wave *t*
-//!   against the shared per-iteration [`CentroidPrep`] (double
-//!   buffering — front computes, back loads, swap);
+//!   engine's persistent [`ThreadPool`]: one worker reads ahead into
+//!   the free slots of a **prefetch ring** of pooled [`ChunkBuf`]
+//!   wave-slots while the other workers run the existing
+//!   micro-kernel/SIMD assignment on wave *t* against the shared
+//!   per-iteration [`CentroidPrep`]. The ring depth is derived from
+//!   the memory budget and clamped to `[2, 4]` — the same policy as
+//!   the GPU executor's staging ring. Depth 2 is classic double
+//!   buffering; deeper rings let the reader run several waves ahead,
+//!   absorbing bursty backing stores ([`IoCounters::ring_depth`]
+//!   surfaces the choice);
 //! * per-chunk [`AssignStats`] fold into the totals in ascending chunk
 //!   order — exactly the absorption order of
 //!   [`crate::exec::multi::MultiExecutor`] — so labels, counts,
@@ -26,21 +31,33 @@
 //!   relocated chunk buffer is bit-identical to the same rows in
 //!   place). `tests/stream_parity.rs` pins this.
 //!
-//! Resident dataset memory is bounded by the two buffer rings
-//! (`2 × group × chunk_rows × m × 4` bytes ≤ the configured budget),
-//! not by n — `benches/f7_outofcore.rs` asserts the bound with the
-//! counting-allocator harness while fitting a `.pcb` several times the
-//! budget. [`IoCounters`] makes the overlap observable: bytes read,
-//! chunks prefetched, and the wall time the compute wave actually
-//! stalled waiting for its data.
+//! Resident dataset memory is bounded by the prefetch ring
+//! (`depth × group × chunk_rows × m × 4` bytes ≤ the configured
+//! budget), not by n — `benches/f7_outofcore.rs` asserts the bound
+//! with the counting-allocator harness while fitting a `.pcb` several
+//! times the budget. [`IoCounters`] makes the overlap observable:
+//! bytes read, chunks prefetched, and the wall time the compute wave
+//! actually stalled waiting for its data.
+//!
+//! [`StreamEngine::with_bounds`] opts the full-pass path into the
+//! in-core cross-iteration bound structures (Hamerly or Yinyang
+//! group bounds): the fit-wide per-row bound state is sliced per
+//! chunk exactly like the in-core multi session slices it per shard,
+//! so a bounded streamed fit stays bit-equal to the bounded in-core
+//! session under matched chunk geometry. That bound state is n-sized
+//! resident memory *outside* the buffer budget — an explicit trade,
+//! which is why only explicitly requested policies enable it
+//! ([`BoundsPolicy::Auto`] streams dense).
 
 use std::ops::Range;
 use std::time::{Duration, Instant};
 
 use crate::data::shard::ShardSource;
 use crate::data::{DataError, Dataset};
-use crate::exec::{AssignStats, ExecError};
+use crate::exec::{AssignStats, BoundsPolicy, ExecError};
 use crate::kernel::prep::CentroidPrep;
+use crate::kernel::pruned::{assign_pruned_range, PruneCounters, PrunedState};
+use crate::kernel::yinyang::{assign_yinyang_range, Groups, YinyangState};
 use crate::kernel::{assign, reduce};
 use crate::metric::Metric;
 use crate::pool::{split_ranges, ThreadPool};
@@ -67,6 +84,9 @@ pub struct IoCounters {
     /// leader fill plus, per overlapped wave, the read time not hidden
     /// behind compute.
     pub prefetch_stall: Duration,
+    /// Prefetch ring depth in wave-slots (2 = double buffering; up to
+    /// 4 when the budget leaves room for a deeper read-ahead window).
+    pub ring_depth: u64,
 }
 
 /// One pooled chunk buffer: a fixed-capacity [`Dataset`] the kernels
@@ -108,11 +128,21 @@ enum WaveOut {
     },
     Compute {
         dur: Duration,
+        prune: PruneCounters,
     },
 }
 
-/// The streaming assignment engine: chunk geometry, double-buffer
-/// rings, per-chunk stat slots and fit-wide totals, all allocated once
+/// Which per-chunk assignment kernel a wave's compute jobs run —
+/// shared refs only, so one copy moves into every job closure.
+#[derive(Clone, Copy)]
+enum ChunkKind<'s> {
+    Dense,
+    Hamerly { prep: &'s CentroidPrep },
+    Yinyang { prep: &'s CentroidPrep, groups: &'s Groups },
+}
+
+/// The streaming assignment engine: chunk geometry, the prefetch
+/// ring, per-chunk stat slots and fit-wide totals, all allocated once
 /// at construction — iterating allocates nothing per pass, same as the
 /// in-core sessions.
 pub struct StreamEngine<'a> {
@@ -123,18 +153,26 @@ pub struct StreamEngine<'a> {
     chunks: Vec<Range<usize>>,
     /// Chunks per wave (`threads − 1` compute workers, one reader).
     group: usize,
-    front: Vec<ChunkBuf>,
-    back: Vec<ChunkBuf>,
+    /// Prefetch ring: `depth` wave-slots of `group` chunk buffers.
+    /// Wave *w* computes on `ring[w % depth]` while the reader fills
+    /// the slots of waves `w+1 ..= w+depth−1`.
+    ring: Vec<Vec<ChunkBuf>>,
+    depth: usize,
     slots: Vec<AssignStats>,
     total: AssignStats,
     prep: CentroidPrep,
+    /// Opt-in cross-iteration bound state ([`Self::with_bounds`]),
+    /// mutually exclusive; `None`/`None` streams the dense panel.
+    pruned: Option<PrunedState>,
+    yinyang: Option<YinyangState>,
     io: IoCounters,
 }
 
 impl<'a> StreamEngine<'a> {
-    /// Build with chunk geometry derived from a resident-buffer byte
-    /// budget: `2 × group` buffers of `chunk_rows × m × 4` bytes fit
-    /// inside `memory_budget` (floored at [`MIN_CHUNK_ROWS`] rows).
+    /// Build with chunk geometry and prefetch-ring depth derived from
+    /// a resident-buffer byte budget: `depth × group` buffers of
+    /// `chunk_rows × m × 4` bytes fit inside `memory_budget` (depth
+    /// clamped to `[2, 4]`, rows floored at [`MIN_CHUNK_ROWS`]).
     pub fn new(
         source: &'a dyn ShardSource,
         k: usize,
@@ -146,24 +184,46 @@ impl<'a> StreamEngine<'a> {
         let m = source.m();
         let threads = threads.max(1);
         let group = threads.saturating_sub(1).max(1);
-        let per_row_bytes = 2 * group * m * 4;
-        let chunk_rows = (memory_budget / per_row_bytes.max(1))
-            .max(MIN_CHUNK_ROWS)
-            .min(n.max(1));
+        // Deepest ring in [2, 4] that keeps chunks comfortably sized
+        // (≥ 4 × MIN_CHUNK_ROWS): deeper rings absorb bursty backing
+        // stores, but never at the price of orchestration-dominated
+        // tiny chunks. Depth 2 is the unconditional floor.
+        let mut depth = 4usize;
+        let mut chunk_rows;
+        loop {
+            chunk_rows = (memory_budget / (depth * group * m * 4).max(1)).min(n.max(1));
+            if depth == 2 || chunk_rows >= 4 * MIN_CHUNK_ROWS {
+                break;
+            }
+            depth -= 1;
+        }
+        let chunk_rows = chunk_rows.max(MIN_CHUNK_ROWS).min(n.max(1));
         let num_chunks = n.div_ceil(chunk_rows.max(1)).max(1);
-        Self::with_chunks(source, k, metric, threads, split_ranges(n, num_chunks))
+        Self::build(source, k, metric, threads, split_ranges(n, num_chunks), depth)
     }
 
-    /// Build with explicit chunk geometry. `chunks` must partition
-    /// `0..source.n()` contiguously — this is how the parity tests and
-    /// benches pin chunk boundaries to the in-core multi executor's
-    /// `split_ranges(n, threads)` shards.
+    /// Build with explicit chunk geometry and classic double buffering
+    /// (depth 2). `chunks` must partition `0..source.n()` contiguously
+    /// — this is how the parity tests and benches pin chunk boundaries
+    /// to the in-core multi executor's `split_ranges(n, threads)`
+    /// shards.
     pub fn with_chunks(
         source: &'a dyn ShardSource,
         k: usize,
         metric: Metric,
         threads: usize,
         chunks: Vec<Range<usize>>,
+    ) -> StreamEngine<'a> {
+        Self::build(source, k, metric, threads, chunks, 2)
+    }
+
+    fn build(
+        source: &'a dyn ShardSource,
+        k: usize,
+        metric: Metric,
+        threads: usize,
+        chunks: Vec<Range<usize>>,
+        depth: usize,
     ) -> StreamEngine<'a> {
         let n = source.n();
         let m = source.m();
@@ -177,6 +237,9 @@ impl<'a> StreamEngine<'a> {
 
         let threads = threads.max(1);
         let group = threads.saturating_sub(1).max(1).min(chunks.len().max(1));
+        // Slots beyond the wave count would never be filled.
+        let num_waves = chunks.len().div_ceil(group.max(1)).max(1);
+        let depth = depth.clamp(2, 4).min(num_waves.max(2));
         let cap_rows = chunks.iter().map(|r| r.len()).max().unwrap_or(0);
         StreamEngine {
             source,
@@ -185,12 +248,71 @@ impl<'a> StreamEngine<'a> {
             k,
             chunks,
             group,
-            front: (0..group).map(|_| ChunkBuf::new(cap_rows, m)).collect(),
-            back: (0..group).map(|_| ChunkBuf::new(cap_rows, m)).collect(),
+            ring: (0..depth)
+                .map(|_| (0..group).map(|_| ChunkBuf::new(cap_rows, m)).collect())
+                .collect(),
+            depth,
             slots: (0..group).map(|_| AssignStats::zeros(cap_rows, k, m)).collect(),
             total: AssignStats::zeros(n, k, m),
             prep: CentroidPrep::default(),
-            io: IoCounters::default(),
+            pruned: None,
+            yinyang: None,
+            io: IoCounters {
+                ring_depth: depth as u64,
+                ..IoCounters::default()
+            },
+        }
+    }
+
+    /// Opt the full-pass path into a cross-iteration bound structure.
+    /// [`BoundsPolicy::None`] and [`BoundsPolicy::Auto`] are no-ops
+    /// (`Auto` streams dense: the per-row bound state is n-sized
+    /// resident memory outside the buffer budget, so it must be an
+    /// explicit request); Hamerly / Yinyang require the Euclidean
+    /// metric. Labels, counts, sums and inertia stay bit-equal to the
+    /// dense sweep either way.
+    pub fn with_bounds(mut self, policy: BoundsPolicy) -> Result<StreamEngine<'a>, ExecError> {
+        match policy {
+            BoundsPolicy::None | BoundsPolicy::Auto => {}
+            BoundsPolicy::Hamerly | BoundsPolicy::Yinyang => {
+                if self.metric != Metric::Euclidean {
+                    return Err(ExecError(format!(
+                        "bounds policy '{}' is defined by the euclidean triangle \
+                         inequality; got metric {}",
+                        policy.name(),
+                        self.metric.name()
+                    )));
+                }
+                let (n, m) = (self.source.n(), self.source.m());
+                if policy == BoundsPolicy::Hamerly {
+                    self.pruned = Some(PrunedState::new(n, self.k, m));
+                } else {
+                    self.yinyang = Some(YinyangState::new(n, self.k, m));
+                }
+            }
+        }
+        Ok(self)
+    }
+
+    /// Accumulated pruning counters (all-zero under the dense path).
+    pub fn prune_counters(&self) -> PruneCounters {
+        if let Some(s) = &self.pruned {
+            s.counters
+        } else if let Some(s) = &self.yinyang {
+            s.counters
+        } else {
+            PruneCounters::default()
+        }
+    }
+
+    /// The active bound policy's name.
+    pub fn bounds_policy(&self) -> &'static str {
+        if self.yinyang.is_some() {
+            "yinyang"
+        } else if self.pruned.is_some() {
+            "hamerly"
+        } else {
+            "none"
         }
     }
 
@@ -199,11 +321,16 @@ impl<'a> StreamEngine<'a> {
         &self.chunks
     }
 
-    /// Resident dataset-buffer bytes (both rings) — the quantity the
-    /// memory budget bounds.
+    /// Resident dataset-buffer bytes (the whole prefetch ring) — the
+    /// quantity the memory budget bounds.
     pub fn buffer_bytes(&self) -> usize {
-        let cap = self.front.first().map(|b| b.ds.n()).unwrap_or(0);
-        2 * self.group * cap * self.source.m() * 4
+        let cap = self
+            .ring
+            .first()
+            .and_then(|s| s.first())
+            .map(|b| b.ds.n())
+            .unwrap_or(0);
+        self.depth * self.group * cap * self.source.m() * 4
     }
 
     /// Accumulated I/O counters.
@@ -221,10 +348,12 @@ impl<'a> StreamEngine<'a> {
         let m = self.source.m();
         let k = self.k;
         debug_assert_eq!(centroids.len(), k * m);
-        if self.metric == Metric::Euclidean {
+        let bounded = self.pruned.is_some() || self.yinyang.is_some();
+        if self.metric == Metric::Euclidean && !bounded {
             // Once per iteration on the leader, shared read-only by
             // every chunk job — same discipline as the in-core
-            // sessions (tests/prep_discipline.rs).
+            // sessions (tests/prep_discipline.rs). The bound states
+            // carry their own prep inside their digests.
             self.prep.prepare(centroids, k, m);
         }
         self.total.reset(n, k, m);
@@ -232,51 +361,102 @@ impl<'a> StreamEngine<'a> {
             return Ok(&self.total);
         }
 
+        // Bound digests + per-chunk slices of the fit-wide bound
+        // state, split up front in chunk order — the same
+        // `mem::take`/`split_at_mut` discipline the in-core multi
+        // session applies per shard (Yinyang rows carry G bounds, so
+        // its slice stride is `len × G`).
+        let mut kind = ChunkKind::Dense;
+        let mut bound_counters: Option<&mut PruneCounters> = None;
+        let mut chunk_bounds: Vec<(&mut [u32], &mut [f64])> = Vec::new();
+        if let Some(state) = &mut self.pruned {
+            state.prepare(centroids);
+            let (mut labels_rest, mut lower_rest, prep, counters) = state.parts();
+            for r in &self.chunks {
+                let (lab, rest) = std::mem::take(&mut labels_rest).split_at_mut(r.len());
+                labels_rest = rest;
+                let (low, rest) = std::mem::take(&mut lower_rest).split_at_mut(r.len());
+                lower_rest = rest;
+                chunk_bounds.push((lab, low));
+            }
+            kind = ChunkKind::Hamerly { prep };
+            bound_counters = Some(counters);
+        } else if let Some(state) = &mut self.yinyang {
+            state.prepare(centroids);
+            let gc = state.group_count();
+            let (mut labels_rest, mut lower_rest, prep, groups, counters) = state.parts();
+            for r in &self.chunks {
+                let (lab, rest) = std::mem::take(&mut labels_rest).split_at_mut(r.len());
+                labels_rest = rest;
+                let (low, rest) = std::mem::take(&mut lower_rest).split_at_mut(r.len() * gc);
+                lower_rest = rest;
+                chunk_bounds.push((lab, low));
+            }
+            kind = ChunkKind::Yinyang { prep, groups };
+            bound_counters = Some(counters);
+        }
+        let mut chunk_bounds = chunk_bounds.into_iter();
+        let dense_prep = &self.prep;
+
         let group = self.group;
+        let depth = self.depth;
         let num_waves = self.chunks.len().div_ceil(group);
 
         // Wave 0 has nothing to overlap with: leader fill, all stall.
         {
             let t = Instant::now();
             let first = &self.chunks[..group.min(self.chunks.len())];
-            for (buf, r) in self.front.iter_mut().zip(first.iter()) {
+            for (buf, r) in self.ring[0].iter_mut().zip(first.iter()) {
                 self.io.bytes_read += buf
                     .load_from(self.source, r.clone())
                     .map_err(|e| ExecError(format!("stream read: {e}")))?;
             }
             self.io.prefetch_stall += t.elapsed();
         }
+        // Waves `0..filled` are loaded; the reader tops the window up
+        // to `wave + depth − 1` every wave, so a deep ring lets it run
+        // ahead of a fast compute and bank slack for bursty reads.
+        let mut filled = 1usize;
 
         for wave in 0..num_waves {
             let cur_lo = wave * group;
             let cur_hi = (cur_lo + group).min(self.chunks.len());
-            let next_hi = (cur_hi + group).min(self.chunks.len());
             let cur = &self.chunks[cur_lo..cur_hi];
-            let next: Vec<Range<usize>> = self.chunks[cur_hi..next_hi].to_vec();
+            let target = (wave + depth).min(num_waves);
+            let to_fill: Vec<(usize, Vec<Range<usize>>)> = (filled..target)
+                .map(|w| {
+                    let lo = w * group;
+                    let hi = (lo + group).min(self.chunks.len());
+                    (w % depth, self.chunks[lo..hi].to_vec())
+                })
+                .collect();
 
             let source = self.source;
             let metric = self.metric;
-            let prep = &self.prep;
-            let front = &self.front;
-            let back = &mut self.back;
+            let cur_slot = wave % depth;
+            // Detach the computing wave-slot so the reader can borrow
+            // the rest of the ring mutably; restored after the wave.
+            let cur_bufs = std::mem::take(&mut self.ring[cur_slot]);
+            let ring = &mut self.ring;
             let slots = &mut self.slots;
 
             let mut jobs: Vec<Box<dyn FnOnce() -> WaveOut + Send + '_>> =
                 Vec::with_capacity(cur.len() + 1);
-            if !next.is_empty() {
-                let backs = &mut back[..next.len()];
+            if !to_fill.is_empty() {
                 jobs.push(Box::new(move || {
                     let t = Instant::now();
                     let (mut bytes, mut loaded, mut err) = (0u64, 0u64, None);
-                    for (buf, r) in backs.iter_mut().zip(next.iter()) {
-                        match buf.load_from(source, r.clone()) {
-                            Ok(b) => {
-                                bytes += b;
-                                loaded += 1;
-                            }
-                            Err(e) => {
-                                err = Some(e);
-                                break;
+                    'fill: for (slot_idx, rs) in to_fill {
+                        for (buf, r) in ring[slot_idx].iter_mut().zip(rs.iter()) {
+                            match buf.load_from(source, r.clone()) {
+                                Ok(b) => {
+                                    bytes += b;
+                                    loaded += 1;
+                                }
+                                Err(e) => {
+                                    err = Some(e);
+                                    break 'fill;
+                                }
                             }
                         }
                     }
@@ -288,23 +468,49 @@ impl<'a> StreamEngine<'a> {
                     }
                 }));
             }
-            for ((buf, slot), r) in front[..cur.len()]
+            for ((buf, slot), r) in cur_bufs[..cur.len()]
                 .iter()
                 .zip(slots.iter_mut())
                 .zip(cur.iter())
             {
-                debug_assert_eq!(buf.range, *r, "front ring out of phase");
+                debug_assert_eq!(buf.range, *r, "prefetch ring out of phase");
                 let rows = r.len();
+                let bs = match kind {
+                    ChunkKind::Dense => None,
+                    _ => chunk_bounds.next(),
+                };
                 jobs.push(Box::new(move || {
                     let t = Instant::now();
                     slot.reset(rows, k, m);
                     let ds = &buf.ds;
-                    if metric == Metric::Euclidean {
-                        assign::assign_euclidean_panel_into(ds, centroids, prep, 0..rows, slot);
-                    } else {
-                        assign::assign_update_range_into(ds, centroids, k, metric, 0..rows, slot);
+                    let prune = match kind {
+                        ChunkKind::Dense => {
+                            if metric == Metric::Euclidean {
+                                assign::assign_euclidean_panel_into(
+                                    ds, centroids, dense_prep, 0..rows, slot,
+                                );
+                            } else {
+                                assign::assign_update_range_into(
+                                    ds, centroids, k, metric, 0..rows, slot,
+                                );
+                            }
+                            PruneCounters::default()
+                        }
+                        ChunkKind::Hamerly { prep } => {
+                            let (lab, low) = bs.expect("bound slice per chunk");
+                            assign_pruned_range(ds, centroids, k, prep, 0..rows, lab, low, slot)
+                        }
+                        ChunkKind::Yinyang { prep, groups } => {
+                            let (lab, low) = bs.expect("bound slice per chunk");
+                            assign_yinyang_range(
+                                ds, centroids, k, prep, groups, 0..rows, lab, low, slot,
+                            )
+                        }
+                    };
+                    WaveOut::Compute {
+                        dur: t.elapsed(),
+                        prune,
                     }
-                    WaveOut::Compute { dur: t.elapsed() }
                 }));
             }
 
@@ -313,14 +519,22 @@ impl<'a> StreamEngine<'a> {
             let wave_wall = t_wave.elapsed();
 
             let mut max_compute = Duration::ZERO;
+            let mut wave_prune = PruneCounters::default();
             let mut read: Option<(u64, u64, Duration, Option<DataError>)> = None;
             for out in outs {
                 match out {
                     WaveOut::Read { bytes, chunks, dur, err } => {
                         read = Some((bytes, chunks, dur, err));
                     }
-                    WaveOut::Compute { dur } => max_compute = max_compute.max(dur),
+                    WaveOut::Compute { dur, prune } => {
+                        max_compute = max_compute.max(dur);
+                        wave_prune.add(prune);
+                    }
                 }
+            }
+            self.ring[cur_slot] = cur_bufs;
+            if let Some(c) = bound_counters.as_mut() {
+                c.add(wave_prune);
             }
             if let Some((bytes, loaded, dur, err)) = read {
                 if let Some(e) = err {
@@ -337,7 +551,7 @@ impl<'a> StreamEngine<'a> {
             for (i, r) in cur.iter().enumerate() {
                 self.total.absorb(r.start, &self.slots[i]);
             }
-            std::mem::swap(&mut self.front, &mut self.back);
+            filled = target;
         }
         Ok(&self.total)
     }
@@ -355,7 +569,7 @@ impl<'a> StreamEngine<'a> {
         let mut total = vec![0f64; m];
         for i in 0..self.chunks.len() {
             let r = self.chunks[i].clone();
-            let buf = &mut self.front[0];
+            let buf = &mut self.ring[0][0];
             self.io.bytes_read += buf
                 .load_from(self.source, r.clone())
                 .map_err(|e| ExecError(format!("stream read: {e}")))?;
@@ -388,12 +602,87 @@ mod tests {
         let eng = StreamEngine::new(&src, 4, Metric::Euclidean, 4, budget);
         assert!(eng.chunks().len() > 1, "budget must force multiple chunks");
         assert!(
-            eng.buffer_bytes() <= budget.max(2 * 3 * MIN_CHUNK_ROWS * 8 * 4),
+            eng.buffer_bytes() <= budget.max(4 * 3 * MIN_CHUNK_ROWS * 8 * 4),
             "buffers {} exceed budget {budget}",
             eng.buffer_bytes()
         );
         let total = eng.chunks().iter().map(|r| r.len()).sum::<usize>();
         assert_eq!(total, 10_000);
+    }
+
+    #[test]
+    fn ring_depth_follows_budget_and_stays_correct() {
+        // Roomy budget relative to MIN_CHUNK_ROWS chunks → the ring
+        // deepens past double buffering (clamped at 4); a tight budget
+        // keeps the floor of 2. Labels must be identical either way.
+        let g = generate(&GmmSpec::new(50_000, 4, 6).seed(4));
+        let src = MemShardSource::new(&g.dataset);
+        let deep = StreamEngine::new(&src, 4, Metric::Euclidean, 4, 256 * 1024);
+        assert_eq!(deep.io().ring_depth, 4, "chunks: {}", deep.chunks().len());
+        assert!(deep.buffer_bytes() <= 256 * 1024);
+        let shallow = StreamEngine::new(&src, 4, Metric::Euclidean, 4, 48 * 1024);
+        assert_eq!(shallow.io().ring_depth, 2);
+
+        let cent = g.dataset.gather(&[0, 11, 22, 33]);
+        let reference = MultiExecutor::new(2)
+            .assign_update(&g.dataset, &cent, 4, Metric::Euclidean)
+            .unwrap();
+        let mut eng = deep;
+        let streamed = eng.step(&cent).unwrap();
+        assert_eq!(streamed.labels, reference.labels);
+        assert_eq!(streamed.counts, reference.counts);
+        let io = eng.io();
+        assert_eq!(io.bytes_read, (50_000 * 4 * 4) as u64);
+    }
+
+    #[test]
+    fn bounded_stream_matches_bounded_multi_session_bitwise() {
+        use crate::exec::{BoundsPolicy, ScorePath};
+        // Matched chunk geometry ⇒ the streamed bounded fit replays
+        // the in-core bounded session bit for bit, including the
+        // cross-iteration bound state and the prune counters. k = 21
+        // gives Yinyang two real centroid groups, so the per-chunk
+        // bound slices carry the G-wide stride.
+        let g = generate(&GmmSpec::new(1_501, 6, 8).seed(13).spread(0.3));
+        let ds = &g.dataset;
+        let src = MemShardSource::new(ds);
+        let threads = 4;
+        let idx: Vec<usize> = (0..21).map(|c| c * 71).collect();
+        let cent = ds.gather(&idx);
+        for policy in [BoundsPolicy::Hamerly, BoundsPolicy::Yinyang] {
+            let multi = MultiExecutor::new(threads);
+            let mut session = multi
+                .assign_session_opts(ds, 21, Metric::Euclidean, ScorePath::F64, policy)
+                .unwrap();
+            let chunks = split_ranges(ds.n(), threads);
+            let mut eng = StreamEngine::with_chunks(&src, 21, Metric::Euclidean, threads, chunks)
+                .with_bounds(policy)
+                .unwrap();
+            assert_eq!(eng.bounds_policy(), policy.name());
+            let mut c = cent.clone();
+            for _ in 0..3 {
+                let expect = session.step(&c).unwrap().clone();
+                let got = eng.step(&c).unwrap();
+                assert_eq!(got.labels, expect.labels);
+                assert_eq!(got.counts, expect.counts);
+                assert_eq!(got.sums, expect.sums);
+                assert_eq!(got.inertia, expect.inertia);
+                c = expect.centroids(&c, 21, ds.m());
+            }
+            assert_eq!(eng.prune_counters(), session.prune_counters());
+            let pc = eng.prune_counters();
+            assert_eq!(pc.pruned_rows + pc.scanned_rows, 3 * 1_501);
+            assert!(pc.pruned_rows > 0, "{policy:?}: {pc:?}");
+        }
+        assert!(StreamEngine::with_chunks(
+            &src,
+            21,
+            Metric::Manhattan,
+            2,
+            vec![0..ds.n()]
+        )
+        .with_bounds(BoundsPolicy::Yinyang)
+        .is_err());
     }
 
     #[test]

@@ -35,6 +35,14 @@
 //!   [`assign`]; rows that fail the bounds fall back to the micro-kernel's
 //!   one-row panel sweep; driven through the executors' stateful
 //!   `AssignSession`s;
+//! * [`yinyang`] — the group-bound generalisation of [`pruned`]: the k
+//!   centroids are clustered once into G ≈ k/10 groups (a tiny in-core
+//!   fit over the centroid rows), each row carries G group lower bounds
+//!   decayed by per-group drift, and rows that fail the global filter
+//!   fall back group-by-group through the panel sweep's per-pair
+//!   arithmetic — labels stay bit-equal to [`assign`] while only the
+//!   surviving groups are swept. [`yinyang::BoundsPolicy`] selects
+//!   dense / Hamerly / Yinyang per fit (`Auto` from k and m);
 //! * [`reduce`] — tiled center-of-gravity coordinate sums (paper step 2),
 //!   partial-sum folding, and per-centroid drift between tables;
 //! * [`diameter`] — blocked farthest-pair scan (paper step 1, Eq. 3) and
@@ -59,6 +67,7 @@ pub mod prep;
 pub mod pruned;
 pub mod reduce;
 pub mod simd;
+pub mod yinyang;
 
 /// Rows per cache tile. A tile of `ROW_TILE × m` f32 (m ≤ 25 in the
 /// paper's workloads → ≤ 12.8 KB) stays L1-resident while the centroid

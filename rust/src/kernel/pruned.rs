@@ -68,19 +68,39 @@ pub use crate::kernel::prep::CentroidPrep;
 /// count, small enough that no real pruning opportunity is lost.
 pub const BOUND_SLACK: f64 = 1e-9;
 
-/// Rows skipped vs fully scanned, accumulated over a fit.
+/// Rows skipped vs fully scanned, accumulated over a fit — plus the
+/// group-filter breakdown of the yinyang policy
+/// ([`crate::kernel::yinyang`]) and the cross-policy
+/// distance-evaluation count.
 #[derive(Default, Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PruneCounters {
     /// Rows whose bounds proved the label without a centroid sweep.
     pub pruned_rows: u64,
-    /// Rows that fell back to the full k-centroid scan.
+    /// Rows that fell back to a centroid scan (the full sweep here; a
+    /// group-wise sweep under the yinyang policy).
     pub scanned_rows: u64,
+    /// Yinyang only: (scanned row × group) pairs a per-group bound
+    /// filtered out of the fallback sweep. For a pure yinyang fit
+    /// `group_filtered + group_scanned == G · scanned_rows`; both stay 0
+    /// for dense and Hamerly sessions.
+    pub group_filtered: u64,
+    /// Yinyang only: (scanned row × group) pairs swept member-by-member.
+    pub group_scanned: u64,
+    /// Exact distance/score evaluations performed: 1 per pruned row (the
+    /// hypothesis distance), 1 + k per fully scanned row, the hypothesis
+    /// + assigned score + surviving-group member sweeps under yinyang,
+    /// and k per row for dense sessions. The policy-independent work
+    /// measure the f4 bench compares across bounds policies.
+    pub dist_evals: u64,
 }
 
 impl PruneCounters {
     pub fn add(&mut self, other: PruneCounters) {
         self.pruned_rows += other.pruned_rows;
         self.scanned_rows += other.scanned_rows;
+        self.group_filtered += other.group_filtered;
+        self.group_scanned += other.group_scanned;
+        self.dist_evals += other.dist_evals;
     }
 
     /// Fraction of rows pruned (0.0 when nothing was processed).
@@ -238,6 +258,7 @@ pub fn assign_pruned_range(
             // would return it too. Skip the k−1 other centroids.
             lower[li] = l;
             counters.pruned_rows += 1;
+            counters.dist_evals += 1;
             stats.fold_row(li, row, a, d2_32, m);
         } else {
             // Full scan — the dense micro-kernel's panel sweep verbatim
@@ -253,6 +274,7 @@ pub fn assign_pruned_range(
             // ≥ second_score).
             lower[li] = (second_score + xn - eta).max(0.0).sqrt() * (1.0 - BOUND_SLACK);
             counters.scanned_rows += 1;
+            counters.dist_evals += 1 + k as u64;
             let d2 = sq_euclidean(row, &centroids[best * m..(best + 1) * m]);
             stats.fold_row(li, row, best, d2, m);
         }
@@ -266,7 +288,7 @@ pub fn assign_pruned_range(
 /// (feeds the η guard and the decomposed-score reconstruction — the
 /// dense path never needs it, so this has no `assign` counterpart).
 #[inline]
-fn sq_dist_and_norm(a: &[f32], b: &[f32]) -> (f32, f64, f64) {
+pub(crate) fn sq_dist_and_norm(a: &[f32], b: &[f32]) -> (f32, f64, f64) {
     debug_assert_eq!(a.len(), b.len());
     let mut acc32 = 0.0f32;
     let mut acc64 = 0.0f64;
@@ -284,7 +306,7 @@ fn sq_dist_and_norm(a: &[f32], b: &[f32]) -> (f32, f64, f64) {
 
 /// f64 squared distance (exact f32-to-f64 widening before subtraction).
 #[inline]
-fn sq_dist_f64(a: &[f32], b: &[f32]) -> f64 {
+pub(crate) fn sq_dist_f64(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = 0.0f64;
     for i in 0..a.len() {
@@ -379,7 +401,7 @@ mod tests {
     fn counters_rate() {
         let mut c = PruneCounters::default();
         assert_eq!(c.rate(), 0.0);
-        c.add(PruneCounters { pruned_rows: 3, scanned_rows: 1 });
+        c.add(PruneCounters { pruned_rows: 3, scanned_rows: 1, ..Default::default() });
         assert!((c.rate() - 0.75).abs() < 1e-12);
     }
 }

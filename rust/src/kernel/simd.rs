@@ -161,6 +161,15 @@ pub fn pruned_path_name() -> &'static str {
     }
 }
 
+/// Name of the yinyang session's kernel path (for metrics).
+pub fn yinyang_path_name() -> &'static str {
+    if simd_active() {
+        "yinyang+simd-avx2"
+    } else {
+        "yinyang+micro"
+    }
+}
+
 /// Name of the f32 score path (for metrics).
 pub fn f32_path_name() -> &'static str {
     "f32+refine"

@@ -1,0 +1,725 @@
+//! Yinyang-style group-bound pruned assignment — the rung above the
+//! single Hamerly bound of [`crate::kernel::pruned`] for moderate and
+//! large k.
+//!
+//! Hamerly keeps **one** lower bound per row over all non-label
+//! centroids, so one fast-moving centroid anywhere in the table decays
+//! every row's bound and the policy collapses around k ≳ 32 — exactly
+//! the paper's large-problem regime. Yinyang (Ding et al., "Yinyang
+//! K-Means", ICML 2015) splits the centroids once at init into
+//! G ≈ k/10 **groups** (a tiny k-means over the k centroid rows — the
+//! existing in-core fit at trivial scale) and keeps G per-row lower
+//! bounds, decayed by the *per-group* max drift. A settled group's
+//! bound survives another group's movement, so the filter keeps working
+//! where the single bound has collapsed.
+//!
+//! Per row the pass runs three tiers:
+//!
+//! 1. **Global filter** — exactly Hamerly's test with
+//!    `min_g (lower[g] − drift[g])` standing in for the single decayed
+//!    bound (plus the same half-separation arm). Rows passing it fold
+//!    their cached label and touch nothing else.
+//! 2. **Group filter** — each group whose decayed bound alone beats the
+//!    hypothesis distance is skipped whole; its bound is the decayed
+//!    value.
+//! 3. **Fallback sweep** — surviving groups are swept member-by-member
+//!    through [`score_one`], which replicates the micro-kernel's
+//!    per-pair arithmetic (widen-to-f64 multiply-accumulate in feature
+//!    order against the transposed panel, then
+//!    `score_norms[c] − 2·acc`), and the candidate fold uses the same
+//!    strict lexicographic (score, index) order as the panel sweep. If
+//!    *every* group survives, the row takes the dense
+//!    [`crate::kernel::simd::scan_row_auto`] panel sweep itself. Either
+//!    way every score actually computed is bit-identical to the dense
+//!    kernel's, so labels — and therefore counts, sums and inertia —
+//!    stay bit-equal to [`crate::kernel::assign`] (parity tier 1,
+//!    enforced by `tests/kernel_parity.rs` and the differential fuzz
+//!    harness).
+//!
+//! Bound maintenance mirrors [`crate::kernel::pruned`]'s floating-point
+//! contract: every bound is created from exact f64 scores deflated by
+//! [`BOUND_SLACK`] relatively and by the absolute squared-domain guard
+//! η (the decomposed scores' cancellation error is absolute in the
+//! ‖x‖²/‖c‖² scale); drifts are inflated by the same slack; NaN scores
+//! or bounds fail every comparison and degrade the row to a fuller
+//! sweep — never a misprune. The invariant for `lower[g]` is "no
+//! centroid of group g **other than the current label** is closer than
+//! this": the sweep refreshes it from the group's min score, the
+//! winner's group gets a recomputed min *excluding* the winner, and
+//! when the label leaves a group that was filtered this pass, that
+//! group's bound is min'd with the old label's own score bound (the old
+//! label is no longer exempt).
+//!
+//! Policy selection lives here too: [`BoundsPolicy`] picks dense /
+//! Hamerly / Yinyang per fit, `Auto` from (k, m) with crossovers read
+//! off the f4 bench grid (EXPERIMENTS.md §F4/§F9).
+
+use crate::data::Dataset;
+use crate::exec::AssignStats;
+use crate::kernel::prep::CEN_TILE;
+use crate::kernel::pruned::{sq_dist_and_norm, sq_dist_f64, PruneCounters, BOUND_SLACK};
+use crate::kernel::reduce::centroid_shifts_sq_into;
+use crate::kernel::simd::scan_row_auto as scan_row;
+use crate::metric::sq_euclidean;
+
+pub use crate::kernel::prep::CentroidPrep;
+
+/// Which cross-iteration bound structure the assignment sessions carry.
+///
+/// Selectable per fit via `--bounds` / `KMeansConfig::bounds`; every
+/// policy is **lossless** (labels bit-equal to the dense sweep), they
+/// differ only in how much distance work they skip and how much per-row
+/// state they pay for it (none / 1 / G f64 bounds per row).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BoundsPolicy {
+    /// Dense sweep every row, every iteration — no cross-iteration
+    /// bound state. What the GPU regime and non-Euclidean metrics run.
+    None,
+    /// One global lower bound per row ([`crate::kernel::pruned`]).
+    Hamerly,
+    /// G ≈ k/10 group lower bounds per row (this module).
+    Yinyang,
+    /// Resolve per fit from (k, m) — see [`BoundsPolicy::resolve`].
+    #[default]
+    Auto,
+}
+
+impl BoundsPolicy {
+    pub fn from_str(s: &str) -> Option<BoundsPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "dense" => Some(BoundsPolicy::None),
+            "hamerly" => Some(BoundsPolicy::Hamerly),
+            "yinyang" => Some(BoundsPolicy::Yinyang),
+            "auto" => Some(BoundsPolicy::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BoundsPolicy::None => "none",
+            BoundsPolicy::Hamerly => "hamerly",
+            BoundsPolicy::Yinyang => "yinyang",
+            BoundsPolicy::Auto => "auto",
+        }
+    }
+
+    /// The concrete policy `Auto` picks for a (k, m) fit. Crossovers
+    /// from the f4 three-policy grid (EXPERIMENTS.md §F9): at k ≤ 2 the
+    /// bound bookkeeping (one exact hypothesis distance per pruned row
+    /// plus the leader's O(k²m) digest) can't beat the 1–2-score SIMD
+    /// panel sweep, so dense wins; the single Hamerly bound is cheapest
+    /// while it still filters (small k, or small m where the sweep is
+    /// cheap anyway); group bounds take over where Hamerly collapses —
+    /// k ≥ 64 always, and already at k ≥ 32 when rows are wide enough
+    /// (m ≥ 16) that each skipped member sweep pays for the G-bound
+    /// scan.
+    pub fn resolve(k: usize, m: usize) -> BoundsPolicy {
+        if k <= 2 {
+            BoundsPolicy::None
+        } else if k >= 64 || (k >= 32 && m >= 16) {
+            BoundsPolicy::Yinyang
+        } else {
+            BoundsPolicy::Hamerly
+        }
+    }
+
+    /// CI pin: `PARCLUST_FORCE_BOUNDS=none|hamerly|yinyang` overrides
+    /// what `Auto` resolves to (mirroring `PARCLUST_FORCE_PORTABLE`),
+    /// so a fuzz leg can hold every auto-dispatched session on one
+    /// policy. Explicit policies are never overridden — a caller who
+    /// asked for specific bounds gets them (and the yinyang grouping
+    /// fit pins itself to Hamerly explicitly, so the env can't recurse
+    /// it).
+    pub fn forced() -> Option<BoundsPolicy> {
+        let v = std::env::var("PARCLUST_FORCE_BOUNDS").ok()?;
+        match BoundsPolicy::from_str(&v) {
+            Some(BoundsPolicy::Auto) | None => None,
+            p => p,
+        }
+    }
+
+    /// The concrete policy this request runs: explicit choices pass
+    /// through; `Auto` honours the CI pin, then [`BoundsPolicy::resolve`].
+    pub fn effective(self, k: usize, m: usize) -> BoundsPolicy {
+        match self {
+            BoundsPolicy::Auto => Self::forced().unwrap_or_else(|| Self::resolve(k, m)),
+            p => p,
+        }
+    }
+}
+
+/// Number of centroid groups for a k-centroid table: G ≈ k/10 (the
+/// Yinyang paper's t = k/10), at least one.
+pub fn group_count_for(k: usize) -> usize {
+    (k / 10).max(1)
+}
+
+/// The once-per-fit centroid grouping plus its per-iteration drift
+/// digest. Groups are built on the first [`YinyangState::prepare`] and
+/// then frozen: bounds reference group identity across iterations, and
+/// the grouping only has to be *good*, not optimal — drifting
+/// assignments would invalidate every stored bound.
+#[derive(Debug)]
+pub struct Groups {
+    group_count: usize,
+    /// Group index per centroid (length k).
+    pub group_of: Vec<u32>,
+    /// Centroid indices grouped (CSR payload, ascending within each
+    /// group so the fallback sweep visits members in index order).
+    members: Vec<u32>,
+    /// CSR offsets (length G + 1).
+    starts: Vec<usize>,
+    /// Per-group max centroid drift `max_{c ∈ g} ‖c_new − c_old‖`,
+    /// inflated by [`BOUND_SLACK`]; +∞ until a previous table exists.
+    pub drift: Vec<f64>,
+    built: bool,
+}
+
+impl Groups {
+    pub fn group_count(&self) -> usize {
+        self.group_count
+    }
+
+    /// Centroid indices of group `g`, ascending.
+    #[inline]
+    pub fn members_of(&self, g: usize) -> &[u32] {
+        &self.members[self.starts[g]..self.starts[g + 1]]
+    }
+
+    /// Cluster the k centroid rows into `group_count` groups. The
+    /// grouping fit is the library's own in-core fit at tiny scale
+    /// (n = k rows); non-finite centroid tables (which
+    /// [`Dataset::from_vec`] rejects) and any fit failure fall back to
+    /// a striped contiguous grouping — still correct, just a weaker
+    /// filter.
+    fn build(&mut self, centroids: &[f32], k: usize, m: usize) {
+        let gc = self.group_count;
+        self.group_of.clear();
+        if gc == 1 {
+            self.group_of.resize(k, 0);
+        } else if let Some(labels) = grouping_fit(centroids, k, m, gc) {
+            self.group_of.extend_from_slice(&labels);
+        } else {
+            self.group_of.extend((0..k).map(|c| (c * gc / k) as u32));
+        }
+
+        // counting sort into CSR, ascending member order within groups
+        self.starts.clear();
+        self.starts.resize(gc + 1, 0);
+        for &g in &self.group_of {
+            self.starts[g as usize + 1] += 1;
+        }
+        for g in 0..gc {
+            self.starts[g + 1] += self.starts[g];
+        }
+        let mut cursor = self.starts.clone();
+        self.members.clear();
+        self.members.resize(k, 0);
+        for c in 0..k {
+            let g = self.group_of[c] as usize;
+            self.members[cursor[g]] = c as u32;
+            cursor[g] += 1;
+        }
+        self.built = true;
+    }
+}
+
+/// The tiny in-core fit that groups the centroids (single regime,
+/// explicit Hamerly bounds so neither `Auto` nor the CI pin can route
+/// it back through yinyang, fixed seed for deterministic groupings).
+fn grouping_fit(centroids: &[f32], k: usize, m: usize, gc: usize) -> Option<Vec<u32>> {
+    let cds = Dataset::from_vec(k, m, centroids.to_vec()).ok()?;
+    let cfg = crate::kmeans::KMeansConfig::new(gc)
+        .init_method(crate::kmeans::InitMethod::Random)
+        .regime(crate::exec::regime::Regime::Single)
+        .bounds(BoundsPolicy::Hamerly)
+        .max_iters(8)
+        .seed(0x1717);
+    crate::kmeans::fit(&cds, &cfg).ok().map(|r| r.labels)
+}
+
+/// Cross-iteration yinyang state for one fit: per-row labels and G
+/// group lower bounds, the frozen centroid grouping, the previous
+/// table, and the accumulated counters. Everything n-, k- or G-sized
+/// is allocated at construction or during the first `prepare` (the
+/// warm-up pass) — iterating afterwards allocates nothing, pinned by
+/// `tests/alloc_discipline.rs`.
+pub struct YinyangState {
+    k: usize,
+    m: usize,
+    /// Last iteration's label per row — the pruning hypothesis.
+    pub labels: Vec<u32>,
+    /// Row-major (n × G) lower bounds: `lower[i·G + g]` bounds the
+    /// distance from row i to every group-g centroid *other than the
+    /// row's current label* (`−∞` until the first sweep sets it).
+    pub lower: Vec<f64>,
+    /// The centroid-table digest for the current iteration.
+    pub prep: CentroidPrep,
+    /// Pruned/scanned/group-filter totals across the fit.
+    pub counters: PruneCounters,
+    /// The frozen grouping and its per-iteration drifts.
+    pub groups: Groups,
+    prev_centroids: Vec<f32>,
+    has_prev: bool,
+    drift_scratch: Vec<f64>,
+}
+
+impl YinyangState {
+    pub fn new(n: usize, k: usize, m: usize) -> YinyangState {
+        let gc = group_count_for(k);
+        YinyangState {
+            k,
+            m,
+            labels: vec![0; n],
+            lower: vec![f64::NEG_INFINITY; n * gc],
+            prep: CentroidPrep::default(),
+            counters: PruneCounters::default(),
+            groups: Groups {
+                group_count: gc,
+                group_of: Vec::with_capacity(k),
+                members: Vec::with_capacity(k),
+                starts: Vec::with_capacity(gc + 1),
+                drift: vec![f64::INFINITY; gc],
+                built: false,
+            },
+            prev_centroids: vec![0.0; k * m],
+            has_prev: false,
+            drift_scratch: Vec::with_capacity(k),
+        }
+    }
+
+    pub fn group_count(&self) -> usize {
+        self.groups.group_count
+    }
+
+    /// Refresh the digest for a new centroid table: the shared dense
+    /// prep, the frozen grouping (built on the first call), the
+    /// Hamerly-identical half-separations, and the per-group drifts.
+    /// Leader-side, O(k²·m), allocation-free after the first call.
+    pub fn prepare(&mut self, centroids: &[f32]) {
+        let (k, m) = (self.k, self.m);
+        debug_assert_eq!(centroids.len(), k * m);
+
+        self.prep.prepare(centroids, k, m);
+        if !self.groups.built {
+            self.groups.build(centroids, k, m);
+        }
+
+        // Half-separations: same digest, same slack direction as the
+        // Hamerly session (NaN pair distances are skipped by the min
+        // fold — a NaN centroid can never win the dense argmin, so
+        // treating it as infinitely far matches dense semantics).
+        self.prep.half_sep.clear();
+        self.prep.half_sep.extend((0..k).map(|c| {
+            let cen = &centroids[c * m..(c + 1) * m];
+            let mut min_sq = f64::INFINITY;
+            for o in 0..k {
+                if o == c {
+                    continue;
+                }
+                min_sq = min_sq.min(sq_dist_f64(cen, &centroids[o * m..(o + 1) * m]));
+            }
+            0.5 * min_sq.sqrt() * (1.0 - BOUND_SLACK) // ∞ stays ∞ for k = 1
+        }));
+
+        if self.has_prev {
+            centroid_shifts_sq_into(&self.prev_centroids, centroids, k, m, &mut self.drift_scratch);
+            for d in self.groups.drift.iter_mut() {
+                *d = 0.0;
+            }
+            for c in 0..k {
+                let g = self.groups.group_of[c] as usize;
+                self.groups.drift[g] = self.groups.drift[g].max(self.drift_scratch[c]);
+            }
+            for d in self.groups.drift.iter_mut() {
+                *d = d.sqrt() * (1.0 + BOUND_SLACK);
+            }
+            self.prep.max_drift = self.groups.drift.iter().cloned().fold(0.0f64, f64::max);
+        } else {
+            for d in self.groups.drift.iter_mut() {
+                *d = f64::INFINITY;
+            }
+            self.prep.max_drift = f64::INFINITY;
+        }
+
+        self.prev_centroids.copy_from_slice(centroids);
+        self.has_prev = true;
+    }
+
+    /// Split borrows for one pass: mutable per-row state (labels, the
+    /// n×G bound matrix), the shared digest + grouping, the counters.
+    /// Shards slice `labels` per row range and `lower` per row range
+    /// × G while every worker reads the same prep and groups.
+    pub fn parts(
+        &mut self,
+    ) -> (
+        &mut [u32],
+        &mut [f64],
+        &CentroidPrep,
+        &Groups,
+        &mut PruneCounters,
+    ) {
+        (
+            &mut self.labels,
+            &mut self.lower,
+            &self.prep,
+            &self.groups,
+            &mut self.counters,
+        )
+    }
+}
+
+/// One score via the micro-kernel's per-pair arithmetic: the f64
+/// widen-multiply-accumulate against centroid `c`'s panel lane in
+/// ascending feature order, then `score_norms[c] − 2·acc` — bit-equal
+/// to what the panel sweep computes for the same (row, centroid) pair,
+/// which is what makes the group-wise fallback label-exact.
+#[inline]
+fn score_one(row: &[f32], prep: &CentroidPrep, c: usize) -> f64 {
+    let m = prep.m();
+    let panel = prep.panel_block(c / CEN_TILE);
+    let lane = c % CEN_TILE;
+    let mut acc = 0.0f64;
+    for (j, &v) in row.iter().enumerate().take(m) {
+        acc += v as f64 * panel[j * CEN_TILE + lane] as f64;
+    }
+    prep.score_norms[c] - 2.0 * acc
+}
+
+/// One yinyang assignment pass over `range`. `labels` is the session's
+/// label slice for exactly these rows; `lower` is the matching
+/// `range.len() × G` bound slice; `stats` must have been reset by the
+/// caller for this range. Range-invariant like every other kernel: a
+/// row's outcome depends only on the row, the tables, the grouping and
+/// its own state, never on shard geometry.
+#[allow(clippy::too_many_arguments)]
+pub fn assign_yinyang_range(
+    ds: &Dataset,
+    centroids: &[f32],
+    k: usize,
+    prep: &CentroidPrep,
+    groups: &Groups,
+    range: std::ops::Range<usize>,
+    labels: &mut [u32],
+    lower: &mut [f64],
+    stats: &mut AssignStats,
+) -> PruneCounters {
+    let m = ds.m();
+    let gc = groups.group_count();
+    debug_assert_eq!(centroids.len(), k * m);
+    debug_assert_eq!(labels.len(), range.len());
+    debug_assert_eq!(lower.len(), range.len() * gc);
+    debug_assert_eq!(stats.labels.len(), range.len());
+    let mut counters = PruneCounters::default();
+
+    for (li, i) in range.enumerate() {
+        let row = ds.row(i);
+        let a = labels[li] as usize;
+        let ga = groups.group_of[a] as usize;
+        let lrow = &mut lower[li * gc..(li + 1) * gc];
+
+        // One exact hypothesis distance (f32 sequence for the inertia
+        // fold, f64 for the bound tests) + ‖x‖² for the η guard.
+        let (d2_32, d2_64, xn) = sq_dist_and_norm(row, &centroids[a * m..(a + 1) * m]);
+        let eta = BOUND_SLACK * (xn + prep.max_c_norm + 1.0);
+
+        // Tier 1 — global filter: Hamerly's test with the min decayed
+        // group bound as the lower-bound arm. A NaN bound or drift
+        // poisons the group arm to −∞ (never prune on undefined state);
+        // the half-separation arm still applies.
+        let mut gmin = f64::INFINITY;
+        let mut poisoned = false;
+        for g in 0..gc {
+            let dec = lrow[g] - groups.drift[g];
+            if dec.is_nan() {
+                poisoned = true;
+            } else if dec < gmin {
+                gmin = dec;
+            }
+        }
+        let group_arm = if poisoned { f64::NEG_INFINITY } else { gmin };
+        let bound = group_arm.max(prep.half_sep[a]);
+        if bound > 0.0
+            && d2_64 * (1.0 + BOUND_SLACK) + 2.0 * eta < bound * bound * (1.0 - BOUND_SLACK)
+        {
+            // `a` is the strict argmin; decay every group bound and move
+            // on without touching any other centroid.
+            for g in 0..gc {
+                lrow[g] -= groups.drift[g];
+            }
+            counters.pruned_rows += 1;
+            counters.dist_evals += 1;
+            stats.fold_row(li, row, a, d2_32, m);
+            continue;
+        }
+
+        // Tier 2 — count groups whose decayed bound alone beats the
+        // hypothesis distance (NaN decays fail `> 0.0` and survive).
+        let mut nfilt = 0usize;
+        for g in 0..gc {
+            let dec = lrow[g] - groups.drift[g];
+            if dec > 0.0
+                && d2_64 * (1.0 + BOUND_SLACK) + 2.0 * eta < dec * dec * (1.0 - BOUND_SLACK)
+            {
+                nfilt += 1;
+            }
+        }
+
+        if nfilt == 0 {
+            // Every group survives (first pass, or a genuinely hard
+            // row): the dense panel sweep is the cheapest correct move,
+            // and its runner-up score refreshes all G bounds at once
+            // (every centroid other than the winner scores ≥ second).
+            let (best, _best_score, second_score) = scan_row(row, prep);
+            labels[li] = best as u32;
+            let lb_all = (second_score + xn - eta).max(0.0).sqrt() * (1.0 - BOUND_SLACK);
+            for g in 0..gc {
+                lrow[g] = lb_all;
+            }
+            counters.scanned_rows += 1;
+            counters.group_scanned += gc as u64;
+            counters.dist_evals += 1 + k as u64;
+            let d2 = sq_euclidean(row, &centroids[best * m..(best + 1) * m]);
+            stats.fold_row(li, row, best, d2, m);
+            continue;
+        }
+
+        // Tier 3 — group-wise sweep. The candidate fold is seeded with
+        // the current label's exact panel score (finite here: a NaN/∞
+        // hypothesis distance fails every filter above and lands in the
+        // full sweep) and visits every member of every surviving group;
+        // the dense argmin is provably in that set, and the strict
+        // lexicographic (score, index) order reproduces the panel
+        // sweep's lowest-index tie-break exactly.
+        let s_a = score_one(row, prep, a);
+        let mut best = a;
+        let mut best_score = s_a;
+        let mut a_group_filtered = false;
+        for g in 0..gc {
+            let dec = lrow[g] - groups.drift[g];
+            let filtered = dec > 0.0
+                && d2_64 * (1.0 + BOUND_SLACK) + 2.0 * eta < dec * dec * (1.0 - BOUND_SLACK);
+            if filtered {
+                lrow[g] = dec;
+                counters.group_filtered += 1;
+                if g == ga {
+                    a_group_filtered = true;
+                }
+            } else {
+                let mem = groups.members_of(g);
+                let mut min1 = f64::INFINITY;
+                for &cu in mem {
+                    let c = cu as usize;
+                    let s = score_one(row, prep, c);
+                    if s < best_score || (s == best_score && c < best) {
+                        best_score = s;
+                        best = c;
+                    }
+                    if s < min1 {
+                        min1 = s;
+                    }
+                }
+                lrow[g] = (min1 + xn - eta).max(0.0).sqrt() * (1.0 - BOUND_SLACK);
+                counters.group_scanned += 1;
+                counters.dist_evals += mem.len() as u64;
+            }
+        }
+        let b = best;
+        let gb = groups.group_of[b] as usize;
+
+        // The winner's group bound must exclude the winner itself (it
+        // is the new label): recompute the min over the other members.
+        // Skipped when b == a and a's group was filtered — that bound
+        // already excludes a.
+        if !(gb == ga && a_group_filtered) {
+            let mem = groups.members_of(gb);
+            let mut min_ex = f64::INFINITY;
+            for &cu in mem {
+                let c = cu as usize;
+                if c == b {
+                    continue;
+                }
+                let s = score_one(row, prep, c);
+                if s < min_ex {
+                    min_ex = s;
+                }
+            }
+            lrow[gb] = (min_ex + xn - eta).max(0.0).sqrt() * (1.0 - BOUND_SLACK);
+            counters.dist_evals += (mem.len() - 1) as u64;
+        }
+
+        // If the label moved out of a *filtered* group, that group's
+        // decayed bound excluded the old label `a` — which is no longer
+        // exempt. Fold a's own score bound back in.
+        if b != a && a_group_filtered {
+            let la = (s_a + xn - eta).max(0.0).sqrt() * (1.0 - BOUND_SLACK);
+            lrow[ga] = lrow[ga].min(la);
+        }
+
+        labels[li] = b as u32;
+        counters.scanned_rows += 1;
+        counters.dist_evals += 2; // hypothesis distance + s_a
+        let d2 = sq_euclidean(row, &centroids[b * m..(b + 1) * m]);
+        stats.fold_row(li, row, b, d2, m);
+    }
+    counters
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GmmSpec};
+    use crate::data::Dataset;
+    use crate::kernel::assign::assign_update_range;
+    use crate::metric::Metric;
+
+    /// Drive a yinyang state through `tables`, checking every pass
+    /// against the dense kernel bit-for-bit.
+    fn check_parity(ds: &Dataset, k: usize, tables: &[Vec<f32>]) -> YinyangState {
+        let (n, m) = (ds.n(), ds.m());
+        let mut state = YinyangState::new(n, k, m);
+        let mut stats = AssignStats::zeros(n, k, m);
+        for cent in tables {
+            state.prepare(cent);
+            stats.reset(n, k, m);
+            let (labels, lower, prep, groups, counters) = state.parts();
+            let c = assign_yinyang_range(
+                ds, cent, k, prep, groups, 0..n, labels, lower, &mut stats,
+            );
+            counters.add(c);
+
+            let dense = assign_update_range(ds, cent, k, Metric::Euclidean, 0..n);
+            assert_eq!(stats.labels, dense.labels, "labels vs dense");
+            assert_eq!(&state.labels, &dense.labels, "state labels vs dense");
+            assert_eq!(stats.counts, dense.counts);
+            assert_eq!(stats.inertia, dense.inertia, "inertia must be bit-equal");
+            assert_eq!(stats.sums, dense.sums, "sums must be bit-equal");
+        }
+        state
+    }
+
+    fn lloyd_tables(ds: &Dataset, init: Vec<f32>, k: usize, updates: usize) -> Vec<Vec<f32>> {
+        let mut tables = vec![init];
+        for _ in 0..updates {
+            let last = tables.last().unwrap();
+            let stats = assign_update_range(ds, last, k, Metric::Euclidean, 0..ds.n());
+            tables.push(stats.centroids(last, k, ds.m()));
+        }
+        tables
+    }
+
+    #[test]
+    fn lloyd_trajectory_is_label_exact_with_real_groups() {
+        // k = 25 → G = 2: the grouping fit actually runs.
+        let g = generate(&GmmSpec::new(2500, 8, 25).seed(41).spread(0.25));
+        let ds = &g.dataset;
+        let idx: Vec<usize> = (0..25).map(|c| c * 100).collect();
+        let tables = lloyd_tables(ds, ds.gather(&idx), 25, 5);
+        let state = check_parity(ds, 25, &tables);
+        assert_eq!(state.group_count(), 2);
+        let c = state.counters;
+        assert!(c.pruned_rows > 0, "bounds must start pruning: {c:?}");
+        assert_eq!(c.pruned_rows + c.scanned_rows, 2500 * 6);
+        // every scanned row accounts for each group exactly once
+        assert_eq!(c.group_filtered + c.group_scanned, 2 * c.scanned_rows);
+        assert!(c.dist_evals > 0);
+    }
+
+    #[test]
+    fn stationary_separated_table_prunes_after_first_pass() {
+        let g = generate(&GmmSpec::new(800, 5, 24).seed(9).spread(0.05).center_scale(20.0));
+        let ds = &g.dataset;
+        let cent = g.centers.clone();
+        // Same separated table twice: zero drift on the second pass, so
+        // every row prunes via its fresh group bounds or half-separation.
+        let state = check_parity(ds, 24, &[cent.clone(), cent]);
+        let c = state.counters;
+        assert_eq!(c.pruned_rows + c.scanned_rows, 1600);
+        assert!(c.scanned_rows <= 800, "second pass must scan nothing: {c:?}");
+        assert!(c.pruned_rows >= 800);
+    }
+
+    #[test]
+    fn k_equals_one_always_prunes_correctly() {
+        let ds = Dataset::from_vec(3, 2, vec![0., 0., 1., 0., 5., 5.]).unwrap();
+        let state = check_parity(&ds, 1, &[vec![1.0, 1.0], vec![2.0, 2.0]]);
+        assert_eq!(state.counters.scanned_rows, 0, "lone centroid: no scans at all");
+    }
+
+    #[test]
+    fn nan_centroid_table_stays_bit_equal_to_dense() {
+        // 20 real centers + one all-NaN centroid → k = 21, G = 2, and
+        // the non-finite table forces the striped grouping fallback.
+        let g = generate(&GmmSpec::new(600, 4, 20).seed(3).spread(0.2));
+        let ds = &g.dataset;
+        let mut cent = g.centers.clone();
+        cent.extend([f32::NAN; 4]);
+        let state = check_parity(ds, 21, &[cent.clone(), cent.clone(), cent]);
+        assert_eq!(state.group_count(), 2);
+        assert_eq!(
+            state.counters.pruned_rows + state.counters.scanned_rows,
+            3 * 600
+        );
+    }
+
+    #[test]
+    fn groups_partition_the_centroids() {
+        let g = generate(&GmmSpec::new(200, 6, 13).seed(5).spread(0.3));
+        let ds = &g.dataset;
+        let idx: Vec<usize> = (0..47).map(|c| c * 4).collect();
+        let cent = ds.gather(&idx);
+        let mut state = YinyangState::new(ds.n(), 47, 6);
+        state.prepare(&cent);
+        let gc = state.group_count();
+        assert_eq!(gc, 4);
+        assert_eq!(state.groups.group_of.len(), 47);
+        assert!(state.groups.group_of.iter().all(|&g| (g as usize) < gc));
+        // CSR partitions 0..k, ascending within each group
+        let mut seen = vec![false; 47];
+        for g in 0..gc {
+            let mem = state.groups.members_of(g);
+            assert!(mem.windows(2).all(|w| w[0] < w[1]), "ascending in group {g}");
+            for &c in mem {
+                assert_eq!(state.groups.group_of[c as usize] as usize, g);
+                assert!(!seen[c as usize]);
+                seen[c as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every centroid in exactly one group");
+    }
+
+    #[test]
+    fn policy_names_roundtrip_and_resolve() {
+        for p in [
+            BoundsPolicy::None,
+            BoundsPolicy::Hamerly,
+            BoundsPolicy::Yinyang,
+            BoundsPolicy::Auto,
+        ] {
+            assert_eq!(BoundsPolicy::from_str(p.name()), Some(p));
+        }
+        assert_eq!(BoundsPolicy::from_str("dense"), Some(BoundsPolicy::None));
+        assert_eq!(BoundsPolicy::from_str("nope"), None);
+
+        assert_eq!(BoundsPolicy::resolve(1, 10), BoundsPolicy::None);
+        assert_eq!(BoundsPolicy::resolve(2, 25), BoundsPolicy::None);
+        assert_eq!(BoundsPolicy::resolve(8, 10), BoundsPolicy::Hamerly);
+        assert_eq!(BoundsPolicy::resolve(32, 10), BoundsPolicy::Hamerly);
+        assert_eq!(BoundsPolicy::resolve(32, 16), BoundsPolicy::Yinyang);
+        assert_eq!(BoundsPolicy::resolve(64, 2), BoundsPolicy::Yinyang);
+        assert_eq!(BoundsPolicy::resolve(256, 25), BoundsPolicy::Yinyang);
+
+        // explicit policies are never rewritten by effective()
+        assert_eq!(
+            BoundsPolicy::Hamerly.effective(256, 25),
+            BoundsPolicy::Hamerly
+        );
+        assert_eq!(BoundsPolicy::None.effective(256, 25), BoundsPolicy::None);
+
+        assert_eq!(group_count_for(1), 1);
+        assert_eq!(group_count_for(19), 1);
+        assert_eq!(group_count_for(20), 2);
+        assert_eq!(group_count_for(256), 25);
+    }
+}

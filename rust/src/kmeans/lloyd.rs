@@ -60,10 +60,12 @@ pub fn run(
     // exactly once on the leader, allocation-free, before the shards
     // fan out.
     // The score path (exact f64, or the opt-in f32-with-refinement of
-    // [`crate::kernel::simd`]) is resolved here: executors without an
-    // implementation of the requested path error out rather than
-    // silently substituting different arithmetic.
-    let mut session = exec.assign_session_with(ds, k, cfg.metric, cfg.score_path)?;
+    // [`crate::kernel::simd`]) and the bounds policy (dense / Hamerly /
+    // Yinyang group bounds, [`crate::kernel::yinyang::BoundsPolicy`])
+    // are resolved here: executors without an implementation of the
+    // requested combination error out rather than silently
+    // substituting different arithmetic.
+    let mut session = exec.assign_session_opts(ds, k, cfg.metric, cfg.score_path, cfg.bounds)?;
     let mut inertia = f64::INFINITY;
     let mut iterations = 0usize;
     let mut converged = false;
@@ -95,6 +97,7 @@ pub fn run(
 
     let prune = session.prune_counters();
     let assign_path = session.path_name().to_string();
+    let bounds_policy = session.bounds_policy().to_string();
     let f32c = session.f32_counters();
     let device = session.device_counters();
     let labels = session.finish().labels;
@@ -111,6 +114,7 @@ pub fn run(
         stages: timer,
         prune,
         assign_path,
+        bounds_policy,
         f32: f32c,
         io: crate::exec::stream::IoCounters::default(),
         device,
@@ -261,6 +265,44 @@ mod tests {
             "euclidean fits must prune after iteration 1: {prune:?}"
         );
         assert!(prune.rate() > 0.0 && prune.rate() < 1.0);
+    }
+
+    #[test]
+    fn explicit_bounds_policy_reaches_the_session_and_stays_exact() {
+        use crate::exec::BoundsPolicy;
+        // k = 3 would auto-resolve to Hamerly; every explicit policy
+        // must be honoured, produce the same trajectory bit for bit,
+        // and surface its name in the metrics.
+        let g = well_separated(400, 3);
+        let base = run(
+            &g.dataset,
+            &KMeansConfig::new(3).seed(12).bounds(BoundsPolicy::None),
+            &SingleExecutor::new(),
+        )
+        .unwrap();
+        assert_eq!(base.metrics.bounds_policy, "none");
+        assert_eq!(
+            base.metrics.prune.dist_evals,
+            (400 * base.iterations * 3) as u64,
+            "dense evaluates n·k distances per pass"
+        );
+        for (policy, name) in [
+            (BoundsPolicy::Hamerly, "hamerly"),
+            (BoundsPolicy::Yinyang, "yinyang"),
+            (BoundsPolicy::Auto, "hamerly"),
+        ] {
+            let cfg = KMeansConfig::new(3).seed(12).bounds(policy);
+            let res = run(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+            assert_eq!(res.metrics.bounds_policy, name, "{policy:?}");
+            assert_eq!(res.labels, base.labels, "{policy:?}");
+            assert_eq!(res.inertia, base.inertia, "{policy:?}");
+            assert_eq!(res.iterations, base.iterations, "{policy:?}");
+            assert!(
+                res.metrics.prune.dist_evals < base.metrics.prune.dist_evals,
+                "{policy:?} must skip distance work: {:?}",
+                res.metrics.prune
+            );
+        }
     }
 
     #[test]

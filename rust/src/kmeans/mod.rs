@@ -16,7 +16,7 @@ use crate::exec::gpu::GpuExecutor;
 use crate::exec::multi::MultiExecutor;
 use crate::exec::regime::{self, Regime};
 use crate::exec::single::SingleExecutor;
-use crate::exec::{DiameterResult, ExecError, Executor, ScorePath};
+use crate::exec::{BoundsPolicy, DiameterResult, ExecError, Executor, ScorePath};
 use crate::metric::Metric;
 use crate::metrics::RunMetrics;
 use crate::runtime::Device;
@@ -143,6 +143,12 @@ pub struct KMeansConfig {
     /// silently substituted ([`KMeansConfig::validate`] and the
     /// executors both reject unsupported combinations).
     pub score_path: ScorePath,
+    /// Cross-iteration pruning bounds for the Euclidean assignment
+    /// stage: none (dense sweep), Hamerly single bounds, Yinyang group
+    /// bounds, or `Auto` (default — picked from k and m, see
+    /// [`BoundsPolicy::resolve`]). Every policy yields bit-identical
+    /// labels; they differ only in skipped distance work.
+    pub bounds: BoundsPolicy,
     /// AOT artifact directory for the gpu regime (default: `artifacts/`
     /// next to the working directory, or `PARCLUST_ARTIFACTS`).
     pub artifact_dir: Option<PathBuf>,
@@ -172,6 +178,7 @@ impl KMeansConfig {
             regime: Regime::Auto,
             diameter: DiameterMode::Auto,
             score_path: ScorePath::F64,
+            bounds: BoundsPolicy::Auto,
             artifact_dir: None,
             engine: Engine::InCore,
             mini_batch: None,
@@ -221,6 +228,11 @@ impl KMeansConfig {
 
     pub fn score_path(mut self, p: ScorePath) -> Self {
         self.score_path = p;
+        self
+    }
+
+    pub fn bounds(mut self, b: BoundsPolicy) -> Self {
+        self.bounds = b;
         self
     }
 
@@ -289,6 +301,31 @@ impl KMeansConfig {
                      regime runs its own compiled kernels"
                         .into(),
                 ));
+            }
+        }
+        if matches!(self.bounds, BoundsPolicy::Hamerly | BoundsPolicy::Yinyang) {
+            if self.metric != Metric::Euclidean {
+                return Err(KMeansError::Config(format!(
+                    "bounds policy '{}' is defined by the euclidean triangle \
+                     inequality; got metric {}",
+                    self.bounds.name(),
+                    self.metric.name()
+                )));
+            }
+            if resolved == Regime::Gpu {
+                return Err(KMeansError::Config(format!(
+                    "bounds policy '{}' is a CPU-regime feature; the gpu \
+                     regime runs its own compiled dense kernels",
+                    self.bounds.name()
+                )));
+            }
+            if self.score_path == ScorePath::F32Refined {
+                return Err(KMeansError::Config(format!(
+                    "bounds policy '{}' maintains its bounds from exact f64 \
+                     scores; the f32 candidate sweep cannot feed them \
+                     (use --bounds none with --score-path f32)",
+                    self.bounds.name()
+                )));
             }
         }
         Ok(resolved)
@@ -462,6 +499,42 @@ mod tests {
             .validate(&g.dataset)
             .unwrap();
         assert_eq!(r, Regime::Single);
+    }
+
+    #[test]
+    fn validate_gates_explicit_bounds() {
+        let g = generate(&GmmSpec::new(10, 2, 2).seed(0));
+        // Triangle-inequality structure needs the euclidean metric.
+        let err = KMeansConfig::new(2)
+            .metric(Metric::Chebyshev)
+            .bounds(BoundsPolicy::Yinyang)
+            .validate(&g.dataset)
+            .unwrap_err();
+        assert!(err.to_string().contains("euclidean"), "{err}");
+        // Bounds need exact f64 scores — the f32 sweep cannot feed them.
+        let err = KMeansConfig::new(2)
+            .score_path(ScorePath::F32Refined)
+            .bounds(BoundsPolicy::Hamerly)
+            .validate(&g.dataset)
+            .unwrap_err();
+        assert!(err.to_string().contains("f64"), "{err}");
+        // CPU-regime feature.
+        let err = KMeansConfig::new(2)
+            .regime(Regime::Gpu)
+            .bounds(BoundsPolicy::Hamerly)
+            .validate(&g.dataset)
+            .unwrap_err();
+        assert!(err.to_string().contains("gpu"), "{err}");
+        // f32 with no bounds, and explicit policies on their own, pass.
+        assert!(KMeansConfig::new(2)
+            .score_path(ScorePath::F32Refined)
+            .bounds(BoundsPolicy::None)
+            .validate(&g.dataset)
+            .is_ok());
+        assert!(KMeansConfig::new(2)
+            .bounds(BoundsPolicy::Yinyang)
+            .validate(&g.dataset)
+            .is_ok());
     }
 
     #[test]

@@ -37,7 +37,7 @@ use std::time::Instant;
 use crate::data::shard::ShardSource;
 use crate::data::{DataError, Dataset};
 use crate::exec::stream::{StreamEngine, DEFAULT_MEMORY_BUDGET};
-use crate::exec::{AssignStats, ExecError, ScorePath};
+use crate::exec::{AssignStats, BoundsPolicy, ExecError, ScorePath};
 use crate::kernel::pruned::PruneCounters;
 use crate::kernel::{assign, simd};
 use crate::kmeans::lloyd::{max_centroid_shift, stage};
@@ -85,6 +85,24 @@ pub(crate) fn validate_stream(cfg: &KMeansConfig, n: usize) -> Result<(), KMeans
             )));
         }
     }
+    if matches!(cfg.bounds, BoundsPolicy::Hamerly | BoundsPolicy::Yinyang) {
+        if cfg.metric != crate::metric::Metric::Euclidean {
+            return Err(KMeansError::Config(format!(
+                "bounds policy '{}' relies on the euclidean triangle inequality; \
+                 got metric {}",
+                cfg.bounds.name(),
+                cfg.metric.name()
+            )));
+        }
+        if cfg.mini_batch.is_some() {
+            return Err(KMeansError::Config(format!(
+                "bounds policy '{}' cannot ride mini-batch sampling: each \
+                 iteration assigns a fresh random subset, so no per-row bound \
+                 survives between iterations (use --bounds none with --mini-batch)",
+                cfg.bounds.name()
+            )));
+        }
+    }
     Ok(())
 }
 
@@ -95,7 +113,9 @@ pub(crate) fn validate_stream(cfg: &KMeansConfig, n: usize) -> Result<(), KMeans
 pub fn run_stream(source: &dyn ShardSource, cfg: &KMeansConfig) -> Result<FitResult, KMeansError> {
     validate_stream(cfg, source.n())?;
     let budget = cfg.memory_budget.unwrap_or(DEFAULT_MEMORY_BUDGET);
-    let engine = StreamEngine::new(source, cfg.k, cfg.metric, cfg.threads, budget);
+    let engine = StreamEngine::new(source, cfg.k, cfg.metric, cfg.threads, budget)
+        .with_bounds(cfg.bounds)
+        .map_err(KMeansError::Exec)?;
     drive(source, cfg, engine)
 }
 
@@ -108,7 +128,9 @@ pub fn run_stream_chunked(
     chunks: Vec<Range<usize>>,
 ) -> Result<FitResult, KMeansError> {
     validate_stream(cfg, source.n())?;
-    let engine = StreamEngine::with_chunks(source, cfg.k, cfg.metric, cfg.threads, chunks);
+    let engine = StreamEngine::with_chunks(source, cfg.k, cfg.metric, cfg.threads, chunks)
+        .with_bounds(cfg.bounds)
+        .map_err(KMeansError::Exec)?;
     drive(source, cfg, engine)
 }
 
@@ -220,11 +242,17 @@ fn drive<'a>(
         }
     }
 
+    let policy = engine.bounds_policy();
+    let engine_prune = engine.prune_counters();
     let (stats, mut io) = engine.finish();
     io.bytes_read += init_bytes;
 
     let base = if cfg.metric == Metric::Euclidean {
-        simd::panel_path_name()
+        match policy {
+            "yinyang" => simd::yinyang_path_name(),
+            "hamerly" => simd::pruned_path_name(),
+            _ => simd::panel_path_name(),
+        }
     } else {
         "scalar"
     };
@@ -244,10 +272,17 @@ fn drive<'a>(
         converged,
         wall: wall_start.elapsed(),
         stages: timer,
-        prune: PruneCounters {
-            pruned_rows: 0,
-            scanned_rows: scanned,
+        prune: if policy == "none" {
+            PruneCounters {
+                pruned_rows: 0,
+                scanned_rows: scanned,
+                dist_evals: scanned * k as u64,
+                ..PruneCounters::default()
+            }
+        } else {
+            engine_prune
         },
+        bounds_policy: policy.to_string(),
         assign_path,
         f32: simd::F32Counters::default(),
         io,
@@ -295,6 +330,31 @@ mod tests {
     }
 
     #[test]
+    fn validate_gates_explicit_bounds() {
+        use crate::metric::Metric;
+        let err = validate_stream(
+            &base_cfg(5).metric(Metric::Manhattan).bounds(BoundsPolicy::Yinyang),
+            100,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("triangle inequality"), "{err}");
+        let err = validate_stream(
+            &base_cfg(5).mini_batch(50).bounds(BoundsPolicy::Hamerly),
+            100,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("mini-batch sampling"), "{err}");
+        // Auto streams dense (bound state is resident memory outside the
+        // buffer budget) and stays valid everywhere explicit bounds are not.
+        assert!(validate_stream(
+            &base_cfg(5).mini_batch(50).bounds(BoundsPolicy::Auto),
+            100
+        )
+        .is_ok());
+        assert!(validate_stream(&base_cfg(5).bounds(BoundsPolicy::Yinyang), 100).is_ok());
+    }
+
+    #[test]
     fn full_pass_stream_fit_converges() {
         let g = generate(&GmmSpec::new(900, 6, 4).seed(2).spread(0.05).center_scale(25.0));
         let src = MemShardSource::new(&g.dataset);
@@ -306,6 +366,37 @@ mod tests {
         assert!(res.metrics.io.bytes_read > 0);
         // full-pass scan accounting: n rows per iteration
         assert_eq!(res.metrics.prune.scanned_rows, (900 * res.iterations) as u64);
+    }
+
+    #[test]
+    fn bounded_stream_fit_matches_dense_stream_fit() {
+        let g = generate(&GmmSpec::new(700, 5, 4).seed(9).spread(0.2).center_scale(10.0));
+        let src = MemShardSource::new(&g.dataset);
+        let dense = run_stream(&src, &base_cfg(21).bounds(BoundsPolicy::None)).unwrap();
+        assert_eq!(dense.metrics.bounds_policy, "none");
+        for (policy, name) in [
+            (BoundsPolicy::Hamerly, "hamerly"),
+            (BoundsPolicy::Yinyang, "yinyang"),
+        ] {
+            let res = run_stream(&src, &base_cfg(21).bounds(policy)).unwrap();
+            assert_eq!(res.metrics.bounds_policy, name);
+            assert_eq!(res.labels, dense.labels, "{name} labels diverge");
+            assert_eq!(res.inertia.to_bits(), dense.inertia.to_bits(), "{name}");
+            assert_eq!(res.iterations, dense.iterations, "{name}");
+            assert_eq!(res.centroids, dense.centroids, "{name}");
+            let p = &res.metrics.prune;
+            assert_eq!(
+                p.pruned_rows + p.scanned_rows,
+                (700 * res.iterations) as u64,
+                "{name} row conservation"
+            );
+            assert!(p.dist_evals > 0, "{name}");
+            assert!(
+                res.metrics.assign_path.starts_with("stream+"),
+                "{}",
+                res.metrics.assign_path
+            );
+        }
     }
 
     #[test]

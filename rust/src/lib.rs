@@ -44,7 +44,19 @@
 //!   iterations so most rows skip the centroid sweep entirely once the
 //!   centroids settle — losslessly (labels provably identical to the
 //!   dense scan; its fallback is the micro-kernel's one-row panel
-//!   sweep). Reductions and the farthest-pair scan share the same tile
+//!   sweep). At larger k a single global bound filters too little, so
+//!   the **Yinyang group-bound** variant ([`kernel::yinyang`]) clusters
+//!   the k centroids into G ≈ k/10 groups once at init (a tiny in-core
+//!   fit over the centroid table itself) and carries one lower bound
+//!   *per group* per row, decayed by per-group max drift: a row whose
+//!   current-label distance beats every group bound is pruned outright,
+//!   a surviving row sweeps only the groups whose bound fails — group
+//!   by group through the same panel sweep, so labels stay bit-equal
+//!   to dense. Which variant runs is an [`exec::BoundsPolicy`]
+//!   (`--bounds none | hamerly | yinyang | auto`); Auto picks from
+//!   (k, m) and never binds on non-Euclidean metrics or the f32 score
+//!   path, whose forward-error refinement the carried bounds cannot
+//!   see. Reductions and the farthest-pair scan share the same tile
 //!   walker. The Pallas/PJRT device kernels (python/compile/kernels,
 //!   AOT-lowered to HLO and loaded by [`runtime`] — python never runs
 //!   on the request path) are this layer's accelerator counterpart.
@@ -97,7 +109,8 @@
 //! * **Tier 1 — bit-equal.** Paths that perform the *identical per-
 //!   (row, centroid) f64 arithmetic* in the same order (portable
 //!   micro-kernel, its one-row sweep, the AVX2 lane, the pruned
-//!   session, multi-regime labels, and the f32 path's refined output)
+//!   session, the yinyang group-bound session, multi-regime labels,
+//!   and the f32 path's refined output)
 //!   must produce labels, counts, coordinate sums and inertia that
 //!   compare equal with `==` on **any** input — including NaN/±inf
 //!   centroids, denormals and overflow-scale data. Enforced by

@@ -56,6 +56,9 @@ fn app() -> AppSpec {
                 .opt("score-path", None, Some("f64"),
                      "assignment score arithmetic: f64 (exact) | \
                       f32 (f32 candidates + f64 refinement)")
+                .opt("bounds", None, Some("auto"),
+                     "triangle-inequality pruning: none | hamerly | \
+                      yinyang | auto (pick from k and m)")
                 .opt("tol", None, Some("0"),
                      "squared centroid-shift tolerance (0 = exact congruence)")
                 .opt("seed", None, Some("0"), "PRNG seed")
@@ -211,6 +214,11 @@ fn build_run_config(p: &Parsed) -> Result<RunConfig, String> {
     if let Some(s) = p.get("score-path") {
         cfg.kmeans.score_path = parclust::exec::ScorePath::from_str(s)
             .ok_or_else(|| format!("unknown score path '{s}' (f64 | f32)"))?;
+    }
+    if let Some(b) = p.get("bounds") {
+        cfg.kmeans.bounds = parclust::exec::BoundsPolicy::from_str(b).ok_or_else(|| {
+            format!("unknown bounds policy '{b}' (none | hamerly | yinyang | auto)")
+        })?;
     }
     if let Some(e) = p.get("engine") {
         cfg.kmeans.engine =

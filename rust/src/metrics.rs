@@ -98,9 +98,12 @@ pub struct RunMetrics {
     /// iterations; all-scanned on dense paths.
     pub prune: PruneCounters,
     /// Which assignment kernel path the fit's session stepped through
-    /// (e.g. `pruned+simd-avx2`, `pruned+micro`, `f32+refine`,
+    /// (e.g. `pruned+simd-avx2`, `yinyang+micro`, `f32+refine`,
     /// `scalar`, `dense`) — records what dispatch actually resolved to.
     pub assign_path: String,
+    /// Which bounds policy actually ran (`none` / `hamerly` /
+    /// `yinyang`) — the resolved policy, never the `auto` request.
+    pub bounds_policy: String,
     /// f32 score-path counters (`kernel::simd`); all zero unless the
     /// opt-in [`crate::exec::ScorePath::F32Refined`] ran.
     pub f32: F32Counters,
@@ -126,7 +129,14 @@ impl RunMetrics {
             ("pruned_rows", Json::num(self.prune.pruned_rows as f64)),
             ("scanned_rows", Json::num(self.prune.scanned_rows as f64)),
             ("prune_rate", Json::num(self.prune.rate())),
+            (
+                "group_filtered",
+                Json::num(self.prune.group_filtered as f64),
+            ),
+            ("group_scanned", Json::num(self.prune.group_scanned as f64)),
+            ("dist_evals", Json::num(self.prune.dist_evals as f64)),
             ("assign_path", Json::str(self.assign_path.clone())),
+            ("bounds_policy", Json::str(self.bounds_policy.clone())),
             ("f32_scored_rows", Json::num(self.f32.scored_rows as f64)),
             ("f32_refined_rows", Json::num(self.f32.refined_rows as f64)),
             ("f32_relabeled_rows", Json::num(self.f32.relabeled_rows as f64)),
@@ -140,6 +150,7 @@ impl RunMetrics {
                 "io_prefetch_stall_s",
                 Json::num(self.io.prefetch_stall.as_secs_f64()),
             ),
+            ("io_ring_depth", Json::num(self.io.ring_depth as f64)),
             (
                 "device_submissions",
                 Json::num(self.device.submissions as f64),
@@ -200,10 +211,21 @@ impl RunMetrics {
         }
         if self.prune.pruned_rows + self.prune.scanned_rows > 0 {
             s.push_str(&format!(
-                "  assign rows: {} pruned / {} scanned ({:.1}% pruned)\n",
+                "  assign rows: {} pruned / {} scanned ({:.1}% pruned, bounds={})\n",
                 self.prune.pruned_rows,
                 self.prune.scanned_rows,
-                self.prune.rate() * 100.0
+                self.prune.rate() * 100.0,
+                if self.bounds_policy.is_empty() {
+                    "none"
+                } else {
+                    &self.bounds_policy
+                }
+            ));
+        }
+        if self.prune.group_filtered + self.prune.group_scanned > 0 {
+            s.push_str(&format!(
+                "  group filter: {} filtered / {} swept / {} distances\n",
+                self.prune.group_filtered, self.prune.group_scanned, self.prune.dist_evals
             ));
         }
         for (name, d) in self.stages.stages() {
@@ -272,13 +294,21 @@ mod tests {
             converged: true,
             wall: Duration::from_millis(99),
             stages,
-            prune: PruneCounters { pruned_rows: 750, scanned_rows: 250 },
+            prune: PruneCounters {
+                pruned_rows: 750,
+                scanned_rows: 250,
+                group_filtered: 300,
+                group_scanned: 200,
+                dist_evals: 1400,
+            },
             assign_path: "pruned+micro".into(),
+            bounds_policy: "yinyang".into(),
             f32: F32Counters { scored_rows: 1000, refined_rows: 40, relabeled_rows: 3 },
             io: IoCounters {
                 bytes_read: 4096,
                 chunks_prefetched: 7,
                 prefetch_stall: Duration::from_millis(3),
+                ring_depth: 3,
             },
             device: DeviceCounters {
                 submissions: 31,
@@ -296,7 +326,12 @@ mod tests {
         assert_eq!(parsed.req_str("regime").unwrap(), "multi");
         assert_eq!(parsed.get("converged").unwrap().as_bool(), Some(true));
         assert_eq!(parsed.req_usize("pruned_rows").unwrap(), 750);
+        assert_eq!(parsed.req_usize("group_filtered").unwrap(), 300);
+        assert_eq!(parsed.req_usize("group_scanned").unwrap(), 200);
+        assert_eq!(parsed.req_usize("dist_evals").unwrap(), 1400);
         assert_eq!(parsed.req_str("assign_path").unwrap(), "pruned+micro");
+        assert_eq!(parsed.req_str("bounds_policy").unwrap(), "yinyang");
+        assert_eq!(parsed.req_usize("io_ring_depth").unwrap(), 3);
         assert_eq!(parsed.req_usize("f32_refined_rows").unwrap(), 40);
         assert_eq!(parsed.req_usize("f32_relabeled_rows").unwrap(), 3);
         assert_eq!(parsed.req_usize("io_bytes_read").unwrap(), 4096);
@@ -308,7 +343,8 @@ mod tests {
         assert!(parsed.get("device_idle_s").is_some());
         assert!(parsed.get("device_host_stall_s").is_some());
         assert!(parsed.get("stages").unwrap().get("assign").is_some());
-        assert!(m.render().contains("75.0% pruned"), "{}", m.render());
+        assert!(m.render().contains("75.0% pruned, bounds=yinyang"), "{}", m.render());
+        assert!(m.render().contains("300 filtered / 200 swept"), "{}", m.render());
         assert!(m.render().contains("4096 bytes read"), "{}", m.render());
         assert!(m.render().contains("assign path: pruned+micro"), "{}", m.render());
         assert!(m.render().contains("4.0% refined"), "{}", m.render());

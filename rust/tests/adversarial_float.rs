@@ -15,7 +15,7 @@ use std::io::{BufReader, Cursor};
 
 use parclust::data::{csv, DataError, Dataset};
 use parclust::exec::single::SingleExecutor;
-use parclust::exec::{AssignStats, Executor, ScorePath};
+use parclust::exec::{AssignStats, BoundsPolicy, Executor, ScorePath};
 use parclust::kernel::prep::CentroidPrep;
 use parclust::kernel::{assign, reduce, simd};
 use parclust::metric::Metric;
@@ -215,6 +215,36 @@ fn pruned_session_survives_nan_centroid_across_iterations() {
         assert!(next[3 * 5..].iter().all(|v| v.is_nan()));
         table = next;
     }
+}
+
+#[test]
+fn yinyang_session_survives_nan_centroid_across_iterations() {
+    // Same poison, group bounds: k = 25 (24 lattice centers + one NaN)
+    // gives G = 2, the non-finite table forces the striped grouping
+    // fallback, and the NaN centroid's group carries NaN drift every
+    // iteration. NaN decayed bounds poison the global filter arm to −∞
+    // and fail the per-group filter, so affected rows degrade to fuller
+    // sweeps where NaN scores lose every strict-< — bitwise equality
+    // with the dense panel must hold on every step.
+    let (ds, cent) = lattice_blobs(229, 5, 24);
+    let single = SingleExecutor::new();
+    let mut session = single
+        .assign_session_opts(&ds, 25, Metric::Euclidean, ScorePath::F64, BoundsPolicy::Yinyang)
+        .unwrap();
+    let mut table: Vec<f32> = cent.clone();
+    table.extend([f32::NAN; 5]);
+    for it in 0..3 {
+        let dense = assign::assign_update_range(&ds, &table, 25, Metric::Euclidean, 0..ds.n());
+        let stepped = session.step(&table).unwrap();
+        assert_bitwise(&format!("yinyang it{it} vs dense"), stepped, &dense);
+        assert!(stepped.labels.iter().all(|&l| l < 24));
+        let next = dense.centroids(&table, 25, 5);
+        assert!(next[24 * 5..].iter().all(|v| v.is_nan()));
+        table = next;
+    }
+    let c = session.prune_counters();
+    assert_eq!(c.pruned_rows + c.scanned_rows, 3 * 229);
+    assert_eq!(c.group_filtered + c.group_scanned, 2 * c.scanned_rows);
 }
 
 #[test]

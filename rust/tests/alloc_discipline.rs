@@ -132,6 +132,49 @@ fn session_steps_do_not_churn_n_length_buffers() {
         "multi step made {d_calls} allocations — expected O(threads) queue plumbing"
     );
 
+    // ---- yinyang sessions: group bounds must also be warm-up-only -----
+    // k = 32 gives three groups; the first step runs the one-off
+    // grouping fit and sizes the n×G lower-bound table, the second
+    // fills every drift/decay scratch — after that, steps touch the
+    // allocator not at all (single) / O(threads) only (multi).
+    {
+        use parclust::exec::{BoundsPolicy, ScorePath};
+        let ky = 32usize;
+        let inity = ds.gather(&(0..ky).map(|i| i * n / ky).collect::<Vec<_>>());
+        let mut session = single
+            .assign_session_opts(ds, ky, Metric::Euclidean, ScorePath::F64, BoundsPolicy::Yinyang)
+            .unwrap();
+        let mut cent = inity.clone();
+        for _ in 0..2 {
+            let stats = session.step(&cent).unwrap();
+            cent = stats.centroids(&cent, ky, m);
+        }
+        let (c0, b0) = snapshot();
+        let _ = session.step(&cent).unwrap();
+        let (c1, b1) = snapshot();
+        assert_eq!(
+            (c1 - c0, b1 - b0),
+            (0, 0),
+            "single yinyang step must be allocation-free after warm-up"
+        );
+
+        let mut session = multi
+            .assign_session_opts(ds, ky, Metric::Euclidean, ScorePath::F64, BoundsPolicy::Yinyang)
+            .unwrap();
+        let _ = session.step(&inity).unwrap();
+        let _ = session.step(&inity).unwrap();
+        let (c0, b0) = snapshot();
+        let _ = session.step(&inity).unwrap();
+        let (c1, b1) = snapshot();
+        let (d_calls, d_bytes) = (c1 - c0, b1 - b0);
+        assert!(
+            d_bytes < n as u64,
+            "multi yinyang step allocated {d_bytes} bytes ({d_calls} calls) — \
+             n×G lower-bound churn?"
+        );
+        assert!(d_calls < 256, "multi yinyang step made {d_calls} allocations");
+    }
+
     // ---- CentroidPrep: the per-iteration rebuild reuses its buffers ---
     // The sessions above already prove it transitively (their steps run
     // PrunedState::prepare → CentroidPrep::prepare inside the measured

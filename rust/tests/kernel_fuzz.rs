@@ -29,9 +29,10 @@
 use parclust::data::Dataset;
 use parclust::exec::multi::MultiExecutor;
 use parclust::exec::single::SingleExecutor;
-use parclust::exec::{AssignStats, Executor, ScorePath};
+use parclust::exec::{AssignStats, BoundsPolicy, Executor, ScorePath};
 use parclust::kernel::assign;
 use parclust::kernel::prep::CentroidPrep;
+use parclust::kernel::yinyang::group_count_for;
 use parclust::kernel::simd;
 use parclust::metric::Metric;
 use parclust::prng::Pcg32;
@@ -246,6 +247,12 @@ fn differential(case: &Case, multi: &MultiExecutor) -> Result<(), String> {
     let mut multi_f32 = multi
         .assign_session_with(&ds, k, Metric::Euclidean, ScorePath::F32Refined)
         .map_err(|e| e.to_string())?;
+    let mut yin_single = single
+        .assign_session_opts(&ds, k, Metric::Euclidean, ScorePath::F64, BoundsPolicy::Yinyang)
+        .map_err(|e| e.to_string())?;
+    let mut yin_multi = multi
+        .assign_session_opts(&ds, k, Metric::Euclidean, ScorePath::F64, BoundsPolicy::Yinyang)
+        .map_err(|e| e.to_string())?;
 
     let mut prep = CentroidPrep::default();
     for (it, cent) in tables.iter().enumerate() {
@@ -266,6 +273,9 @@ fn differential(case: &Case, multi: &MultiExecutor) -> Result<(), String> {
         let stepped = pruned.step(cent).map_err(|e| e.to_string())?;
         bitwise(&format!("it{it} pruned session vs panel"), stepped, &dense)?;
 
+        let stepped = yin_single.step(cent).map_err(|e| e.to_string())?;
+        bitwise(&format!("it{it} yinyang session vs panel"), stepped, &dense)?;
+
         let stepped = f32_single.step(cent).map_err(|e| e.to_string())?;
         bitwise(&format!("it{it} f32 session vs panel"), stepped, &dense)?;
 
@@ -283,6 +293,32 @@ fn differential(case: &Case, multi: &MultiExecutor) -> Result<(), String> {
         // multi paths are fully bitwise against each other.
         let m32 = multi_f32.step(cent).map_err(|e| e.to_string())?;
         bitwise(&format!("it{it} multi f32 vs multi f64"), m32, &m64)?;
+
+        let ym = yin_multi.step(cent).map_err(|e| e.to_string())?;
+        bitwise(&format!("it{it} multi yinyang vs multi f64"), ym, &m64)?;
+    }
+
+    // Counter conservation over the whole trajectory: every row is
+    // either pruned or scanned, and every scanned row decides all G
+    // group filters.
+    for (tag, p) in [
+        ("single", yin_single.prune_counters()),
+        ("multi", yin_multi.prune_counters()),
+    ] {
+        let rows = (TABLES * n) as u64;
+        if p.pruned_rows + p.scanned_rows != rows {
+            return Err(format!(
+                "{tag} yinyang row conservation: {} + {} != {rows}",
+                p.pruned_rows, p.scanned_rows
+            ));
+        }
+        let g = group_count_for(k) as u64;
+        if p.group_filtered + p.group_scanned != g * p.scanned_rows {
+            return Err(format!(
+                "{tag} yinyang group conservation: {} + {} != {g} * {}",
+                p.group_filtered, p.group_scanned, p.scanned_rows
+            ));
+        }
     }
     Ok(())
 }

@@ -27,8 +27,9 @@ use parclust::data::synthetic::{generate, GmmSpec};
 use parclust::data::Dataset;
 use parclust::exec::multi::MultiExecutor;
 use parclust::exec::single::SingleExecutor;
-use parclust::exec::{AssignStats, Executor};
+use parclust::exec::{AssignStats, BoundsPolicy, Executor, ScorePath};
 use parclust::kernel::prep::CentroidPrep;
+use parclust::kernel::yinyang::group_count_for;
 use parclust::kernel::{assign, diameter, microkernel, simd};
 use parclust::metric::{sq_euclidean, Metric};
 use parclust::testkit::lattice_blobs;
@@ -117,7 +118,23 @@ fn check_session_vs_dense(
     init: Vec<f32>,
     steps: usize,
 ) -> parclust::exec::PruneCounters {
-    let mut session = exec.assign_session(ds, k, metric).unwrap();
+    check_session_vs_dense_opts(exec, ds, k, metric, init, steps, BoundsPolicy::Auto)
+}
+
+/// [`check_session_vs_dense`] with an explicit bounds policy (how the
+/// yinyang sweep pins its path independent of what `Auto` would pick).
+fn check_session_vs_dense_opts(
+    exec: &dyn Executor,
+    ds: &Dataset,
+    k: usize,
+    metric: Metric,
+    init: Vec<f32>,
+    steps: usize,
+    bounds: BoundsPolicy,
+) -> parclust::exec::PruneCounters {
+    let mut session = exec
+        .assign_session_opts(ds, k, metric, ScorePath::F64, bounds)
+        .unwrap();
     let mut cent = init;
     for it in 0..steps {
         let dense = assign::assign_update_range(ds, &cent, k, metric, 0..ds.n());
@@ -199,6 +216,62 @@ fn pruned_session_handles_duplicate_rows() {
 }
 
 #[test]
+fn yinyang_session_label_exact_across_k_sweep_and_shards() {
+    // Group-bound pruning across the shapes that matter: k below the
+    // 10-per-group threshold (G = 1, degenerate to a global bound),
+    // k = 20/33 (2 and 3 groups), odd thread counts that misalign
+    // shard boundaries against n = 2003. Labels, counts and inertia
+    // must match the dense kernel on every iteration; the filter
+    // counters must conserve rows and group decisions exactly.
+    let g = generate(&GmmSpec::new(2_003, 7, 5).seed(31).spread(0.6));
+    let ds = &g.dataset;
+    for k in [2usize, 5, 20, 33] {
+        let init = ds.gather(&(0..k).map(|i| i * (2_003 / k)).collect::<Vec<_>>());
+        let gc = group_count_for(k) as u64;
+        let single = check_session_vs_dense_opts(
+            &SingleExecutor::new(), ds, k, Metric::Euclidean, init.clone(), 4,
+            BoundsPolicy::Yinyang,
+        );
+        let multi = check_session_vs_dense_opts(
+            &MultiExecutor::new(7), ds, k, Metric::Euclidean, init.clone(), 4,
+            BoundsPolicy::Yinyang,
+        );
+        for (tag, c) in [("single", single), ("multi", multi)] {
+            assert_eq!(
+                c.pruned_rows + c.scanned_rows,
+                4 * 2_003,
+                "k={k} {tag} row conservation: {c:?}"
+            );
+            assert_eq!(
+                c.group_filtered + c.group_scanned,
+                gc * c.scanned_rows,
+                "k={k} {tag} group conservation: {c:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn yinyang_session_prunes_on_separated_golden_trajectory() {
+    // The perf contract behind the parity: on tight separated blobs
+    // with k = 20 (two groups), the group filter must actually fire —
+    // rows pruned by the global bound after iteration 1, and group
+    // filters rejecting whole groups on rows that do get scanned.
+    let g = generate(&GmmSpec::new(4_000, 10, 20).seed(9).spread(0.05).center_scale(30.0));
+    let ds = &g.dataset;
+    let c = check_session_vs_dense_opts(
+        &SingleExecutor::new(), ds, 20, Metric::Euclidean, g.centers.clone(), 4,
+        BoundsPolicy::Yinyang,
+    );
+    assert!(c.pruned_rows > 0, "global bound never fired: {c:?}");
+    assert!(c.group_filtered > 0, "group filter never fired: {c:?}");
+    assert!(
+        c.dist_evals < 4 * 4_000 * 20u64,
+        "yinyang did no better than dense: {c:?}"
+    );
+}
+
+#[test]
 fn centroid_on_exact_bound_boundary_falls_back_to_scan() {
     // One row at 0.5; first table makes centroid 1 its label (distance
     // 0), then the table moves so the row is *exactly* equidistant from
@@ -208,7 +281,11 @@ fn centroid_on_exact_bound_boundary_falls_back_to_scan() {
     let ds = Dataset::from_vec(3, 1, vec![0.5, 0.1, 0.9]).unwrap();
     let tables = [vec![10.0f32, 0.5], vec![0.0f32, 1.0]];
     let exec = SingleExecutor::new();
-    let mut session = exec.assign_session(&ds, 2, Metric::Euclidean).unwrap();
+    // Auto resolves to dense at k = 2 (the bookkeeping can't beat a
+    // 2-score sweep), so pin Hamerly explicitly to exercise the bound.
+    let mut session = exec
+        .assign_session_opts(&ds, 2, Metric::Euclidean, ScorePath::F64, BoundsPolicy::Hamerly)
+        .unwrap();
     let first = session.step(&tables[0]).unwrap();
     assert_eq!(first.labels, vec![1, 1, 1], "everything sits on centroid 1");
     let second = session.step(&tables[1]).unwrap();

@@ -11,7 +11,8 @@ use parclust::data::synthetic::{generate, GmmSpec};
 use parclust::exec::gpu::GpuExecutor;
 use parclust::exec::multi::MultiExecutor;
 use parclust::exec::single::SingleExecutor;
-use parclust::exec::Executor;
+use parclust::exec::{BoundsPolicy, Executor, ScorePath};
+use parclust::kernel::assign;
 use parclust::kmeans::{fit_with, DiameterMode, KMeansConfig};
 use parclust::metric::Metric;
 use parclust::runtime::Device;
@@ -138,6 +139,46 @@ fn assign_sessions_agree_single_vs_multi_all_metrics() {
             let (cs, cm) = (s_sess.prune_counters(), m_sess.prune_counters());
             assert_eq!(cs.pruned_rows + cs.scanned_rows, 4 * 3001);
             assert_eq!(cm.pruned_rows + cm.scanned_rows, 4 * 3001);
+        }
+    }
+}
+
+/// Bounds-policy matrix: dense, Hamerly and Yinyang sessions walk the
+/// same trajectory through both CPU regimes and must reproduce the
+/// stateless dense kernel **bitwise** (labels, counts, sums, inertia) —
+/// the whole point of lossless pruning. k = 33 gives three Yinyang
+/// groups; thread counts misalign shard boundaries against n = 3001.
+#[test]
+fn bounds_policy_matrix_stays_bitwise_against_stateless_dense() {
+    let g = generate(&GmmSpec::new(3_001, 9, 6).seed(43).spread(0.5));
+    let ds = &g.dataset;
+    let k = 33;
+    let init = ds.gather(&(0..k).map(|i| i * 90).collect::<Vec<_>>());
+    for policy in [BoundsPolicy::None, BoundsPolicy::Hamerly, BoundsPolicy::Yinyang] {
+        for threads in [1usize, 3, 7] {
+            let single = SingleExecutor::new();
+            let multi = MultiExecutor::new(threads);
+            let mut s_sess = single
+                .assign_session_opts(ds, k, Metric::Euclidean, ScorePath::F64, policy)
+                .unwrap();
+            let mut m_sess = multi
+                .assign_session_opts(ds, k, Metric::Euclidean, ScorePath::F64, policy)
+                .unwrap();
+            let mut cent = init.clone();
+            for it in 0..4 {
+                let tag = format!("{} t={threads} iter {it}", policy.name());
+                let dense =
+                    assign::assign_update_range(ds, &cent, k, Metric::Euclidean, 0..ds.n());
+                let s = s_sess.step(&cent).unwrap();
+                assert_eq!(s.labels, dense.labels, "{tag} single labels");
+                assert_eq!(s.counts, dense.counts, "{tag} single counts");
+                assert_eq!(s.sums, dense.sums, "{tag} single sums");
+                assert_eq!(s.inertia.to_bits(), dense.inertia.to_bits(), "{tag} single");
+                let m = m_sess.step(&cent).unwrap();
+                assert_eq!(m.labels, dense.labels, "{tag} multi labels");
+                assert_eq!(m.counts, dense.counts, "{tag} multi counts");
+                cent = dense.centroids(&cent, k, ds.m());
+            }
         }
     }
 }
