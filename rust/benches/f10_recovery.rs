@@ -1,0 +1,178 @@
+//! F10 — cost of durability: what the recovery layer charges a fit
+//! that never needs it, and what recovery costs when it fires.
+//!
+//! Four measurements over the same streamed `.pcb` fit:
+//! * baseline — no checkpoints, fault injection disabled (the retry
+//!   layer is still compiled in: its disabled-plan fast path is the
+//!   overhead being measured);
+//! * checkpointed — `.pck` written every iteration (the worst-case
+//!   cadence), reported as overhead per iteration;
+//! * faulted — seeded transient read faults at rate 0.3 with
+//!   zero-backoff retries: the pure re-execution cost of recovery
+//!   (bit-equality with the baseline asserted before timing is
+//!   trusted);
+//! * resume — `.pck` load/validate latency and the microbenched
+//!   atomic write/load round trip.
+//!
+//! Record the numbers in EXPERIMENTS.md §F10; with `BENCH_JSON_DIR`
+//! set, the same numbers land in `BENCH_f10.json`.
+
+mod common;
+
+use std::time::{Duration, Instant};
+
+use parclust::benchkit::{fmt_duration, smoke_mode, write_bench_json, Bencher, Table};
+use parclust::data::binfmt;
+use parclust::data::shard::DiskShardSource;
+use parclust::json::Json;
+use parclust::kmeans::checkpoint::Checkpoint;
+use parclust::kmeans::stream::run_stream;
+use parclust::kmeans::{InitMethod, KMeansConfig};
+use parclust::runtime::faults::{FaultPlan, RetryPolicy};
+
+fn main() {
+    common::banner(
+        "F10",
+        "durability is near-free when idle and recovery re-executes, never re-orders",
+    );
+    let (n, m, k, iters) = if smoke_mode() {
+        (20_000usize, 8usize, 6usize, 8usize)
+    } else {
+        (400_000, 16, 8, 12)
+    };
+    let threads = 4usize;
+    let bencher = Bencher::quick().from_env();
+
+    let g = common::workload(n, m, k, 10);
+    let ds = &g.dataset;
+    let dir = std::env::temp_dir().join("parclust_f10");
+    std::fs::create_dir_all(&dir).expect("create bench temp dir");
+    let path = dir.join(format!("f10_{n}x{m}.pcb"));
+    binfmt::write_path(ds, &path).expect("write bench .pcb");
+    let ck_path = dir.join("f10.pck");
+
+    // tol 0 keeps every run on the full iteration budget, so the walls
+    // below compare like against like.
+    let base_cfg = KMeansConfig::new(k)
+        .init_method(InitMethod::Random)
+        .seed(10)
+        .threads(threads)
+        .max_iters(iters)
+        .tol(0.0);
+    let no_wait = RetryPolicy { attempts: 3, backoff: Duration::ZERO };
+
+    // ---- baseline: recovery layer present, idle -------------------------
+    let src = DiskShardSource::open(&path).expect("open bench .pcb");
+    let t = Instant::now();
+    let base = run_stream(&src, &base_cfg).expect("baseline fit");
+    let base_wall = t.elapsed();
+    assert_eq!(base.metrics.faults.injected, 0, "baseline must be fault-free");
+
+    // ---- checkpointed: a `.pck` every iteration -------------------------
+    let src = DiskShardSource::open(&path).expect("open bench .pcb");
+    let ck_cfg = base_cfg
+        .clone()
+        .checkpoint_every(1)
+        .checkpoint_path(ck_path.clone());
+    let t = Instant::now();
+    let ckpt = run_stream(&src, &ck_cfg).expect("checkpointed fit");
+    let ckpt_wall = t.elapsed();
+    assert_eq!(ckpt.labels, base.labels, "checkpointing must not bend the fit");
+    assert_eq!(ckpt.inertia, base.inertia, "checkpointing must not bend the fit");
+    let per_iter =
+        ckpt_wall.saturating_sub(base_wall).as_secs_f64() / ckpt.iterations.max(1) as f64;
+
+    // ---- faulted: transient read faults, recovered in-line --------------
+    let plan = FaultPlan::seeded(11, 0.3, 0.0);
+    let src = DiskShardSource::open_with(&path, no_wait, plan).expect("open with faults");
+    let t = Instant::now();
+    let faulted = run_stream(&src, &base_cfg).expect("faulted fit");
+    let faulted_wall = t.elapsed();
+    assert_eq!(faulted.labels, base.labels, "recovered fit must be bit-equal");
+    assert_eq!(faulted.inertia, base.inertia, "recovered fit must be bit-equal");
+    let fc = faulted.metrics.faults;
+    assert!(fc.injected > 0 && fc.recovered > 0, "rate 0.3 must fire: {fc:?}");
+
+    // ---- resume: cut the fit short, continue from the `.pck` ------------
+    let src = DiskShardSource::open(&path).expect("open bench .pcb");
+    let cut_cfg = ck_cfg.clone().max_iters((iters / 2).max(1));
+    run_stream(&src, &cut_cfg).expect("cut fit");
+    let load = bencher.bench(|| {
+        let _ = Checkpoint::load(&ck_path).expect("load checkpoint");
+    });
+    let src = DiskShardSource::open(&path).expect("open bench .pcb");
+    let t = Instant::now();
+    let resumed =
+        run_stream(&src, &base_cfg.clone().resume(ck_path.clone())).expect("resumed fit");
+    let resume_wall = t.elapsed();
+    assert_eq!(resumed.labels, base.labels, "resume must land on the uninterrupted fit");
+    assert_eq!(resumed.inertia, base.inertia, "resume must land on the uninterrupted fit");
+
+    // ---- microbench: the atomic write itself ----------------------------
+    let ck_val = Checkpoint::load(&ck_path).expect("load final checkpoint");
+    let scratch = dir.join("f10_scratch.pck");
+    let write = bencher.bench(|| {
+        ck_val.write_atomic(&scratch).expect("atomic checkpoint write");
+    });
+    let ck_bytes = std::fs::metadata(&ck_path).expect("stat .pck").len();
+
+    let mut table = Table::new(
+        &format!("F10 streamed fit, durability on/off (n={n}, m={m}, k={k}, {threads} threads)"),
+        &["variant", "wall", "iters", "note"],
+    );
+    table.row(vec![
+        "baseline".into(),
+        fmt_duration(base_wall),
+        base.iterations.to_string(),
+        "recovery layer idle".into(),
+    ]);
+    table.row(vec![
+        "checkpoint every iter".into(),
+        fmt_duration(ckpt_wall),
+        ckpt.iterations.to_string(),
+        format!("+{:.3} ms/iter", per_iter * 1e3),
+    ]);
+    table.row(vec![
+        "read faults @ 0.3".into(),
+        fmt_duration(faulted_wall),
+        faulted.iterations.to_string(),
+        format!("{} injected / {} recovered", fc.injected, fc.recovered),
+    ]);
+    table.row(vec![
+        "resume from midpoint".into(),
+        fmt_duration(resume_wall),
+        (resumed.iterations - cut_cfg.max_iters).to_string(),
+        format!("{}-byte .pck, load {}", ck_bytes, fmt_duration(load.mean)),
+    ]);
+    println!("{}", table.render());
+    println!(
+        "atomic write: {} mean ({} bytes; temp + fsync + rename)",
+        fmt_duration(write.mean),
+        ck_bytes
+    );
+
+    write_bench_json(
+        "f10",
+        &Json::obj(vec![
+            ("bench", Json::str("f10_recovery")),
+            ("n", Json::num(n as f64)),
+            ("m", Json::num(m as f64)),
+            ("k", Json::num(k as f64)),
+            ("smoke", Json::Bool(smoke_mode())),
+            ("iters", Json::num(base.iterations as f64)),
+            ("baseline_wall_s", Json::num(base_wall.as_secs_f64())),
+            ("checkpoint_wall_s", Json::num(ckpt_wall.as_secs_f64())),
+            ("checkpoint_overhead_per_iter_s", Json::num(per_iter)),
+            ("faulted_wall_s", Json::num(faulted_wall.as_secs_f64())),
+            ("faults_injected", Json::num(fc.injected as f64)),
+            ("faults_recovered", Json::num(fc.recovered as f64)),
+            ("resume_wall_s", Json::num(resume_wall.as_secs_f64())),
+            ("pck_bytes", Json::num(ck_bytes as f64)),
+            ("pck_load", load.to_json()),
+            ("pck_write", write.to_json()),
+        ]),
+    );
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&scratch).ok();
+}

@@ -10,7 +10,7 @@ use std::path::{Path, PathBuf};
 use crate::exec::regime::Regime;
 use crate::exec::{BoundsPolicy, ScorePath};
 use crate::json::Json;
-use crate::kmeans::{DiameterMode, Engine, InitMethod, KMeansConfig};
+use crate::kmeans::{DiameterMode, Engine, InitMethod, KMeansConfig, OnDeviceError};
 use crate::metric::Metric;
 
 /// Where the samples come from.
@@ -62,7 +62,8 @@ impl RunConfig {
             "csv", "pcb", "synthetic", "k", "max_iters", "tol", "metric",
             "init", "seed", "threads", "regime", "diameter", "score_path",
             "bounds", "scaling", "report", "labels", "artifact_dir", "engine",
-            "mini_batch", "memory_budget",
+            "mini_batch", "memory_budget", "retries", "retry_backoff_ms",
+            "checkpoint_every", "checkpoint", "resume", "on_device_error",
         ];
         if let Json::Obj(pairs) = &root {
             for (key, _) in pairs {
@@ -213,6 +214,43 @@ impl RunConfig {
                     .ok_or_else(|| "config: 'artifact_dir' must be a string".to_string())?,
             ));
         }
+        if let Some(v) = root.get("retries") {
+            cfg.kmeans.retries = v
+                .as_usize()
+                .ok_or_else(|| "config: 'retries' must be an integer".to_string())?
+                .max(1) as u32;
+        }
+        if let Some(v) = root.get("retry_backoff_ms") {
+            cfg.kmeans.retry_backoff_ms = v
+                .as_usize()
+                .ok_or_else(|| "config: 'retry_backoff_ms' must be an integer".to_string())?
+                as u64;
+        }
+        if let Some(v) = root.get("checkpoint_every") {
+            cfg.kmeans.checkpoint_every = v
+                .as_usize()
+                .ok_or_else(|| "config: 'checkpoint_every' must be an integer".to_string())?;
+        }
+        if let Some(v) = root.get("checkpoint") {
+            cfg.kmeans.checkpoint_path = Some(PathBuf::from(
+                v.as_str()
+                    .ok_or_else(|| "config: 'checkpoint' must be a string".to_string())?,
+            ));
+        }
+        if let Some(v) = root.get("resume") {
+            cfg.kmeans.resume = Some(PathBuf::from(
+                v.as_str()
+                    .ok_or_else(|| "config: 'resume' must be a string".to_string())?,
+            ));
+        }
+        if let Some(v) = root.get("on_device_error") {
+            let s = v.as_str().ok_or_else(|| {
+                "config: 'on_device_error' must be a string".to_string()
+            })?;
+            cfg.kmeans.on_device_error = OnDeviceError::from_str(s).ok_or_else(|| {
+                format!("config: unknown on_device_error '{s}' (fail | fallback)")
+            })?;
+        }
         Ok(cfg)
     }
 
@@ -258,6 +296,39 @@ impl RunConfig {
                 Json::num(self.kmeans.memory_budget.unwrap_or(0) as f64),
             ),
             ("scaling", Json::str(self.scaling.clone())),
+            ("retries", Json::num(self.kmeans.retries as f64)),
+            (
+                "retry_backoff_ms",
+                Json::num(self.kmeans.retry_backoff_ms as f64),
+            ),
+            (
+                "checkpoint_every",
+                Json::num(self.kmeans.checkpoint_every as f64),
+            ),
+            (
+                "checkpoint",
+                Json::str(
+                    self.kmeans
+                        .checkpoint_path
+                        .as_ref()
+                        .map(|p| p.display().to_string())
+                        .unwrap_or_default(),
+                ),
+            ),
+            (
+                "resume",
+                Json::str(
+                    self.kmeans
+                        .resume
+                        .as_ref()
+                        .map(|p| p.display().to_string())
+                        .unwrap_or_default(),
+                ),
+            ),
+            (
+                "on_device_error",
+                Json::str(self.kmeans.on_device_error.name()),
+            ),
         ])
     }
 }
@@ -331,6 +402,36 @@ mod tests {
         assert_eq!(echo.req_str("engine").unwrap(), "stream");
         assert_eq!(echo.req_usize("mini_batch").unwrap(), 4096);
         assert!(RunConfig::from_json_text(r#"{"engine": "warp"}"#).is_err());
+    }
+
+    #[test]
+    fn parses_durability_fields() {
+        let cfg = RunConfig::from_json_text(
+            r#"{
+              "k": 3, "retries": 5, "retry_backoff_ms": 2,
+              "checkpoint_every": 10, "checkpoint": "state.pck",
+              "resume": "state.pck", "on_device_error": "fallback"
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.kmeans.retries, 5);
+        assert_eq!(cfg.kmeans.retry_backoff_ms, 2);
+        assert_eq!(cfg.kmeans.checkpoint_every, 10);
+        assert_eq!(cfg.kmeans.checkpoint_path, Some(PathBuf::from("state.pck")));
+        assert_eq!(cfg.kmeans.resume, Some(PathBuf::from("state.pck")));
+        assert_eq!(cfg.kmeans.on_device_error, OnDeviceError::Fallback);
+        let echo = Json::parse(&cfg.to_json().to_pretty()).unwrap();
+        assert_eq!(echo.req_usize("retries").unwrap(), 5);
+        assert_eq!(echo.req_usize("checkpoint_every").unwrap(), 10);
+        assert_eq!(echo.req_str("on_device_error").unwrap(), "fallback");
+        assert!(
+            RunConfig::from_json_text(r#"{"on_device_error": "shrug"}"#).is_err()
+        );
+        // defaults: retries on, checkpointing off, fail loudly
+        let d = RunConfig::default_synthetic();
+        assert_eq!(d.kmeans.retries, 3);
+        assert_eq!(d.kmeans.checkpoint_every, 0);
+        assert_eq!(d.kmeans.on_device_error, OnDeviceError::Fail);
     }
 
     #[test]

@@ -35,6 +35,10 @@ pub enum DataError {
     /// and large finite magnitudes like 1e30 are allowed — see
     /// `tests/adversarial_float.rs`).
     NonFinite { index: usize, value: f32 },
+    /// A background worker (e.g. the streaming engine's prefetch job)
+    /// died — its panic payload or failure is carried here so the
+    /// consumer side sees a typed error instead of an unwinding panic.
+    Worker(String),
 }
 
 impl fmt::Display for DataError {
@@ -50,7 +54,24 @@ impl fmt::Display for DataError {
                 "non-finite sample value {value} at flat index {index}: \
                  datasets must be finite (NaN/±inf rejected at ingestion)"
             ),
+            DataError::Worker(msg) => write!(f, "worker error: {msg}"),
         }
+    }
+}
+
+impl DataError {
+    /// Fold a worker's panic payload into the typed [`DataError::Worker`]
+    /// form (the prefetch-ring handoff uses this so a dying prefetch job
+    /// surfaces on the consumer side instead of unwinding through it).
+    pub fn from_panic(payload: Box<dyn std::any::Any + Send>) -> DataError {
+        let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "worker panicked".to_string()
+        };
+        DataError::Worker(msg)
     }
 }
 

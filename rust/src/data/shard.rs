@@ -32,6 +32,9 @@ use std::path::{Path, PathBuf};
 
 use crate::data::binfmt::{self, Crc32};
 use crate::data::{DataError, Dataset};
+use crate::runtime::faults::{
+    self, FaultCounters, FaultPlan, FaultSite, FaultStats, RetryPolicy,
+};
 
 /// A source of contiguous row chunks from an (n × m) f32 matrix.
 ///
@@ -52,6 +55,11 @@ pub trait ShardSource: Sync {
     /// `random_init` depend on it) into `out`, which must hold exactly
     /// `idx.len() * m` values. Returns backing-store bytes read.
     fn gather_rows(&self, idx: &[usize], out: &mut [f32]) -> Result<u64, DataError>;
+    /// Fault/recovery counters accumulated by this source's retry layer;
+    /// all-zero for sources with no recovery path (e.g. in-memory).
+    fn fault_counters(&self) -> FaultCounters {
+        FaultCounters::default()
+    }
 }
 
 /// In-memory shard source over a borrowed [`Dataset`].
@@ -109,6 +117,13 @@ pub struct DiskShardSource {
     names: Vec<String>,
     data_start: u64,
     file: File,
+    /// Retry budget for positioned reads (and the open-verify pass).
+    retry: RetryPolicy,
+    /// Injection schedule — [`FaultPlan::disabled`] in production unless
+    /// armed via `PARCLUST_FAULT_SEED`.
+    faults: FaultPlan,
+    /// Tallies surfaced through [`ShardSource::fault_counters`].
+    stats: FaultStats,
 }
 
 /// Block size for the chunked decode passes (matches `binfmt`'s read
@@ -168,7 +183,68 @@ impl DiskShardSource {
     /// surface as [`DataError::Io`] (`UnexpectedEof`), corruption as
     /// the same "checksum mismatch" [`DataError::Parse`] the one-shot
     /// loader returns, non-finite values as [`DataError::NonFinite`].
+    ///
+    /// Uses the crate-default [`RetryPolicy`] and the env-armed
+    /// [`FaultPlan`]; callers wiring explicit recovery knobs (CLI
+    /// `--retries`, chaos tests) go through [`Self::open_with`].
     pub fn open(path: &Path) -> Result<DiskShardSource, DataError> {
+        Self::open_with(path, RetryPolicy::default_on(), FaultPlan::from_env())
+    }
+
+    /// [`Self::open`] with explicit retry policy and fault plan. The
+    /// whole open-verify pass is the retry unit: a transient failure
+    /// (injected or real) discards the partial pass and re-verifies
+    /// from the start, so a recovered open is indistinguishable from a
+    /// clean one.
+    pub fn open_with(
+        path: &Path,
+        retry: RetryPolicy,
+        faults: FaultPlan,
+    ) -> Result<DiskShardSource, DataError> {
+        let stats = FaultStats::new();
+        let attempts = retry.attempts.max(1);
+        let mut tried = 0u32;
+        loop {
+            let attempt = (|| {
+                // Keyed by 0 (one open per source): the 0-based attempt
+                // index caps injections below the retry budget.
+                if faults.should_fault_keyed(FaultSite::Read, 0, tried) {
+                    stats.note_injected();
+                    return Err(DataError::Io(FaultPlan::injected_io_error(
+                        FaultSite::Read,
+                    )));
+                }
+                Self::open_verify(path)
+            })();
+            match attempt {
+                Ok(mut src) => {
+                    if tried > 0 {
+                        stats.note_recovered();
+                    }
+                    src.retry = retry;
+                    src.faults = faults;
+                    src.stats = stats;
+                    return Ok(src);
+                }
+                Err(DataError::Io(e))
+                    if faults::is_transient_io(&e) && tried + 1 < attempts =>
+                {
+                    tried += 1;
+                    stats.note_retried();
+                    let pause = retry.backoff_for(tried);
+                    if !pause.is_zero() {
+                        std::thread::sleep(pause);
+                    }
+                }
+                Err(e) => {
+                    stats.note_permanent();
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    fn open_verify(path: &Path) -> Result<DiskShardSource, DataError> {
         let file = File::open(path)?;
         let mut r = BufReader::new(file);
         let hdr = binfmt::read_header(&mut r)?;
@@ -209,7 +285,21 @@ impl DiskShardSource {
             names: hdr.names,
             data_start: hdr.data_start,
             file,
+            retry: RetryPolicy::default_on(),
+            faults: FaultPlan::disabled(),
+            stats: FaultStats::new(),
         })
+    }
+
+    /// Swap in a fault plan after open — lets tests verify a clean file
+    /// and then arm injection against the steady-state read path only.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.faults = plan;
+    }
+
+    /// Replace the positioned-read retry policy.
+    pub fn set_retry_policy(&mut self, retry: RetryPolicy) {
+        self.retry = retry;
     }
 
     /// Feature names from the header.
@@ -232,8 +322,7 @@ impl DiskShardSource {
             let mut filled = 0usize;
             while filled < total_bytes {
                 let take = SCRATCH_BYTES.min(total_bytes - filled);
-                read_exact_at(
-                    &self.file,
+                self.read_block(
                     &mut scratch[..take],
                     self.data_start + (value_offset * 4 + filled) as u64,
                 )?;
@@ -244,6 +333,39 @@ impl DiskShardSource {
                 filled += take;
             }
             Ok(total_bytes as u64)
+        })
+    }
+
+    /// One positioned block read under the retry policy. Transient
+    /// errors (`Interrupted`/`WouldBlock`) retry the **whole** block
+    /// from its start — an injected short read proves the loop never
+    /// resumes mid-buffer — while permanent errors surface on first
+    /// sight (the satellite fix: the pre-recovery loop treated both
+    /// uniformly by failing the load either way).
+    ///
+    /// Injection is keyed by the block's absolute offset, so schedules
+    /// replay identically under concurrent loads and the per-attempt
+    /// cap guarantees recovery whenever `retry.attempts > max_burst`.
+    fn read_block(&self, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+        let mut attempt = 0u32;
+        faults::retry_io(&self.retry, &self.stats, || {
+            let a = attempt;
+            attempt += 1;
+            if self.faults.should_fault_keyed(FaultSite::ShortRead, off, a) {
+                self.stats.note_injected();
+                // Partially fill, then fail transiently: a correct
+                // retry re-reads the full range at `off`.
+                let half = buf.len() / 2;
+                if half > 0 {
+                    let _ = read_exact_at(&self.file, &mut buf[..half], off);
+                }
+                return Err(FaultPlan::injected_io_error(FaultSite::ShortRead));
+            }
+            if self.faults.should_fault_keyed(FaultSite::Read, off, a) {
+                self.stats.note_injected();
+                return Err(FaultPlan::injected_io_error(FaultSite::Read));
+            }
+            read_exact_at(&self.file, buf, off)
         })
     }
 }
@@ -276,6 +398,10 @@ impl ShardSource for DiskShardSource {
             bytes += self.decode_at(i * m, &mut out[slot * m..(slot + 1) * m])?;
         }
         Ok(bytes)
+    }
+
+    fn fault_counters(&self) -> FaultCounters {
+        self.stats.snapshot()
     }
 }
 
@@ -360,6 +486,99 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn disk_reads_retry_injected_transient_faults_bitwise() {
+        // Satellite fix pin: transient read faults (including short
+        // reads that partially fill the buffer) are retried and the
+        // decoded rows are bitwise identical to a fault-free load.
+        let g = generate(&GmmSpec::new(513, 6, 4).seed(8));
+        let path = tmp("retry_transient.pcb");
+        binfmt::write_path(&g.dataset, &path).unwrap();
+        let mut src = DiskShardSource::open(&path).unwrap();
+        src.set_retry_policy(RetryPolicy {
+            attempts: 3,
+            backoff: std::time::Duration::ZERO,
+        });
+        // Read rate 0.6 -> ShortRead rate 0.3; burst cap 2 < 3 attempts
+        // guarantees every block eventually reads.
+        src.set_fault_plan(FaultPlan::seeded(21, 0.6, 0.0));
+        for range in [0..513, 0..1, 100..101, 500..513, 31..400] {
+            let mut buf = vec![0.0f32; range.len() * 6];
+            src.load_rows(range.clone(), &mut buf).unwrap();
+            assert_eq!(&buf[..], g.dataset.rows(range.clone()), "{range:?}");
+        }
+        let mut picked = vec![0.0f32; 2 * 6];
+        src.gather_rows(&[400, 3], &mut picked).unwrap();
+        assert_eq!(&picked[..6], g.dataset.row(400));
+        assert_eq!(&picked[6..], g.dataset.row(3));
+        let c = src.fault_counters();
+        assert!(c.injected > 0, "rate 0.6 over many blocks must inject");
+        assert!(c.recovered > 0, "injected transients must be recovered");
+        assert_eq!(c.permanent, 0, "capped bursts never exhaust 3 attempts");
+    }
+
+    #[test]
+    fn disk_reads_surface_permanent_failure_after_budget() {
+        let g = generate(&GmmSpec::new(64, 4, 2).seed(9));
+        let path = tmp("retry_permanent.pcb");
+        binfmt::write_path(&g.dataset, &path).unwrap();
+        let mut src = DiskShardSource::open(&path).unwrap();
+        src.set_retry_policy(RetryPolicy {
+            attempts: 2,
+            backoff: std::time::Duration::ZERO,
+        });
+        // Uncapped burst at rate 1.0: every attempt faults -> the retry
+        // loop must give up and surface the transient kind.
+        src.set_fault_plan(FaultPlan::seeded_with_burst(3, 1.0, 0.0, u64::MAX));
+        let mut buf = vec![0.0f32; 10 * 4];
+        let err = src.load_rows(0..10, &mut buf).unwrap_err();
+        match err {
+            DataError::Io(e) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::Interrupted)
+            }
+            other => panic!("expected Io, got {other:?}"),
+        }
+        let c = src.fault_counters();
+        assert_eq!(c.permanent, 1);
+        assert_eq!(c.retried, 1, "attempts=2 -> exactly one retry");
+        assert_eq!(c.recovered, 0);
+    }
+
+    #[test]
+    fn disk_open_retries_transient_and_rejects_permanent_immediately() {
+        let g = generate(&GmmSpec::new(32, 3, 2).seed(10));
+        let path = tmp("retry_open.pcb");
+        binfmt::write_path(&g.dataset, &path).unwrap();
+        // Injected open faults recover within the default budget (burst
+        // cap 2 < 3 attempts) and the verified source reads cleanly.
+        let src = DiskShardSource::open_with(
+            &path,
+            RetryPolicy { attempts: 3, backoff: std::time::Duration::ZERO },
+            FaultPlan::seeded(5, 1.0, 0.0),
+        )
+        .unwrap();
+        assert_eq!(src.n(), 32);
+        // A missing file is permanent: no retries, immediate NotFound.
+        let t0 = std::time::Instant::now();
+        let err = DiskShardSource::open_with(
+            &path.with_extension("missing"),
+            RetryPolicy { attempts: 3, backoff: std::time::Duration::from_secs(5) },
+            FaultPlan::disabled(),
+        )
+        .map(|_| ())
+        .unwrap_err();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(1),
+            "permanent open errors must not burn the backoff budget"
+        );
+        match err {
+            DataError::Io(e) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::NotFound)
+            }
+            other => panic!("expected Io, got {other:?}"),
+        }
     }
 
     #[test]

@@ -39,10 +39,11 @@ use crate::data::shard::ShardSource;
 use crate::data::Dataset;
 use crate::exec::{
     AssignSession, AssignStats, DeviceCounters, DiameterResult, ExecError, Executor,
-    PruneCounters,
+    PruneCounters, DEVICE_EXHAUSTED_MARKER,
 };
 use crate::metric::Metric;
 use crate::pool::ThreadPool;
+use crate::runtime::faults::{self, FaultCounters, FaultStats, RetryPolicy};
 use crate::runtime::{pad, ArtifactKind, ArtifactMeta, Device, HostTensor, InputRef, Ticket};
 
 /// Device-store key for the per-iteration padded centroid table: stored
@@ -68,6 +69,9 @@ pub struct GpuExecutor {
     threads: usize,
     resident: Arc<Mutex<Option<ResidentSet>>>,
     pool: Arc<OnceLock<ThreadPool>>,
+    /// Retry budget for device submissions / completions; sessions copy
+    /// this at open. Default: [`RetryPolicy::default_on`].
+    retry: RetryPolicy,
 }
 
 impl GpuExecutor {
@@ -79,7 +83,19 @@ impl GpuExecutor {
             threads: threads.max(1),
             resident: Arc::new(Mutex::new(None)),
             pool: Arc::new(OnceLock::new()),
+            retry: RetryPolicy::default_on(),
         }
+    }
+
+    /// Set the retry budget future assignment sessions submit under
+    /// (`--retries` / `--retry-backoff-ms` plumb through here).
+    pub fn set_retry_policy(&mut self, retry: RetryPolicy) {
+        self.retry = retry;
+    }
+
+    /// The retry budget sessions are opened with.
+    pub fn retry_policy(&self) -> RetryPolicy {
+        self.retry
     }
 
     /// The persistent host-prep worker pool, built on first use (the
@@ -487,6 +503,153 @@ fn absorb_chunk(
     Ok(())
 }
 
+/// One in-flight chunk of the assignment pipeline. `key` is the
+/// chunk's first-submission sequence number from
+/// [`Device::next_fault_key`] — re-submissions keep it (bumping
+/// `attempt`), so one chunk's recovery never shifts the fault schedule
+/// of any other chunk.
+struct PendingChunk {
+    start: usize,
+    rows: usize,
+    key: u64,
+    attempt: u32,
+    ticket: Ticket,
+}
+
+/// The `Stored`-reference input triple of a resident chunk (rebuildable
+/// at zero cost for re-submission).
+fn resident_inputs(start: usize) -> Vec<InputRef> {
+    vec![
+        InputRef::Stored(format!("resident:pts:{start}")),
+        InputRef::Stored(format!("resident:mask:{start}")),
+        InputRef::Stored(CENTROIDS_KEY.to_string()),
+    ]
+}
+
+/// Rebuild a streaming chunk's inputs from scratch: re-read the rows
+/// from the shard source and pad/mask into fresh staging buffers. Used
+/// only on the re-submission path — a failed ticket's original buffers
+/// were consumed by the device thread, so the fresh pair takes their
+/// place in the ring when the retried chunk retires (buffer count is
+/// conserved).
+fn stream_inputs(
+    source: &dyn ShardSource,
+    start: usize,
+    rows: usize,
+    cap: usize,
+    m: usize,
+    am: usize,
+) -> Result<Vec<InputRef>, ExecError> {
+    let mut raw = vec![0.0f32; rows * m];
+    source
+        .load_rows(start..start + rows, &mut raw)
+        .map_err(|e| ExecError(format!("shard read: {e:?}")))?;
+    let mut pts = Vec::new();
+    let mut mask = Vec::new();
+    pad::pad_points_into(&raw, rows, m, cap, am, &mut pts);
+    pad::make_mask_into(rows, cap, &mut mask);
+    Ok(vec![
+        InputRef::Inline(HostTensor::f32(&[cap as i64, am as i64], pts)),
+        InputRef::Inline(HostTensor::f32(&[cap as i64], mask)),
+        InputRef::Stored(CENTROIDS_KEY.to_string()),
+    ])
+}
+
+/// Submit one chunk under the retry budget. `attempt` continues the
+/// chunk's cumulative attempt count (submit and completion faults share
+/// it); `build` recreates the inputs for each try (a rejected submit
+/// consumed them). Transient rejections back off and retry; budget
+/// exhaustion surfaces as [`DEVICE_EXHAUSTED_MARKER`] — the trigger for
+/// `--on-device-error fallback`.
+fn submit_with_retry(
+    device: &Device,
+    retry: &RetryPolicy,
+    fstats: &FaultStats,
+    art_name: &str,
+    key: u64,
+    mut attempt: u32,
+    build: &mut dyn FnMut() -> Result<Vec<InputRef>, ExecError>,
+) -> Result<(Ticket, u32), ExecError> {
+    loop {
+        let inputs = build()?;
+        match device.submit_attempt(art_name, inputs, key, attempt) {
+            Ok(t) => return Ok((t, attempt)),
+            Err(e) if faults::is_transient_device(&e) => {
+                fstats.note_injected();
+                if attempt + 1 >= retry.attempts.max(1) {
+                    fstats.note_permanent();
+                    return Err(ExecError(format!("{DEVICE_EXHAUSTED_MARKER}: {e}")));
+                }
+                attempt += 1;
+                fstats.note_retried();
+                let pause = retry.backoff_for(attempt);
+                if !pause.is_zero() {
+                    std::thread::sleep(pause);
+                }
+            }
+            Err(e) => {
+                fstats.note_permanent();
+                return Err(ExecError(e));
+            }
+        }
+    }
+}
+
+/// Wait for one chunk and fold it into `total`, re-submitting on
+/// transient completion faults until the budget runs out. The caller
+/// pops chunks **in submission order** and does not touch any later
+/// chunk until this one absorbs, so recovery never reorders the
+/// deterministic absorb sequence — a recovered step is bitwise
+/// identical to a fault-free one. Returns the recycled staging buffers
+/// of the submission that completed.
+fn retire_chunk(
+    device: &Device,
+    retry: &RetryPolicy,
+    fstats: &FaultStats,
+    art_name: &str,
+    total: &mut AssignStats,
+    chunk: PendingChunk,
+    k: usize,
+    m: usize,
+    am: usize,
+    build: &mut dyn FnMut() -> Result<Vec<InputRef>, ExecError>,
+) -> Result<Vec<HostTensor>, ExecError> {
+    let PendingChunk { start, rows, key, mut attempt, mut ticket } = chunk;
+    loop {
+        match ticket.wait() {
+            Ok(done) => {
+                absorb_chunk(total, start, rows, k, m, am, &done.outputs)?;
+                if attempt > 0 {
+                    fstats.note_recovered();
+                }
+                return Ok(done.recycled);
+            }
+            Err(e) if faults::is_transient_device(&e) => {
+                fstats.note_injected();
+                if attempt + 1 >= retry.attempts.max(1) {
+                    fstats.note_permanent();
+                    return Err(ExecError(format!("{DEVICE_EXHAUSTED_MARKER}: {e}")));
+                }
+                attempt += 1;
+                fstats.note_retried();
+                let pause = retry.backoff_for(attempt);
+                if !pause.is_zero() {
+                    std::thread::sleep(pause);
+                }
+                let (t, a) = submit_with_retry(
+                    device, retry, fstats, art_name, key, attempt, build,
+                )?;
+                ticket = t;
+                attempt = a;
+            }
+            Err(e) => {
+                fstats.note_permanent();
+                return Err(ExecError(e));
+            }
+        }
+    }
+}
+
 /// Baseline [`crate::runtime::DeviceStats`] readings at session open;
 /// [`AssignSession::device_counters`] reports deltas against these.
 struct StatsBase {
@@ -549,6 +712,8 @@ pub struct GpuAssignSession<'a> {
     total: AssignStats,
     counters: PruneCounters,
     base: StatsBase,
+    retry: RetryPolicy,
+    faults: FaultStats,
 }
 
 impl<'a> GpuAssignSession<'a> {
@@ -604,6 +769,8 @@ impl<'a> GpuAssignSession<'a> {
             total: AssignStats::zeros(ds.n(), k, m),
             counters: PruneCounters::default(),
             base: StatsBase::now(&exec.device),
+            retry: exec.retry,
+            faults: FaultStats::new(),
         })
     }
 
@@ -672,6 +839,8 @@ impl<'a> GpuAssignSession<'a> {
             total: AssignStats::zeros(n, k, m),
             counters: PruneCounters::default(),
             base: StatsBase::now(&exec.device),
+            retry: exec.retry,
+            faults: FaultStats::new(),
         })
     }
 
@@ -695,28 +864,37 @@ impl AssignSession for GpuAssignSession<'_> {
             .map_err(ExecError)?;
         self.total.reset(self.n, self.k, self.m);
         let (cap, am, k, m, n) = (self.cap, self.am, self.k, self.m, self.n);
-        let mut pending: VecDeque<(usize, usize, Ticket)> = VecDeque::new();
+        let mut pending: VecDeque<PendingChunk> = VecDeque::new();
 
         match &mut self.feed {
             Feed::Resident(_) => {
                 let mut start = 0;
                 while start < n {
                     let end = (start + cap).min(n);
-                    let t = device
-                        .submit(
-                            &self.art_name,
-                            vec![
-                                InputRef::Stored(format!("resident:pts:{start}")),
-                                InputRef::Stored(format!("resident:mask:{start}")),
-                                InputRef::Stored(CENTROIDS_KEY.to_string()),
-                            ],
-                        )
-                        .map_err(ExecError)?;
-                    pending.push_back((start, end - start, t));
+                    let key = device.next_fault_key();
+                    let mut build =
+                        || Ok::<Vec<InputRef>, ExecError>(resident_inputs(start));
+                    let (ticket, attempt) = submit_with_retry(
+                        device,
+                        &self.retry,
+                        &self.faults,
+                        &self.art_name,
+                        key,
+                        0,
+                        &mut build,
+                    )?;
+                    pending.push_back(PendingChunk {
+                        start,
+                        rows: end - start,
+                        key,
+                        attempt,
+                        ticket,
+                    });
                     start = end;
                 }
             }
             Feed::Stream { source, raw, free } => {
+                let src: &dyn ShardSource = *source;
                 raw.resize(cap * m, 0.0);
                 let mut start = 0;
                 while start < n {
@@ -728,11 +906,24 @@ impl AssignSession for GpuAssignSession<'_> {
                     let (mut pts, mut mask) = match free.pop() {
                         Some(pair) => pair,
                         None => {
-                            let (s0, r0, t) =
+                            let oldest =
                                 pending.pop_front().expect("ring empty, none in flight");
-                            let done = t.wait().map_err(ExecError)?;
-                            absorb_chunk(&mut self.total, s0, r0, k, m, am, &done.outputs)?;
-                            let mut it = done.recycled.into_iter();
+                            let (s0, r0) = (oldest.start, oldest.rows);
+                            let mut rebuild =
+                                || stream_inputs(src, s0, r0, cap, m, am);
+                            let recycled = retire_chunk(
+                                device,
+                                &self.retry,
+                                &self.faults,
+                                &self.art_name,
+                                &mut self.total,
+                                oldest,
+                                k,
+                                m,
+                                am,
+                                &mut rebuild,
+                            )?;
+                            let mut it = recycled.into_iter();
                             let p = it
                                 .next()
                                 .ok_or_else(|| ExecError("points buffer lost".into()))?
@@ -744,36 +935,80 @@ impl AssignSession for GpuAssignSession<'_> {
                             (p, mk)
                         }
                     };
-                    source
-                        .load_rows(start..end, &mut raw[..rows * m])
+                    src.load_rows(start..end, &mut raw[..rows * m])
                         .map_err(|e| ExecError(format!("shard read: {e:?}")))?;
                     pad::pad_points_into(&raw[..rows * m], rows, m, cap, am, &mut pts);
                     pad::make_mask_into(rows, cap, &mut mask);
-                    let t = device
-                        .submit(
-                            &self.art_name,
-                            vec![
-                                InputRef::Inline(HostTensor::f32(
-                                    &[cap as i64, am as i64],
-                                    pts,
-                                )),
-                                InputRef::Inline(HostTensor::f32(&[cap as i64], mask)),
-                                InputRef::Stored(CENTROIDS_KEY.to_string()),
-                            ],
-                        )
-                        .map_err(ExecError)?;
-                    pending.push_back((start, rows, t));
+                    let key = device.next_fault_key();
+                    // First try ships the staged pair; a transient submit
+                    // rejection consumed it, so re-tries rebuild from the
+                    // source into fresh buffers.
+                    let mut staged = Some((pts, mask));
+                    let mut build = || match staged.take() {
+                        Some((p, mk)) => Ok(vec![
+                            InputRef::Inline(HostTensor::f32(
+                                &[cap as i64, am as i64],
+                                p,
+                            )),
+                            InputRef::Inline(HostTensor::f32(&[cap as i64], mk)),
+                            InputRef::Stored(CENTROIDS_KEY.to_string()),
+                        ]),
+                        None => stream_inputs(src, start, rows, cap, m, am),
+                    };
+                    let (ticket, attempt) = submit_with_retry(
+                        device,
+                        &self.retry,
+                        &self.faults,
+                        &self.art_name,
+                        key,
+                        0,
+                        &mut build,
+                    )?;
+                    pending.push_back(PendingChunk { start, rows, key, attempt, ticket });
                     start = end;
                 }
             }
         }
 
         // Drain the tail in submission order; recycle staging buffers.
-        while let Some((s0, r0, t)) = pending.pop_front() {
-            let done = t.wait().map_err(ExecError)?;
-            absorb_chunk(&mut self.total, s0, r0, k, m, am, &done.outputs)?;
+        while let Some(chunk) = pending.pop_front() {
+            let (s0, r0) = (chunk.start, chunk.rows);
+            let recycled = match &mut self.feed {
+                Feed::Resident(_) => {
+                    let mut rebuild =
+                        || Ok::<Vec<InputRef>, ExecError>(resident_inputs(s0));
+                    retire_chunk(
+                        device,
+                        &self.retry,
+                        &self.faults,
+                        &self.art_name,
+                        &mut self.total,
+                        chunk,
+                        k,
+                        m,
+                        am,
+                        &mut rebuild,
+                    )?
+                }
+                Feed::Stream { source, .. } => {
+                    let src: &dyn ShardSource = *source;
+                    let mut rebuild = || stream_inputs(src, s0, r0, cap, m, am);
+                    retire_chunk(
+                        device,
+                        &self.retry,
+                        &self.faults,
+                        &self.art_name,
+                        &mut self.total,
+                        chunk,
+                        k,
+                        m,
+                        am,
+                        &mut rebuild,
+                    )?
+                }
+            };
             if let Feed::Stream { free, .. } = &mut self.feed {
-                let mut it = done.recycled.into_iter();
+                let mut it = recycled.into_iter();
                 if let (Some(p), Some(mk)) = (it.next(), it.next()) {
                     free.push((p.into_f32(), mk.into_f32()));
                 }
@@ -787,6 +1022,14 @@ impl AssignSession for GpuAssignSession<'_> {
 
     fn prune_counters(&self) -> PruneCounters {
         self.counters
+    }
+
+    fn fault_counters(&self) -> FaultCounters {
+        let mut c = self.faults.snapshot();
+        if let Feed::Stream { source, .. } = &self.feed {
+            c.merge(&source.fault_counters());
+        }
+        c
     }
 
     fn path_name(&self) -> &'static str {

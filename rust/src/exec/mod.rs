@@ -158,6 +158,21 @@ pub struct DeviceCounters {
 #[derive(Debug)]
 pub struct ExecError(pub String);
 
+impl ExecError {
+    /// True when this error came out of the device layer after the
+    /// submission retry budget was exhausted — the trigger for
+    /// `--on-device-error fallback` (the Lloyd driver swaps the GPU
+    /// session for the CPU multi executor mid-fit).
+    pub fn is_device_exhausted(&self) -> bool {
+        self.0.contains(DEVICE_EXHAUSTED_MARKER)
+    }
+}
+
+/// Marker the GPU session stamps into an [`ExecError`] when transient
+/// device faults outlived the retry budget (vs. configuration errors,
+/// which must fail regardless of `--on-device-error`).
+pub const DEVICE_EXHAUSTED_MARKER: &str = "device retries exhausted";
+
 impl std::fmt::Display for ExecError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "executor error: {}", self.0)
@@ -302,6 +317,14 @@ pub trait AssignSession {
     /// [`crate::runtime::DeviceStats`] deltas since it opened.
     fn device_counters(&self) -> DeviceCounters {
         DeviceCounters::default()
+    }
+
+    /// Fault/recovery counters accumulated over the session (injected /
+    /// retried / recovered / permanent); all zero for sessions with no
+    /// recovery path (the default). The GPU session reports its
+    /// submission-retry tallies.
+    fn fault_counters(&self) -> crate::runtime::faults::FaultCounters {
+        crate::runtime::faults::FaultCounters::default()
     }
 
     /// Consume the session, returning the last pass's statistics (the

@@ -338,6 +338,12 @@ impl<'a> StreamEngine<'a> {
         self.io
     }
 
+    /// Fault/recovery counters from the backing source's retry layer
+    /// (all-zero for in-memory sources).
+    pub fn fault_counters(&self) -> crate::runtime::faults::FaultCounters {
+        self.source.fault_counters()
+    }
+
     /// One full assignment pass over the source against `centroids`:
     /// the streamed equivalent of one in-core
     /// [`crate::exec::AssignSession::step`]. Waves overlap the next
@@ -445,21 +451,34 @@ impl<'a> StreamEngine<'a> {
             if !to_fill.is_empty() {
                 jobs.push(Box::new(move || {
                     let t = Instant::now();
-                    let (mut bytes, mut loaded, mut err) = (0u64, 0u64, None);
-                    'fill: for (slot_idx, rs) in to_fill {
-                        for (buf, r) in ring[slot_idx].iter_mut().zip(rs.iter()) {
-                            match buf.load_from(source, r.clone()) {
-                                Ok(b) => {
-                                    bytes += b;
-                                    loaded += 1;
-                                }
-                                Err(e) => {
-                                    err = Some(e);
-                                    break 'fill;
+                    // A panicking source must surface as a typed error in
+                    // the ring handoff, not unwind through `step` — the
+                    // consumer turns it into `ExecError` like any read
+                    // failure.
+                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        move || {
+                            let (mut bytes, mut loaded, mut err) = (0u64, 0u64, None);
+                            'fill: for (slot_idx, rs) in to_fill {
+                                for (buf, r) in ring[slot_idx].iter_mut().zip(rs.iter()) {
+                                    match buf.load_from(source, r.clone()) {
+                                        Ok(b) => {
+                                            bytes += b;
+                                            loaded += 1;
+                                        }
+                                        Err(e) => {
+                                            err = Some(e);
+                                            break 'fill;
+                                        }
+                                    }
                                 }
                             }
-                        }
-                    }
+                            (bytes, loaded, err)
+                        },
+                    ));
+                    let (bytes, loaded, err) = match run {
+                        Ok(v) => v,
+                        Err(payload) => (0, 0, Some(DataError::from_panic(payload))),
+                    };
                     WaveOut::Read {
                         bytes,
                         chunks: loaded,
@@ -714,6 +733,52 @@ mod tests {
         let chunks = split_ranges(g.dataset.n(), threads);
         let mut eng = StreamEngine::with_chunks(&src, 3, Metric::Euclidean, threads, chunks);
         assert_eq!(eng.center_of_gravity().unwrap(), reference);
+    }
+
+    #[test]
+    fn prefetch_worker_panic_surfaces_as_typed_error() {
+        // Satellite regression: a source that dies inside the prefetch
+        // job must fail the pass with a typed worker error on the
+        // consumer side — never an unwinding panic through `step`.
+        struct PanickySource<'a> {
+            inner: MemShardSource<'a>,
+            panic_at: usize,
+        }
+        impl ShardSource for PanickySource<'_> {
+            fn n(&self) -> usize {
+                self.inner.n()
+            }
+            fn m(&self) -> usize {
+                self.inner.m()
+            }
+            fn kind(&self) -> &'static str {
+                "mem"
+            }
+            fn load_rows(
+                &self,
+                range: Range<usize>,
+                out: &mut [f32],
+            ) -> Result<u64, DataError> {
+                if range.start >= self.panic_at {
+                    panic!("simulated prefetch worker death");
+                }
+                self.inner.load_rows(range, out)
+            }
+            fn gather_rows(&self, idx: &[usize], out: &mut [f32]) -> Result<u64, DataError> {
+                self.inner.gather_rows(idx, out)
+            }
+        }
+        let g = generate(&GmmSpec::new(4_000, 4, 3).seed(9));
+        let src = PanickySource {
+            inner: MemShardSource::new(&g.dataset),
+            panic_at: 2_000,
+        };
+        let chunks = split_ranges(4_000, 8);
+        let mut eng = StreamEngine::with_chunks(&src, 3, Metric::Euclidean, 2, chunks);
+        let cent = g.dataset.gather(&[0, 500, 999]);
+        let err = eng.step(&cent).unwrap_err();
+        assert!(err.0.contains("worker error"), "{err:?}");
+        assert!(err.0.contains("simulated prefetch worker death"), "{err:?}");
     }
 
     #[test]

@@ -1,0 +1,552 @@
+//! Versioned, checksummed fit checkpoints (`.pck`) — the durability
+//! half of the recovery layer (the retry half lives in
+//! [`crate::runtime::faults`]).
+//!
+//! A checkpoint captures everything the drivers need to continue a fit
+//! **bit-equal** to the uninterrupted trajectory: the iteration count,
+//! the full centroid table, the per-centroid counts (the mini-batch
+//! driver's per-centroid step-size state `v_c`), the PRNG position
+//! (mini-batch sampling), and the config identity hash that guards
+//! against resuming under different arithmetic. Bounds-policy state
+//! (Hamerly / Yinyang) is deliberately **not** captured: resumed
+//! sessions re-arm their bounds conservatively from the restored
+//! centroid table, and every bounds policy in this crate is exact —
+//! fresh bounds change only the amount of skipped work, never a label
+//! — so the resumed trajectory stays bitwise identical
+//! (`tests/chaos.rs` pins this).
+//!
+//! ## On-disk format (little-endian)
+//!
+//! ```text
+//! magic      8  b"PARCLCKP"
+//! version    4  u32 (currently 1)
+//! mode       4  u32 (0 lloyd | 1 stream full-pass | 2 stream mini-batch)
+//! k          4  u32
+//! m          4  u32
+//! n          8  u64
+//! seed       8  u64
+//! cfg_hash   8  u64   identity hash of the trajectory-defining config
+//! iteration  8  u64
+//! prng_state 8  u64   (0 when the mode never draws after init)
+//! prng_inc   8  u64
+//! counts     8k u64 × k
+//! centroids  4km f32 × k·m
+//! crc        4  u32   CRC-32 (IEEE) over everything after the magic
+//! ```
+//!
+//! Writes are atomic: the bytes go to a sibling `<path>.tmp` which is
+//! then renamed over the target, so a kill mid-write can never leave a
+//! torn `.pck` — the previous checkpoint survives intact. Loads verify
+//! magic, version, CRC and buffer lengths and return typed
+//! [`CheckpointError`]s, never panics.
+
+use std::fmt;
+use std::io::Write;
+use std::path::Path;
+
+use crate::data::binfmt::Crc32;
+
+/// File magic of the checkpoint format.
+pub const CHECKPOINT_MAGIC: &[u8; 8] = b"PARCLCKP";
+/// Current format version.
+pub const CHECKPOINT_VERSION: u32 = 1;
+
+/// Which driver wrote the checkpoint — resuming under a different
+/// driver is a config mismatch, not a best-effort conversion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineMode {
+    /// In-core Lloyd driver ([`crate::kmeans::lloyd`]).
+    Lloyd,
+    /// Streaming full-pass driver ([`crate::kmeans::stream`]).
+    StreamFull,
+    /// Streaming mini-batch driver (Sculley update + PRNG sampling).
+    StreamMiniBatch,
+}
+
+impl EngineMode {
+    fn as_u32(self) -> u32 {
+        match self {
+            EngineMode::Lloyd => 0,
+            EngineMode::StreamFull => 1,
+            EngineMode::StreamMiniBatch => 2,
+        }
+    }
+
+    fn from_u32(v: u32) -> Option<EngineMode> {
+        match v {
+            0 => Some(EngineMode::Lloyd),
+            1 => Some(EngineMode::StreamFull),
+            2 => Some(EngineMode::StreamMiniBatch),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineMode::Lloyd => "lloyd",
+            EngineMode::StreamFull => "stream-full",
+            EngineMode::StreamMiniBatch => "stream-minibatch",
+        }
+    }
+}
+
+/// Typed checkpoint failures. `Format` covers torn/corrupt/foreign
+/// files (truncation, bad magic, CRC mismatch, version skew);
+/// `Mismatch` covers structurally valid checkpoints that belong to a
+/// different run configuration.
+#[derive(Debug)]
+pub enum CheckpointError {
+    Io(std::io::Error),
+    Format(String),
+    Mismatch(String),
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "checkpoint io error: {e}"),
+            CheckpointError::Format(s) => write!(f, "checkpoint format error: {s}"),
+            CheckpointError::Mismatch(s) => {
+                write!(f, "checkpoint does not match this run: {s}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
+}
+
+/// One resumable fit state. See the module docs for exactly what is —
+/// and is not — captured.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub mode: EngineMode,
+    pub k: usize,
+    pub m: usize,
+    pub n: usize,
+    pub seed: u64,
+    /// Identity hash of the trajectory-defining config fields
+    /// ([`config_identity_hash`]); load-time guard against resuming
+    /// under different arithmetic.
+    pub config_hash: u64,
+    /// Iterations already completed when this state was captured.
+    pub iteration: u64,
+    /// PRNG position `(state, inc)` — meaningful for
+    /// [`EngineMode::StreamMiniBatch`] (per-iteration sampling); zero
+    /// for modes that never draw after init.
+    pub prng_state: u64,
+    pub prng_inc: u64,
+    /// Per-centroid counts: the mini-batch driver's cumulative
+    /// membership `v_c` (its step-size state), last-pass assignment
+    /// counts for the other modes (informational).
+    pub counts: Vec<u64>,
+    /// Row-major (k × m) centroid table at `iteration`.
+    pub centroids: Vec<f32>,
+}
+
+impl Checkpoint {
+    /// Serialize and write atomically: bytes land in `<path>.tmp`,
+    /// which is fsync'd and renamed over `path`. A crash mid-write
+    /// leaves the previous checkpoint untouched; a torn temp file is
+    /// never loaded (wrong name) and is overwritten by the next write.
+    pub fn write_atomic(&self, path: &Path) -> Result<(), CheckpointError> {
+        if self.counts.len() != self.k || self.centroids.len() != self.k * self.m {
+            return Err(CheckpointError::Format(format!(
+                "inconsistent checkpoint shape: k={} m={} counts={} centroids={}",
+                self.k,
+                self.m,
+                self.counts.len(),
+                self.centroids.len()
+            )));
+        }
+        let body = self.to_bytes();
+        let tmp = tmp_path(path);
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&body)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            8 + 4 * 4 + 8 * 5 + 8 * self.counts.len() + 4 * self.centroids.len() + 4,
+        );
+        out.extend_from_slice(CHECKPOINT_MAGIC);
+        out.extend_from_slice(&CHECKPOINT_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.mode.as_u32().to_le_bytes());
+        out.extend_from_slice(&(self.k as u32).to_le_bytes());
+        out.extend_from_slice(&(self.m as u32).to_le_bytes());
+        out.extend_from_slice(&(self.n as u64).to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.config_hash.to_le_bytes());
+        out.extend_from_slice(&self.iteration.to_le_bytes());
+        out.extend_from_slice(&self.prng_state.to_le_bytes());
+        out.extend_from_slice(&self.prng_inc.to_le_bytes());
+        for &c in &self.counts {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+        for &v in &self.centroids {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut crc = Crc32::new();
+        crc.update(&out[CHECKPOINT_MAGIC.len()..]);
+        out.extend_from_slice(&crc.finish().to_le_bytes());
+        out
+    }
+
+    /// Load and fully verify a checkpoint. Any structural defect —
+    /// truncation, foreign magic, version skew, corrupt CRC, shape
+    /// inconsistency — is a typed [`CheckpointError::Format`], never a
+    /// panic.
+    pub fn load(path: &Path) -> Result<Checkpoint, CheckpointError> {
+        let bytes = std::fs::read(path)?;
+        Self::from_bytes(&bytes)
+    }
+
+    fn from_bytes(bytes: &[u8]) -> Result<Checkpoint, CheckpointError> {
+        const FIXED: usize = 8 + 4 + 4 + 4 + 4 + 8 + 8 + 8 + 8 + 8 + 8;
+        if bytes.len() < FIXED + 4 {
+            return Err(CheckpointError::Format(format!(
+                "truncated: {} bytes, header alone needs {}",
+                bytes.len(),
+                FIXED + 4
+            )));
+        }
+        if &bytes[..8] != CHECKPOINT_MAGIC {
+            return Err(CheckpointError::Format(
+                "bad magic (not a parclust checkpoint)".into(),
+            ));
+        }
+        let mut at = 8usize;
+        let mut u32_at = |bytes: &[u8], at: &mut usize| -> u32 {
+            let v = u32::from_le_bytes(bytes[*at..*at + 4].try_into().unwrap());
+            *at += 4;
+            v
+        };
+        let mut u64_at = |bytes: &[u8], at: &mut usize| -> u64 {
+            let v = u64::from_le_bytes(bytes[*at..*at + 8].try_into().unwrap());
+            *at += 8;
+            v
+        };
+        let version = u32_at(bytes, &mut at);
+        if version != CHECKPOINT_VERSION {
+            return Err(CheckpointError::Format(format!(
+                "version {version} (this build reads version {CHECKPOINT_VERSION})"
+            )));
+        }
+        let mode_raw = u32_at(bytes, &mut at);
+        let mode = EngineMode::from_u32(mode_raw).ok_or_else(|| {
+            CheckpointError::Format(format!("unknown engine mode {mode_raw}"))
+        })?;
+        let k = u32_at(bytes, &mut at) as usize;
+        let m = u32_at(bytes, &mut at) as usize;
+        let n = u64_at(bytes, &mut at) as usize;
+        let seed = u64_at(bytes, &mut at);
+        let config_hash = u64_at(bytes, &mut at);
+        let iteration = u64_at(bytes, &mut at);
+        let prng_state = u64_at(bytes, &mut at);
+        let prng_inc = u64_at(bytes, &mut at);
+
+        let need = at + 8 * k + 4 * k * m + 4;
+        if bytes.len() != need {
+            return Err(CheckpointError::Format(format!(
+                "truncated or padded: {} bytes, k={k} m={m} needs exactly {need}",
+                bytes.len()
+            )));
+        }
+        let mut crc = Crc32::new();
+        crc.update(&bytes[8..bytes.len() - 4]);
+        let stored =
+            u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        if stored != crc.finish() {
+            return Err(CheckpointError::Format(
+                "checksum mismatch — checkpoint corrupt".into(),
+            ));
+        }
+        let mut counts = Vec::with_capacity(k);
+        for _ in 0..k {
+            counts.push(u64_at(bytes, &mut at));
+        }
+        let mut centroids = Vec::with_capacity(k * m);
+        for _ in 0..k * m {
+            centroids.push(f32::from_le_bytes(
+                bytes[at..at + 4].try_into().unwrap(),
+            ));
+            at += 4;
+        }
+        Ok(Checkpoint {
+            mode,
+            k,
+            m,
+            n,
+            seed,
+            config_hash,
+            iteration,
+            prng_state,
+            prng_inc,
+            counts,
+            centroids,
+        })
+    }
+
+    /// Guard a resume: every identity field must match the run being
+    /// resumed, else [`CheckpointError::Mismatch`] names the first
+    /// divergence. Called by the drivers before overwriting any state.
+    pub fn validate_for(
+        &self,
+        mode: EngineMode,
+        k: usize,
+        m: usize,
+        n: usize,
+        seed: u64,
+        config_hash: u64,
+    ) -> Result<(), CheckpointError> {
+        if self.mode != mode {
+            return Err(CheckpointError::Mismatch(format!(
+                "engine mode {} vs run's {}",
+                self.mode.name(),
+                mode.name()
+            )));
+        }
+        if self.k != k || self.m != m || self.n != n {
+            return Err(CheckpointError::Mismatch(format!(
+                "shape (k={} m={} n={}) vs run's (k={k} m={m} n={n})",
+                self.k, self.m, self.n
+            )));
+        }
+        if self.seed != seed {
+            return Err(CheckpointError::Mismatch(format!(
+                "seed {} vs run's {seed}",
+                self.seed
+            )));
+        }
+        if self.config_hash != config_hash {
+            return Err(CheckpointError::Mismatch(
+                "config identity hash differs (metric / init / bounds / \
+                 score path / tol / engine / mini-batch changed since the \
+                 checkpoint was written)"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn tmp_path(path: &Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    std::path::PathBuf::from(os)
+}
+
+/// SplitMix64 finalizer (same mixer as the fault plan's decisions).
+fn mix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Hash of the config fields that define the fit trajectory — the
+/// fields a resume must not change. Deliberately excludes `max_iters`
+/// (resuming with a larger budget is the point), `threads` (every
+/// regime is bit-deterministic across thread counts), retry/fault
+/// knobs (recovery never changes results) and output paths.
+pub fn config_identity_hash(cfg: &crate::kmeans::KMeansConfig, n: usize, m: usize) -> u64 {
+    let mut h = 0xF10u64;
+    let mut fold = |v: u64| h = mix(h ^ v);
+    fold(cfg.k as u64);
+    fold(n as u64);
+    fold(m as u64);
+    fold(cfg.seed);
+    fold(cfg.tol.to_bits() as u64);
+    let mut fold_str = |s: &str| {
+        let mut acc = 0xCAFEu64;
+        for b in s.bytes() {
+            acc = mix(acc ^ b as u64);
+        }
+        h = mix(h ^ acc);
+    };
+    fold_str(cfg.metric.name());
+    fold_str(cfg.init.name());
+    fold_str(cfg.bounds.name());
+    fold_str(cfg.score_path.name());
+    fold_str(cfg.engine.name());
+    let mut fold2 = |v: u64| h = mix(h ^ v);
+    fold2(cfg.mini_batch.map(|b| b as u64 + 1).unwrap_or(0));
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("parclust_checkpoint");
+        let _ = std::fs::create_dir_all(&dir);
+        dir.join(name)
+    }
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            mode: EngineMode::StreamMiniBatch,
+            k: 3,
+            m: 2,
+            n: 100,
+            seed: 42,
+            config_hash: 0xDEAD_BEEF,
+            iteration: 7,
+            prng_state: 0x1234_5678_9ABC_DEF0,
+            prng_inc: 0x2425,
+            counts: vec![10, 20, 70],
+            centroids: vec![1.0, -2.5, 3.25, 0.0, -0.125, 7.5],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let ck = sample();
+        let path = tmp("rt.pck");
+        ck.write_atomic(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck, "checkpoint roundtrip must be bit-exact");
+        // no temp file left behind
+        assert!(!tmp_path(&path).exists());
+    }
+
+    #[test]
+    fn rewrite_replaces_atomically() {
+        let path = tmp("rw.pck");
+        let mut ck = sample();
+        ck.write_atomic(&path).unwrap();
+        ck.iteration = 8;
+        ck.centroids[0] = 99.0;
+        ck.write_atomic(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.iteration, 8);
+        assert_eq!(back.centroids[0], 99.0);
+    }
+
+    #[test]
+    fn truncation_is_a_typed_format_error() {
+        let ck = sample();
+        let path = tmp("trunc.pck");
+        ck.write_atomic(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        for cut in [0, 4, 11, full.len() / 2, full.len() - 1] {
+            let p = tmp("trunc_cut.pck");
+            std::fs::write(&p, &full[..cut]).unwrap();
+            match Checkpoint::load(&p) {
+                Err(CheckpointError::Format(_)) => {}
+                other => panic!("cut at {cut}: expected Format error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_fails_crc() {
+        let ck = sample();
+        let path = tmp("corrupt.pck");
+        ck.write_atomic(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        match Checkpoint::load(&path) {
+            Err(CheckpointError::Format(msg)) => {
+                assert!(msg.contains("checksum"), "{msg}")
+            }
+            other => panic!("expected CRC failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn version_skew_and_bad_magic_are_rejected() {
+        let ck = sample();
+        let path = tmp("ver.pck");
+        ck.write_atomic(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // bump version (and fix nothing else — CRC covers it, but the
+        // version check must fire first for a clear message)
+        bytes[8] = 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        match Checkpoint::load(&path) {
+            Err(CheckpointError::Format(msg)) => assert!(msg.contains("version"), "{msg}"),
+            other => panic!("expected version skew error, got {other:?}"),
+        }
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&path, &bytes).unwrap();
+        match Checkpoint::load(&path) {
+            Err(CheckpointError::Format(msg)) => assert!(msg.contains("magic"), "{msg}"),
+            other => panic!("expected magic error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn validate_for_names_the_divergence() {
+        let ck = sample();
+        assert!(ck
+            .validate_for(EngineMode::StreamMiniBatch, 3, 2, 100, 42, 0xDEAD_BEEF)
+            .is_ok());
+        let cases: Vec<(CheckpointError, &str)> = vec![
+            (
+                ck.validate_for(EngineMode::Lloyd, 3, 2, 100, 42, 0xDEAD_BEEF)
+                    .unwrap_err(),
+                "mode",
+            ),
+            (
+                ck.validate_for(EngineMode::StreamMiniBatch, 4, 2, 100, 42, 0xDEAD_BEEF)
+                    .unwrap_err(),
+                "shape",
+            ),
+            (
+                ck.validate_for(EngineMode::StreamMiniBatch, 3, 2, 100, 43, 0xDEAD_BEEF)
+                    .unwrap_err(),
+                "seed",
+            ),
+            (
+                ck.validate_for(EngineMode::StreamMiniBatch, 3, 2, 100, 42, 1)
+                    .unwrap_err(),
+                "hash",
+            ),
+        ];
+        for (err, what) in cases {
+            match err {
+                CheckpointError::Mismatch(msg) => {
+                    assert!(!msg.is_empty(), "{what}: {msg}")
+                }
+                other => panic!("{what}: expected Mismatch, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn identity_hash_tracks_trajectory_fields_only() {
+        use crate::exec::BoundsPolicy;
+        use crate::kmeans::KMeansConfig;
+        let a = KMeansConfig::new(4).seed(9);
+        let base = config_identity_hash(&a, 1000, 8);
+        // max_iters and threads are free to change on resume
+        assert_eq!(
+            config_identity_hash(&a.clone().max_iters(77).threads(1), 1000, 8),
+            base
+        );
+        // trajectory-defining fields are not
+        assert_ne!(config_identity_hash(&a.clone().seed(10), 1000, 8), base);
+        assert_ne!(config_identity_hash(&a.clone().tol(0.5), 1000, 8), base);
+        assert_ne!(
+            config_identity_hash(&a.clone().bounds(BoundsPolicy::Yinyang), 1000, 8),
+            base
+        );
+        assert_ne!(config_identity_hash(&a.clone().mini_batch(64), 1000, 8), base);
+        assert_ne!(config_identity_hash(&a, 1001, 8), base);
+    }
+}

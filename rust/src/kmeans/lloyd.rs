@@ -11,9 +11,11 @@
 use std::time::Instant;
 
 use crate::data::Dataset;
-use crate::exec::Executor;
+use crate::exec::multi::MultiExecutor;
+use crate::exec::{AssignSession, ExecError, Executor};
+use crate::kmeans::checkpoint::{self, Checkpoint, EngineMode};
 use crate::kmeans::init::initialize;
-use crate::kmeans::{FitResult, KMeansConfig, KMeansError};
+use crate::kmeans::{FitResult, KMeansConfig, KMeansError, OnDeviceError};
 use crate::metric::Metric;
 use crate::metrics::{RunMetrics, StageTimer};
 
@@ -26,6 +28,97 @@ pub mod stage {
     pub const ASSIGN_UPDATE: &str = "iterate.kernel.assign";
     pub const FORM_CENTROIDS: &str = "iterate.form_centroids";
     pub const CONVERGENCE: &str = "iterate.congruence_check";
+    pub const CHECKPOINT: &str = "durability.checkpoint_write";
+}
+
+/// Drive `session` from the current `centroids`/`iterations` to
+/// convergence or `max_iters`, checkpointing every
+/// `cfg.checkpoint_every` completed iterations.
+///
+/// Returns `Ok(Some(err))` — instead of failing — when a step exhausts
+/// device retries and `catch_exhausted` is set: the caller then swaps
+/// executors and re-enters with the state exactly as the failed
+/// iteration found it (the failed pass formed no centroids and bumped
+/// no counter, so re-running it on the CPU lands on the same
+/// trajectory).
+#[allow(clippy::too_many_arguments)]
+fn iterate(
+    session: &mut dyn AssignSession,
+    cfg: &KMeansConfig,
+    k: usize,
+    m: usize,
+    n: usize,
+    config_hash: u64,
+    timer: &mut StageTimer,
+    centroids: &mut Vec<f32>,
+    inertia: &mut f64,
+    iterations: &mut usize,
+    converged: &mut bool,
+    catch_exhausted: bool,
+) -> Result<Option<ExecError>, KMeansError> {
+    while *iterations < cfg.max_iters {
+        let will_ckpt = cfg.checkpoint_every > 0
+            && (*iterations + 1) % cfg.checkpoint_every == 0;
+
+        let t = Instant::now();
+        let (new_centroids, step_inertia, counts) = match session.step(centroids) {
+            Ok(stats) => (
+                stats.centroids(centroids, k, m),
+                stats.inertia,
+                if will_ckpt { stats.counts.clone() } else { Vec::new() },
+            ),
+            Err(e) if catch_exhausted && e.is_device_exhausted() => {
+                return Ok(Some(e));
+            }
+            Err(e) => return Err(e.into()),
+        };
+        timer.add(stage::ASSIGN_UPDATE, t.elapsed());
+
+        let t = Instant::now();
+        *inertia = step_inertia;
+        timer.add(stage::FORM_CENTROIDS, t.elapsed());
+
+        // paper step 8: compare centers of gravity of the last two
+        // iterations, single-threaded on the leader.
+        let t = Instant::now();
+        let shift = max_centroid_shift(centroids, &new_centroids, k, m);
+        timer.add(stage::CONVERGENCE, t.elapsed());
+
+        *centroids = new_centroids;
+        *iterations += 1;
+
+        if will_ckpt {
+            if let Some(path) = &cfg.checkpoint_path {
+                let t = Instant::now();
+                let ck = Checkpoint {
+                    mode: EngineMode::Lloyd,
+                    k,
+                    m,
+                    n,
+                    seed: cfg.seed,
+                    config_hash,
+                    iteration: *iterations as u64,
+                    prng_state: 0,
+                    prng_inc: 0,
+                    counts,
+                    centroids: centroids.clone(),
+                };
+                ck.write_atomic(path).map_err(|e| {
+                    KMeansError::Config(format!(
+                        "checkpoint write {}: {e}",
+                        path.display()
+                    ))
+                })?;
+                timer.add(stage::CHECKPOINT, t.elapsed());
+            }
+        }
+
+        if shift <= cfg.tol {
+            *converged = true;
+            break;
+        }
+    }
+    Ok(None)
 }
 
 /// Run the full pipeline on `exec`. Called through [`crate::kmeans::fit`].
@@ -49,6 +142,27 @@ pub fn run(
     let mut centroids = init.centroids.clone();
     debug_assert_eq!(centroids.len(), k * m);
 
+    // ----- durability: resume from a checkpoint --------------------------
+    // Initialization above is fully deterministic from the config, so a
+    // resumed run replays it and then jumps the loop state forward. The
+    // assignment session (created below) re-arms its pruning bounds
+    // conservatively from the restored table; every bounds policy is
+    // exact, so the trajectory stays bitwise identical to the
+    // uninterrupted run (pinned by tests/chaos.rs).
+    let config_hash = checkpoint::config_identity_hash(cfg, ds.n(), m);
+    let mut iterations = 0usize;
+    if let Some(rp) = &cfg.resume {
+        let ck = Checkpoint::load(rp).map_err(|e| {
+            KMeansError::Config(format!("resume {}: {e}", rp.display()))
+        })?;
+        ck.validate_for(EngineMode::Lloyd, k, m, ds.n(), cfg.seed, config_hash)
+            .map_err(|e| {
+                KMeansError::Config(format!("resume {}: {e}", rp.display()))
+            })?;
+        centroids = ck.centroids;
+        iterations = ck.iteration as usize;
+    }
+
     // ----- paper steps 4-8: iterate to congruence -------------------------
     // The assignment stage runs through a stateful session: scratch
     // buffers (and, on the CPU regimes' Euclidean path, the
@@ -67,40 +181,83 @@ pub fn run(
     // substituting different arithmetic.
     let mut session = exec.assign_session_opts(ds, k, cfg.metric, cfg.score_path, cfg.bounds)?;
     let mut inertia = f64::INFINITY;
-    let mut iterations = 0usize;
     let mut converged = false;
 
-    while iterations < cfg.max_iters {
-        let t = Instant::now();
-        let stats = session.step(&centroids)?;
-        timer.add(stage::ASSIGN_UPDATE, t.elapsed());
+    let exhausted = iterate(
+        session.as_mut(),
+        cfg,
+        k,
+        m,
+        ds.n(),
+        config_hash,
+        &mut timer,
+        &mut centroids,
+        &mut inertia,
+        &mut iterations,
+        &mut converged,
+        cfg.on_device_error == OnDeviceError::Fallback,
+    )?;
 
-        let t = Instant::now();
-        let new_centroids = stats.centroids(&centroids, k, m);
-        inertia = stats.inertia;
-        timer.add(stage::FORM_CENTROIDS, t.elapsed());
+    let prune;
+    let assign_path;
+    let bounds_policy;
+    let f32c;
+    let device;
+    let mut faults;
+    let labels;
+    if let Some(err) = exhausted {
+        // ----- graceful degradation ----------------------------------
+        // The device gave out mid-fit and the config opts into
+        // fallback: keep the GPU session's device/fault counters for
+        // the record, swap the remaining iterations onto the CPU multi
+        // executor, and continue. The failed pass formed no centroids,
+        // so the CPU session re-runs it from the same table — regime
+        // bit-parity keeps the whole trajectory identical to a
+        // fault-free run.
+        crate::log_warn!(
+            "device retries exhausted at iteration {iterations}; \
+             degrading to the cpu multi executor ({err})"
+        );
+        faults = session.fault_counters();
+        let gpu_device = session.device_counters();
+        drop(session);
 
-        // paper step 8: compare centers of gravity of the last two
-        // iterations, single-threaded on the leader.
-        let t = Instant::now();
-        let shift = max_centroid_shift(&centroids, &new_centroids, k, m);
-        timer.add(stage::CONVERGENCE, t.elapsed());
+        let cpu = MultiExecutor::new(cfg.threads);
+        let mut cpu_session =
+            cpu.assign_session_opts(ds, k, cfg.metric, cfg.score_path, cfg.bounds)?;
+        let again = iterate(
+            cpu_session.as_mut(),
+            cfg,
+            k,
+            m,
+            ds.n(),
+            config_hash,
+            &mut timer,
+            &mut centroids,
+            &mut inertia,
+            &mut iterations,
+            &mut converged,
+            false,
+        )?;
+        debug_assert!(again.is_none(), "cpu sessions have no device to exhaust");
 
-        centroids = new_centroids;
-        iterations += 1;
-
-        if shift <= cfg.tol {
-            converged = true;
-            break;
-        }
+        prune = cpu_session.prune_counters();
+        assign_path = format!("degraded:{}", cpu_session.path_name());
+        bounds_policy = cpu_session.bounds_policy().to_string();
+        f32c = cpu_session.f32_counters();
+        device = gpu_device;
+        faults.merge(&cpu_session.fault_counters());
+        faults.degraded = 1;
+        labels = cpu_session.finish().labels;
+    } else {
+        prune = session.prune_counters();
+        assign_path = session.path_name().to_string();
+        bounds_policy = session.bounds_policy().to_string();
+        f32c = session.f32_counters();
+        device = session.device_counters();
+        faults = session.fault_counters();
+        labels = session.finish().labels;
     }
-
-    let prune = session.prune_counters();
-    let assign_path = session.path_name().to_string();
-    let bounds_policy = session.bounds_policy().to_string();
-    let f32c = session.f32_counters();
-    let device = session.device_counters();
-    let labels = session.finish().labels;
 
     let metrics = RunMetrics {
         regime: exec.name().to_string(),
@@ -118,6 +275,7 @@ pub fn run(
         f32: f32c,
         io: crate::exec::stream::IoCounters::default(),
         device,
+        faults,
     };
 
     Ok(FitResult {
@@ -321,6 +479,54 @@ mod tests {
         let res = run(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
         assert!(res.converged);
         assert!(res.diameter.is_none(), "random init skips the diameter stage");
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_identical() {
+        let g = generate(&GmmSpec::new(800, 6, 5).seed(31).spread(2.0));
+        let dir = std::env::temp_dir().join("parclust_lloyd_ck");
+        let _ = std::fs::create_dir_all(&dir);
+        let ck = dir.join("resume.pck");
+        let base = KMeansConfig::new(5).seed(21).max_iters(60);
+        let full = run(&g.dataset, &base, &SingleExecutor::new()).unwrap();
+        assert!(full.iterations > 3, "need a multi-iteration trajectory");
+        // "killed" run: stop after 3 iterations, checkpointing each one
+        let cut_cfg = base
+            .clone()
+            .max_iters(3)
+            .checkpoint_every(1)
+            .checkpoint_path(ck.clone());
+        let cut = run(&g.dataset, &cut_cfg, &SingleExecutor::new()).unwrap();
+        assert_eq!(cut.iterations, 3);
+        let resumed =
+            run(&g.dataset, &base.clone().resume(ck), &SingleExecutor::new()).unwrap();
+        assert_eq!(resumed.labels, full.labels, "labels must be bit-equal");
+        assert_eq!(resumed.centroids, full.centroids);
+        assert_eq!(resumed.inertia, full.inertia);
+        assert_eq!(resumed.iterations, full.iterations);
+        assert_eq!(resumed.converged, full.converged);
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_checkpoint() {
+        let g = generate(&GmmSpec::new(200, 4, 3).seed(7).spread(1.0));
+        let dir = std::env::temp_dir().join("parclust_lloyd_ck");
+        let _ = std::fs::create_dir_all(&dir);
+        let ck = dir.join("mismatch.pck");
+        let cfg = KMeansConfig::new(3)
+            .seed(5)
+            .max_iters(2)
+            .checkpoint_every(1)
+            .checkpoint_path(ck.clone());
+        run(&g.dataset, &cfg, &SingleExecutor::new()).unwrap();
+        // different seed ⇒ different trajectory identity ⇒ refuse
+        let err = run(
+            &g.dataset,
+            &KMeansConfig::new(3).seed(6).resume(ck),
+            &SingleExecutor::new(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("resume"), "{err}");
     }
 
     #[test]

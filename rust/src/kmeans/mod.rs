@@ -2,12 +2,14 @@
 //! public [`fit`] entry point that wires a regime-specific executor to the
 //! regime-agnostic pipeline (paper Algorithm 1 / 2).
 
+pub mod checkpoint;
 pub mod init;
 pub mod lloyd;
 pub mod select_k;
 pub mod stream;
 
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 use crate::data::binfmt;
 use crate::data::shard::{DiskShardSource, MemShardSource};
@@ -19,7 +21,36 @@ use crate::exec::single::SingleExecutor;
 use crate::exec::{BoundsPolicy, DiameterResult, ExecError, Executor, ScorePath};
 use crate::metric::Metric;
 use crate::metrics::RunMetrics;
+use crate::runtime::faults::{FaultPlan, RetryPolicy};
 use crate::runtime::Device;
+
+/// What [`fit`] does when GPU submission exhausts its retries mid-run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OnDeviceError {
+    /// Surface the exhaustion as an error (default — fail loudly).
+    Fail,
+    /// Drain retired work, swap the remaining iterations onto the CPU
+    /// multi executor, and record the degradation in the run metrics.
+    /// Results stay bit-identical (regime parity is a crate invariant).
+    Fallback,
+}
+
+impl OnDeviceError {
+    pub fn from_str(s: &str) -> Option<OnDeviceError> {
+        match s.to_ascii_lowercase().as_str() {
+            "fail" => Some(OnDeviceError::Fail),
+            "fallback" | "cpu" => Some(OnDeviceError::Fallback),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OnDeviceError::Fail => "fail",
+            OnDeviceError::Fallback => "fallback",
+        }
+    }
+}
 
 /// How the diameter stage (paper Eq. 3, O(n²)) bounds its cost.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -161,6 +192,24 @@ pub struct KMeansConfig {
     /// Streaming engine only: resident chunk-buffer byte budget
     /// (default [`crate::exec::stream::DEFAULT_MEMORY_BUDGET`]).
     pub memory_budget: Option<usize>,
+    /// Attempts per retriable operation (shard reads, `.pcb` open
+    /// verification, device submissions). `1` = no retries.
+    pub retries: u32,
+    /// Base backoff between retries; doubles per retry
+    /// ([`RetryPolicy::backoff_for`]).
+    pub retry_backoff_ms: u64,
+    /// Write a checkpoint every N completed iterations (`0` = off;
+    /// requires [`KMeansConfig::checkpoint_path`]).
+    pub checkpoint_every: usize,
+    /// Where checkpoints land (`.pck`, atomic temp-file + rename).
+    pub checkpoint_path: Option<PathBuf>,
+    /// Resume from this `.pck` instead of starting at iteration 0. The
+    /// checkpoint is validated against this config
+    /// ([`checkpoint::Checkpoint::validate_for`]) and the resumed
+    /// trajectory is bitwise identical to the uninterrupted run.
+    pub resume: Option<PathBuf>,
+    /// GPU-regime behaviour when device retries are exhausted.
+    pub on_device_error: OnDeviceError,
 }
 
 impl KMeansConfig {
@@ -183,6 +232,12 @@ impl KMeansConfig {
             engine: Engine::InCore,
             mini_batch: None,
             memory_budget: None,
+            retries: 3,
+            retry_backoff_ms: 5,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            resume: None,
+            on_device_error: OnDeviceError::Fail,
         }
     }
 
@@ -256,6 +311,59 @@ impl KMeansConfig {
         self
     }
 
+    pub fn retries(mut self, r: u32) -> Self {
+        self.retries = r.max(1);
+        self
+    }
+
+    pub fn retry_backoff_ms(mut self, ms: u64) -> Self {
+        self.retry_backoff_ms = ms;
+        self
+    }
+
+    pub fn checkpoint_every(mut self, every: usize) -> Self {
+        self.checkpoint_every = every;
+        self
+    }
+
+    pub fn checkpoint_path(mut self, p: PathBuf) -> Self {
+        self.checkpoint_path = Some(p);
+        self
+    }
+
+    pub fn resume(mut self, p: PathBuf) -> Self {
+        self.resume = Some(p);
+        self
+    }
+
+    pub fn on_device_error(mut self, o: OnDeviceError) -> Self {
+        self.on_device_error = o;
+        self
+    }
+
+    /// The typed retry policy the recovery layer applies to shard
+    /// reads, `.pcb` opens and device submissions.
+    pub fn retry_policy(&self) -> RetryPolicy {
+        RetryPolicy {
+            attempts: self.retries.max(1),
+            backoff: Duration::from_millis(self.retry_backoff_ms),
+        }
+    }
+
+    /// Durability knobs that must be coherent regardless of engine;
+    /// called from both [`KMeansConfig::validate`] and the streaming
+    /// validator.
+    pub fn validate_durability(&self) -> Result<(), KMeansError> {
+        if self.checkpoint_every > 0 && self.checkpoint_path.is_none() {
+            return Err(KMeansError::Config(
+                "checkpoint_every > 0 needs a checkpoint path \
+                 (use --checkpoint <file>)"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
     /// Validate against dataset shape; returns the resolved concrete
     /// regime.
     pub fn validate(&self, ds: &Dataset) -> Result<Regime, KMeansError> {
@@ -272,6 +380,7 @@ impl KMeansConfig {
         if self.max_iters == 0 {
             return Err(KMeansError::Config("max_iters must be >= 1".into()));
         }
+        self.validate_durability()?;
         if self.mini_batch.is_some() && self.engine != Engine::Stream {
             return Err(KMeansError::Config(
                 "mini-batch iterations are a streaming-engine mode \
@@ -404,7 +513,8 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig) -> Result<FitResult, KMeansError> {
         Regime::Gpu => {
             let device = Device::open(&cfg.resolve_artifact_dir())
                 .map_err(|e| KMeansError::Exec(ExecError(e)))?;
-            let exec = GpuExecutor::new(device, cfg.threads);
+            let mut exec = GpuExecutor::new(device, cfg.threads);
+            exec.set_retry_policy(cfg.retry_policy());
             exec.warmup(ds.n(), ds.m(), cfg.k)?;
             // Pin the shards on the device: the iterated assignment stage
             // then ships only the (k × m) centroid table per chunk.
@@ -424,8 +534,11 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig) -> Result<FitResult, KMeansError> {
 pub fn fit_pcb(path: &Path, cfg: &KMeansConfig) -> Result<FitResult, KMeansError> {
     match cfg.engine {
         Engine::Stream => {
-            let src = DiskShardSource::open(path)
-                .map_err(|e| KMeansError::Config(format!("open {}: {e}", path.display())))?;
+            let src =
+                DiskShardSource::open_with(path, cfg.retry_policy(), FaultPlan::from_env())
+                    .map_err(|e| {
+                        KMeansError::Config(format!("open {}: {e}", path.display()))
+                    })?;
             stream::run_stream(&src, cfg)
         }
         Engine::InCore => {

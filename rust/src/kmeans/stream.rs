@@ -40,6 +40,7 @@ use crate::exec::stream::{StreamEngine, DEFAULT_MEMORY_BUDGET};
 use crate::exec::{AssignStats, BoundsPolicy, ExecError, ScorePath};
 use crate::kernel::pruned::PruneCounters;
 use crate::kernel::{assign, simd};
+use crate::kmeans::checkpoint::{self, Checkpoint, EngineMode};
 use crate::kmeans::lloyd::{max_centroid_shift, stage};
 use crate::kmeans::{FitResult, InitMethod, KMeansConfig, KMeansError};
 use crate::metric::Metric;
@@ -85,6 +86,7 @@ pub(crate) fn validate_stream(cfg: &KMeansConfig, n: usize) -> Result<(), KMeans
             )));
         }
     }
+    cfg.validate_durability()?;
     if matches!(cfg.bounds, BoundsPolicy::Hamerly | BoundsPolicy::Yinyang) {
         if cfg.metric != crate::metric::Metric::Euclidean {
             return Err(KMeansError::Config(format!(
@@ -160,8 +162,36 @@ fn drive<'a>(
     let mut init_bytes = source.gather_rows(&idx, &mut centroids).map_err(read_err)?;
     timer.add(stage::INIT_COG, t.elapsed());
 
-    let mut inertia;
+    // ----- durability: resume from a checkpoint --------------------------
+    // Init above is deterministic from the config, so a resumed run
+    // replays it and then jumps the loop state forward. Mini-batch mode
+    // additionally restores the PRNG position (its iterations consume
+    // draws) and the per-centroid step-size state `v_c`.
+    let mode = if cfg.mini_batch.is_some() {
+        EngineMode::StreamMiniBatch
+    } else {
+        EngineMode::StreamFull
+    };
+    let config_hash = checkpoint::config_identity_hash(cfg, n, m);
     let mut iterations = 0usize;
+    let mut resumed_vc: Option<Vec<u64>> = None;
+    if let Some(rp) = &cfg.resume {
+        let ck = Checkpoint::load(rp).map_err(|e| {
+            KMeansError::Config(format!("resume {}: {e}", rp.display()))
+        })?;
+        ck.validate_for(mode, k, m, n, cfg.seed, config_hash)
+            .map_err(|e| {
+                KMeansError::Config(format!("resume {}: {e}", rp.display()))
+            })?;
+        centroids = ck.centroids;
+        iterations = ck.iteration as usize;
+        if mode == EngineMode::StreamMiniBatch {
+            rng = Pcg32::from_parts(ck.prng_state, ck.prng_inc);
+            resumed_vc = Some(ck.counts);
+        }
+    }
+
+    let mut inertia;
     let mut converged = false;
     let mut scanned = 0u64;
 
@@ -170,7 +200,7 @@ fn drive<'a>(
         let mut batch = Dataset::from_vec(b, m, vec![0.0; b * m])
             .expect("zero-filled batch buffer is finite");
         let mut stats = AssignStats::zeros(b, k, m);
-        let mut vc = vec![0u64; k];
+        let mut vc = resumed_vc.unwrap_or_else(|| vec![0u64; k]);
         while iterations < cfg.max_iters {
             let t = Instant::now();
             let mut idx = rng.sample_indices(n, b);
@@ -203,6 +233,34 @@ fn drive<'a>(
 
             centroids = new_centroids;
             iterations += 1;
+
+            if cfg.checkpoint_every > 0 && iterations % cfg.checkpoint_every == 0 {
+                if let Some(path) = &cfg.checkpoint_path {
+                    let t = Instant::now();
+                    let (prng_state, prng_inc) = rng.state_parts();
+                    let ck = Checkpoint {
+                        mode: EngineMode::StreamMiniBatch,
+                        k,
+                        m,
+                        n,
+                        seed: cfg.seed,
+                        config_hash,
+                        iteration: iterations as u64,
+                        prng_state,
+                        prng_inc,
+                        counts: vc.clone(),
+                        centroids: centroids.clone(),
+                    };
+                    ck.write_atomic(path).map_err(|e| {
+                        KMeansError::Config(format!(
+                            "checkpoint write {}: {e}",
+                            path.display()
+                        ))
+                    })?;
+                    timer.add(stage::CHECKPOINT, t.elapsed());
+                }
+            }
+
             if shift <= cfg.tol {
                 converged = true;
                 break;
@@ -218,6 +276,9 @@ fn drive<'a>(
         // ----- full-pass iterations: lloyd::run over the engine ----------
         inertia = f64::INFINITY;
         while iterations < cfg.max_iters {
+            let will_ckpt = cfg.checkpoint_every > 0
+                && (iterations + 1) % cfg.checkpoint_every == 0;
+
             let t = Instant::now();
             let stats = engine.step(&centroids).map_err(KMeansError::Exec)?;
             timer.add(stage::ASSIGN_UPDATE, t.elapsed());
@@ -226,6 +287,7 @@ fn drive<'a>(
             let t = Instant::now();
             let new_centroids = stats.centroids(&centroids, k, m);
             inertia = stats.inertia;
+            let counts = if will_ckpt { stats.counts.clone() } else { Vec::new() };
             timer.add(stage::FORM_CENTROIDS, t.elapsed());
 
             let t = Instant::now();
@@ -234,6 +296,32 @@ fn drive<'a>(
 
             centroids = new_centroids;
             iterations += 1;
+
+            if will_ckpt {
+                if let Some(path) = &cfg.checkpoint_path {
+                    let t = Instant::now();
+                    let ck = Checkpoint {
+                        mode: EngineMode::StreamFull,
+                        k,
+                        m,
+                        n,
+                        seed: cfg.seed,
+                        config_hash,
+                        iteration: iterations as u64,
+                        prng_state: 0,
+                        prng_inc: 0,
+                        counts,
+                        centroids: centroids.clone(),
+                    };
+                    ck.write_atomic(path).map_err(|e| {
+                        KMeansError::Config(format!(
+                            "checkpoint write {}: {e}",
+                            path.display()
+                        ))
+                    })?;
+                    timer.add(stage::CHECKPOINT, t.elapsed());
+                }
+            }
 
             if shift <= cfg.tol {
                 converged = true;
@@ -244,6 +332,7 @@ fn drive<'a>(
 
     let policy = engine.bounds_policy();
     let engine_prune = engine.prune_counters();
+    let faults = engine.fault_counters();
     let (stats, mut io) = engine.finish();
     io.bytes_read += init_bytes;
 
@@ -287,6 +376,7 @@ fn drive<'a>(
         f32: simd::F32Counters::default(),
         io,
         device: crate::exec::DeviceCounters::default(),
+        faults,
     };
 
     Ok(FitResult {

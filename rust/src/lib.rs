@@ -101,6 +101,45 @@
 //! entry points for the former, `Executor::assign_session` for the
 //! latter — with no driver change either time.
 //!
+//! ## Recovery layer (durability under faults)
+//!
+//! Multi-hour fits streamed from disk through a device pipeline are
+//! exactly where transient read errors and device hiccups stop being
+//! hypothetical, so durability is a cross-cutting layer with one
+//! invariant: **a fit that retries, resumes, or degrades is bitwise
+//! identical to the uninterrupted, fault-free fit** — recovery
+//! re-executes work, it never reorders the deterministic absorb/fold
+//! sequence. Four pieces ([`runtime::faults`] is the shared seam):
+//!
+//! * **Fault injection** — [`runtime::faults::FaultPlan`], a seeded
+//!   replayable schedule consulted at each fault point (`.pcb`
+//!   positioned reads, device submit/completion); armed via
+//!   `PARCLUST_FAULT_SEED` (+ rate knobs) or passed explicitly by the
+//!   chaos tests; a disabled plan costs one branch.
+//! * **Bounded retry** — [`runtime::faults::RetryPolicy`]
+//!   (`--retries`, `--retry-backoff-ms`; default 3 attempts) on shard
+//!   reads, `.pcb` opens, and device ticket submission, with in-order
+//!   re-submission so the statistics stream is unchanged. What fired
+//!   is reported as [`runtime::faults::FaultCounters`] in
+//!   `RunMetrics::faults`.
+//! * **Checkpoint/resume** — [`kmeans::checkpoint`]: a versioned,
+//!   CRC-guarded `.pck` snapshot (iteration, centroid table, counts,
+//!   sampler state) written atomically (temp + fsync + rename) every
+//!   `--checkpoint-every` iterations by both the in-core Lloyd driver
+//!   and the streaming driver; `--resume` validates shape/seed/config
+//!   identity and continues bit-equal — pruning bounds are deliberately
+//!   *not* persisted, sessions re-arm them conservatively (every
+//!   bounds policy is exact, so the trajectory cannot bend).
+//! * **Graceful degradation** — `--on-device-error fallback`: when a
+//!   device exhausts its retry budget mid-fit, the remaining
+//!   iterations swap onto the CPU multi executor (regime parity makes
+//!   the swap invisible in the output), recorded as
+//!   `faults.degraded` and a `degraded:` assign-path prefix.
+//!
+//! `tests/chaos.rs` pins all four under seeded fault schedules, across
+//! regimes × bounds policies; `benches/f10_recovery.rs` prices the
+//! layer (idle overhead, checkpoint cadence, recovery cost).
+//!
 //! ## Testing strategy: two parity tiers
 //!
 //! Every assignment path belongs to one of two correctness tiers, and

@@ -24,7 +24,7 @@ use parclust::data::{csv, Dataset};
 use parclust::cliargs::parse_human_int;
 use parclust::data::binfmt;
 use parclust::exec::regime::{allowed_for, Regime};
-use parclust::kmeans::{fit, fit_pcb, Engine, InitMethod, KMeansConfig};
+use parclust::kmeans::{fit, fit_pcb, Engine, InitMethod, KMeansConfig, OnDeviceError};
 use parclust::metric::Metric;
 use parclust::report;
 use parclust::simulate::{predict, Testbed, WorkloadSpec};
@@ -70,6 +70,20 @@ fn app() -> AppSpec {
                      "streaming engine: resident chunk-buffer bytes \
                       (e.g. 64m; default 256 MiB)")
                 .opt("scale", None, Some("none"), "none | minmax | zscore")
+                .opt("retries", None, None,
+                     "attempts per retriable shard read / device submit \
+                      (default 3; 1 disables retries)")
+                .opt("retry-backoff-ms", None, None,
+                     "base retry backoff, doubling per retry (default 5)")
+                .opt("checkpoint-every", None, None,
+                     "write a checkpoint every N iterations (needs --checkpoint)")
+                .opt("checkpoint", None, None,
+                     "checkpoint file (.pck, written atomically)")
+                .opt("resume", None, None,
+                     "resume from a .pck checkpoint (bit-equal continuation)")
+                .opt("on-device-error", None, None,
+                     "gpu retry exhaustion: fail (default) | fallback \
+                      (degrade to the cpu multi executor)")
                 .opt("labels", None, None, "write per-row labels to this path")
                 .opt("report", None, None, "write JSON run report to this path")
                 .opt("artifacts", None, None, "AOT artifact directory"),
@@ -236,6 +250,26 @@ fn build_run_config(p: &Parsed) -> Result<RunConfig, String> {
             return Err(format!("unknown scaling '{s}'"));
         }
         cfg.scaling = s.to_string();
+    }
+    if let Some(r) = p.get_usize("retries").map_err(|e| e.to_string())? {
+        cfg.kmeans.retries = r.max(1) as u32;
+    }
+    if let Some(b) = p.get_usize("retry-backoff-ms").map_err(|e| e.to_string())? {
+        cfg.kmeans.retry_backoff_ms = b as u64;
+    }
+    if let Some(every) = p.get_usize("checkpoint-every").map_err(|e| e.to_string())? {
+        cfg.kmeans.checkpoint_every = every;
+    }
+    if let Some(c) = p.get("checkpoint") {
+        cfg.kmeans.checkpoint_path = Some(PathBuf::from(c));
+    }
+    if let Some(r) = p.get("resume") {
+        cfg.kmeans.resume = Some(PathBuf::from(r));
+    }
+    if let Some(o) = p.get("on-device-error") {
+        cfg.kmeans.on_device_error = OnDeviceError::from_str(o).ok_or_else(|| {
+            format!("unknown on-device-error '{o}' (fail | fallback)")
+        })?;
     }
     if let Some(l) = p.get("labels") {
         cfg.labels_path = Some(PathBuf::from(l));

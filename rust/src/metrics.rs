@@ -14,6 +14,7 @@ use crate::exec::DeviceCounters;
 use crate::json::Json;
 use crate::kernel::pruned::PruneCounters;
 use crate::kernel::simd::F32Counters;
+use crate::runtime::faults::FaultCounters;
 
 /// Accumulates named durations and counters for one clustering run.
 #[derive(Default, Debug, Clone)]
@@ -113,6 +114,11 @@ pub struct RunMetrics {
     /// Device-pipeline counters (`exec::gpu` sessions); all zero for
     /// CPU regimes.
     pub device: DeviceCounters,
+    /// Recovery-layer counters (`runtime::faults`): injected faults,
+    /// retry attempts, recovered operations, permanent failures, and
+    /// whether the fit degraded from the GPU to the CPU executor. All
+    /// zero on a fault-free run with retries never exercised.
+    pub faults: FaultCounters,
 }
 
 impl RunMetrics {
@@ -169,6 +175,11 @@ impl RunMetrics {
                 "device_host_stall_s",
                 Json::num(self.device.host_stall_nanos as f64 * 1e-9),
             ),
+            ("faults_injected", Json::num(self.faults.injected as f64)),
+            ("faults_retried", Json::num(self.faults.retried as f64)),
+            ("faults_recovered", Json::num(self.faults.recovered as f64)),
+            ("faults_permanent", Json::num(self.faults.permanent as f64)),
+            ("degraded_to_cpu", Json::num(self.faults.degraded as f64)),
             ("stages", self.stages.to_json()),
         ])
     }
@@ -219,6 +230,20 @@ impl RunMetrics {
                     "none"
                 } else {
                     &self.bounds_policy
+                }
+            ));
+        }
+        if self.faults.any() {
+            s.push_str(&format!(
+                "  faults: {} injected / {} retried / {} recovered / {} permanent{}\n",
+                self.faults.injected,
+                self.faults.retried,
+                self.faults.recovered,
+                self.faults.permanent,
+                if self.faults.degraded > 0 {
+                    " / degraded to cpu"
+                } else {
+                    ""
                 }
             ));
         }
@@ -318,6 +343,13 @@ mod tests {
                 device_idle_nanos: 2_000_000,
                 host_stall_nanos: 5_000_000,
             },
+            faults: FaultCounters {
+                injected: 4,
+                retried: 5,
+                recovered: 4,
+                permanent: 0,
+                degraded: 1,
+            },
         };
         assert!((m.prune.rate() - 0.75).abs() < 1e-12);
         let j = m.to_json();
@@ -342,6 +374,17 @@ mod tests {
         assert_eq!(parsed.req_usize("device_h2d_bytes").unwrap(), 1_000_000);
         assert!(parsed.get("device_idle_s").is_some());
         assert!(parsed.get("device_host_stall_s").is_some());
+        assert_eq!(parsed.req_usize("faults_injected").unwrap(), 4);
+        assert_eq!(parsed.req_usize("faults_retried").unwrap(), 5);
+        assert_eq!(parsed.req_usize("faults_recovered").unwrap(), 4);
+        assert_eq!(parsed.req_usize("faults_permanent").unwrap(), 0);
+        assert_eq!(parsed.req_usize("degraded_to_cpu").unwrap(), 1);
+        assert!(
+            m.render().contains("4 injected / 5 retried / 4 recovered"),
+            "{}",
+            m.render()
+        );
+        assert!(m.render().contains("degraded to cpu"), "{}", m.render());
         assert!(parsed.get("stages").unwrap().get("assign").is_some());
         assert!(m.render().contains("75.0% pruned, bounds=yinyang"), "{}", m.render());
         assert!(m.render().contains("300 filtered / 200 swept"), "{}", m.render());

@@ -1,0 +1,644 @@
+//! Deterministic fault injection and bounded-backoff retry (recovery
+//! substrate).
+//!
+//! The paper's target regime — multi-hour fits streamed from disk and
+//! shipped through a device pipeline — is exactly where transient read
+//! errors and device hiccups stop being hypothetical. This module is
+//! the seam both halves of the recovery story share:
+//!
+//! * [`FaultPlan`] — a seeded, replayable schedule of injected faults.
+//!   Call sites ([`crate::data::shard::DiskShardSource`] positioned
+//!   reads, [`crate::runtime::Device`] submit/completion) ask
+//!   [`FaultPlan::should_fault`] at each fault point; the decision is a
+//!   pure hash of (seed, site, per-site ordinal), so the same plan
+//!   replays the same schedule at any single-threaded call site. A
+//!   disabled plan is a `None` — one branch, no atomics, zero cost.
+//! * [`RetryPolicy`] — bounded attempts with exponential backoff,
+//!   applied through [`retry_io`], which distinguishes *transient*
+//!   errors (`Interrupted` / `WouldBlock` — the kinds injected faults
+//!   wear) from *permanent* ones that must surface immediately.
+//! * [`FaultStats`] / [`FaultCounters`] — thread-safe tallies
+//!   (injected / retried / recovered / permanent / degraded) that each
+//!   recovering layer keeps and [`crate::metrics::RunMetrics`] reports.
+//!
+//! The contract every recovery path in the crate pins with tests: a
+//! fit that recovers from transient faults is **bitwise identical** to
+//! the fault-free fit — retries re-execute work, they never reorder
+//! the deterministic absorb/fold sequence.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Env var holding the fault seed; set (to any u64) to arm injection
+/// process-wide for paths that build their plan via [`FaultPlan::from_env`].
+pub const ENV_FAULT_SEED: &str = "PARCLUST_FAULT_SEED";
+/// Env var: probability (0..1) of an injected fault per positioned read.
+pub const ENV_FAULT_READ_RATE: &str = "PARCLUST_FAULT_READ_RATE";
+/// Env var: probability (0..1) of an injected device submit/completion fault.
+pub const ENV_FAULT_DEVICE_RATE: &str = "PARCLUST_FAULT_DEVICE_RATE";
+
+/// Default per-op fault probability when armed via env without a rate.
+pub const DEFAULT_FAULT_RATE: f64 = 0.05;
+
+/// Where a fault decision is being made. Each site keeps its own
+/// ordinal counter so schedules at one site don't shift another's.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// A positioned read of row bytes from a shard source.
+    Read,
+    /// A read that is injected to return only part of the range.
+    ShortRead,
+    /// Device work submission.
+    Submit,
+    /// Device completion (ticket wait).
+    Complete,
+}
+
+impl FaultSite {
+    fn index(self) -> usize {
+        match self {
+            FaultSite::Read => 0,
+            FaultSite::ShortRead => 1,
+            FaultSite::Submit => 2,
+            FaultSite::Complete => 3,
+        }
+    }
+}
+
+const SITES: usize = 4;
+
+#[derive(Debug)]
+struct PlanInner {
+    seed: u64,
+    /// Per-site fault probability in [0, 1].
+    rates: [f64; SITES],
+    /// Per-site decision ordinal (monotone across the plan's lifetime).
+    ordinals: [AtomicU64; SITES],
+    /// Per-site run length of consecutive injected faults.
+    burst: [AtomicU64; SITES],
+    /// Cap on consecutive injections at one site: after `max_burst`
+    /// faults in a row the next decision is forced to pass, so a
+    /// retry policy with `attempts > max_burst` always recovers.
+    max_burst: u64,
+    /// Device sites fail every keyed decision from this submission key
+    /// onward — a device that works, then dies and stays dead (see
+    /// [`FaultPlan::device_dies_at`]).
+    dead_from: Option<u64>,
+}
+
+/// A seeded, deterministic schedule of injected faults.
+///
+/// Cloning shares the underlying schedule (ordinals advance globally),
+/// which is what the device pipeline needs: the submit-side decision
+/// and the completion-side decision come from one stream.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    inner: Option<Arc<PlanInner>>,
+}
+
+impl FaultPlan {
+    /// The no-op plan: every `should_fault` is a single `None` branch.
+    pub fn disabled() -> FaultPlan {
+        FaultPlan { inner: None }
+    }
+
+    /// A plan injecting faults at `read_rate` on read sites and
+    /// `device_rate` on device sites, with at most [`Self::DEFAULT_MAX_BURST`]
+    /// consecutive injections per site (so the default 3-attempt
+    /// [`RetryPolicy`] always recovers).
+    pub fn seeded(seed: u64, read_rate: f64, device_rate: f64) -> FaultPlan {
+        Self::seeded_with_burst(seed, read_rate, device_rate, Self::DEFAULT_MAX_BURST)
+    }
+
+    /// Consecutive-injection cap used by [`FaultPlan::seeded`].
+    pub const DEFAULT_MAX_BURST: u64 = 2;
+
+    /// [`FaultPlan::seeded`] with an explicit consecutive-injection
+    /// cap. `max_burst = u64::MAX` makes a rate-1.0 site fail
+    /// *permanently* — the knob the degradation tests use.
+    pub fn seeded_with_burst(
+        seed: u64,
+        read_rate: f64,
+        device_rate: f64,
+        max_burst: u64,
+    ) -> FaultPlan {
+        let r = read_rate.clamp(0.0, 1.0);
+        let d = device_rate.clamp(0.0, 1.0);
+        if r == 0.0 && d == 0.0 {
+            return Self::disabled();
+        }
+        FaultPlan {
+            inner: Some(Arc::new(PlanInner {
+                seed,
+                rates: [r, r * 0.5, d, d],
+                ordinals: Default::default(),
+                burst: Default::default(),
+                max_burst: max_burst.max(1),
+                dead_from: None,
+            })),
+        }
+    }
+
+    /// A plan whose *device* sites fail every attempt from submission
+    /// key `first_dead` onward: the device works — init's one-shot
+    /// stages, early iterations — then dies mid-fit and stays dead,
+    /// exhausting any retry budget. Read sites stay healthy. This is
+    /// the degradation knob: `--on-device-error fallback` must finish
+    /// the fit on the CPU, `fail` must surface the typed exhaustion.
+    pub fn device_dies_at(first_dead: u64) -> FaultPlan {
+        FaultPlan {
+            inner: Some(Arc::new(PlanInner {
+                seed: 0,
+                rates: [0.0; SITES],
+                ordinals: Default::default(),
+                burst: Default::default(),
+                max_burst: u64::MAX,
+                dead_from: Some(first_dead),
+            })),
+        }
+    }
+
+    /// Build from `PARCLUST_FAULT_SEED` (+ optional rate knobs); the
+    /// disabled plan when the env is unset. Production entry points
+    /// call this once at construction — tests pass plans explicitly
+    /// instead of mutating the environment.
+    pub fn from_env() -> FaultPlan {
+        let seed = match std::env::var(ENV_FAULT_SEED) {
+            Ok(s) => match s.trim().parse::<u64>() {
+                Ok(v) => v,
+                Err(_) => return Self::disabled(),
+            },
+            Err(_) => return Self::disabled(),
+        };
+        let rate = |key: &str| {
+            std::env::var(key)
+                .ok()
+                .and_then(|s| s.trim().parse::<f64>().ok())
+                .unwrap_or(DEFAULT_FAULT_RATE)
+        };
+        Self::seeded(seed, rate(ENV_FAULT_READ_RATE), rate(ENV_FAULT_DEVICE_RATE))
+    }
+
+    /// True if this plan can ever inject.
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// One deterministic fault decision at `site`. Advances the site's
+    /// ordinal; zero-cost (no atomics) when the plan is disabled.
+    #[inline]
+    pub fn should_fault(&self, site: FaultSite) -> bool {
+        let inner = match &self.inner {
+            None => return false,
+            Some(inner) => inner,
+        };
+        let i = site.index();
+        let rate = inner.rates[i];
+        if rate <= 0.0 {
+            return false;
+        }
+        let ordinal = inner.ordinals[i].fetch_add(1, Ordering::Relaxed);
+        let h = mix64(inner.seed ^ ((i as u64 + 1) << 56) ^ ordinal.wrapping_mul(0x9E37_79B9));
+        // 53 high bits -> uniform in [0, 1)
+        let u = (h >> 11) as f64 * (1.0 / 9_007_199_254_740_992.0);
+        if u < rate {
+            let run = inner.burst[i].fetch_add(1, Ordering::Relaxed) + 1;
+            if run > inner.max_burst {
+                // Forced pass: cap consecutive injections so bounded
+                // retries always win against the injector.
+                inner.burst[i].store(0, Ordering::Relaxed);
+                return false;
+            }
+            true
+        } else {
+            inner.burst[i].store(0, Ordering::Relaxed);
+            false
+        }
+    }
+
+    /// Keyed fault decision for *retried* operations. Deterministic in
+    /// `(site, key, attempt)` — immune to draw interleaving from other
+    /// threads or queued work, unlike the ordinal-based
+    /// [`Self::should_fault`] — and never injects once the 0-based
+    /// `attempt` reaches the plan's burst cap, so any retry budget with
+    /// `attempts > max_burst` is **guaranteed** to recover. With
+    /// `max_burst = u64::MAX` a rate-1.0 site fails permanently (the
+    /// degradation-test knob). Call sites key by a stable operation
+    /// identity (block offset, submission sequence number).
+    #[inline]
+    pub fn should_fault_keyed(&self, site: FaultSite, key: u64, attempt: u32) -> bool {
+        let inner = match &self.inner {
+            None => return false,
+            Some(inner) => inner,
+        };
+        let i = site.index();
+        if i >= FaultSite::Submit.index() {
+            if let Some(dead) = inner.dead_from {
+                if key >= dead {
+                    // Dead device: every attempt fails, no budget cap.
+                    return true;
+                }
+            }
+        }
+        let rate = inner.rates[i];
+        if rate <= 0.0 {
+            return false;
+        }
+        if (attempt as u64) >= inner.max_burst {
+            // Out of injection budget for this operation: forced pass.
+            return false;
+        }
+        let h = mix64(
+            inner.seed
+                ^ ((i as u64 + 1) << 56)
+                ^ key.wrapping_mul(0x9E37_79B9)
+                ^ ((attempt as u64 + 1) << 40),
+        );
+        let u = (h >> 11) as f64 * (1.0 / 9_007_199_254_740_992.0);
+        u < rate
+    }
+
+    /// An injected transient I/O error (classified transient by
+    /// [`is_transient_io`], so the retry loop re-attempts it).
+    pub fn injected_io_error(site: FaultSite) -> std::io::Error {
+        std::io::Error::new(
+            std::io::ErrorKind::Interrupted,
+            format!("injected transient fault ({site:?})"),
+        )
+    }
+}
+
+/// Error text of an injected device submit fault (rejected before
+/// anything was enqueued).
+pub const INJECTED_DEVICE_FAULT_SUBMIT: &str =
+    "injected transient device fault (submit)";
+/// Error text of an injected device completion fault (the execution
+/// ran, the completion was lost).
+pub const INJECTED_DEVICE_FAULT_COMPLETE: &str =
+    "injected transient device fault (complete)";
+
+/// Transient device errors: worth re-submitting. The simulated backend
+/// only produces transient errors by injection; a real PJRT/CUDA
+/// backend would add its own retriable classes here.
+pub fn is_transient_device(msg: &str) -> bool {
+    msg.contains("injected transient device fault")
+}
+
+/// SplitMix64 finalizer — the statistically strong bit mixer behind
+/// every fault decision.
+#[inline]
+fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Bounded retry with exponential backoff. `attempts` counts *total*
+/// tries (1 = no retry); backoff doubles per retry, capped at 100×
+/// the base so a misconfigured base can't stall a fit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    pub attempts: u32,
+    pub backoff: Duration,
+}
+
+impl RetryPolicy {
+    /// The crate default: 3 attempts, 5 ms base backoff.
+    pub fn default_on() -> RetryPolicy {
+        RetryPolicy { attempts: 3, backoff: Duration::from_millis(5) }
+    }
+
+    /// Single attempt — the pre-recovery behaviour.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy { attempts: 1, backoff: Duration::ZERO }
+    }
+
+    /// Backoff before retry number `retry` (1-based): base × 2^(retry−1).
+    pub fn backoff_for(&self, retry: u32) -> Duration {
+        if self.backoff.is_zero() {
+            return Duration::ZERO;
+        }
+        let factor = 1u32 << (retry.saturating_sub(1)).min(7);
+        (self.backoff * factor).min(self.backoff * 100)
+    }
+}
+
+/// Transient I/O errors: worth retrying. Everything else is permanent
+/// and must surface immediately (the `DiskShardSource` satellite fix —
+/// the pre-recovery read loop treated both uniformly).
+pub fn is_transient_io(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::Interrupted | std::io::ErrorKind::WouldBlock
+    )
+}
+
+/// Run `op` under `policy`, retrying transient errors with backoff and
+/// tallying into `stats`. Permanent errors return on first sight.
+pub fn retry_io<T>(
+    policy: &RetryPolicy,
+    stats: &FaultStats,
+    mut op: impl FnMut() -> std::io::Result<T>,
+) -> std::io::Result<T> {
+    let attempts = policy.attempts.max(1);
+    let mut tried = 0u32;
+    loop {
+        match op() {
+            Ok(v) => {
+                if tried > 0 {
+                    stats.note_recovered();
+                }
+                return Ok(v);
+            }
+            Err(e) if is_transient_io(&e) && tried + 1 < attempts => {
+                tried += 1;
+                stats.note_retried();
+                let pause = policy.backoff_for(tried);
+                if !pause.is_zero() {
+                    std::thread::sleep(pause);
+                }
+            }
+            Err(e) => {
+                stats.note_permanent();
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// Thread-safe fault tallies one recovering layer keeps for its
+/// lifetime; [`FaultStats::snapshot`] folds them into the plain
+/// [`FaultCounters`] that `RunMetrics` carries.
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    injected: AtomicU64,
+    retried: AtomicU64,
+    recovered: AtomicU64,
+    permanent: AtomicU64,
+}
+
+impl FaultStats {
+    pub fn new() -> FaultStats {
+        FaultStats::default()
+    }
+
+    pub fn note_injected(&self) {
+        self.injected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_retried(&self) {
+        self.retried.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_recovered(&self) {
+        self.recovered.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_permanent(&self) {
+        self.permanent.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> FaultCounters {
+        FaultCounters {
+            injected: self.injected.load(Ordering::Relaxed),
+            retried: self.retried.load(Ordering::Relaxed),
+            recovered: self.recovered.load(Ordering::Relaxed),
+            permanent: self.permanent.load(Ordering::Relaxed),
+            degraded: 0,
+        }
+    }
+}
+
+/// Fault/recovery counters for one run (`RunMetrics::faults`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Faults the plan injected (0 in production — real faults are
+    /// counted by `retried`/`recovered`/`permanent` only).
+    pub injected: u64,
+    /// Individual retry attempts made.
+    pub retried: u64,
+    /// Operations that failed transiently and then succeeded.
+    pub recovered: u64,
+    /// Errors returned to the caller after the retry loop gave up (or
+    /// classified permanent on first sight).
+    pub permanent: u64,
+    /// 1 if the fit fell back from the gpu regime to the CPU multi
+    /// executor mid-run (`--on-device-error fallback`).
+    pub degraded: u64,
+}
+
+impl FaultCounters {
+    pub fn merge(&mut self, other: &FaultCounters) {
+        self.injected += other.injected;
+        self.retried += other.retried;
+        self.recovered += other.recovered;
+        self.permanent += other.permanent;
+        self.degraded += other.degraded;
+    }
+
+    pub fn any(&self) -> bool {
+        *self != FaultCounters::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Error, ErrorKind};
+
+    #[test]
+    fn disabled_plan_never_faults() {
+        let p = FaultPlan::disabled();
+        assert!(!p.is_enabled());
+        for _ in 0..1000 {
+            assert!(!p.should_fault(FaultSite::Read));
+        }
+        // Zero rates collapse to the disabled plan.
+        assert!(!FaultPlan::seeded(7, 0.0, 0.0).is_enabled());
+    }
+
+    #[test]
+    fn dead_device_plan_kills_from_its_key_onward() {
+        let p = FaultPlan::device_dies_at(5);
+        assert!(p.is_enabled());
+        for key in 0..5 {
+            for attempt in 0..8 {
+                assert!(!p.should_fault_keyed(FaultSite::Submit, key, attempt));
+                assert!(!p.should_fault_keyed(FaultSite::Complete, key, attempt));
+            }
+        }
+        for key in 5..32 {
+            for attempt in 0..8 {
+                assert!(p.should_fault_keyed(FaultSite::Submit, key, attempt));
+                assert!(p.should_fault_keyed(FaultSite::Complete, key, attempt));
+            }
+        }
+        // Read sites stay healthy: only the device dies.
+        assert!(!p.should_fault_keyed(FaultSite::Read, 9, 0));
+        assert!(!p.should_fault(FaultSite::Read));
+    }
+
+    #[test]
+    fn seeded_plan_is_deterministic_and_replayable() {
+        let take = |seed: u64| -> Vec<bool> {
+            let p = FaultPlan::seeded(seed, 0.3, 0.0);
+            (0..256).map(|_| p.should_fault(FaultSite::Read)).collect()
+        };
+        let a = take(42);
+        let b = take(42);
+        let c = take(43);
+        assert_eq!(a, b, "same seed -> same schedule");
+        assert_ne!(a, c, "different seed -> different schedule");
+        assert!(a.iter().any(|&f| f), "rate 0.3 must inject");
+        assert!(!a.iter().all(|&f| f), "rate 0.3 must also pass");
+    }
+
+    #[test]
+    fn sites_draw_independent_schedules() {
+        let p = FaultPlan::seeded(9, 0.5, 0.5);
+        let reads: Vec<bool> = (0..64).map(|_| p.should_fault(FaultSite::Read)).collect();
+        let subs: Vec<bool> = (0..64).map(|_| p.should_fault(FaultSite::Submit)).collect();
+        assert_ne!(reads, subs);
+    }
+
+    #[test]
+    fn burst_cap_bounds_consecutive_injections() {
+        // Rate 1.0 would fault forever; the default cap forces a pass
+        // after DEFAULT_MAX_BURST consecutive injections.
+        let p = FaultPlan::seeded(1, 1.0, 0.0);
+        let mut run = 0u64;
+        for _ in 0..256 {
+            if p.should_fault(FaultSite::Read) {
+                run += 1;
+                assert!(run <= FaultPlan::DEFAULT_MAX_BURST);
+            } else {
+                run = 0;
+            }
+        }
+        // An uncapped plan at rate 1.0 is a permanent failure.
+        let p = FaultPlan::seeded_with_burst(1, 1.0, 0.0, u64::MAX);
+        assert!((0..64).all(|_| p.should_fault(FaultSite::Read)));
+    }
+
+    #[test]
+    fn keyed_decisions_are_deterministic_and_capped_by_attempt() {
+        let p = FaultPlan::seeded(11, 0.5, 0.5);
+        let q = FaultPlan::seeded(11, 0.5, 0.5);
+        let mut injected = 0;
+        for key in 0..256u64 {
+            for attempt in 0..4u32 {
+                let a = p.should_fault_keyed(FaultSite::Read, key, attempt);
+                let b = q.should_fault_keyed(FaultSite::Read, key, attempt);
+                assert_eq!(a, b, "keyed draws are pure functions of (site,key,attempt)");
+                if attempt as u64 >= FaultPlan::DEFAULT_MAX_BURST {
+                    assert!(!a, "attempt {attempt} must be a forced pass");
+                }
+                injected += a as u32;
+            }
+        }
+        assert!(injected > 0, "rate 0.5 over 256 keys must inject");
+        // Interleaved draws at other keys/sites don't shift the schedule.
+        let _ = p.should_fault(FaultSite::Submit);
+        let _ = p.should_fault_keyed(FaultSite::Complete, 9999, 0);
+        assert_eq!(
+            p.should_fault_keyed(FaultSite::Read, 7, 1),
+            q.should_fault_keyed(FaultSite::Read, 7, 1),
+        );
+        // Uncapped: rate-1.0 keyed draws never pass (permanent failure).
+        let p = FaultPlan::seeded_with_burst(2, 1.0, 0.0, u64::MAX);
+        assert!((0..16).all(|a| p.should_fault_keyed(FaultSite::Read, 3, a)));
+    }
+
+    #[test]
+    fn transient_classification() {
+        assert!(is_transient_io(&Error::new(ErrorKind::Interrupted, "x")));
+        assert!(is_transient_io(&Error::new(ErrorKind::WouldBlock, "x")));
+        assert!(!is_transient_io(&Error::new(ErrorKind::NotFound, "x")));
+        assert!(!is_transient_io(&Error::new(ErrorKind::UnexpectedEof, "x")));
+        assert!(is_transient_io(&FaultPlan::injected_io_error(FaultSite::Read)));
+    }
+
+    #[test]
+    fn retry_recovers_transient_within_budget() {
+        let stats = FaultStats::new();
+        let policy = RetryPolicy { attempts: 3, backoff: Duration::ZERO };
+        let mut fails = 2;
+        let out = retry_io(&policy, &stats, || {
+            if fails > 0 {
+                fails -= 1;
+                Err(Error::new(ErrorKind::Interrupted, "flaky"))
+            } else {
+                Ok(17)
+            }
+        })
+        .unwrap();
+        assert_eq!(out, 17);
+        let c = stats.snapshot();
+        assert_eq!(c.retried, 2);
+        assert_eq!(c.recovered, 1);
+        assert_eq!(c.permanent, 0);
+    }
+
+    #[test]
+    fn retry_gives_up_after_budget() {
+        let stats = FaultStats::new();
+        let policy = RetryPolicy { attempts: 3, backoff: Duration::ZERO };
+        let err = retry_io(&policy, &stats, || -> std::io::Result<()> {
+            Err(Error::new(ErrorKind::Interrupted, "always"))
+        })
+        .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Interrupted);
+        let c = stats.snapshot();
+        assert_eq!(c.retried, 2, "attempts=3 -> 2 retries");
+        assert_eq!(c.permanent, 1);
+        assert_eq!(c.recovered, 0);
+    }
+
+    #[test]
+    fn permanent_errors_do_not_retry() {
+        let stats = FaultStats::new();
+        let policy = RetryPolicy::default_on();
+        let mut calls = 0;
+        let err = retry_io(&policy, &stats, || -> std::io::Result<()> {
+            calls += 1;
+            Err(Error::new(ErrorKind::PermissionDenied, "no"))
+        })
+        .unwrap_err();
+        assert_eq!(calls, 1, "permanent errors must surface immediately");
+        assert_eq!(err.kind(), ErrorKind::PermissionDenied);
+        assert_eq!(stats.snapshot().retried, 0);
+        assert_eq!(stats.snapshot().permanent, 1);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RetryPolicy { attempts: 10, backoff: Duration::from_millis(2) };
+        assert_eq!(p.backoff_for(1), Duration::from_millis(2));
+        assert_eq!(p.backoff_for(2), Duration::from_millis(4));
+        assert_eq!(p.backoff_for(3), Duration::from_millis(8));
+        assert!(p.backoff_for(40) <= Duration::from_millis(200));
+        assert_eq!(RetryPolicy::none().backoff_for(5), Duration::ZERO);
+    }
+
+    #[test]
+    fn counters_merge_and_any() {
+        let mut a = FaultCounters {
+            injected: 1,
+            retried: 2,
+            recovered: 1,
+            permanent: 0,
+            degraded: 0,
+        };
+        let b = FaultCounters { injected: 3, retried: 1, recovered: 1, permanent: 1, degraded: 1 };
+        a.merge(&b);
+        assert_eq!(a.injected, 4);
+        assert_eq!(a.retried, 3);
+        assert_eq!(a.recovered, 2);
+        assert_eq!(a.permanent, 1);
+        assert_eq!(a.degraded, 1);
+        assert!(a.any());
+        assert!(!FaultCounters::default().any());
+    }
+}

@@ -25,17 +25,20 @@
 //! meaningful on machines without a real accelerator.
 
 pub mod artifact;
+pub mod faults;
 pub mod pad;
 
 use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 pub use artifact::{ArtifactKind, ArtifactMeta, Manifest};
+
+use faults::{FaultPlan, FaultSite};
 
 /// A host-side tensor: shape + typed buffer. The only currency crossing
 /// the device-thread boundary.
@@ -166,6 +169,11 @@ pub struct Completed {
 pub struct Ticket {
     rx: Receiver<ExecDone>,
     stats: Arc<DeviceStats>,
+    /// Injected completion fault (decided deterministically at submit
+    /// time so the schedule follows submission order): the execution
+    /// runs, but `wait` reports a transient failure and drops the
+    /// result — modelling a lost/corrupt completion.
+    poisoned: bool,
 }
 
 impl Ticket {
@@ -173,6 +181,12 @@ impl Ticket {
     /// recorded as host-stall (the pipeline's "host waited on device"
     /// component).
     pub fn wait(self) -> Result<Completed, String> {
+        if self.poisoned {
+            // Drain the reply so device-side accounting stays exact,
+            // then report the injected completion fault.
+            let _ = self.rx.recv();
+            return Err(faults::INJECTED_DEVICE_FAULT_COMPLETE.to_string());
+        }
         let t0 = Instant::now();
         let done = self
             .rx
@@ -224,6 +238,14 @@ struct DeviceInner {
     handle: Option<JoinHandle<()>>,
     pub stats: Arc<DeviceStats>,
     manifest: Manifest,
+    /// Fault-injection schedule for submit/completion (disabled unless
+    /// armed via env or [`Device::set_fault_plan`]).
+    faults: Mutex<FaultPlan>,
+    /// First-attempt submission sequence — the stable key fault draws
+    /// are made against. Re-submissions of a faulted ticket keep their
+    /// original key (and bump the attempt index instead), so later
+    /// chunks' schedules are independent of earlier recoveries.
+    fault_key: AtomicU64,
 }
 
 impl Drop for DeviceInner {
@@ -298,8 +320,16 @@ impl Device {
                 handle: Some(handle),
                 stats,
                 manifest,
+                faults: Mutex::new(FaultPlan::from_env()),
+                fault_key: AtomicU64::new(0),
             }),
         })
+    }
+
+    /// Replace the device's fault-injection schedule (chaos tests and
+    /// benches pass seeded plans here instead of mutating the env).
+    pub fn set_fault_plan(&self, plan: FaultPlan) {
+        *self.inner.faults.lock().unwrap() = plan;
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -324,12 +354,45 @@ impl Device {
     /// [`Device::store`]). This is the paper's §7 "future work" — keeping
     /// the shard data on the accelerator instead of re-shipping it with
     /// every task — applied to the iterated assignment stage.
+    ///
+    /// The synchronous path retries transient (injected) faults under
+    /// the crate-default policy, so an armed fault plan cannot sink the
+    /// one-shot stages (diameter, center of gravity) that have no
+    /// session-level retry loop. With the plan disabled this is the
+    /// plain submit + wait — no clones, no extra branches in flight.
     pub fn execute_refs(
         &self,
         artifact: &str,
         inputs: Vec<InputRef>,
     ) -> Result<Vec<HostTensor>, String> {
-        self.submit(artifact, inputs)?.wait().map(|c| c.outputs)
+        let key = self.next_fault_key();
+        if !self.inner.faults.lock().unwrap().is_enabled() {
+            return self
+                .submit_attempt(artifact, inputs, key, 0)?
+                .wait()
+                .map(|c| c.outputs);
+        }
+        let policy = faults::RetryPolicy::default_on();
+        let mut attempt = 0u32;
+        loop {
+            let r = self
+                .submit_attempt(artifact, inputs.clone(), key, attempt)
+                .and_then(|t| t.wait());
+            match r {
+                Ok(c) => return Ok(c.outputs),
+                Err(e)
+                    if faults::is_transient_device(&e)
+                        && attempt + 1 < policy.attempts =>
+                {
+                    attempt += 1;
+                    let pause = policy.backoff_for(attempt);
+                    if !pause.is_zero() {
+                        std::thread::sleep(pause);
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     /// Enqueue an execution without waiting: the async path. The device
@@ -341,6 +404,35 @@ impl Device {
         artifact: &str,
         inputs: Vec<InputRef>,
     ) -> Result<Ticket, String> {
+        let key = self.next_fault_key();
+        self.submit_attempt(artifact, inputs, key, 0)
+    }
+
+    /// Allocate a fault-schedule key for a submission that the caller
+    /// may re-attempt (see [`Device::submit_attempt`]).
+    pub fn next_fault_key(&self) -> u64 {
+        self.inner.fault_key.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// [`Device::submit`] with an explicit `(key, attempt)` fault
+    /// identity: re-submitting a faulted ticket replays the schedule at
+    /// the *same* key with `attempt + 1`, so injection decisions are
+    /// deterministic per logical submission regardless of how retries
+    /// interleave with other traffic — and forced to pass once
+    /// `attempt` reaches the plan's burst cap.
+    pub fn submit_attempt(
+        &self,
+        artifact: &str,
+        inputs: Vec<InputRef>,
+        key: u64,
+        attempt: u32,
+    ) -> Result<Ticket, String> {
+        let plan = self.inner.faults.lock().unwrap().clone();
+        if plan.should_fault_keyed(FaultSite::Submit, key, attempt) {
+            // Rejected before any counter moves: nothing was enqueued.
+            return Err(faults::INJECTED_DEVICE_FAULT_SUBMIT.to_string());
+        }
+        let poisoned = plan.should_fault_keyed(FaultSite::Complete, key, attempt);
         let (tx, rx) = channel();
         let stats = Arc::clone(&self.inner.stats);
         stats.submissions.fetch_add(1, Ordering::Relaxed);
@@ -359,7 +451,7 @@ impl Device {
             stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
             return Err("device thread gone".to_string());
         }
-        Ok(Ticket { rx, stats })
+        Ok(Ticket { rx, stats, poisoned })
     }
 
     /// Pin a tensor on the device under `key` (overwrites). Subsequent
@@ -885,6 +977,49 @@ mod tests {
         assert!(stats.submissions.load(Ordering::Relaxed) >= 2);
         assert!(stats.max_queue_depth.load(Ordering::Relaxed) >= 1);
         assert_eq!(stats.queue_depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn injected_device_faults_are_transient_and_accounted() {
+        let mk = |v: f32| {
+            vec![
+                InputRef::Inline(HostTensor::f32(&[4, 2], vec![v; 8])),
+                InputRef::Inline(HostTensor::f32(&[4], vec![1.; 4])),
+            ]
+        };
+        // Seed 1 @ device rate 0.5: submit(k0,a0) passes but the
+        // completion is poisoned; attempt 1 is clean. Seed 8: the
+        // submit itself is rejected at attempt 0. (Schedules are pure
+        // hashes — the seeds pin each failure flavor.)
+        for (seed, expect_submit_reject) in [(1u64, false), (8u64, true)] {
+            let dev = Device::from_manifest(tiny_manifest()).unwrap();
+            dev.set_fault_plan(FaultPlan::seeded(seed, 0.0, 0.5));
+            let key = dev.next_fault_key();
+            assert_eq!(key, 0);
+            let mut attempt = 0u32;
+            let completed = loop {
+                match dev.submit_attempt("sum", mk(1.0), key, attempt) {
+                    Err(e) => {
+                        assert!(faults::is_transient_device(&e), "{e}");
+                        assert!(expect_submit_reject, "seed {seed}: {e}");
+                        attempt += 1;
+                    }
+                    Ok(t) => match t.wait() {
+                        Ok(c) => break c,
+                        Err(e) => {
+                            assert!(faults::is_transient_device(&e), "{e}");
+                            assert!(!expect_submit_reject, "seed {seed}: {e}");
+                            attempt += 1;
+                        }
+                    },
+                }
+                assert!(attempt <= 2, "burst cap must force recovery");
+            };
+            assert_eq!(attempt, 1, "seed {seed} faults exactly once at k0");
+            assert_eq!(completed.outputs[0].as_f32(), &[4.0, 4.0]);
+            // Poisoned waits drain their reply: depth returns to zero.
+            assert_eq!(dev.stats().queue_depth.load(Ordering::Relaxed), 0);
+        }
     }
 
     #[test]

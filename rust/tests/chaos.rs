@@ -1,0 +1,330 @@
+//! Chaos suite for the durability layer: interrupt + resume is bitwise
+//! identical across regimes and bounds policies, injected read faults
+//! recover bit-equal with the recovery counters proving they fired, a
+//! permanently failing device degrades to the CPU executor (or fails
+//! typed, per `--on-device-error`), and damaged `.pck` checkpoints
+//! surface as clean errors — never panics, never silently-wrong fits.
+//!
+//! `CHAOS_SEED` (env, default 1007) seeds the *fault plans* only, so CI
+//! can sweep injection patterns while every data trajectory stays
+//! pinned. The CI chaos leg also runs this suite under
+//! `PARCLUST_FORCE_BOUNDS=yinyang` so resume parity is exercised with
+//! the pruned lane dispatched on every Auto-resolved session.
+
+use parclust::data::binfmt;
+use parclust::data::shard::{DiskShardSource, MemShardSource};
+use parclust::data::synthetic::{generate, GmmSpec};
+use parclust::exec::gpu::GpuExecutor;
+use parclust::exec::regime::Regime;
+use parclust::exec::BoundsPolicy;
+use parclust::kmeans::lloyd;
+use parclust::kmeans::stream::run_stream;
+use parclust::kmeans::{fit, FitResult, InitMethod, KMeansConfig, OnDeviceError};
+use parclust::runtime::faults::{FaultPlan, RetryPolicy};
+use parclust::runtime::Device;
+use std::path::PathBuf;
+use std::time::Duration;
+
+mod common;
+
+/// Seed for the fault plans (not the data): CI sweeps it.
+fn chaos_seed() -> u64 {
+    std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(1007)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("parclust_chaos");
+    let _ = std::fs::create_dir_all(&dir);
+    dir.join(name)
+}
+
+/// Instant retries: the suite injects transient faults on purpose and
+/// should not sleep through the recovery it is measuring.
+fn no_wait() -> RetryPolicy {
+    RetryPolicy { attempts: 3, backoff: Duration::ZERO }
+}
+
+fn assert_fits_equal(a: &FitResult, b: &FitResult, ctx: &str) {
+    assert_eq!(a.labels, b.labels, "{ctx}: labels");
+    assert_eq!(a.centroids, b.centroids, "{ctx}: centroids");
+    assert_eq!(a.inertia, b.inertia, "{ctx}: inertia");
+    assert_eq!(a.iterations, b.iterations, "{ctx}: iterations");
+    assert_eq!(a.converged, b.converged, "{ctx}: converged");
+    assert_eq!(a.center_of_gravity, b.center_of_gravity, "{ctx}: cog");
+}
+
+/// Kill-at-iteration-i, emulated as a run capped at `i` iterations with
+/// a checkpoint every iteration — the written `.pck` is exactly what a
+/// process killed after iteration `i` left behind (writes are atomic,
+/// so a real kill leaves either this file or the previous one, never a
+/// torn one). Resuming with the full budget must land bitwise on the
+/// uninterrupted fit: labels, trajectory endpoint, objective, iteration
+/// count, convergence flag.
+///
+/// Swept across regime × bounds policy because resume re-arms bound
+/// state conservatively from the restored table — every policy is
+/// lossless, so the trajectory must not notice.
+#[test]
+fn lloyd_interrupt_resume_bitwise_parity_across_regimes_and_bounds() {
+    let g = generate(&GmmSpec::new(900, 6, 5).seed(33).spread(2.0));
+    let ds = &g.dataset;
+    for (ri, regime) in [Regime::Single, Regime::Multi].into_iter().enumerate() {
+        for bounds in [BoundsPolicy::None, BoundsPolicy::Hamerly, BoundsPolicy::Yinyang] {
+            let ctx = format!("{regime:?}/{bounds:?}");
+            let cfg = KMeansConfig::new(5)
+                .regime(regime)
+                .bounds(bounds)
+                .init_method(InitMethod::Random)
+                .seed(29)
+                .threads(3)
+                .max_iters(80)
+                .tol(1e-6);
+            let full = fit(ds, &cfg).unwrap();
+            assert!(full.iterations > 4, "{ctx}: workload too easy to cut at 4");
+
+            let ck = tmp(&format!("lloyd_{ri}_{}.pck", bounds.name()));
+            let cut_cfg = cfg
+                .clone()
+                .max_iters(4)
+                .checkpoint_every(1)
+                .checkpoint_path(ck.clone());
+            let cut = fit(ds, &cut_cfg).unwrap();
+            assert_eq!(cut.iterations, 4, "{ctx}: cut run ran to its cap");
+            assert!(!cut.converged, "{ctx}: cut run must not have converged");
+
+            let resumed = fit(ds, &cfg.clone().resume(ck)).unwrap();
+            assert_fits_equal(&resumed, &full, &ctx);
+        }
+    }
+}
+
+/// Same contract through the out-of-core engine's full-pass mode.
+#[test]
+fn stream_full_pass_resume_is_bit_identical() {
+    let g = generate(&GmmSpec::new(1_200, 6, 4).seed(8).spread(1.5));
+    let src = MemShardSource::new(&g.dataset);
+    let cfg = KMeansConfig::new(4)
+        .regime(Regime::Multi)
+        .init_method(InitMethod::Random)
+        .seed(17)
+        .threads(3)
+        .max_iters(60)
+        .tol(1e-6);
+    let full = run_stream(&src, &cfg).unwrap();
+    assert!(full.iterations > 3, "workload too easy to cut at 3");
+
+    let ck = tmp("stream_full.pck");
+    let cut_cfg = cfg
+        .clone()
+        .max_iters(3)
+        .checkpoint_every(1)
+        .checkpoint_path(ck.clone());
+    let cut = run_stream(&src, &cut_cfg).unwrap();
+    assert_eq!(cut.iterations, 3);
+
+    let resumed = run_stream(&src, &cfg.clone().resume(ck)).unwrap();
+    assert_fits_equal(&resumed, &full, "stream full-pass");
+}
+
+/// Mini-batch resume restores the sampler mid-sequence: the checkpoint
+/// carries the PCG state *and* the per-centroid step counts, so the
+/// resumed run draws the exact batches and decays the exact step sizes
+/// the uninterrupted run would have. Any drift in either shows up here
+/// as a bitwise mismatch.
+#[test]
+fn mini_batch_resume_restores_sampler_and_step_state() {
+    let g = generate(&GmmSpec::new(1_000, 6, 4).seed(4).spread(0.05).center_scale(25.0));
+    let src = MemShardSource::new(&g.dataset);
+    let cfg = KMeansConfig::new(4)
+        .regime(Regime::Multi)
+        .init_method(InitMethod::Random)
+        .seed(31)
+        .threads(3)
+        .mini_batch(128)
+        .max_iters(40)
+        .tol(1e-4);
+    let full = run_stream(&src, &cfg).unwrap();
+    assert!(full.iterations > 5, "workload too easy to cut at 5");
+
+    let ck = tmp("stream_mini.pck");
+    let cut_cfg = cfg
+        .clone()
+        .max_iters(5)
+        .checkpoint_every(1)
+        .checkpoint_path(ck.clone());
+    let cut = run_stream(&src, &cut_cfg).unwrap();
+    assert_eq!(cut.iterations, 5);
+
+    let resumed = run_stream(&src, &cfg.clone().resume(ck)).unwrap();
+    assert_fits_equal(&resumed, &full, "mini-batch");
+}
+
+/// Transient read faults on the `.pcb` source: the retry layer absorbs
+/// them, the fit is bit-equal to the fault-free one, and the counters
+/// in the run metrics prove recovery actually happened (a plan that
+/// never fired would pass the parity half vacuously).
+#[test]
+fn injected_read_faults_recover_bit_equal() {
+    let g = generate(&GmmSpec::new(1_500, 6, 4).seed(3).spread(0.1).center_scale(20.0));
+    let ds = &g.dataset;
+    let path = tmp("faulty_reads.pcb");
+    binfmt::write_path(ds, &path).unwrap();
+    let cfg = KMeansConfig::new(4)
+        .regime(Regime::Multi)
+        .init_method(InitMethod::Random)
+        .seed(23)
+        .threads(2)
+        .max_iters(30);
+
+    let clean_src = DiskShardSource::open(&path).unwrap();
+    let clean = run_stream(&clean_src, &cfg).unwrap();
+    assert_eq!(clean.metrics.faults.injected, 0, "no plan, no injections");
+
+    let plan = FaultPlan::seeded(chaos_seed(), 0.35, 0.0);
+    let faulty_src = DiskShardSource::open_with(&path, no_wait(), plan).unwrap();
+    let faulty = run_stream(&faulty_src, &cfg).unwrap();
+
+    assert_fits_equal(&faulty, &clean, "injected reads");
+    let f = &faulty.metrics.faults;
+    assert!(f.injected > 0, "rate 0.35 over a whole fit must inject");
+    assert!(f.recovered > 0, "every transient injection must recover");
+    assert_eq!(f.permanent, 0, "burst-capped plan cannot exhaust 3 attempts");
+}
+
+/// A source that fails every attempt (burst cap lifted) exhausts the
+/// retry budget and surfaces a typed I/O error — no panic, no hang.
+#[test]
+fn permanent_read_failure_is_a_typed_error() {
+    let g = generate(&GmmSpec::new(400, 4, 3).seed(9));
+    let path = tmp("dead_reads.pcb");
+    binfmt::write_path(&g.dataset, &path).unwrap();
+    let plan = FaultPlan::seeded_with_burst(chaos_seed(), 1.0, 0.0, u64::MAX);
+    let err = DiskShardSource::open_with(&path, no_wait(), plan).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("injected"), "typed injected-fault error, got: {msg}");
+}
+
+/// Damaged or mismatched checkpoints are refused up front with an error
+/// that names the resume file — resuming must never start a fit from a
+/// state it cannot prove belongs to this run.
+#[test]
+fn damaged_or_mismatched_checkpoints_are_refused() {
+    let g = generate(&GmmSpec::new(600, 5, 4).seed(12).spread(1.5));
+    let ds = &g.dataset;
+    let cfg = KMeansConfig::new(4)
+        .regime(Regime::Multi)
+        .init_method(InitMethod::Random)
+        .seed(7)
+        .threads(2)
+        .max_iters(40);
+    let ck = tmp("refused.pck");
+    let cut_cfg = cfg
+        .clone()
+        .max_iters(3)
+        .checkpoint_every(1)
+        .checkpoint_path(ck.clone());
+    fit(ds, &cut_cfg).unwrap();
+
+    // Config drift: a different seed is a different trajectory.
+    let err = fit(ds, &cfg.clone().seed(8).resume(ck.clone())).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("resume"), "names the resume step: {msg}");
+
+    // Truncation: cut the file mid-centroid-table.
+    let bytes = std::fs::read(&ck).unwrap();
+    let cut = tmp("refused_truncated.pck");
+    std::fs::write(&cut, &bytes[..bytes.len() / 2]).unwrap();
+    let err = fit(ds, &cfg.clone().resume(cut)).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("resume"), "truncated file refused: {msg}");
+
+    // Corruption: flip one bit in the centroid table, CRC catches it.
+    let mut corrupt = bytes.clone();
+    let mid = corrupt.len() - 16;
+    corrupt[mid] ^= 0x40;
+    let bad = tmp("refused_corrupt.pck");
+    std::fs::write(&bad, &corrupt).unwrap();
+    let err = fit(ds, &cfg.clone().resume(bad)).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("resume"), "corrupt file refused: {msg}");
+
+    // A missing file is an error too, not a silent cold start.
+    let err = fit(ds, &cfg.clone().resume(tmp("never_written.pck"))).unwrap_err();
+    assert!(err.to_string().contains("resume"), "{err}");
+}
+
+/// Arm `exec`'s device to die on the first *assignment* submission of
+/// the next fit. Random init's only device work is the center-of-gravity
+/// reduction and its submission count is deterministic, so one probe
+/// pass tells us exactly where the real run's init ends: the probe
+/// consumed keys `0..c`, `next_fault_key()` burned key `c`, the real
+/// init will consume `c+1..=2c` — key `2c + 1` is the first the
+/// assignment session draws.
+fn kill_device_after_init(exec: &GpuExecutor, ds: &parclust::data::Dataset) {
+    use parclust::exec::Executor as _;
+    exec.center_of_gravity(ds).unwrap();
+    let c = exec.device().next_fault_key();
+    exec.device().set_fault_plan(FaultPlan::device_dies_at(2 * c + 1));
+}
+
+/// A device that works through init, then dies and stays dead, under
+/// `--on-device-error fallback`: the fit finishes on the CPU multi
+/// executor, bit-equal to the plain multi fit (regime parity is a
+/// crate invariant, so the mid-fit swap cannot bend the trajectory),
+/// with the degradation recorded in the metrics.
+#[test]
+fn dead_device_degrades_to_cpu_bit_equal() {
+    require_artifacts!();
+    let g = generate(&GmmSpec::new(1_000, 6, 4).seed(14).spread(1.0));
+    let ds = &g.dataset;
+    let cfg = KMeansConfig::new(4)
+        .init_method(InitMethod::Random)
+        .seed(19)
+        .threads(2)
+        .max_iters(30)
+        .retry_backoff_ms(0)
+        .on_device_error(OnDeviceError::Fallback);
+
+    let reference = fit(ds, &cfg.clone().regime(Regime::Multi)).unwrap();
+
+    let dev = Device::open(&common::artifact_dir()).unwrap();
+    let mut exec = GpuExecutor::new(dev, 2);
+    exec.set_retry_policy(no_wait());
+    kill_device_after_init(&exec, ds);
+    let degraded = lloyd::run(ds, &cfg, &exec).unwrap();
+
+    assert_fits_equal(&degraded, &reference, "degraded vs multi");
+    assert_eq!(degraded.metrics.faults.degraded, 1, "degradation recorded");
+    assert!(
+        degraded.metrics.assign_path.starts_with("degraded:"),
+        "assign path marks the swap: {}",
+        degraded.metrics.assign_path
+    );
+}
+
+/// The same dead device under the default policy fails typed instead
+/// of degrading — callers who asked for the GPU get told, not silently
+/// moved.
+#[test]
+fn dead_device_fails_typed_under_default_policy() {
+    require_artifacts!();
+    let g = generate(&GmmSpec::new(800, 5, 3).seed(15).spread(1.0));
+    let cfg = KMeansConfig::new(3)
+        .init_method(InitMethod::Random)
+        .seed(11)
+        .threads(2)
+        .max_iters(20)
+        .retry_backoff_ms(0);
+    assert_eq!(cfg.on_device_error, OnDeviceError::Fail, "fail is the default");
+
+    let dev = Device::open(&common::artifact_dir()).unwrap();
+    let mut exec = GpuExecutor::new(dev, 2);
+    exec.set_retry_policy(no_wait());
+    kill_device_after_init(&exec, &g.dataset);
+    let err = lloyd::run(&g.dataset, &cfg, &exec).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("retries exhausted"), "typed exhaustion error: {msg}");
+}
